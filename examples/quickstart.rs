@@ -1,0 +1,76 @@
+//! Quickstart: the end-to-end driver proving all three layers compose.
+//!
+//! Trains the BinaryConnect MLP (deterministic binarization, Algorithm 1)
+//! on a small synthetic MNIST for a few hundred steps through the full
+//! stack — Rust coordinator -> PJRT -> AOT HLO containing the Pallas
+//! kernels — and logs the loss curve. Run with:
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! The run recorded in EXPERIMENTS.md par."End-to-end validation" is this
+//! binary's output.
+
+use anyhow::Result;
+
+use binaryconnect::coordinator::{mnist_opts, prepare, train, DataOpts};
+use binaryconnect::data::Corpus;
+use binaryconnect::runtime::{Manifest, Mode, Runtime};
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
+    let info = manifest.model("mlp")?;
+    println!(
+        "model: mlp — {} param tensors, {} scalars, batch {}",
+        info.params.len(),
+        info.n_scalars,
+        info.batch
+    );
+
+    // ~3000 synthetic MNIST digits -> 25 train batches/epoch
+    let (data, real) = prepare(
+        Corpus::Mnist,
+        &DataOpts { n_train: 3000, n_test: 600, ..Default::default() },
+    )?;
+    println!(
+        "data: {} ({} train / {} val / {} test, {})",
+        data.train.name,
+        data.train.len(),
+        data.val.len(),
+        data.test.len(),
+        if real { "real" } else { "synthetic" }
+    );
+
+    let rt = Runtime::cpu()?;
+    let model = rt.load_model(info)?;
+
+    let mut opts = mnist_opts(Mode::Det, 16, 42);
+    opts.verbose = true; // per-epoch progress to stderr
+    let result = train(&model, &data, &opts)?;
+
+    println!("\nloss curve (train squared hinge, per epoch):");
+    for r in &result.curves {
+        let bar = "*".repeat((r.train_loss.min(60.0) * 1.0) as usize / 2);
+        println!("  epoch {:>2}  loss {:>8.3}  val err {:>6.3}  {}", r.epoch, r.train_loss, r.val_err, bar);
+    }
+    println!(
+        "\n{} steps in {:.1}s ({:.1} steps/s)",
+        result.steps,
+        result.total_seconds,
+        result.steps as f64 / result.total_seconds
+    );
+    println!(
+        "best val err {:.4} @ epoch {} -> test err {:.4} (binary weights at test time)",
+        result.best_val_err, result.best_epoch, result.test_err
+    );
+
+    // the BinaryConnect invariant: real weights clipped to ±H
+    for (lit, p) in result.state.params.iter().zip(&model.info.params) {
+        if p.kind == "weight" {
+            let v = lit.to_vec::<f32>()?;
+            let maxabs = v.iter().fold(0f32, |a, &b| a.max(b.abs()));
+            assert!(maxabs <= p.glorot as f32 + 1e-6, "{} escaped clip box", p.name);
+        }
+    }
+    println!("all binary weight tensors inside their ±H clip boxes — OK");
+    Ok(())
+}

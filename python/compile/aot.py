@@ -1,0 +1,140 @@
+"""AOT entry point: lower init/train/eval per model config to HLO text.
+
+Run once via ``make artifacts``; Python never executes at runtime.  HLO
+*text* (not ``.serialize()``) is the interchange format: the image's
+xla_extension 0.5.1 rejects jax>=0.5 serialized protos (64-bit instruction
+ids); the text parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/README.md.
+
+Emits, per model config:
+
+    artifacts/<name>_init.hlo.txt
+    artifacts/<name>_train.hlo.txt
+    artifacts/<name>_eval.hlo.txt
+
+plus one ``artifacts/manifest.json`` describing shapes, param specs and
+hyper-vector layout for the Rust loader (rust/src/runtime/manifest.rs).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--scale N] [--models mlp,cnn,...]
+
+``--scale`` multiplies model widths toward paper scale (scale=8 is the
+paper's exact MLP/CNN; the default 1 keeps CPU-PJRT training tractable).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+from jax._src.lib import xla_client as xc
+
+from . import hyper as H
+from .models import MLPConfig, CNNConfig, n_scalars
+from .train import make_train_step, make_eval_step, make_init
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_configs(scale: int):
+    """The default artifact set.  scale=1 is CPU-tractable; scale=8 is the
+    paper's full-width MLP (3x1024) and CIFAR-10 CNN (128C3 base)."""
+    return {
+        # permutation-invariant MNIST MLP (Sec. 3.1); paper: hidden=1024, batch=200
+        "mlp": MLPConfig(name="mlp", hidden=128 * scale, batch=100, use_pallas=True),
+        # same MLP with the GEMM on native dot instead of the Pallas kernel
+        # (build-time ablation benchmarked in EXPERIMENTS.md par.Perf)
+        "mlp_ng": MLPConfig(name="mlp_ng", hidden=128 * scale, batch=100, use_pallas=False),
+        # CIFAR-10 CNN (Sec. 3.2, Eq. 5); paper: base=128, fc=1024, batch=50
+        "cnn": CNNConfig(name="cnn", base=16 * scale, fc=128 * scale, batch=50),
+        # SVHN CNN — half the units of the CIFAR-10 net (Sec. 3.3); doubles
+        # as Table 1's "small CNN"
+        "cnn_small": CNNConfig(name="cnn_small", base=8 * scale, fc=64 * scale, batch=50),
+    }
+
+
+def lower_model(config, out_dir):
+    spec = config.spec()
+    n = len(spec)
+    f32 = jax.numpy.float32
+    sds = jax.ShapeDtypeStruct
+    pshapes = [sds(d.shape, f32) for d in spec]
+    x = sds(config.input_shape, f32)
+    y = sds((config.batch, config.classes), f32)
+    hv = sds((H.LEN,), f32)
+
+    files = {}
+
+    init = make_init(config)
+    lowered = jax.jit(init).lower(hv)
+    files["init"] = f"{config.name}_init.hlo.txt"
+    with open(os.path.join(out_dir, files["init"]), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    train = make_train_step(config)
+    lowered = jax.jit(train).lower(*(pshapes * 3), x, y, hv)
+    files["train"] = f"{config.name}_train.hlo.txt"
+    with open(os.path.join(out_dir, files["train"]), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    evals = make_eval_step(config)
+    lowered = jax.jit(evals).lower(*pshapes, x, y, hv)
+    files["eval"] = f"{config.name}_eval.hlo.txt"
+    with open(os.path.join(out_dir, files["eval"]), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    return {
+        "batch": config.batch,
+        "classes": config.classes,
+        "input_shape": list(config.input_shape),
+        "n_param_tensors": n,
+        "n_scalars": n_scalars(config),
+        "use_pallas": bool(getattr(config, "use_pallas", True)),
+        "params": [
+            {
+                "name": d.name,
+                "shape": list(d.shape),
+                "kind": d.kind,
+                "glorot": d.glorot,
+            }
+            for d in spec
+        ],
+        "artifacts": files,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--scale", type=int, default=1)
+    ap.add_argument("--models", default="mlp,mlp_ng,cnn,cnn_small")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    configs = build_configs(args.scale)
+    wanted = [m.strip() for m in args.models.split(",") if m.strip()]
+
+    manifest = {
+        "format": 1,
+        "scale": args.scale,
+        "hyper": {"len": H.LEN, **H.NAMES},
+        "models": {},
+    }
+    for name in wanted:
+        cfg = configs[name]
+        print(f"lowering {name} ...", flush=True)
+        manifest["models"][name] = lower_model(cfg, args.out_dir)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {args.out_dir}/manifest.json ({len(wanted)} models)")
+
+
+if __name__ == "__main__":
+    main()

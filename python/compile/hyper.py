@@ -1,0 +1,41 @@
+"""The hyper vector: one f32[16] row carrying every per-step knob.
+
+Packing all scalar configuration into a single tensor keeps the Rust-side
+calling convention trivial (params..., m..., v..., x, y, hyper) and lets
+ONE lowered HLO artifact serve every cell of Table 1 and Table 2: the
+binarization mode, the optimizer and the LR-scaling trick are all runtime
+switches (lax.switch) rather than build-time variants.
+
+Integers ride as exact small floats (f32 is exact through 2^24, far above
+any step count or seed we use).  The same layout is mirrored in
+rust/src/runtime/hyper.rs — keep the two in sync.
+"""
+
+LR = 0            # base learning rate (already decayed by the coordinator)
+MODE = 1          # weight binarization: 0 none, 1 deterministic, 2 stochastic
+OPT = 2           # optimizer: 0 SGD, 1 Nesterov momentum, 2 ADAM
+MOMENTUM = 3      # Nesterov mu / ADAM beta1
+BETA2 = 4         # ADAM beta2
+EPS = 5           # ADAM epsilon
+DROPOUT = 6       # hidden-layer dropout rate (baseline regularizer row)
+BN_MOMENTUM = 7   # running-stat momentum for batch norm
+LR_SCALE = 8      # Sec. 2.5 trick: 0 off, 1 scale LR by Glorot coefficients
+STEP = 9          # 1-based global step (ADAM bias correction)
+SEED = 10         # per-step RNG seed (stochastic binarization, dropout)
+IN_DROPOUT = 11   # input-layer dropout rate
+LEN = 16
+
+NAMES = {
+    "lr": LR,
+    "mode": MODE,
+    "opt": OPT,
+    "momentum": MOMENTUM,
+    "beta2": BETA2,
+    "eps": EPS,
+    "dropout": DROPOUT,
+    "bn_momentum": BN_MOMENTUM,
+    "lr_scale": LR_SCALE,
+    "step": STEP,
+    "seed": SEED,
+    "in_dropout": IN_DROPOUT,
+}

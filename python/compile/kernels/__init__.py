@@ -1,0 +1,44 @@
+"""Layer-1 Pallas kernels for BinaryConnect.
+
+Every kernel here is the paper's compute hot-spot expressed as a Pallas
+kernel (interpret=True so CPU PJRT can execute the lowered HLO; see
+DESIGN.md par.8 for the TPU mapping).  Pure-jnp oracles live in ``ref.py``
+and pytest checks kernel == oracle over hypothesis-generated shapes.
+
+Public surface:
+
+* ``hard_sigmoid``            -- Eq. 3
+* ``binarize_det``            -- Eq. 1 (sign, tie -> +1)
+* ``binarize_stoch``          -- Eq. 2 (needs external uniforms)
+* ``binarize``                -- mode-switched (none/det/stoch) with the
+                                 straight-through estimator as custom_vjp
+* ``pmatmul``                 -- blocked Pallas matmul with custom_vjp
+* ``bgemm_det``               -- fused binarize+matmul (inference hot path)
+* ``sgd_update`` / ``nesterov_update`` / ``adam_update``
+                              -- fused clip(w - eta*g, -1, 1) update kernels
+* ``hinge_loss``              -- squared hinge (L2-SVM) per-example loss
+"""
+
+from .binarize import (
+    hard_sigmoid,
+    binarize_det,
+    binarize_stoch,
+    binarize,
+)
+from .matmul import pmatmul, bgemm_det, set_default_blocks
+from .update import sgd_update, nesterov_update, adam_update
+from .hinge import hinge_loss
+
+__all__ = [
+    "hard_sigmoid",
+    "binarize_det",
+    "binarize_stoch",
+    "binarize",
+    "pmatmul",
+    "bgemm_det",
+    "set_default_blocks",
+    "sgd_update",
+    "nesterov_update",
+    "adam_update",
+    "hinge_loss",
+]

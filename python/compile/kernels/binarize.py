@@ -1,0 +1,148 @@
+"""Binarization kernels (paper Eqs. 1-3) and the straight-through estimator.
+
+The elementwise kernels are tiled over a 1-D grid of VMEM-sized blocks.
+Arbitrary-rank inputs are flattened, padded to a block multiple, processed,
+and reshaped back; padding is sliced off so sign(0)=+1 on pad lanes never
+leaks into results.
+
+``binarize`` is the user-facing op: a ``jax.custom_vjp`` whose forward is a
+``lax.switch`` over {identity, deterministic, stochastic} and whose backward
+passes the cotangent straight through to the real-valued weights
+(Algorithm 1: the gradient w.r.t. w_b is applied to w).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Elementwise block: one VMEM tile's worth of f32 lanes.  8192 * 4 B = 32 KiB
+# per operand block, far under the ~16 MiB VMEM budget, and big enough that
+# the grid loop is not overhead-dominated.
+BLOCK = 8192
+
+
+def _hard_sigmoid(x):
+    # Eq. 3: clip((x+1)/2, 0, 1).  Piece-wise linear "hard" sigmoid.
+    return jnp.clip((x + 1.0) * 0.5, 0.0, 1.0)
+
+
+def _hard_sigmoid_kernel(x_ref, o_ref):
+    o_ref[...] = _hard_sigmoid(x_ref[...])
+
+
+def _binarize_det_kernel(w_ref, h_ref, o_ref):
+    w = w_ref[...]
+    h = h_ref[0]
+    # Eq. 1 at scale H: +H if w >= 0 else -H (ties to +H).
+    o_ref[...] = jnp.where(w >= 0.0, h, -h).astype(w.dtype)
+
+
+def _binarize_stoch_kernel(w_ref, u_ref, h_ref, o_ref):
+    w = w_ref[...]
+    u = u_ref[...]
+    h = h_ref[0]
+    # Eq. 2 at scale H: +H with probability hard_sigmoid(w / H), else -H.
+    # The paper's text uses H = 1, but the authors' released code sets H to
+    # the layer's Glorot coefficient ("H = Glorot"): real weights live in
+    # [-H, H], so w/H spans the full probability range from initialization
+    # on.  With H = 1 and Glorot-scale inits, p ~= 0.5 everywhere and the
+    # propagated signal is pure noise (we verified the resulting
+    # constant-output collapse empirically — see DESIGN.md par.6).
+    o_ref[...] = jnp.where(u < _hard_sigmoid(w / h), h, -h).astype(w.dtype)
+
+
+def _elementwise_call(kernel, out_dtype, args, scalars=None):
+    """Run an elementwise Pallas kernel over same-shape args, any rank.
+
+    ``scalars`` (optional small 1-D vector) rides along unblocked so every
+    grid step sees the full row.
+    """
+    shape = args[0].shape
+    n = 1
+    for d in shape:
+        n *= d
+    flat = [a.reshape((n,)) for a in args]
+    npad = (-n) % BLOCK
+    if npad:
+        flat = [jnp.pad(a, (0, npad)) for a in flat]
+    total = n + npad
+    grid = (total // BLOCK,)
+    in_specs = [pl.BlockSpec((BLOCK,), lambda i: (i,)) for _ in flat]
+    if scalars is not None:
+        s = jnp.asarray(scalars, dtype=out_dtype)
+        in_specs.append(pl.BlockSpec((s.shape[0],), lambda i: (0,)))
+        flat = flat + [s]
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((total,), out_dtype),
+        interpret=True,
+    )(*flat)
+    return out[:n].reshape(shape)
+
+
+def hard_sigmoid(x):
+    """Eq. 3 as a Pallas kernel; matches ``ref.hard_sigmoid_ref``."""
+    return _elementwise_call(_hard_sigmoid_kernel, x.dtype, [x])
+
+
+def binarize_det(w, h=1.0):
+    """Deterministic binarization to ±H, Eq. 1.  sign with sign(0) = +1."""
+    return _elementwise_call(_binarize_det_kernel, w.dtype, [w], [h])
+
+
+def binarize_stoch(w, u, h=1.0):
+    """Stochastic binarization to ±H with p = hard_sigmoid(w/H), Eq. 2.
+
+    ``u`` must be uniforms on [0, 1) of the same shape as ``w``; the caller
+    owns RNG (the train step derives them from the per-step seed so that the
+    whole step is a pure function of its inputs).
+    """
+    return _elementwise_call(_binarize_stoch_kernel, w.dtype, [w, u], [h])
+
+
+@jax.custom_vjp
+def binarize(w, key, mode, h):
+    """Mode-switched binarization with the straight-through estimator.
+
+    mode 0 -> identity (the "no regularizer" baseline uses real weights)
+    mode 1 -> deterministic (Eq. 1), values ±H
+    mode 2 -> stochastic (Eq. 2), values ±H
+
+    ``mode`` is a traced int32 scalar so a single lowered HLO serves every
+    row of Table 2; the switch costs one branch per weight tensor.  ``h``
+    is the layer's binarization scale (the Glorot coefficient, per the
+    authors' released code — see `_binarize_stoch_kernel`).
+
+    The stochastic uniforms are drawn from ``key`` INSIDE the switch
+    branch, so the deterministic and no-regularizer modes never pay the
+    counter-RNG cost (perf pass, EXPERIMENTS.md par.Perf iteration 2).
+    """
+    return jax.lax.switch(
+        mode,
+        [
+            lambda w, key, h: w,
+            lambda w, key, h: binarize_det(w, h),
+            lambda w, key, h: binarize_stoch(
+                w, jax.random.uniform(key, w.shape, w.dtype), h
+            ),
+        ],
+        w,
+        key,
+        h,
+    )
+
+
+def _binarize_fwd(w, key, mode, h):
+    return binarize(w, key, mode, h), ()
+
+
+def _binarize_bwd(_res, g):
+    # Straight-through: dC/dw := dC/dw_b (Algorithm 1, step 3).  No gradient
+    # flows to the noise, the mode selector or the scale.
+    return (g, None, None, None)
+
+
+binarize.defvjp(_binarize_fwd, _binarize_bwd)

@@ -1,0 +1,58 @@
+"""Squared hinge (L2-SVM) loss kernel.
+
+The paper minimizes the square hinge loss of an L2-SVM output layer on all
+three benchmarks (Sec. 3.1).  Targets are +/-1 one-vs-rest rows; the
+per-example loss is
+
+    L_i = sum_j max(0, 1 - y_ij * z_ij)^2
+
+Returned per example (not reduced) so the Rust coordinator can mask padded
+tail batches during evaluation and still report exact error counts.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_BB = 128  # batch rows per block; class dim rides whole (<= a few dozen)
+
+
+def _hinge_kernel(z_ref, y_ref, o_ref):
+    margin = jnp.maximum(0.0, 1.0 - y_ref[...] * z_ref[...])
+    o_ref[...] = jnp.sum(margin * margin, axis=1)
+
+
+@jax.custom_vjp
+def hinge_loss(z, y):
+    """Per-example squared hinge loss, shape (B,). Differentiable in z."""
+    b, c = z.shape
+    bb = min(_BB, b)
+    pad = (-b) % bb
+    zp = jnp.pad(z, ((0, pad), (0, 0)))
+    yp = jnp.pad(y, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        _hinge_kernel,
+        grid=((b + pad) // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, c), lambda i: (i, 0)),
+            pl.BlockSpec((bb, c), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b + pad,), z.dtype),
+        interpret=True,
+    )(zp, yp)
+    return out[:b]
+
+
+def _hinge_fwd(z, y):
+    return hinge_loss(z, y), (z, y)
+
+
+def _hinge_bwd(res, g):
+    z, y = res
+    margin = jnp.maximum(0.0, 1.0 - y * z)
+    dz = -2.0 * margin * y * g[:, None]
+    return dz, None
+
+
+hinge_loss.defvjp(_hinge_fwd, _hinge_bwd)

@@ -1,0 +1,128 @@
+"""Blocked Pallas matmul kernels.
+
+``pmatmul``  -- general A @ B with a classic (m, n, k) grid, f32 accumulate
+               in the revisited output block.  Wrapped in a custom_vjp so it
+               is usable under ``jax.grad`` (Pallas kernels do not
+               auto-differentiate); the backward pass reuses the same kernel
+               on transposed operands, so fwd AND bwd matmuls both run the
+               Pallas hot path, exactly as Algorithm 1 prescribes for w_b.
+
+``bgemm_det`` -- the fused inference hot-spot: binarize a weight tile in
+               VMEM (Eq. 1) and immediately feed the MXU-shaped block
+               matmul.  Fusing means HBM traffic is the *real* weight
+               stream once, never the expanded w_b (DESIGN.md par.8).
+
+Block sizes default to MXU-friendly 128x128x128 and are padded as needed;
+zero-padding is safe for products because padded lanes of the *left*
+operand are zero (padded weight lanes binarize to +1 but multiply zeros or
+are sliced off).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# (bm, bk, bn) — MXU systolic array is 128x128; K tile chosen to keep the
+# three resident blocks ~192 KiB, deep inside VMEM even with double
+# buffering.
+_DEFAULT_BLOCKS = (128, 128, 128)
+_blocks = _DEFAULT_BLOCKS
+
+
+def set_default_blocks(bm, bk, bn):
+    """Tune the global block shape (perf pass knob; see EXPERIMENTS.md)."""
+    global _blocks
+    _blocks = (int(bm), int(bk), int(bn))
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, nk):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...])
+
+
+def _bgemm_det_kernel(x_ref, w_ref, o_ref, *, nk):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = w_ref[...]
+    wb = jnp.where(w >= 0.0, 1.0, -1.0).astype(w.dtype)
+    o_ref[...] += jnp.dot(x_ref[...], wb)
+
+
+def _pad2(a, r, c):
+    pr = (-a.shape[0]) % r
+    pc = (-a.shape[1]) % c
+    if pr or pc:
+        a = jnp.pad(a, ((0, pr), (0, pc)))
+    return a
+
+
+def _blocked_call(kernel, x, w):
+    """Shared driver: pad to block multiples, run (m, n, k) grid, slice."""
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(f"expected 2-D operands, got {x.shape} @ {w.shape}")
+    if x.shape[1] != w.shape[0]:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+    m, k = x.shape
+    _, n = w.shape
+    bm, bk, bn = _blocks
+    bm = min(bm, max(8, m))  # do not tile far beyond the actual extent
+    bk = min(bk, max(8, k))
+    bn = min(bn, max(8, n))
+    xp = _pad2(x, bm, bk)
+    wp = _pad2(w, bk, bn)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    nk = kp // bk
+    grid = (mp // bm, np_ // bn, nk)
+    out = pl.pallas_call(
+        functools.partial(kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def pmatmul(x, w):
+    """A @ B through the blocked Pallas kernel, differentiable."""
+    return _blocked_call(_matmul_kernel, x, w)
+
+
+def _pmatmul_fwd(x, w):
+    return pmatmul(x, w), (x, w)
+
+
+def _pmatmul_bwd(res, g):
+    x, w = res
+    # dX = G @ W^T and dW = X^T @ G, both through the same Pallas kernel so
+    # the backward propagation also runs on binarized weights when the
+    # caller passed w = w_b (Algorithm 1, step 2).
+    dx = pmatmul(g, w.T)
+    dw = pmatmul(x.T, g)
+    return dx, dw
+
+
+pmatmul.defvjp(_pmatmul_fwd, _pmatmul_bwd)
+
+
+def bgemm_det(x, w):
+    """Fused x @ sign(w): the deterministic-BinaryConnect inference GEMM.
+
+    Not differentiable by design -- the training path composes
+    ``binarize`` (STE) with ``pmatmul`` instead so the mode stays
+    switchable inside one HLO.
+    """
+    return _blocked_call(_bgemm_det_kernel, x, w)

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Layer-1 kernel.
+
+These are the correctness ground truth: no Pallas, no tiling, no padding —
+just the textbook formulas.  ``python/tests/`` asserts kernel == oracle
+over hypothesis-generated shapes/values, and the Rust test-suite's expected
+values are derived from these as well.
+"""
+
+import jax.numpy as jnp
+
+
+def hard_sigmoid_ref(x):
+    """Eq. 3."""
+    return jnp.clip((x + 1.0) * 0.5, 0.0, 1.0)
+
+
+def binarize_det_ref(w, h=1.0):
+    """Eq. 1 at scale H, ties to +H."""
+    return jnp.where(w >= 0.0, h, -h).astype(w.dtype)
+
+
+def binarize_stoch_ref(w, u, h=1.0):
+    """Eq. 2 at scale H with externally supplied uniforms."""
+    return jnp.where(u < hard_sigmoid_ref(w / h), h, -h).astype(w.dtype)
+
+
+def matmul_ref(x, w):
+    return jnp.dot(x, w)
+
+
+def bgemm_det_ref(x, w):
+    return jnp.dot(x, binarize_det_ref(w))
+
+
+def sgd_update_ref(w, g, lr, clip, h=1.0):
+    wn = w - lr * g
+    return jnp.clip(wn, -h, h) if clip else wn
+
+
+def nesterov_update_ref(w, g, m, lr, clip, mu, h=1.0):
+    m_new = mu * m - lr * g
+    wn = w + mu * m_new - lr * g
+    if clip:
+        wn = jnp.clip(wn, -h, h)
+    return wn, m_new
+
+
+def adam_update_ref(w, g, m, v, lr, clip, beta1, beta2, eps, t, h=1.0):
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    m_hat = m_new / (1.0 - beta1**t)
+    v_hat = v_new / (1.0 - beta2**t)
+    wn = w - lr * m_hat / (jnp.sqrt(v_hat) + eps)
+    if clip:
+        wn = jnp.clip(wn, -h, h)
+    return wn, m_new, v_new
+
+
+def hinge_loss_ref(z, y):
+    margin = jnp.maximum(0.0, 1.0 - y * z)
+    return jnp.sum(margin * margin, axis=1)
+
+
+def hinge_grad_ref(z, y, g):
+    margin = jnp.maximum(0.0, 1.0 - y * z)
+    return -2.0 * margin * y * g[:, None]

@@ -1,0 +1,112 @@
+"""Layer-2 building blocks: binary dense/conv, batch norm, pooling, dropout.
+
+Everything here is a pure function of explicit parameters — no module state
+— so the whole train step lowers to a single HLO artifact.  Weight
+binarization goes through the Layer-1 ``binarize`` op (straight-through
+estimator); the dense path can route its GEMM through the Pallas
+``pmatmul`` kernel or native ``jnp.dot`` (build-time choice, benchmarked as
+an ablation).
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import binarize, pmatmul
+
+BN_EPS = 1e-4
+
+
+def glorot_coeff(fan_in, fan_out):
+    """Glorot/Xavier uniform limit sqrt(6/(fan_in+fan_out)).
+
+    The paper's Sec. 2.5 trick scales each weight tensor's learning rate by
+    this coefficient (ADAM) or its square (SGD / Nesterov momentum).
+    """
+    return math.sqrt(6.0 / (fan_in + fan_out))
+
+
+def glorot_init(key, shape, fan_in, fan_out, dtype=jnp.float32):
+    c = glorot_coeff(fan_in, fan_out)
+    return jax.random.uniform(key, shape, dtype, minval=-c, maxval=c)
+
+
+def dense_binary(x, w, key, mode, h=1.0, use_pallas=True):
+    """x @ binarize(w): the paper's multiplication-free dense propagation.
+
+    ``h`` is the layer's binarization scale (Glorot coefficient — see
+    kernels/binarize.py).
+    """
+    wb = binarize(w, key, mode, h)
+    if use_pallas:
+        return pmatmul(x, wb)
+    return jnp.dot(x, wb)
+
+
+def conv_binary(x, w, key, mode, h=1.0):
+    """NHWC 'SAME' 3x3 convolution on binarized weights (HWIO layout).
+
+    The convolution itself uses lax.conv_general_dilated — under CPU PJRT
+    that is the only tractable conv — while the binarization (the paper's
+    contribution) still runs the Layer-1 Pallas kernel and its STE.
+    """
+    wb = binarize(w, key, mode, h)
+    return jax.lax.conv_general_dilated(
+        x,
+        wb,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def batchnorm_train(x, gamma, beta, rmean, rvar, momentum):
+    """Batch norm (train): normalize by batch stats, update running stats.
+
+    Dense inputs (B, F) reduce over axis 0; conv inputs (B, H, W, C) reduce
+    over (0, 1, 2).  Returns (y, new_rmean, new_rvar).
+    """
+    axes = tuple(range(x.ndim - 1))
+    mean = jnp.mean(x, axis=axes)
+    var = jnp.var(x, axis=axes)
+    y = (x - mean) * jax.lax.rsqrt(var + BN_EPS) * gamma + beta
+    new_rmean = momentum * rmean + (1.0 - momentum) * mean
+    new_rvar = momentum * rvar + (1.0 - momentum) * var
+    return y, new_rmean, new_rvar
+
+
+def batchnorm_eval(x, gamma, beta, rmean, rvar):
+    return (x - rmean) * jax.lax.rsqrt(rvar + BN_EPS) * gamma + beta
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def maxpool2(x):
+    """2x2 max-pool, stride 2, NHWC."""
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, 2, 2, 1),
+        window_strides=(1, 2, 2, 1),
+        padding="VALID",
+    )
+
+
+def dropout(x, key, p):
+    """Inverted dropout with traced rate ``p`` (p = 0 keeps everything).
+
+    Guarded by lax.cond so the p = 0 regimes (everything except the
+    Dropout baseline row) skip the mask RNG entirely at runtime — the same
+    HLO still serves every row of Table 2.
+    """
+
+    def apply(x):
+        u = jax.random.uniform(key, x.shape, x.dtype)
+        keep = (u >= p).astype(x.dtype)
+        return x * keep / jnp.maximum(1.0 - p, 1e-6)
+
+    return jax.lax.cond(p > 0.0, apply, lambda x: x, x)

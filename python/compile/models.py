@@ -1,0 +1,243 @@
+"""Model definitions: the paper's MLP (Sec. 3.1) and VGG-ish CNN (Sec. 3.2).
+
+A model is a ``ParamDef`` spec (ordered, named, kinded) plus pure
+``init`` / ``apply`` functions operating on a flat list of arrays in spec
+order.  The flat list IS the wire format: the Rust coordinator holds the
+same ordered list of buffers and never needs to understand the pytree.
+
+Param kinds drive the optimizer (see train.py):
+
+* ``weight``  — binarized during propagation, clipped to [-1, 1] after the
+                update, learning rate scaled by the Glorot coefficient.
+* ``affine``  — BN gamma/beta and the output bias: trained, never
+                binarized, never clipped, unscaled LR.
+* ``bn_stat`` — BN running mean/var: not trained; overwritten by the BN
+                update inside the train step.
+"""
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from . import hyper as H
+from . import layers as L
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    name: str
+    shape: tuple
+    kind: str            # "weight" | "affine" | "bn_stat"
+    glorot: float = 0.0  # LR-scaling coefficient for kind == "weight"
+    init: str = "zeros"  # "glorot" | "zeros" | "ones"
+
+
+def _bn_defs(name, c):
+    return [
+        ParamDef(f"{name}.gamma", (c,), "affine", init="ones"),
+        ParamDef(f"{name}.beta", (c,), "affine", init="zeros"),
+        ParamDef(f"{name}.rmean", (c,), "bn_stat", init="zeros"),
+        ParamDef(f"{name}.rvar", (c,), "bn_stat", init="ones"),
+    ]
+
+
+@dataclass(frozen=True)
+class MLPConfig:
+    """Permutation-invariant MNIST MLP: depth x hidden ReLU units, BN after
+    every hidden layer, L2-SVM output (square hinge loss)."""
+
+    name: str = "mlp"
+    in_dim: int = 784
+    hidden: int = 1024
+    depth: int = 3
+    classes: int = 10
+    batch: int = 200
+    use_pallas: bool = True
+
+    @property
+    def input_shape(self):
+        return (self.batch, self.in_dim)
+
+    def spec(self):
+        defs = []
+        d = self.in_dim
+        for i in range(self.depth):
+            c = L.glorot_coeff(d, self.hidden)
+            defs.append(ParamDef(f"l{i}.W", (d, self.hidden), "weight", c, "glorot"))
+            defs += _bn_defs(f"l{i}.bn", self.hidden)
+            d = self.hidden
+        c = L.glorot_coeff(d, self.classes)
+        defs.append(ParamDef("out.W", (d, self.classes), "weight", c, "glorot"))
+        defs.append(ParamDef("out.b", (self.classes,), "affine", init="zeros"))
+        return defs
+
+    def apply(self, params, x, key, hv, train):
+        """Returns (logits, {param_index: new_bn_stat}) in train mode."""
+        mode = hv[H.MODE].astype(jnp.int32)
+        bn_mom = hv[H.BN_MOMENTUM]
+        spec = self.spec()
+        updates = {}
+        i = 0
+        k = 0
+
+        if train:
+            x = L.dropout(x, jax.random.fold_in(key, 1000 + k), hv[H.IN_DROPOUT])
+        for layer in range(self.depth):
+            w = params[i]
+            z = L.dense_binary(
+                x, w, jax.random.fold_in(key, k), mode, spec[i].glorot, self.use_pallas
+            )
+            gamma, beta, rmean, rvar = params[i + 1 : i + 5]
+            if train:
+                z, nm, nv = L.batchnorm_train(z, gamma, beta, rmean, rvar, bn_mom)
+                updates[i + 3] = nm
+                updates[i + 4] = nv
+            else:
+                z = L.batchnorm_eval(z, gamma, beta, rmean, rvar)
+            x = L.relu(z)
+            if train:
+                x = L.dropout(x, jax.random.fold_in(key, 2000 + k), hv[H.DROPOUT])
+            i += 5
+            k += 1
+        w, b = params[i], params[i + 1]
+        logits = (
+            L.dense_binary(x, w, jax.random.fold_in(key, k), mode, spec[i].glorot, self.use_pallas)
+            + b
+        )
+        return logits, updates
+
+
+@dataclass(frozen=True)
+class CNNConfig:
+    """Paper Eq. 5 architecture, width-scalable:
+
+    (2 x base C3) - MP2 - (2 x 2base C3) - MP2 - (2 x 4base C3) - MP2
+      - (2 x fc FC) - classes SVM
+
+    base=128, fc=1024 is the paper's CIFAR-10 net; SVHN uses half.  The
+    default build scales base down so CPU-PJRT runs stay tractable —
+    EXPERIMENTS.md records which scale each table row used.
+    """
+
+    name: str = "cnn"
+    base: int = 128
+    fc: int = 1024
+    in_hw: int = 32
+    in_c: int = 3
+    classes: int = 10
+    batch: int = 50
+    use_pallas: bool = True
+
+    @property
+    def input_shape(self):
+        return (self.batch, self.in_hw, self.in_hw, self.in_c)
+
+    def _conv_plan(self):
+        b = self.base
+        chans = [b, b, 2 * b, 2 * b, 4 * b, 4 * b]
+        pool_after = {1, 3, 5}  # MP2 after the 2nd, 4th, 6th conv
+        return chans, pool_after
+
+    def spec(self):
+        defs = []
+        chans, _ = self._conv_plan()
+        cin = self.in_c
+        for i, cout in enumerate(chans):
+            fan_in = 9 * cin
+            fan_out = 9 * cout
+            c = L.glorot_coeff(fan_in, fan_out)
+            defs.append(ParamDef(f"conv{i}.W", (3, 3, cin, cout), "weight", c, "glorot"))
+            defs += _bn_defs(f"conv{i}.bn", cout)
+            cin = cout
+        hw = self.in_hw // 8
+        flat = hw * hw * chans[-1]
+        d = flat
+        for i in range(2):
+            c = L.glorot_coeff(d, self.fc)
+            defs.append(ParamDef(f"fc{i}.W", (d, self.fc), "weight", c, "glorot"))
+            defs += _bn_defs(f"fc{i}.bn", self.fc)
+            d = self.fc
+        c = L.glorot_coeff(d, self.classes)
+        defs.append(ParamDef("out.W", (d, self.classes), "weight", c, "glorot"))
+        defs.append(ParamDef("out.b", (self.classes,), "affine", init="zeros"))
+        return defs
+
+    def apply(self, params, x, key, hv, train):
+        mode = hv[H.MODE].astype(jnp.int32)
+        bn_mom = hv[H.BN_MOMENTUM]
+        spec = self.spec()
+        chans, pool_after = self._conv_plan()
+        updates = {}
+        i = 0
+        k = 0
+        for layer in range(len(chans)):
+            w = params[i]
+            z = L.conv_binary(x, w, jax.random.fold_in(key, k), mode, spec[i].glorot)
+            gamma, beta, rmean, rvar = params[i + 1 : i + 5]
+            if train:
+                z, nm, nv = L.batchnorm_train(z, gamma, beta, rmean, rvar, bn_mom)
+                updates[i + 3] = nm
+                updates[i + 4] = nv
+            else:
+                z = L.batchnorm_eval(z, gamma, beta, rmean, rvar)
+            x = L.relu(z)
+            if layer in pool_after:
+                x = L.maxpool2(x)
+            i += 5
+            k += 1
+        x = x.reshape((x.shape[0], -1))
+        if train:
+            x = L.dropout(x, jax.random.fold_in(key, 3000), hv[H.DROPOUT])
+        for layer in range(2):
+            w = params[i]
+            z = L.dense_binary(
+                x, w, jax.random.fold_in(key, k), mode, spec[i].glorot, self.use_pallas
+            )
+            gamma, beta, rmean, rvar = params[i + 1 : i + 5]
+            if train:
+                z, nm, nv = L.batchnorm_train(z, gamma, beta, rmean, rvar, bn_mom)
+                updates[i + 3] = nm
+                updates[i + 4] = nv
+            else:
+                z = L.batchnorm_eval(z, gamma, beta, rmean, rvar)
+            x = L.relu(z)
+            if train:
+                x = L.dropout(x, jax.random.fold_in(key, 4000 + k), hv[H.DROPOUT])
+            i += 5
+            k += 1
+        w, b = params[i], params[i + 1]
+        logits = (
+            L.dense_binary(x, w, jax.random.fold_in(key, k), mode, spec[i].glorot, self.use_pallas)
+            + b
+        )
+        return logits, updates
+
+
+def init_params(config, key):
+    """Initialize the flat param list per spec (Glorot uniform weights)."""
+    out = []
+    for i, d in enumerate(config.spec()):
+        if d.init == "glorot":
+            fan_in = 1
+            for s in d.shape[:-1]:
+                fan_in *= s
+            fan_out = d.shape[-1]
+            if len(d.shape) == 4:  # conv HWIO: receptive field counts in both
+                fan_out *= d.shape[0] * d.shape[1]
+            out.append(L.glorot_init(jax.random.fold_in(key, i), d.shape, fan_in, fan_out))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, jnp.float32))
+        else:
+            out.append(jnp.zeros(d.shape, jnp.float32))
+    return out
+
+
+def n_scalars(config):
+    total = 0
+    for d in config.spec():
+        n = 1
+        for s in d.shape:
+            n *= s
+        total += n
+    return total

@@ -1,0 +1,162 @@
+"""The AOT-exported step functions: init / train_step / eval_step.
+
+Every function is a *pure* function of its tensor arguments — no Python
+state — so each lowers to one HLO artifact that the Rust coordinator can
+execute forever.  Wire format (flat, in spec order):
+
+    init(hyper)                                  -> (P..., M..., V...)
+    train_step(P..., M..., V..., x, y, hyper)    -> (P'..., M'..., V'..., loss, nerr)
+    eval_step(P..., x, y, hyper)                 -> (loss_vec[B], err_vec[B])
+
+P is the full param list (weights, BN affine, BN stats); M/V are optimizer
+slots (zeros where unused, so every optimizer shares one signature).
+Algorithm 1 maps onto train_step as: binarize -> forward -> backward (both
+on w_b, via the straight-through ``binarize``) -> update + clip on the
+real-valued weights (the fused Layer-1 update kernels).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import hyper as H
+from .kernels import hinge_loss, sgd_update, nesterov_update, adam_update
+
+
+def _key_from(hv):
+    seed = hv[H.SEED].astype(jnp.uint32)
+    return jax.random.fold_in(jax.random.PRNGKey(0), seed)
+
+
+def _metrics(logits, y):
+    pred = jnp.argmax(logits, axis=1)
+    target = jnp.argmax(y, axis=1)
+    errv = (pred != target).astype(jnp.float32)
+    lossv = hinge_loss(logits, y)
+    return lossv, errv
+
+
+def make_train_step(config):
+    spec = config.spec()
+    n = len(spec)
+    tr_idx = [i for i, d in enumerate(spec) if d.kind != "bn_stat"]
+    is_weight = [spec[i].kind == "weight" for i in tr_idx]
+    coeff = [spec[i].glorot for i in tr_idx]
+
+    def _updates(opt_scale_pow, update_one):
+        """Build one optimizer branch: map update_one over trainables."""
+
+        def branch(tr, grads, m, v, lr, mode, lr_scale, hv):
+            new_tr, new_m, new_v = [], [], []
+            for j in range(len(tr)):
+                if is_weight[j]:
+                    # Sec. 2.5 trick, as in the authors' released code
+                    # (W_LR_scale="Glorot"): the weight LR is scaled UP by
+                    # the inverse Glorot coefficient (inverse square for
+                    # SGD/Nesterov) — clipped [-H, H] weights need steps
+                    # large enough to flip signs within a run.
+                    c = coeff[j] ** opt_scale_pow
+                    lr_j = jnp.where(lr_scale > 0.0, lr / c, lr)
+                    clip_j = jnp.where(mode > 0.0, 1.0, 0.0)
+                    h_j = coeff[j]
+                else:
+                    lr_j = lr
+                    clip_j = jnp.float32(0.0)
+                    h_j = 1.0
+                w2, m2, v2 = update_one(tr[j], grads[j], m[j], v[j], lr_j, clip_j, h_j, hv)
+                new_tr.append(w2)
+                new_m.append(m2)
+                new_v.append(v2)
+            return new_tr, new_m, new_v
+
+        return branch
+
+    def _sgd_one(w, g, m, v, lr, clip, h, hv):
+        return sgd_update(w, g, lr, clip, h), m, v
+
+    def _nesterov_one(w, g, m, v, lr, clip, h, hv):
+        w2, m2 = nesterov_update(w, g, m, lr, clip, hv[H.MOMENTUM], h)
+        return w2, m2, v
+
+    def _adam_one(w, g, m, v, lr, clip, h, hv):
+        t = hv[H.STEP]
+        corr1 = 1.0 - jnp.power(hv[H.MOMENTUM], t)
+        corr2 = 1.0 - jnp.power(hv[H.BETA2], t)
+        return adam_update(
+            w, g, m, v, lr, clip, hv[H.MOMENTUM], hv[H.BETA2], hv[H.EPS], corr1, corr2, h
+        )
+
+    def train_step(*args):
+        assert len(args) == 3 * n + 3, f"expected {3 * n + 3} args, got {len(args)}"
+        params = list(args[:n])
+        mslots = list(args[n : 2 * n])
+        vslots = list(args[2 * n : 3 * n])
+        x, y, hv = args[3 * n], args[3 * n + 1], args[3 * n + 2]
+        key = _key_from(hv)
+
+        def loss_fn(tr):
+            full = list(params)
+            for j, gi in enumerate(tr_idx):
+                full[gi] = tr[j]
+            logits, bn_updates = config.apply(full, x, key, hv, train=True)
+            lossv, errv = _metrics(logits, y)
+            return jnp.mean(lossv), (jnp.sum(errv), bn_updates)
+
+        tr = [params[gi] for gi in tr_idx]
+        (loss, (nerr, bn_updates)), grads = jax.value_and_grad(loss_fn, has_aux=True)(tr)
+
+        lr = hv[H.LR]
+        mode = hv[H.MODE]
+        lr_scale = hv[H.LR_SCALE]
+        opt = hv[H.OPT].astype(jnp.int32)
+        tr_m = [mslots[gi] for gi in tr_idx]
+        tr_v = [vslots[gi] for gi in tr_idx]
+        new_tr, new_m, new_v = jax.lax.switch(
+            opt,
+            [
+                _updates(2, _sgd_one),       # SGD scales LR by 1/coeff^2
+                _updates(2, _nesterov_one),  # so does Nesterov momentum
+                _updates(1, _adam_one),      # ADAM scales by 1/coeff
+            ],
+            tr, grads, tr_m, tr_v, lr, mode, lr_scale, hv,
+        )
+
+        out_p, out_m, out_v = list(params), list(mslots), list(vslots)
+        for j, gi in enumerate(tr_idx):
+            out_p[gi] = new_tr[j]
+            out_m[gi] = new_m[j]
+            out_v[gi] = new_v[j]
+        for gi, stat in bn_updates.items():
+            out_p[gi] = stat
+        return tuple(out_p + out_m + out_v + [loss, nerr])
+
+    return train_step
+
+
+def make_eval_step(config):
+    spec = config.spec()
+    n = len(spec)
+
+    def eval_step(*args):
+        assert len(args) == n + 3
+        params = list(args[:n])
+        x, y, hv = args[n], args[n + 1], args[n + 2]
+        key = _key_from(hv)
+        logits, _ = config.apply(params, x, key, hv, train=False)
+        lossv, errv = _metrics(logits, y)
+        return lossv, errv
+
+    return eval_step
+
+
+def make_init(config):
+    from .models import init_params
+
+    n = len(config.spec())
+
+    def init(hv):
+        key = _key_from(hv)
+        params = init_params(config, key)
+        zeros = [jnp.zeros_like(p) for p in params]
+        return tuple(params + zeros + [jnp.zeros_like(z) for z in zeros])
+
+    return init

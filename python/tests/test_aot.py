@@ -1,0 +1,86 @@
+"""AOT export tests: lowering to HLO text and manifest integrity."""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import hyper as H
+from compile.aot import build_configs, lower_model, to_hlo_text
+from compile.models import MLPConfig
+from compile.train import make_train_step
+
+
+def test_build_configs_cover_default_set():
+    cfgs = build_configs(1)
+    assert set(cfgs) == {"mlp", "mlp_ng", "cnn", "cnn_small"}
+    assert cfgs["mlp"].use_pallas and not cfgs["mlp_ng"].use_pallas
+    # SVHN net is half the CIFAR net (paper Sec. 3.3)
+    assert cfgs["cnn_small"].base * 2 == cfgs["cnn"].base
+    assert cfgs["cnn_small"].fc * 2 == cfgs["cnn"].fc
+
+
+def test_scale_flag_multiplies_width():
+    c1 = build_configs(1)["mlp"]
+    c8 = build_configs(8)["mlp"]
+    assert c8.hidden == 8 * c1.hidden
+    # paper scale: 3 x 1024 hidden units
+    assert c8.hidden == 1024
+
+
+def test_hlo_text_is_parseable_hlo(tmp_path):
+    cfg = MLPConfig(name="t", hidden=8, batch=4, in_dim=6, depth=1, use_pallas=False)
+    sds = jax.ShapeDtypeStruct
+    f32 = jax.numpy.float32
+    spec = cfg.spec()
+    pshapes = [sds(d.shape, f32) for d in spec]
+    lowered = jax.jit(make_train_step(cfg)).lower(
+        *(pshapes * 3),
+        sds(cfg.input_shape, f32),
+        sds((4, 10), f32),
+        sds((H.LEN,), f32),
+    )
+    text = to_hlo_text(lowered)
+    assert text.startswith("HloModule"), text[:50]
+    assert "ENTRY" in text
+    # tuple return: 3n params/slots + loss + nerr
+    assert text.count("parameter(") >= 3 * len(spec) + 3
+
+
+def test_lower_model_writes_artifacts_and_manifest_entry(tmp_path):
+    cfg = MLPConfig(name="tiny", hidden=8, batch=4, in_dim=6, depth=1, use_pallas=False)
+    entry = lower_model(cfg, str(tmp_path))
+    for k in ("init", "train", "eval"):
+        path = tmp_path / entry["artifacts"][k]
+        assert path.exists(), k
+        assert path.read_text().startswith("HloModule")
+    assert entry["batch"] == 4
+    assert entry["n_param_tensors"] == len(cfg.spec())
+    names = [p["name"] for p in entry["params"]]
+    assert names[0] == "l0.W" and names[-1] == "out.b"
+    kinds = {p["kind"] for p in entry["params"]}
+    assert kinds == {"weight", "affine", "bn_stat"}
+    # glorot coefficients recorded for weights only
+    for p in entry["params"]:
+        if p["kind"] == "weight":
+            assert p["glorot"] > 0
+        else:
+            assert p["glorot"] == 0
+
+
+def test_generated_manifest_consistency():
+    # validate the real artifacts dir when present (built by `make artifacts`)
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    with open(path) as f:
+        manifest = json.load(f)
+    assert manifest["hyper"]["len"] == H.LEN
+    for name, m in manifest["models"].items():
+        n_scalars = sum(int(np.prod(p["shape"])) for p in m["params"])
+        assert n_scalars == m["n_scalars"], name
+        d = os.path.dirname(path)
+        for art in m["artifacts"].values():
+            assert os.path.exists(os.path.join(d, art)), art

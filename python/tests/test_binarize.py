@@ -1,0 +1,118 @@
+"""Kernel-vs-oracle tests for the binarization kernels (paper Eqs. 1-3)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import binarize, binarize_det, binarize_stoch, hard_sigmoid
+from compile.kernels import ref
+
+SHAPES = st.sampled_from(
+    [(1,), (7,), (128,), (8192,), (8193,), (3, 5), (64, 64), (2, 3, 4), (1, 1, 1, 1)]
+)
+
+
+def _arr(rs, shape, scale=2.0):
+    return (rs.standard_normal(shape) * scale).astype(np.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=SHAPES, seed=st.integers(0, 2**16))
+def test_binarize_det_matches_ref(shape, seed):
+    w = _arr(np.random.RandomState(seed), shape)
+    out = binarize_det(jnp.asarray(w))
+    assert_allclose(np.asarray(out), np.asarray(ref.binarize_det_ref(w)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=SHAPES, seed=st.integers(0, 2**16))
+def test_binarize_stoch_matches_ref(shape, seed):
+    rs = np.random.RandomState(seed)
+    w = _arr(rs, shape)
+    u = rs.uniform(size=shape).astype(np.float32)
+    out = binarize_stoch(jnp.asarray(w), jnp.asarray(u))
+    assert_allclose(np.asarray(out), np.asarray(ref.binarize_stoch_ref(w, u)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=SHAPES, seed=st.integers(0, 2**16))
+def test_hard_sigmoid_matches_ref(shape, seed):
+    x = _arr(np.random.RandomState(seed), shape, scale=3.0)
+    out = hard_sigmoid(jnp.asarray(x))
+    assert_allclose(np.asarray(out), np.asarray(ref.hard_sigmoid_ref(x)), rtol=1e-6)
+
+
+def test_binarize_det_outputs_only_pm1():
+    w = jnp.asarray(np.random.RandomState(0).standard_normal((50, 50)).astype(np.float32))
+    out = np.asarray(binarize_det(w))
+    assert set(np.unique(out)) <= {-1.0, 1.0}
+
+
+def test_binarize_det_tie_goes_positive():
+    out = np.asarray(binarize_det(jnp.zeros((4,), jnp.float32)))
+    assert_allclose(out, np.ones(4, np.float32))
+
+
+def test_binarize_stoch_expectation_is_hard_sigmoid():
+    # E[w_b] = 2*sigma(w) - 1: the paper's "preserves the expected value"
+    # property (Sec. 2.3), checked by Monte Carlo.
+    w = jnp.asarray([-2.0, -0.5, 0.0, 0.5, 2.0], jnp.float32)
+    n = 20000
+    key = jax.random.PRNGKey(0)
+    u = jax.random.uniform(key, (n, 5))
+    wb = binarize_stoch(jnp.broadcast_to(w, (n, 5)), u)
+    mean = np.asarray(wb).mean(axis=0)
+    expect = 2.0 * np.asarray(ref.hard_sigmoid_ref(w)) - 1.0
+    assert_allclose(mean, expect, atol=0.03)
+
+
+def test_binarize_mode_switch():
+    rs = np.random.RandomState(3)
+    w = jnp.asarray(_arr(rs, (33, 17)))
+    key = jax.random.PRNGKey(5)
+    u = jax.random.uniform(key, w.shape, w.dtype)  # what the stoch branch draws
+    out0 = binarize(w, key, jnp.int32(0), 1.0)
+    out1 = binarize(w, key, jnp.int32(1), 1.0)
+    out2 = binarize(w, key, jnp.int32(2), 1.0)
+    assert_allclose(np.asarray(out0), np.asarray(w))
+    assert_allclose(np.asarray(out1), np.asarray(ref.binarize_det_ref(w)))
+    assert_allclose(np.asarray(out2), np.asarray(ref.binarize_stoch_ref(w, u)))
+
+
+def test_binarize_straight_through_gradient():
+    # dC/dw must equal dC/dw_b exactly (identity STE), for every mode.
+    rs = np.random.RandomState(4)
+    w = jnp.asarray(_arr(rs, (8, 8)))
+    key = jax.random.PRNGKey(6)
+    c = jnp.asarray(_arr(rs, (8, 8)))
+
+    for mode in (0, 1, 2):
+        g = jax.grad(lambda w_: jnp.sum(binarize(w_, key, jnp.int32(mode), 0.5) * c))(w)
+        assert_allclose(np.asarray(g), np.asarray(c), rtol=1e-6)
+
+
+def test_binarize_jit_lowers():
+    # The op must survive jit + lowering (the AOT path depends on it).
+    w = jnp.ones((16, 16), jnp.float32)
+    f = jax.jit(binarize)
+    out = f(w, jax.random.PRNGKey(0), jnp.int32(1), 1.0)
+    assert_allclose(np.asarray(out), np.ones((16, 16), np.float32))
+
+
+def test_binarize_det_scale_h():
+    w = jnp.asarray([[0.02, -0.01]], jnp.float32)
+    out = np.asarray(binarize_det(w, 0.25))
+    assert_allclose(out, [[0.25, -0.25]])
+
+
+def test_binarize_stoch_scale_h_probability():
+    # p = hard_sigmoid(w / H): at w = H/2, p = 0.75 regardless of H.
+    h = 0.125
+    w = jnp.full((20000,), h / 2, jnp.float32)
+    u = jax.random.uniform(jax.random.PRNGKey(0), (20000,))
+    wb = np.asarray(binarize_stoch(w, u, h))
+    assert set(np.unique(wb)) <= {-np.float32(h), np.float32(h)}
+    frac_pos = (wb > 0).mean()
+    assert abs(frac_pos - 0.75) < 0.02, frac_pos

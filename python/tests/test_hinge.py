@@ -1,0 +1,53 @@
+"""Kernel-vs-oracle tests for the squared hinge (L2-SVM) loss."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import hinge_loss
+from compile.kernels import ref
+
+
+def _case(seed, b, c):
+    rs = np.random.RandomState(seed)
+    z = rs.standard_normal((b, c)).astype(np.float32) * 2
+    labels = rs.randint(0, c, size=b)
+    y = -np.ones((b, c), np.float32)
+    y[np.arange(b), labels] = 1.0
+    return z, y
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 300), c=st.integers(2, 20), seed=st.integers(0, 2**16))
+def test_hinge_matches_ref(b, c, seed):
+    z, y = _case(seed, b, c)
+    out = hinge_loss(jnp.asarray(z), jnp.asarray(y))
+    assert out.shape == (b,)
+    assert_allclose(np.asarray(out), np.asarray(ref.hinge_loss_ref(z, y)), rtol=1e-5, atol=1e-5)
+
+
+def test_hinge_grad_matches_ref():
+    z, y = _case(5, 64, 10)
+    zj, yj = jnp.asarray(z), jnp.asarray(y)
+
+    g = jax.grad(lambda z_: jnp.mean(hinge_loss(z_, yj)))(zj)
+    gref = ref.hinge_grad_ref(z, y, np.full(64, 1.0 / 64, np.float32))
+    assert_allclose(np.asarray(g), np.asarray(gref), rtol=1e-5, atol=1e-6)
+
+
+def test_hinge_zero_when_margin_satisfied():
+    # z exactly on the correct side with margin >= 1 -> zero loss.
+    y = np.array([[1.0, -1.0]], np.float32)
+    z = np.array([[2.0, -3.0]], np.float32)
+    out = np.asarray(hinge_loss(jnp.asarray(z), jnp.asarray(y)))
+    assert_allclose(out, [0.0])
+
+
+def test_hinge_known_value():
+    y = np.array([[1.0, -1.0]], np.float32)
+    z = np.array([[0.0, 0.0]], np.float32)
+    # both classes violate by exactly 1 -> 1^2 + 1^2 = 2
+    out = np.asarray(hinge_loss(jnp.asarray(z), jnp.asarray(y)))
+    assert_allclose(out, [2.0])

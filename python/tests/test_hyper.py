@@ -1,0 +1,31 @@
+"""Hyper-vector layout invariants (mirrored by rust/src/runtime/hyper.rs)."""
+
+from compile import hyper as H
+
+
+def test_indices_unique_and_in_range():
+    vals = list(H.NAMES.values())
+    assert len(set(vals)) == len(vals)
+    assert all(0 <= v < H.LEN for v in vals)
+
+
+def test_canonical_positions_frozen():
+    # the Rust mirror hard-codes these; breaking them silently corrupts runs
+    assert H.LR == 0
+    assert H.MODE == 1
+    assert H.OPT == 2
+    assert H.MOMENTUM == 3
+    assert H.BETA2 == 4
+    assert H.EPS == 5
+    assert H.DROPOUT == 6
+    assert H.BN_MOMENTUM == 7
+    assert H.LR_SCALE == 8
+    assert H.STEP == 9
+    assert H.SEED == 10
+    assert H.IN_DROPOUT == 11
+    assert H.LEN == 16
+
+
+def test_names_map_matches_constants():
+    for name, idx in H.NAMES.items():
+        assert getattr(H, name.upper()) == idx

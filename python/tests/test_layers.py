@@ -1,0 +1,99 @@
+"""Tests for Layer-2 building blocks."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from numpy.testing import assert_allclose
+
+from compile import layers as L
+
+
+def test_glorot_coeff():
+    assert_allclose(L.glorot_coeff(784, 1024), np.sqrt(6.0 / 1808.0))
+
+
+def test_glorot_init_bounds_and_spread():
+    key = jax.random.PRNGKey(0)
+    w = np.asarray(L.glorot_init(key, (200, 300), 200, 300))
+    c = L.glorot_coeff(200, 300)
+    assert w.min() >= -c and w.max() <= c
+    # uniform(-c, c) variance = c^2/3
+    assert_allclose(w.var(), c * c / 3.0, rtol=0.1)
+
+
+def test_dense_binary_det_uses_sign_weights():
+    x = jnp.asarray([[1.0, 2.0]], jnp.float32)
+    w = jnp.asarray([[0.3], [-0.2]], jnp.float32)
+    out = L.dense_binary(x, w, jax.random.PRNGKey(0), jnp.int32(1))
+    assert_allclose(np.asarray(out), [[1.0 - 2.0]], rtol=1e-6)
+
+
+def test_dense_binary_pallas_vs_native():
+    rs = np.random.RandomState(0)
+    x = jnp.asarray(rs.standard_normal((32, 65)).astype(np.float32))
+    w = jnp.asarray(rs.standard_normal((65, 17)).astype(np.float32))
+    key = jax.random.PRNGKey(3)
+    a = L.dense_binary(x, w, key, jnp.int32(1), use_pallas=True)
+    b = L.dense_binary(x, w, key, jnp.int32(1), use_pallas=False)
+    assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+def test_conv_binary_matches_manual_sign_conv():
+    rs = np.random.RandomState(1)
+    x = jnp.asarray(rs.standard_normal((2, 8, 8, 3)).astype(np.float32))
+    w = jnp.asarray(rs.standard_normal((3, 3, 3, 5)).astype(np.float32))
+    out = L.conv_binary(x, w, jax.random.PRNGKey(0), jnp.int32(1))
+    wb = jnp.where(w >= 0, 1.0, -1.0)
+    expect = jax.lax.conv_general_dilated(
+        x, wb, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-5, atol=1e-5)
+    assert out.shape == (2, 8, 8, 5)
+
+
+def test_batchnorm_train_normalizes():
+    rs = np.random.RandomState(2)
+    x = jnp.asarray(rs.standard_normal((256, 16)).astype(np.float32) * 3 + 5)
+    gamma = jnp.ones(16)
+    beta = jnp.zeros(16)
+    y, nm, nv = L.batchnorm_train(x, gamma, beta, jnp.zeros(16), jnp.ones(16), 0.9)
+    yn = np.asarray(y)
+    assert_allclose(yn.mean(axis=0), np.zeros(16), atol=1e-4)
+    assert_allclose(yn.var(axis=0), np.ones(16), rtol=1e-2)
+    # running stats move toward batch stats
+    assert_allclose(np.asarray(nm), 0.1 * np.asarray(x).mean(axis=0), rtol=1e-4)
+
+
+def test_batchnorm_conv_reduces_spatial():
+    rs = np.random.RandomState(3)
+    x = jnp.asarray(rs.standard_normal((4, 6, 6, 8)).astype(np.float32) * 2 + 1)
+    y, _, _ = L.batchnorm_train(x, jnp.ones(8), jnp.zeros(8), jnp.zeros(8), jnp.ones(8), 0.9)
+    yn = np.asarray(y).reshape(-1, 8)
+    assert_allclose(yn.mean(axis=0), np.zeros(8), atol=1e-4)
+
+
+def test_batchnorm_eval_uses_running_stats():
+    x = jnp.asarray([[2.0, 4.0]], jnp.float32)
+    y = L.batchnorm_eval(x, jnp.ones(2), jnp.zeros(2), jnp.asarray([1.0, 2.0]), jnp.ones(2))
+    assert_allclose(np.asarray(y), [[1.0, 2.0]], rtol=1e-3)
+
+
+def test_maxpool2():
+    x = jnp.arange(16.0).reshape(1, 4, 4, 1)
+    y = np.asarray(L.maxpool2(x)).reshape(2, 2)
+    assert_allclose(y, [[5.0, 7.0], [13.0, 15.0]])
+
+
+def test_dropout_zero_rate_identity():
+    x = jnp.asarray(np.random.RandomState(0).standard_normal((64, 32)).astype(np.float32))
+    y = L.dropout(x, jax.random.PRNGKey(0), jnp.float32(0.0))
+    assert_allclose(np.asarray(y), np.asarray(x), rtol=1e-6)
+
+
+def test_dropout_preserves_expectation():
+    x = jnp.ones((400, 500), jnp.float32)
+    y = np.asarray(L.dropout(x, jax.random.PRNGKey(1), jnp.float32(0.5)))
+    assert abs(y.mean() - 1.0) < 0.02
+    # roughly half the units dropped
+    drop_frac = (y == 0).mean()
+    assert abs(drop_frac - 0.5) < 0.02

@@ -1,0 +1,74 @@
+"""Kernel-vs-oracle tests for the blocked Pallas matmuls."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import pmatmul, bgemm_det
+from compile.kernels import ref
+
+DIMS = st.integers(1, 300)
+
+
+def _mats(seed, m, k, n):
+    rs = np.random.RandomState(seed)
+    x = rs.standard_normal((m, k)).astype(np.float32)
+    w = rs.standard_normal((k, n)).astype(np.float32)
+    return x, w
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**16))
+def test_pmatmul_matches_ref(m, k, n, seed):
+    x, w = _mats(seed, m, k, n)
+    out = pmatmul(jnp.asarray(x), jnp.asarray(w))
+    assert_allclose(np.asarray(out), np.asarray(ref.matmul_ref(x, w)), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**16))
+def test_bgemm_det_matches_ref(m, k, n, seed):
+    x, w = _mats(seed, m, k, n)
+    out = bgemm_det(jnp.asarray(x), jnp.asarray(w))
+    assert_allclose(np.asarray(out), np.asarray(ref.bgemm_det_ref(x, w)), rtol=2e-4, atol=2e-4)
+
+
+def test_pmatmul_exact_block_multiples():
+    x, w = _mats(7, 256, 128, 384)
+    out = pmatmul(jnp.asarray(x), jnp.asarray(w))
+    assert_allclose(np.asarray(out), x @ w, rtol=2e-4, atol=2e-4)
+
+
+def test_pmatmul_gradients_match_dot():
+    x, w = _mats(11, 30, 20, 10)
+
+    def f_pallas(x_, w_):
+        return jnp.sum(pmatmul(x_, w_) ** 2)
+
+    def f_ref(x_, w_):
+        return jnp.sum(jnp.dot(x_, w_) ** 2)
+
+    gx_p, gw_p = jax.grad(f_pallas, argnums=(0, 1))(jnp.asarray(x), jnp.asarray(w))
+    gx_r, gw_r = jax.grad(f_ref, argnums=(0, 1))(jnp.asarray(x), jnp.asarray(w))
+    assert_allclose(np.asarray(gx_p), np.asarray(gx_r), rtol=1e-3, atol=1e-3)
+    assert_allclose(np.asarray(gw_p), np.asarray(gw_r), rtol=1e-3, atol=1e-3)
+
+
+def test_bgemm_binarizes_weights_not_activations():
+    # x stays real; only w is signed.
+    x = np.array([[0.5, -0.25]], np.float32)
+    w = np.array([[0.3], [-0.7]], np.float32)
+    out = bgemm_det(jnp.asarray(x), jnp.asarray(w))
+    # 0.5*1 + (-0.25)*(-1) = 0.75
+    assert_allclose(np.asarray(out), [[0.75]], rtol=1e-6)
+
+
+def test_pmatmul_shape_errors():
+    import pytest
+
+    with pytest.raises(ValueError):
+        pmatmul(jnp.ones((2, 3)), jnp.ones((4, 5)))
+    with pytest.raises(ValueError):
+        pmatmul(jnp.ones((2, 3, 4)), jnp.ones((4, 5)))

@@ -1,0 +1,105 @@
+"""Model spec / init / apply consistency tests."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from numpy.testing import assert_allclose
+
+from compile import hyper as H
+from compile.models import MLPConfig, CNNConfig, init_params, n_scalars
+
+
+def _hv(**kw):
+    hv = np.zeros(H.LEN, np.float32)
+    hv[H.BN_MOMENTUM] = 0.9
+    hv[H.STEP] = 1
+    for k, val in kw.items():
+        hv[H.NAMES[k]] = val
+    return jnp.asarray(hv)
+
+
+MLP = MLPConfig(hidden=32, batch=8, in_dim=20, use_pallas=False)
+CNN = CNNConfig(base=4, fc=16, batch=4, in_hw=16)
+
+
+def test_mlp_spec_shapes():
+    spec = MLP.spec()
+    # 3 hidden layers x (W + 4 BN) + out W + out b
+    assert len(spec) == 3 * 5 + 2
+    assert spec[0].shape == (20, 32)
+    assert spec[0].kind == "weight"
+    assert spec[-2].shape == (32, 10)
+    assert spec[-1].shape == (10,)
+    names = [d.name for d in spec]
+    assert len(set(names)) == len(names)
+
+
+def test_cnn_spec_shapes():
+    spec = CNN.spec()
+    # 6 conv x 5 + 2 fc x 5 + out W + b
+    assert len(spec) == 6 * 5 + 2 * 5 + 2
+    assert spec[0].shape == (3, 3, 3, 4)
+    # after 3 maxpools: 16 -> 2; flat = 2*2*16 = 64
+    fc0 = [d for d in spec if d.name == "fc0.W"][0]
+    assert fc0.shape == (64, 16)
+
+
+def test_init_params_match_spec():
+    params = init_params(MLP, jax.random.PRNGKey(0))
+    spec = MLP.spec()
+    assert len(params) == len(spec)
+    for p, d in zip(params, spec):
+        assert p.shape == d.shape
+    # BN gamma starts at 1, stats at (0, 1)
+    gamma = params[1]
+    assert_allclose(np.asarray(gamma), np.ones(32, np.float32))
+
+
+def test_n_scalars_counts():
+    total = sum(int(np.prod(d.shape)) for d in MLP.spec())
+    assert n_scalars(MLP) == total
+
+
+def test_mlp_apply_shapes_and_determinism():
+    params = init_params(MLP, jax.random.PRNGKey(1))
+    x = jnp.asarray(np.random.RandomState(0).standard_normal((8, 20)).astype(np.float32))
+    key = jax.random.PRNGKey(7)
+    logits, updates = MLP.apply(params, x, key, _hv(mode=1), train=True)
+    assert logits.shape == (8, 10)
+    # one (rmean, rvar) update per hidden layer
+    assert len(updates) == 6
+    logits2, _ = MLP.apply(params, x, key, _hv(mode=1), train=True)
+    assert_allclose(np.asarray(logits), np.asarray(logits2), rtol=1e-6)
+
+
+def test_mlp_eval_no_updates():
+    params = init_params(MLP, jax.random.PRNGKey(1))
+    x = jnp.zeros((8, 20), jnp.float32)
+    logits, updates = MLP.apply(params, x, jax.random.PRNGKey(0), _hv(mode=0), train=False)
+    assert updates == {}
+    assert logits.shape == (8, 10)
+
+
+def test_cnn_apply_shapes():
+    params = init_params(CNN, jax.random.PRNGKey(2))
+    x = jnp.asarray(np.random.RandomState(1).standard_normal((4, 16, 16, 3)).astype(np.float32))
+    logits, updates = CNN.apply(params, x, jax.random.PRNGKey(0), _hv(mode=1), train=True)
+    assert logits.shape == (4, 10)
+    assert len(updates) == 16  # 8 BN layers x 2 stats
+
+
+def test_mode_changes_output():
+    params = init_params(MLP, jax.random.PRNGKey(3))
+    x = jnp.asarray(np.random.RandomState(2).standard_normal((8, 20)).astype(np.float32))
+    key = jax.random.PRNGKey(0)
+    l0, _ = MLP.apply(params, x, key, _hv(mode=0), train=False)
+    l1, _ = MLP.apply(params, x, key, _hv(mode=1), train=False)
+    assert not np.allclose(np.asarray(l0), np.asarray(l1))
+
+
+def test_stochastic_mode_varies_with_seed():
+    params = init_params(MLP, jax.random.PRNGKey(4))
+    x = jnp.ones((8, 20), jnp.float32)
+    la, _ = MLP.apply(params, x, jax.random.PRNGKey(1), _hv(mode=2), train=False)
+    lb, _ = MLP.apply(params, x, jax.random.PRNGKey(2), _hv(mode=2), train=False)
+    assert not np.allclose(np.asarray(la), np.asarray(lb))

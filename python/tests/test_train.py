@@ -1,0 +1,184 @@
+"""End-to-end train-step tests: one jitted function implements Algorithm 1."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from numpy.testing import assert_allclose
+
+from compile import hyper as H
+from compile.models import MLPConfig, init_params
+from compile.train import make_train_step, make_eval_step, make_init
+
+CFG = MLPConfig(hidden=32, batch=16, in_dim=12, depth=2, use_pallas=False)
+N = len(CFG.spec())
+
+
+def _hv(**kw):
+    hv = np.zeros(H.LEN, np.float32)
+    hv[H.LR] = 0.05
+    hv[H.MOMENTUM] = 0.9
+    hv[H.BETA2] = 0.999
+    hv[H.EPS] = 1e-8
+    hv[H.BN_MOMENTUM] = 0.9
+    hv[H.STEP] = 1
+    for k, val in kw.items():
+        hv[H.NAMES[k]] = val
+    return jnp.asarray(hv)
+
+
+def _batch(seed=0):
+    rs = np.random.RandomState(seed)
+    x = rs.standard_normal((16, 12)).astype(np.float32)
+    labels = rs.randint(0, 10, 16)
+    y = -np.ones((16, 10), np.float32)
+    y[np.arange(16), labels] = 1.0
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+def _state(seed=0):
+    params = init_params(CFG, jax.random.PRNGKey(seed))
+    zeros = [jnp.zeros_like(p) for p in params]
+    return params, zeros, [jnp.zeros_like(p) for p in params]
+
+
+def test_init_artifact_matches_init_params():
+    init = jax.jit(make_init(CFG))
+    out = init(_hv(seed=5))
+    assert len(out) == 3 * N
+    params = init_params(CFG, jax.random.fold_in(jax.random.PRNGKey(0), jnp.uint32(5)))
+    for a, b in zip(out[:N], params):
+        assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+    for s in out[N:]:
+        assert float(jnp.abs(s).max()) == 0.0
+
+
+def test_train_step_output_arity_and_metrics():
+    step = jax.jit(make_train_step(CFG))
+    params, m, v = _state()
+    x, y = _batch()
+    out = step(*params, *m, *v, x, y, _hv(mode=1, opt=0))
+    assert len(out) == 3 * N + 2
+    loss, nerr = float(out[-2]), float(out[-1])
+    assert loss > 0.0
+    assert 0 <= nerr <= 16
+
+
+def test_sgd_loss_decreases_over_steps():
+    step = jax.jit(make_train_step(CFG))
+    params, m, v = _state()
+    x, y = _batch()
+    losses = []
+    state = list(params) + list(m) + list(v)
+    for t in range(1, 31):
+        out = step(*state, x, y, _hv(mode=1, opt=0, step=t, seed=t, lr=0.05))
+        state = list(out[: 3 * N])
+        losses.append(float(out[-2]))
+    assert losses[-1] < losses[0] * 0.7, losses
+
+
+def test_adam_loss_decreases_over_steps():
+    step = jax.jit(make_train_step(CFG))
+    params, m, v = _state()
+    x, y = _batch()
+    state = list(params) + list(m) + list(v)
+    losses = []
+    for t in range(1, 31):
+        out = step(*state, x, y, _hv(mode=2, opt=2, step=t, seed=t, lr=0.01, lr_scale=1))
+        state = list(out[: 3 * N])
+        losses.append(float(out[-2]))
+    assert losses[-1] < losses[0] * 0.7, losses
+
+
+def test_binary_weights_stay_clipped():
+    step = jax.jit(make_train_step(CFG))
+    params, m, v = _state()
+    x, y = _batch()
+    state = list(params) + list(m) + list(v)
+    for t in range(1, 11):
+        out = step(*state, x, y, _hv(mode=1, opt=0, step=t, lr=1.0))  # huge LR
+        state = list(out[: 3 * N])
+    spec = CFG.spec()
+    for i, d in enumerate(spec):
+        if d.kind == "weight":
+            # clip box is ±H with H the layer's Glorot coefficient
+            w = np.asarray(state[i])
+            assert np.abs(w).max() <= d.glorot + 1e-6, d.name
+
+
+def test_no_reg_mode_does_not_clip():
+    # Start the first weight matrix just inside its clip box; a single
+    # unclipped SGD step must be able to cross the ±H boundary in mode 0
+    # but not in mode 1.
+    step = jax.jit(make_train_step(CFG))
+    params, m, v = _state()
+    params = list(params)
+    h = CFG.spec()[0].glorot
+    params[0] = jnp.full_like(params[0], h * 0.999)
+    x, y = _batch()
+    out0 = step(*params, *m, *v, x, y, _hv(mode=0, opt=0, lr=0.5))
+    out1 = step(*params, *m, *v, x, y, _hv(mode=1, opt=0, lr=0.5))
+    w0 = np.asarray(out0[0])
+    w1 = np.asarray(out1[0])
+    assert np.abs(w0).max() > h  # real-valued weights free to grow without BC
+    assert np.abs(w1).max() <= h + 1e-6  # BC clips (Sec. 2.4)
+
+
+def test_bn_stats_update_only_in_train():
+    step = jax.jit(make_train_step(CFG))
+    params, m, v = _state()
+    x, y = _batch()
+    out = step(*params, *m, *v, x, y, _hv(mode=1, opt=0))
+    spec = CFG.spec()
+    moved = [
+        i
+        for i, d in enumerate(spec)
+        if d.kind == "bn_stat"
+        and not np.allclose(np.asarray(out[i]), np.asarray(params[i]))
+    ]
+    assert len(moved) == 4  # rmean+rvar per hidden layer
+
+
+def test_eval_step_per_example_outputs():
+    evals = jax.jit(make_eval_step(CFG))
+    params, _, _ = _state()
+    x, y = _batch()
+    lossv, errv = evals(*params, x, y, _hv(mode=1))
+    assert lossv.shape == (16,)
+    assert errv.shape == (16,)
+    assert set(np.unique(np.asarray(errv))) <= {0.0, 1.0}
+
+
+def test_eval_real_vs_binary_weights_differ():
+    evals = jax.jit(make_eval_step(CFG))
+    params, _, _ = _state()
+    x, y = _batch()
+    l0, _ = evals(*params, x, y, _hv(mode=0))
+    l1, _ = evals(*params, x, y, _hv(mode=1))
+    assert not np.allclose(np.asarray(l0), np.asarray(l1))
+
+
+def test_optimizers_diverge_from_each_other():
+    step = jax.jit(make_train_step(CFG))
+    params, m, v = _state()
+    x, y = _batch()
+    hv_sgd = _hv(mode=1, opt=0)
+    hv_adam = _hv(mode=1, opt=2)
+    o1 = step(*params, *m, *v, x, y, hv_sgd)
+    o2 = step(*params, *m, *v, x, y, hv_adam)
+    w1, w2 = np.asarray(o1[0]), np.asarray(o2[0])
+    assert not np.allclose(w1, w2)
+
+
+def test_lr_scaling_changes_update():
+    step = jax.jit(make_train_step(CFG))
+    params, m, v = _state()
+    x, y = _batch()
+    o1 = step(*params, *m, *v, x, y, _hv(mode=1, opt=0, lr_scale=0))
+    o2 = step(*params, *m, *v, x, y, _hv(mode=1, opt=0, lr_scale=1))
+    assert not np.allclose(np.asarray(o1[0]), np.asarray(o2[0]))
+    # Scaled SGD takes strictly larger steps (lr / coeff^2 > lr): the mean
+    # |delta| must grow, up to the ±H clip.
+    w0 = np.asarray(params[0])
+    d1 = np.abs(np.asarray(o1[0]) - w0).mean()
+    d2 = np.abs(np.asarray(o2[0]) - w0).mean()
+    assert d2 > d1 * 2.0, f"scaled delta {d2} vs unscaled {d1}"

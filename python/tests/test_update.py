@@ -1,0 +1,75 @@
+"""Kernel-vs-oracle tests for the fused clip-update kernels (Sec. 2.4)."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import sgd_update, nesterov_update, adam_update
+from compile.kernels import ref
+
+SHAPES = st.sampled_from([(5,), (100,), (8192,), (8200,), (17, 9), (64, 64)])
+LR = st.floats(1e-4, 0.5)
+
+
+def _tensors(seed, shape, n):
+    rs = np.random.RandomState(seed)
+    return [rs.standard_normal(shape).astype(np.float32) for _ in range(n)]
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=SHAPES, lr=LR, clip=st.booleans(), seed=st.integers(0, 2**16))
+def test_sgd_update_matches_ref(shape, lr, clip, seed):
+    w, g = _tensors(seed, shape, 2)
+    out = sgd_update(jnp.asarray(w), jnp.asarray(g), lr, 1.0 if clip else 0.0)
+    expect = ref.sgd_update_ref(w, g, np.float32(lr), clip)
+    assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=SHAPES, lr=LR, clip=st.booleans(), seed=st.integers(0, 2**16))
+def test_nesterov_update_matches_ref(shape, lr, clip, seed):
+    w, g, m = _tensors(seed, shape, 3)
+    mu = 0.9
+    w2, m2 = nesterov_update(
+        jnp.asarray(w), jnp.asarray(g), jnp.asarray(m), lr, 1.0 if clip else 0.0, mu
+    )
+    ew, em = ref.nesterov_update_ref(w, g, m, np.float32(lr), clip, np.float32(mu))
+    assert_allclose(np.asarray(w2), np.asarray(ew), rtol=1e-5, atol=1e-6)
+    assert_allclose(np.asarray(m2), np.asarray(em), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=SHAPES, lr=LR, clip=st.booleans(), t=st.integers(1, 500), seed=st.integers(0, 2**16))
+def test_adam_update_matches_ref(shape, lr, clip, t, seed):
+    w, g, m, v = _tensors(seed, shape, 4)
+    v = np.abs(v)  # second-moment slot is non-negative in real runs
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    corr1 = 1.0 - b1**t
+    corr2 = 1.0 - b2**t
+    w2, m2, v2 = adam_update(
+        jnp.asarray(w), jnp.asarray(g), jnp.asarray(m), jnp.asarray(v),
+        lr, 1.0 if clip else 0.0, b1, b2, eps, corr1, corr2,
+    )
+    ew, em, ev = ref.adam_update_ref(
+        w, g, m, v, np.float32(lr), clip, np.float32(b1), np.float32(b2), np.float32(eps), t
+    )
+    # corr1/corr2 reach the kernel as pre-rounded f32 scalars while the
+    # oracle keeps python-float precision in beta**t — allow that ulp gap
+    assert_allclose(np.asarray(w2), np.asarray(ew), rtol=2e-3, atol=2e-5)
+    assert_allclose(np.asarray(m2), np.asarray(em), rtol=1e-5, atol=1e-6)
+    assert_allclose(np.asarray(v2), np.asarray(ev), rtol=1e-5, atol=1e-6)
+
+
+def test_clip_keeps_weights_in_unit_box():
+    w = jnp.asarray(np.linspace(-2, 2, 101).astype(np.float32))
+    g = jnp.asarray(np.ones(101, np.float32) * -10.0)  # pushes w up hard
+    out = np.asarray(sgd_update(w, g, 1.0, 1.0))
+    assert out.min() >= -1.0 and out.max() <= 1.0
+
+
+def test_no_clip_lets_weights_escape():
+    w = jnp.zeros((4,), jnp.float32)
+    g = jnp.asarray(np.full(4, -10.0, np.float32))
+    out = np.asarray(sgd_update(w, g, 1.0, 0.0))
+    assert_allclose(out, np.full(4, 10.0, np.float32))

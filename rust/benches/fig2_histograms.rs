@@ -1,0 +1,55 @@
+//! Figure 2: histogram of the first-layer real-valued weights (plotted as
+//! w/H in [-1, 1]) after training with deterministic vs stochastic
+//! BinaryConnect.
+//!
+//! Paper observation: weights polarize toward the clip boundaries ±1
+//! ("trying to become deterministic"); det-BC also keeps a spike of
+//! undecided weights near 0 ("hesitating between -1 and 1").
+//!
+//! Run: cargo bench --bench fig2_histograms [-- --epochs N]
+//! Writes fig2_det.csv / fig2_stoch.csv and prints ASCII histograms plus
+//! the polarization statistic.
+
+use binaryconnect::coordinator::{mnist_opts, prepare, train, DataOpts};
+use binaryconnect::data::Corpus;
+use binaryconnect::runtime::{Manifest, Mode, Runtime};
+use binaryconnect::stats::Histogram;
+use binaryconnect::util::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse().map_err(anyhow::Error::msg)?;
+    let epochs = args.usize("epochs", 15);
+
+    let manifest = Manifest::load(std::path::Path::new(&args.str("artifacts", "artifacts")))?;
+    let info = manifest.model("mlp")?;
+    let rt = Runtime::cpu()?;
+    let model = rt.load_model(info)?;
+    let (data, _) = prepare(
+        Corpus::Mnist,
+        &DataOpts { n_train: args.usize("n-train", 3000), n_test: 500, ..Default::default() },
+    )?;
+
+    let h_scale = info.params[0].glorot.max(1e-12) as f32;
+    let mut polarization = vec![];
+    for (label, mode) in [("det", Mode::Det), ("stoch", Mode::Stoch)] {
+        eprintln!("[fig2] training {label} for {epochs} epochs ...");
+        let r = train(&model, &data, &mnist_opts(mode, epochs, 13))?;
+        let w0: Vec<f32> =
+            r.state.param_vec(0)?.iter().map(|v| v / h_scale).collect();
+        let hist = Histogram::build(&w0, -1.0, 1.0, 40);
+        let path = format!("fig2_{label}.csv");
+        std::fs::write(&path, hist.to_csv())?;
+        let frac = hist.mass_beyond(0.9);
+        polarization.push((label, frac));
+        println!("\nFigure 2 ({label} BinaryConnect), first-layer w/H after {epochs} epochs:");
+        print!("{}", hist.to_ascii(60));
+        println!("mass at |w/H| >= 0.9: {:.1}%   (wrote {path})", frac * 100.0);
+    }
+    println!(
+        "\npaper's qualitative claim: training polarizes the real weights toward ±1;\n\
+         measured polarization — det {:.1}%, stoch {:.1}% (initialization would give ~5%).",
+        polarization[0].1 * 100.0,
+        polarization[1].1 * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! Figure 3: training curves of the CNN on CIFAR-10 by regularizer.
+//!
+//! Paper's qualitative claims: both BinaryConnect versions (dotted lines:
+//! training cost; solid: validation error) (a) keep the training cost
+//! HIGHER and train slower than the unregularized net, and (b) reach a
+//! LOWER validation error — the signature of a Dropout-like regularizer.
+//!
+//! Run: cargo bench --bench fig3_curves [-- --epochs N --n-train N]
+//! Writes fig3_<regime>.csv and prints the claim checks.
+
+use binaryconnect::coordinator::{cnn_opts, prepare, train, DataOpts};
+use binaryconnect::data::Corpus;
+use binaryconnect::runtime::{Manifest, Mode, Runtime};
+use binaryconnect::stats::Csv;
+use binaryconnect::util::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse().map_err(anyhow::Error::msg)?;
+    let epochs = args.usize("epochs", 8);
+
+    let manifest = Manifest::load(std::path::Path::new(&args.str("artifacts", "artifacts")))?;
+    let rt = Runtime::cpu()?;
+    let model = rt.load_model(manifest.model(&args.str("model", "cnn_small"))?)?;
+    let (data, real) = prepare(
+        Corpus::Cifar10,
+        &DataOpts {
+            n_train: args.usize("n-train", 1500),
+            n_test: args.usize("n-test", 300),
+            data_dir: args.opt_str("data-dir").map(Into::into),
+            ..Default::default()
+        },
+    )?;
+    eprintln!(
+        "[fig3] CNN on CIFAR-10 ({}), {} epochs",
+        if real { "real" } else { "synthetic" },
+        epochs
+    );
+
+    let mut curves = vec![];
+    for (label, mode) in [("none", Mode::None), ("det", Mode::Det), ("stoch", Mode::Stoch)] {
+        eprintln!("[fig3] regime {label} ...");
+        let r = train(&model, &data, &cnn_opts(mode, epochs, 23))?;
+        let mut csv = Csv::new(&["epoch", "train_cost", "val_err"]);
+        for rec in &r.curves {
+            csv.rowf(&[rec.epoch as f64, rec.train_loss, rec.val_err]);
+        }
+        let path = format!("fig3_{label}.csv");
+        csv.save(std::path::Path::new(&path))?;
+        println!("wrote {path}");
+        curves.push((label, r));
+    }
+
+    println!("\nFigure 3 series (train cost | val err):");
+    println!("epoch | {:>18} | {:>18} | {:>18}", "none", "det", "stoch");
+    for e in 0..epochs {
+        let cell = |i: usize| {
+            let c = &curves[i].1.curves;
+            c.get(e)
+                .map(|r| format!("{:>8.3} {:>8.4}", r.train_loss, r.val_err))
+                .unwrap_or_default()
+        };
+        println!("{e:>5} | {} | {} | {}", cell(0), cell(1), cell(2));
+    }
+
+    let last = |i: usize| curves[i].1.curves.last().unwrap().train_loss;
+    let best = |i: usize| curves[i].1.best_val_err;
+    println!("\nclaim checks (paper Fig. 3):");
+    println!(
+        "  training cost: none {:.3} < det {:.3} / stoch {:.3}  -> {}",
+        last(0),
+        last(1),
+        last(2),
+        if last(0) < last(1) && last(0) < last(2) { "MATCHES" } else { "differs at this scale" }
+    );
+    println!(
+        "  best val err : none {:.4} vs det {:.4} / stoch {:.4} -> {}",
+        best(0),
+        best(1),
+        best(2),
+        if best(1) <= best(0) || best(2) <= best(0) {
+            "BC regularizes (MATCHES)"
+        } else {
+            "no BC win at this scale (paper needs full scale/epochs)"
+        }
+    );
+    Ok(())
+}

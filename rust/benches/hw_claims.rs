@@ -1,0 +1,97 @@
+//! Hardware claims (paper Sec. 1 and Sec. 5), from the op-count model:
+//!
+//!   * BinaryConnect removes the multiplications from forward + backward
+//!     propagation — about 2/3 of all training multiplications -> the
+//!     paper's "speed-up by a factor of 3 at training time" on
+//!     multiplier-bound hardware.
+//!   * Test-time deterministic BC: no multiplications in the weight inner
+//!     loops and >= 16x less weight memory (vs 16-bit floats; 32x vs f32).
+//!
+//! Run: cargo bench --bench hw_claims
+
+use binaryconnect::bench_harness::Table;
+use binaryconnect::hw;
+use binaryconnect::runtime::Manifest;
+
+fn spatial_of(name: &str) -> u64 {
+    if !name.starts_with("conv") {
+        return 1;
+    }
+    let idx: usize = name
+        .trim_start_matches("conv")
+        .split('.')
+        .next()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let hw = 32usize >> (idx / 2).min(3); // SAME conv + MP2 pairs: 32,32,16,16,8,8
+    (hw * hw) as u64
+}
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
+
+    let mut table = Table::new(&[
+        "model",
+        "mults/step (real)",
+        "mults/step (BC)",
+        "removed",
+        "speedup (mult-bound)",
+    ]);
+    for name in ["mlp", "cnn", "cnn_small"] {
+        let info = manifest.model(name)?;
+        let real = hw::step_cost(&info.params, info.batch as u64, false, spatial_of);
+        let bc = hw::step_cost(&info.params, info.batch as u64, true, spatial_of);
+        let removed = hw::mult_reduction(&real, &bc);
+        table.row(&[
+            name.to_string(),
+            format!("{:.3e}", real.total_mults() as f64),
+            format!("{:.3e}", bc.total_mults() as f64),
+            format!("{:.1}%", removed * 100.0),
+            format!("{:.2}x", 1.0 / (1.0 - removed)),
+        ]);
+    }
+    println!("\ntraining-time multiplication model (paper claims ~2/3 removed, ~3x):");
+    table.print();
+
+    let mut mem = Table::new(&["model", "f32 weights", "f16 weights", "packed (1-bit)", "vs f16"]);
+    for name in ["mlp", "cnn", "cnn_small"] {
+        let info = manifest.model(name)?;
+        let m = hw::weight_memory(&info.params);
+        mem.row(&[
+            name.to_string(),
+            format!("{} KiB", m.f32_bytes / 1024),
+            format!("{} KiB", m.f16_bytes / 1024),
+            format!("{} KiB", m.packed_bytes / 1024),
+            format!("{}x", m.f16_bytes / m.packed_bytes.max(1)),
+        ]);
+    }
+    println!("\ntest-time weight memory (paper claims >= 16x vs 16-bit):");
+    mem.print();
+
+    println!("\nphase breakdown for the MLP (per step, batch included):");
+    let info = manifest.model("mlp")?;
+    let real = hw::step_cost(&info.params, info.batch as u64, false, spatial_of);
+    let bc = hw::step_cost(&info.params, info.batch as u64, true, spatial_of);
+    let mut ph = Table::new(&["phase", "real mults", "BC mults", "adds (both)"]);
+    ph.row(&[
+        "1. forward".into(),
+        format!("{:.3e}", real.forward.mults as f64),
+        format!("{:.3e}", bc.forward.mults as f64),
+        format!("{:.3e}", real.forward.adds as f64),
+    ]);
+    ph.row(&[
+        "2. backward".into(),
+        format!("{:.3e}", real.backward.mults as f64),
+        format!("{:.3e}", bc.backward.mults as f64),
+        format!("{:.3e}", real.backward.adds as f64),
+    ]);
+    ph.row(&[
+        "3. update".into(),
+        format!("{:.3e}", real.update.mults as f64),
+        format!("{:.3e}", bc.update.mults as f64),
+        format!("{:.3e}", real.update.adds as f64),
+    ]);
+    ph.print();
+    println!("(phases 1-2 lose their multiplications under BC; phase 3 keeps them — hence ~2/3)");
+    Ok(())
+}

@@ -1,0 +1,105 @@
+//! Performance microbenches for the hot paths (EXPERIMENTS.md par.Perf):
+//!
+//!   * packed sign-accumulate GEMM vs naive f32 GEMM (inference hot path)
+//!   * PJRT train-step latency: Pallas-GEMM artifact vs native-dot artifact
+//!     (the L1 ablation), plus the literal round-trip overhead
+//!
+//! Run: cargo bench --bench perf_gemm [-- --iters N]
+
+use binaryconnect::bench_harness::{bench, fmt_time, Table};
+use binaryconnect::binary::packed::{dense_f32, BitMatrix};
+use binaryconnect::runtime::{Hyper, Manifest, Mode, Opt, Runtime};
+use binaryconnect::util::{Args, Rng};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse().map_err(anyhow::Error::msg)?;
+    let iters = args.usize("iters", 15);
+
+    // ---------- packed vs f32 GEMM ----------
+    println!("packed sign-GEMM vs f32 GEMM (batch 64):");
+    let mut t = Table::new(&["k x n", "f32", "packed", "ratio", "weight mem ratio"]);
+    let mut rng = Rng::new(5);
+    for (k, n) in [(256, 256), (784, 1024), (1024, 1024)] {
+        let b = 64;
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let x: Vec<f32> = (0..b * k).map(|_| rng.normal()).collect();
+        let bm = BitMatrix::pack(&w, k, n);
+        let mut y = vec![0f32; b * n];
+        let rf = bench("f32", 2, iters, || {
+            dense_f32(&x, &w, b, k, n, &mut y);
+            std::hint::black_box(&y);
+        });
+        let rp = bench("packed", 2, iters, || {
+            bm.matmul(&x, b, &mut y);
+            std::hint::black_box(&y);
+        });
+        t.row(&[
+            format!("{k}x{n}"),
+            fmt_time(rf.mean_s),
+            fmt_time(rp.mean_s),
+            format!("{:.2}x", rf.mean_s / rp.mean_s),
+            format!("{}x", (k * n * 4) / bm.memory_bytes()),
+        ]);
+    }
+    t.print();
+
+    // ---------- PJRT step latency: pallas vs native ----------
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("\n(no artifacts; skipping PJRT step benches)");
+        return Ok(());
+    }
+    let manifest = Manifest::load(dir)?;
+    let rt = Runtime::cpu()?;
+    println!("\nPJRT train/eval step latency (mlp = Pallas GEMM, mlp_ng = native dot):");
+    let mut t2 = Table::new(&["model", "train step", "eval step", "steps/s (train)"]);
+    for name in ["mlp", "mlp_ng", "cnn_small"] {
+        let model = rt.load_model(manifest.model(name)?)?;
+        let mut state = model.init_state(&Hyper::default())?;
+        let nx: usize = model.info.input_shape.iter().product();
+        let mut r = Rng::new(9);
+        let x: Vec<f32> = (0..nx).map(|_| r.normal()).collect();
+        let bc = model.info.batch * model.info.classes;
+        let mut y = vec![-1.0f32; bc];
+        for i in 0..model.info.batch {
+            y[i * model.info.classes + r.below(model.info.classes)] = 1.0;
+        }
+        let mut step = 0u32;
+        let h0 = Hyper { lr: 0.001, mode: Mode::Det, opt: Opt::Adam, ..Default::default() };
+        let rtr = bench("train", 3, iters, || {
+            step += 1;
+            let h = Hyper { step, seed: step, ..h0.clone() };
+            model.train_step(&mut state, &x, &y, &h).unwrap();
+        });
+        let rev = bench("eval", 3, iters, || {
+            model.eval_batch(&state, &x, &y, &h0).unwrap();
+        });
+        t2.row(&[
+            name.to_string(),
+            fmt_time(rtr.mean_s),
+            fmt_time(rev.mean_s),
+            format!("{:.1}", 1.0 / rtr.mean_s),
+        ]);
+    }
+    t2.print();
+    println!("\n(mlp vs mlp_ng isolates the Pallas-kernel cost inside the lowered HLO)");
+
+    // ---------- step-latency breakdown: where does the time go? ----------
+    let model = rt.load_model(manifest.model("mlp")?)?;
+    let state = model.init_state(&Hyper::default())?;
+    let nx: usize = model.info.input_shape.iter().product();
+    let mut r = Rng::new(11);
+    let x: Vec<f32> = (0..nx).map(|_| r.normal()).collect();
+    let dims: Vec<i64> = model.info.input_shape.iter().map(|&d| d as i64).collect();
+    let r_lit = bench("literal build", 3, 50, || {
+        let xl = xla::Literal::vec1(&x).reshape(&dims).unwrap();
+        std::hint::black_box(xl);
+    });
+    let r_snap = bench("state snapshot (host copy of all params+slots)", 1, 10, || {
+        std::hint::black_box(state.snapshot().unwrap());
+    });
+    println!("\nstep-overhead components (mlp):");
+    println!("  input-literal build : {} per step", fmt_time(r_lit.mean_s));
+    println!("  full-state host copy: {} (only on snapshot, not per step)", fmt_time(r_snap.mean_s));
+    Ok(())
+}

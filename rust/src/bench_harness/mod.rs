@@ -1,0 +1,147 @@
+//! Benchmark harness substrate (criterion is not in the offline registry).
+//!
+//! Provides warmup + timed iterations with mean/p50/p99 reporting, and a
+//! paper-style table printer used by every `benches/*.rs` target to emit
+//! the same rows the paper's tables/figures report.
+
+use crate::util::{LatencyStats, Timer};
+
+/// Result of timing one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / self.mean_s
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured ones.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut stats = LatencyStats::default();
+    for _ in 0..iters {
+        let t = Timer::start();
+        f();
+        stats.record(t.elapsed_s());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: stats.mean(),
+        p50_s: stats.percentile(50.0),
+        p99_s: stats.percentile(99.0),
+        min_s: stats.min(),
+    }
+}
+
+/// Fixed-width table printer for bench output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "table row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let sep: String = widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!(" {c:<width$} ", width = w))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format seconds human-readably.
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1} us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut n = 0;
+        let r = bench("t", 2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_s >= 0.0);
+        assert!(r.p99_s >= r.p50_s || r.p99_s == 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["long-name".into(), "2.5".into()]);
+        let s = t.render();
+        assert!(s.contains("long-name"));
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    fn fmt_time_scales() {
+        assert!(fmt_time(2e-9).ends_with("ns"));
+        assert!(fmt_time(2e-6).ends_with("us"));
+        assert!(fmt_time(2e-3).ends_with("ms"));
+        assert!(fmt_time(2.0).ends_with(" s"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_checks_arity() {
+        let mut t = Table::new(&["a"]);
+        t.row(&["x".into(), "y".into()]);
+    }
+}

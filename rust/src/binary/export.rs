@@ -1,0 +1,185 @@
+//! Export a trained MLP TrainState into the packed inference engine, and
+//! (de)serialize packed models to disk.
+//!
+//! The layer layout follows the manifest's parameter naming convention
+//! (python/compile/models.py): repeated [W, bn.gamma, bn.beta, bn.rmean,
+//! bn.rvar] blocks, then the output [W, b] pair.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{ModelInfo, TrainState};
+
+use super::packed::{BitMatrix, PackedLayer, PackedMlp, BN_EPS};
+
+/// Fold a trained MLP state into the multiplication-free packed engine
+/// (deterministic BinaryConnect test-time network, paper Sec. 2.6
+/// method 1). The ±H scale is folded into the BN affine so the packed
+/// engine can keep computing with ±1 bits.
+pub fn pack_mlp(info: &ModelInfo, state: &TrainState) -> Result<PackedMlp> {
+    let mut layers: Vec<PackedLayer> = vec![];
+    let mut i = 0usize;
+    let n = info.params.len();
+    while i < n {
+        let p = &info.params[i];
+        if !p.name.ends_with(".W") {
+            bail!("unexpected param {} at index {i}", p.name);
+        }
+        if p.shape.len() != 2 {
+            bail!("pack_mlp only supports dense layers, {} has shape {:?}", p.name, p.shape);
+        }
+        let (k, units) = (p.shape[0], p.shape[1]);
+        let w = state.param_vec(i)?;
+        let h = p.glorot as f32;
+        let bits = BitMatrix::pack(&w, k, units);
+        let is_output = i + 1 < n && info.params[i + 1].name.ends_with(".b");
+        if is_output {
+            let bias = state.param_vec(i + 1)?;
+            // logits = (x @ wb) where wb = ±H  ->  scale = H
+            layers.push(PackedLayer {
+                bits,
+                scale: vec![h; units],
+                shift: bias,
+                relu: false,
+            });
+            i += 2;
+        } else {
+            // W + 4 BN tensors; z_real = H * (x @ ±1-bits)
+            let gamma = state.param_vec(i + 1)?;
+            let beta = state.param_vec(i + 2)?;
+            let rmean = state.param_vec(i + 3)?;
+            let rvar = state.param_vec(i + 4)?;
+            let mut scale = vec![0f32; units];
+            let mut shift = vec![0f32; units];
+            for u in 0..units {
+                let s = gamma[u] / (rvar[u] + BN_EPS).sqrt();
+                scale[u] = s * h;
+                shift[u] = beta[u] - rmean[u] * s;
+            }
+            layers.push(PackedLayer { bits, scale, shift, relu: true });
+            i += 5;
+        }
+    }
+    let in_dim = info.params[0].shape[0];
+    let classes = layers.last().context("empty model")?.bits.n;
+    Ok(PackedMlp { layers, in_dim, classes })
+}
+
+const MAGIC: &[u8; 8] = b"BCPACK01";
+
+/// Serialize: MAGIC, n_layers, then per layer k,n,relu + scale/shift f32s
+/// + packed words.
+pub fn save_packed(mlp: &PackedMlp, path: &Path) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(mlp.layers.len() as u32).to_le_bytes())?;
+    for l in &mlp.layers {
+        f.write_all(&(l.bits.k as u32).to_le_bytes())?;
+        f.write_all(&(l.bits.n as u32).to_le_bytes())?;
+        f.write_all(&[l.relu as u8])?;
+        for v in l.scale.iter().chain(&l.shift) {
+            f.write_all(&v.to_le_bytes())?;
+        }
+        for j in 0..l.bits.n {
+            for w in l.bits.col(j) {
+                f.write_all(&w.to_le_bytes())?;
+            }
+        }
+    }
+    Ok(())
+}
+
+pub fn load_packed(path: &Path) -> Result<PackedMlp> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: not a BCPACK file", path.display());
+    }
+    let mut b4 = [0u8; 4];
+    f.read_exact(&mut b4)?;
+    let n_layers = u32::from_le_bytes(b4) as usize;
+    let mut layers = vec![];
+    for _ in 0..n_layers {
+        f.read_exact(&mut b4)?;
+        let k = u32::from_le_bytes(b4) as usize;
+        f.read_exact(&mut b4)?;
+        let n = u32::from_le_bytes(b4) as usize;
+        let mut b1 = [0u8; 1];
+        f.read_exact(&mut b1)?;
+        let relu = b1[0] != 0;
+        let mut read_f32s = |count: usize| -> Result<Vec<f32>> {
+            let mut buf = vec![0u8; count * 4];
+            f.read_exact(&mut buf)?;
+            Ok(buf.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+        };
+        let scale = read_f32s(n)?;
+        let shift = read_f32s(n)?;
+        let wpc = k.div_ceil(64);
+        let mut words = vec![0u8; wpc * n * 8];
+        f.read_exact(&mut words)?;
+        let words: Vec<u64> = words
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+            .collect();
+        layers.push(PackedLayer { bits: BitMatrix::from_words(k, n, words), scale, shift, relu });
+    }
+    let in_dim = layers.first().context("empty file")?.bits.k;
+    let classes = layers.last().unwrap().bits.n;
+    Ok(PackedMlp { layers, in_dim, classes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn toy_packed() -> PackedMlp {
+        let mut rng = Rng::new(3);
+        let w1: Vec<f32> = (0..20 * 8).map(|_| rng.normal()).collect();
+        let w2: Vec<f32> = (0..8 * 3).map(|_| rng.normal()).collect();
+        PackedMlp {
+            layers: vec![
+                PackedLayer {
+                    bits: BitMatrix::pack(&w1, 20, 8),
+                    scale: (0..8).map(|i| 0.5 + i as f32 * 0.1).collect(),
+                    shift: (0..8).map(|i| i as f32 * 0.01).collect(),
+                    relu: true,
+                },
+                PackedLayer {
+                    bits: BitMatrix::pack(&w2, 8, 3),
+                    scale: vec![1.0; 3],
+                    shift: vec![0.1, -0.1, 0.0],
+                    relu: false,
+                },
+            ],
+            in_dim: 20,
+            classes: 3,
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip_preserves_outputs() {
+        let mlp = toy_packed();
+        let path = std::env::temp_dir().join(format!("bc_pack_{}.bin", std::process::id()));
+        save_packed(&mlp, &path).unwrap();
+        let loaded = load_packed(&path).unwrap();
+        let mut rng = Rng::new(4);
+        let x: Vec<f32> = (0..5 * 20).map(|_| rng.normal()).collect();
+        assert_eq!(mlp.forward(&x, 5), loaded.forward(&x, 5));
+        assert_eq!(mlp.weight_memory_bytes(), loaded.weight_memory_bytes());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn load_rejects_bad_magic() {
+        let path = std::env::temp_dir().join(format!("bc_badmagic_{}.bin", std::process::id()));
+        std::fs::write(&path, b"NOTPACKED").unwrap();
+        assert!(load_packed(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,418 @@
+//! Bit-packed sign matrices and the multiplication-free dense kernel.
+
+use crate::data::Dataset;
+
+/// Sign bits of a (k x n) weight matrix, packed along k, one bit-column
+/// per output unit: bit=1 means weight +1, bit=0 means -1.
+#[derive(Clone)]
+pub struct BitMatrix {
+    pub k: usize,
+    pub n: usize,
+    words_per_col: usize,
+    /// column-major: col j occupies words[j*wpc .. (j+1)*wpc].
+    words: Vec<u64>,
+}
+
+impl BitMatrix {
+    /// Pack sign(w) from a row-major (k x n) f32 matrix (sign(0) = +1,
+    /// matching Eq. 1).
+    pub fn pack(w: &[f32], k: usize, n: usize) -> BitMatrix {
+        assert_eq!(w.len(), k * n);
+        let wpc = k.div_ceil(64);
+        let mut words = vec![0u64; wpc * n];
+        for row in 0..k {
+            let (wi, bit) = (row / 64, row % 64);
+            for col in 0..n {
+                if w[row * n + col] >= 0.0 {
+                    words[col * wpc + wi] |= 1u64 << bit;
+                }
+            }
+        }
+        BitMatrix { k, n, words_per_col: wpc, words }
+    }
+
+    /// Rebuild from serialized words (see export.rs).
+    pub fn from_words(k: usize, n: usize, words: Vec<u64>) -> BitMatrix {
+        let wpc = k.div_ceil(64);
+        assert_eq!(words.len(), wpc * n, "word count mismatch");
+        BitMatrix { k, n, words_per_col: wpc, words }
+    }
+
+    #[inline]
+    pub fn col(&self, j: usize) -> &[u64] {
+        &self.words[j * self.words_per_col..(j + 1) * self.words_per_col]
+    }
+
+    pub fn sign(&self, row: usize, col: usize) -> f32 {
+        let w = self.col(col)[row / 64];
+        if (w >> (row % 64)) & 1 == 1 { 1.0 } else { -1.0 }
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+
+    /// y[b, n] = x[b, k] @ sign(W): multiplication-free inner loop.
+    ///
+    /// Two regimes (EXPERIMENTS.md par.Perf):
+    /// * b == 1: walk each column's set bits and add the selected inputs.
+    /// * b > 1: transpose x to k-major once, then every decoded bit adds a
+    ///   CONTIGUOUS stripe of b floats — the bit-decode cost is amortized
+    ///   across the whole batch and the adds auto-vectorize.
+    pub fn matmul(&self, x: &[f32], b: usize, y: &mut [f32]) {
+        assert_eq!(x.len(), b * self.k);
+        assert_eq!(y.len(), b * self.n);
+        if b == 1 {
+            self.matmul_single(x, y);
+        } else {
+            self.matmul_batched(x, b, y);
+        }
+    }
+
+    fn matmul_single(&self, xrow: &[f32], y: &mut [f32]) {
+        let k = self.k;
+        let wpc = self.words_per_col;
+        let total: f32 = xrow.iter().sum();
+        for (j, yv) in y.iter_mut().enumerate() {
+            let col = &self.words[j * wpc..(j + 1) * wpc];
+            let mut sel = 0f32;
+            // selected-sum: adds only, gated by the weight bits
+            for (wi, &word) in col.iter().enumerate() {
+                if word == 0 {
+                    continue;
+                }
+                let base = wi * 64;
+                if word == u64::MAX && base + 64 <= k {
+                    // fast path: fully-positive word
+                    for &v in &xrow[base..base + 64] {
+                        sel += v;
+                    }
+                } else {
+                    let mut m = word;
+                    while m != 0 {
+                        let t = m.trailing_zeros() as usize;
+                        sel += xrow[base + t];
+                        m &= m - 1;
+                    }
+                }
+            }
+            *yv = 2.0 * sel - total;
+        }
+    }
+
+    fn matmul_batched(&self, x: &[f32], b: usize, y: &mut [f32]) {
+        let k = self.k;
+        let n = self.n;
+        let wpc = self.words_per_col;
+        // transpose x to k-major (k x b): one pass, reused by every column
+        let mut xt = vec![0f32; k * b];
+        for bi in 0..b {
+            let xrow = &x[bi * k..(bi + 1) * k];
+            for (ki, &v) in xrow.iter().enumerate() {
+                xt[ki * b + bi] = v;
+            }
+        }
+        // per-row totals (the "- sum_k x_k" term), still multiplication-free
+        let mut total = vec![0f32; b];
+        for bi in 0..b {
+            total[bi] = x[bi * k..(bi + 1) * k].iter().sum();
+        }
+        let mut sel = vec![0f32; b];
+        for j in 0..n {
+            let col = &self.words[j * wpc..(j + 1) * wpc];
+            sel.iter_mut().for_each(|v| *v = 0.0);
+            for (wi, &word) in col.iter().enumerate() {
+                if word == 0 {
+                    continue;
+                }
+                let base = wi * 64;
+                let mut m = word;
+                while m != 0 {
+                    let t = m.trailing_zeros() as usize;
+                    let stripe = &xt[(base + t) * b..(base + t + 1) * b];
+                    for (s, &v) in sel.iter_mut().zip(stripe) {
+                        *s += v;
+                    }
+                    m &= m - 1;
+                }
+            }
+            for bi in 0..b {
+                y[bi * n + j] = 2.0 * sel[bi] - total[bi];
+            }
+        }
+    }
+}
+
+/// One packed dense layer with folded batch-norm affine and ReLU.
+#[derive(Clone)]
+pub struct PackedLayer {
+    pub bits: BitMatrix,
+    /// per-unit scale (gamma / sqrt(var + eps)); 1.0 when no BN.
+    pub scale: Vec<f32>,
+    /// per-unit shift (beta - mu * scale, plus bias if any).
+    pub shift: Vec<f32>,
+    pub relu: bool,
+}
+
+impl PackedLayer {
+    pub fn forward(&self, x: &[f32], b: usize, y: &mut [f32]) {
+        self.bits.matmul(x, b, y);
+        let n = self.bits.n;
+        for bi in 0..b {
+            let row = &mut y[bi * n..(bi + 1) * n];
+            for ((v, &s), &t) in row.iter_mut().zip(&self.scale).zip(&self.shift) {
+                *v = *v * s + t;
+                if self.relu && *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// A fully packed MLP classifier (the paper's deterministic-BC test-time
+/// network).
+pub struct PackedMlp {
+    pub layers: Vec<PackedLayer>,
+    pub in_dim: usize,
+    pub classes: usize,
+}
+
+pub const BN_EPS: f32 = 1e-4;
+
+impl PackedMlp {
+    /// Fold (W, BN) stacks into packed layers.
+    /// `weights[i]` is row-major (k x n); `bn[i]` is Some((gamma, beta,
+    /// mean, var)) for hidden layers, None for the output layer whose
+    /// `bias` applies instead.
+    pub fn build(
+        weights: Vec<(Vec<f32>, usize, usize)>,
+        bn: Vec<Option<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)>>,
+        bias: Option<Vec<f32>>,
+    ) -> PackedMlp {
+        assert_eq!(weights.len(), bn.len());
+        let in_dim = weights[0].1;
+        let n_layers = weights.len();
+        let mut layers = vec![];
+        for (i, ((w, k, n), bn_i)) in weights.into_iter().zip(bn).enumerate() {
+            let bits = BitMatrix::pack(&w, k, n);
+            let last = i == n_layers - 1;
+            let (scale, shift) = match bn_i {
+                Some((gamma, beta, mean, var)) => {
+                    let scale: Vec<f32> = gamma
+                        .iter()
+                        .zip(&var)
+                        .map(|(&g, &v)| g / (v + BN_EPS).sqrt())
+                        .collect();
+                    let shift: Vec<f32> = beta
+                        .iter()
+                        .zip(&mean)
+                        .zip(&scale)
+                        .map(|((&b, &m), &s)| b - m * s)
+                        .collect();
+                    (scale, shift)
+                }
+                None => {
+                    let shift = bias.clone().unwrap_or_else(|| vec![0.0; n]);
+                    (vec![1.0; n], shift)
+                }
+            };
+            layers.push(PackedLayer { bits, scale, shift, relu: !last });
+        }
+        let classes = layers.last().unwrap().bits.n;
+        PackedMlp { layers, in_dim, classes }
+    }
+
+    /// Forward a batch, returning logits (b x classes).
+    pub fn forward(&self, x: &[f32], b: usize) -> Vec<f32> {
+        assert_eq!(x.len(), b * self.in_dim);
+        let mut cur = x.to_vec();
+        for layer in &self.layers {
+            let mut next = vec![0f32; b * layer.bits.n];
+            layer.forward(&cur, b, &mut next);
+            cur = next;
+        }
+        cur
+    }
+
+    /// argmax classification.
+    pub fn classify(&self, x: &[f32], b: usize) -> Vec<usize> {
+        let logits = self.forward(x, b);
+        (0..b)
+            .map(|bi| {
+                let row = &logits[bi * self.classes..(bi + 1) * self.classes];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0
+            })
+            .collect()
+    }
+
+    /// Test error over a dataset (batched).
+    pub fn test_error(&self, ds: &Dataset, batch: usize) -> f64 {
+        let mut wrong = 0usize;
+        let mut i = 0;
+        while i < ds.len() {
+            let hi = (i + batch).min(ds.len());
+            let b = hi - i;
+            let x = &ds.x[i * ds.dim..hi * ds.dim];
+            let preds = self.classify(x, b);
+            for (p, &l) in preds.iter().zip(&ds.labels[i..hi]) {
+                if *p != l as usize {
+                    wrong += 1;
+                }
+            }
+            i = hi;
+        }
+        wrong as f64 / ds.len() as f64
+    }
+
+    /// Packed weight memory (the paper's ">= 16x reduction" claim: f32
+    /// weights / this = 32x).
+    pub fn weight_memory_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.bits.memory_bytes()).sum()
+    }
+
+    pub fn f32_weight_memory_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.bits.k * l.bits.n * 4).sum()
+    }
+}
+
+/// Naive f32 GEMM baseline (y = x @ w), for correctness cross-checks and
+/// the packed-vs-float benchmark.
+pub fn dense_f32(x: &[f32], w: &[f32], b: usize, k: usize, n: usize, y: &mut [f32]) {
+    assert_eq!(x.len(), b * k);
+    assert_eq!(w.len(), k * n);
+    assert_eq!(y.len(), b * n);
+    for bi in 0..b {
+        let xrow = &x[bi * k..(bi + 1) * k];
+        let yrow = &mut y[bi * n..(bi + 1) * n];
+        yrow.iter_mut().for_each(|v| *v = 0.0);
+        for (ki, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[ki * n..(ki + 1) * n];
+            for (yv, &wv) in yrow.iter_mut().zip(wrow) {
+                *yv += xv * wv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_mat(k: usize, n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..k * n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn pack_roundtrip_signs() {
+        let w = vec![0.5, -0.2, 0.0, -1.5, 2.0, -0.1];
+        let bm = BitMatrix::pack(&w, 3, 2);
+        assert_eq!(bm.sign(0, 0), 1.0);
+        assert_eq!(bm.sign(0, 1), -1.0);
+        assert_eq!(bm.sign(1, 0), 1.0); // sign(0) = +1
+        assert_eq!(bm.sign(1, 1), -1.0);
+        assert_eq!(bm.sign(2, 0), 1.0);
+        assert_eq!(bm.sign(2, 1), -1.0);
+    }
+
+    #[test]
+    fn packed_matmul_matches_sign_gemm() {
+        for (b, k, n, seed) in [(1, 5, 3, 1u64), (4, 64, 8, 2), (3, 130, 17, 3), (2, 200, 50, 4)] {
+            let w = rand_mat(k, n, seed);
+            let x = rand_mat(b, k, seed + 100);
+            let bm = BitMatrix::pack(&w, k, n);
+            let mut y = vec![0f32; b * n];
+            bm.matmul(&x, b, &mut y);
+            // reference: x @ sign(w)
+            let ws: Vec<f32> = w.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect();
+            let mut yref = vec![0f32; b * n];
+            dense_f32(&x, &ws, b, k, n, &mut yref);
+            for (a, r) in y.iter().zip(&yref) {
+                assert!((a - r).abs() < 1e-3 * (1.0 + r.abs()), "{a} vs {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn memory_is_32x_smaller() {
+        let k = 1024;
+        let n = 1024;
+        let bm = BitMatrix::pack(&rand_mat(k, n, 5), k, n);
+        assert_eq!(bm.memory_bytes(), k / 64 * n * 8);
+        let f32_bytes = k * n * 4;
+        assert_eq!(f32_bytes / bm.memory_bytes(), 32);
+    }
+
+    #[test]
+    fn packed_layer_bn_fold() {
+        // One unit, known numbers: z = x1 + x2 (both weights +1),
+        // BN(gamma=2, beta=1, mean=3, var=1-eps) -> y = 2*(z-3)+1
+        let w = vec![1.0, 1.0];
+        let layer = PackedLayer {
+            bits: BitMatrix::pack(&w, 2, 1),
+            scale: vec![2.0 / (1.0f32 + BN_EPS).sqrt()],
+            shift: vec![1.0 - 3.0 * 2.0 / (1.0f32 + BN_EPS).sqrt()],
+            relu: false,
+        };
+        let mut y = vec![0f32];
+        layer.forward(&[2.0, 2.0], 1, &mut y);
+        assert!((y[0] - (2.0 * (4.0 - 3.0) + 1.0)).abs() < 1e-3, "{}", y[0]);
+    }
+
+    #[test]
+    fn relu_applies_only_on_hidden() {
+        let w = vec![1.0, -1.0]; // 1x2: unit0 = +x, unit1 = -x
+        let mlp = PackedMlp::build(vec![(w, 1, 2)], vec![None], Some(vec![0.0, 0.0]));
+        let out = mlp.forward(&[3.0], 1);
+        assert_eq!(out, vec![3.0, -3.0]); // output layer: no relu
+    }
+
+    #[test]
+    fn classify_matches_forward_argmax() {
+        let mut rng = Rng::new(9);
+        let w1 = rand_mat(6, 8, 10);
+        let w2 = rand_mat(8, 3, 11);
+        let bn = (vec![1.0; 8], vec![0.0; 8], vec![0.0; 8], vec![1.0; 8]);
+        let mlp = PackedMlp::build(
+            vec![(w1, 6, 8), (w2, 8, 3)],
+            vec![Some(bn), None],
+            Some(vec![0.1, -0.1, 0.0]),
+        );
+        let x: Vec<f32> = (0..12).map(|_| rng.normal()).collect();
+        let preds = mlp.classify(&x, 2);
+        let logits = mlp.forward(&x, 2);
+        for bi in 0..2 {
+            let row = &logits[bi * 3..(bi + 1) * 3];
+            let am = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            assert_eq!(preds[bi], am);
+        }
+    }
+
+    #[test]
+    fn test_error_on_trivially_separable_data() {
+        // dataset where class = sign of the single feature; a hand-made
+        // 1->2 packed net classifies it perfectly.
+        let mut ds = Dataset::new("sep", (1, 1, 1), 2);
+        for i in 0..50 {
+            let v = if i % 2 == 0 { 1.0 } else { -1.0 };
+            ds.push(&[v], if v > 0.0 { 1 } else { 0 });
+        }
+        // unit0 = -x (class 0 score), unit1 = +x (class 1 score)
+        let mlp = PackedMlp::build(vec![(vec![-1.0, 1.0], 1, 2)], vec![None], None);
+        assert_eq!(mlp.test_error(&ds, 16), 0.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! The experiment coordinator: the paper's training protocol as a library.
+//!
+//! Implements Sec. 3's procedure: shuffled minibatch SGD with an
+//! exponentially decaying learning rate, per-epoch validation, model
+//! selection on the best validation error, and reporting the test error
+//! associated with that epoch (no retraining on the validation set).
+//! Multi-seed trials aggregate to Table 2's "mean ± std" entries.
+
+pub mod protocol;
+pub mod schedule;
+pub mod trainer;
+
+pub use protocol::{cnn_opts, dropout_opts, mnist_opts, prepare, DataOpts};
+pub use schedule::LrSchedule;
+pub use trainer::{train, trials, EpochRecord, RunResult, TrainOpts, TrialSummary};

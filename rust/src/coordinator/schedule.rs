@@ -1,0 +1,66 @@
+//! Learning-rate schedules. The paper uses an exponentially decaying LR in
+//! every experiment (Sec. 3.1-3.3): lr_e = lr_0 * (lr_E / lr_0)^(e / (E-1)).
+
+#[derive(Clone, Copy, Debug)]
+pub enum LrSchedule {
+    Constant { lr: f32 },
+    /// Exponential decay from `start` at epoch 0 to `end` at the last epoch.
+    Exponential { start: f32, end: f32, epochs: usize },
+}
+
+impl LrSchedule {
+    pub fn at(&self, epoch: usize) -> f32 {
+        match *self {
+            LrSchedule::Constant { lr } => lr,
+            LrSchedule::Exponential { start, end, epochs } => {
+                if epochs <= 1 {
+                    return start;
+                }
+                let t = epoch.min(epochs - 1) as f64 / (epochs - 1) as f64;
+                (start as f64 * (end as f64 / start as f64).powf(t)) as f32
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = LrSchedule::Constant { lr: 0.1 };
+        assert_eq!(s.at(0), 0.1);
+        assert_eq!(s.at(100), 0.1);
+    }
+
+    #[test]
+    fn exponential_hits_endpoints() {
+        let s = LrSchedule::Exponential { start: 0.1, end: 0.001, epochs: 11 };
+        assert!((s.at(0) - 0.1).abs() < 1e-7);
+        assert!((s.at(10) - 0.001).abs() < 1e-7);
+        assert!((s.at(999) - 0.001).abs() < 1e-7); // clamps past the end
+    }
+
+    #[test]
+    fn exponential_monotone_decreasing() {
+        let s = LrSchedule::Exponential { start: 0.3, end: 0.003, epochs: 50 };
+        for e in 1..50 {
+            assert!(s.at(e) < s.at(e - 1));
+        }
+    }
+
+    #[test]
+    fn geometric_ratio_constant() {
+        let s = LrSchedule::Exponential { start: 1.0, end: 0.01, epochs: 21 };
+        let r0 = s.at(1) / s.at(0);
+        let r1 = s.at(11) / s.at(10);
+        assert!((r0 - r1).abs() < 1e-5);
+    }
+
+    #[test]
+    fn single_epoch_uses_start() {
+        let s = LrSchedule::Exponential { start: 0.5, end: 0.1, epochs: 1 };
+        assert_eq!(s.at(0), 0.5);
+    }
+}

@@ -1,0 +1,139 @@
+//! Core dataset container used by the pipeline, preprocessing and trainer.
+
+/// An in-memory labelled image dataset, row-major f32 features.
+#[derive(Clone)]
+pub struct Dataset {
+    pub name: String,
+    /// n * dim feature matrix, row-major.
+    pub x: Vec<f32>,
+    /// n labels in 0..n_classes.
+    pub labels: Vec<u8>,
+    /// flattened feature dimension (h * w * c).
+    pub dim: usize,
+    /// (height, width, channels) of one example.
+    pub shape: (usize, usize, usize),
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    pub fn new(
+        name: impl Into<String>,
+        shape: (usize, usize, usize),
+        n_classes: usize,
+    ) -> Self {
+        let dim = shape.0 * shape.1 * shape.2;
+        Self { name: name.into(), x: vec![], labels: vec![], dim, shape, n_classes }
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.dim..(i + 1) * self.dim]
+    }
+
+    pub fn push(&mut self, row: &[f32], label: u8) {
+        debug_assert_eq!(row.len(), self.dim);
+        debug_assert!((label as usize) < self.n_classes);
+        self.x.extend_from_slice(row);
+        self.labels.push(label);
+    }
+
+    /// Split off the LAST `n_tail` examples (the paper uses the last 10k /
+    /// 5k training samples as the validation set — Sec. 3.1 / 3.2).
+    pub fn split_tail(&self, n_tail: usize) -> (Dataset, Dataset) {
+        assert!(n_tail <= self.len(), "tail split larger than dataset");
+        let n_head = self.len() - n_tail;
+        let head = self.slice(0, n_head);
+        let tail = self.slice(n_head, self.len());
+        (head, tail)
+    }
+
+    /// Contiguous [lo, hi) sub-dataset (copies).
+    pub fn slice(&self, lo: usize, hi: usize) -> Dataset {
+        assert!(lo <= hi && hi <= self.len());
+        Dataset {
+            name: self.name.clone(),
+            x: self.x[lo * self.dim..hi * self.dim].to_vec(),
+            labels: self.labels[lo..hi].to_vec(),
+            dim: self.dim,
+            shape: self.shape,
+            n_classes: self.n_classes,
+        }
+    }
+
+    /// Per-class example counts (sanity checks, class-balance tests).
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.n_classes];
+        for &l in &self.labels {
+            counts[l as usize] += 1;
+        }
+        counts
+    }
+}
+
+/// Train / validation / test triple, the unit the coordinator consumes.
+#[derive(Clone)]
+pub struct SplitData {
+    pub train: Dataset,
+    pub val: Dataset,
+    pub test: Dataset,
+}
+
+impl SplitData {
+    /// Paper protocol: carve validation off the tail of the training set.
+    pub fn from_train_test(train: Dataset, test: Dataset, n_val: usize) -> Self {
+        let (train, val) = train.split_tail(n_val);
+        Self { train, val, test }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        let mut d = Dataset::new("t", (1, 2, 1), 3);
+        for i in 0..10u8 {
+            d.push(&[i as f32, -(i as f32)], i % 3);
+        }
+        d
+    }
+
+    #[test]
+    fn push_and_row() {
+        let d = tiny();
+        assert_eq!(d.len(), 10);
+        assert_eq!(d.dim, 2);
+        assert_eq!(d.row(3), &[3.0, -3.0]);
+    }
+
+    #[test]
+    fn split_tail_keeps_order() {
+        let d = tiny();
+        let (head, tail) = d.split_tail(4);
+        assert_eq!(head.len(), 6);
+        assert_eq!(tail.len(), 4);
+        assert_eq!(tail.row(0), &[6.0, -6.0]);
+        assert_eq!(head.labels, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn class_counts_sum() {
+        let d = tiny();
+        let c = d.class_counts();
+        assert_eq!(c.iter().sum::<usize>(), 10);
+        assert_eq!(c, vec![4, 3, 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn split_tail_too_large_panics() {
+        tiny().split_tail(11);
+    }
+}

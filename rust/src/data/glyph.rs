@@ -1,0 +1,186 @@
+//! Procedural digit glyph rendering: the shared substrate behind the
+//! synthetic MNIST and SVHN generators (DESIGN.md par.7 substitutions).
+//!
+//! Each digit 0-9 is a set of polyline strokes in a unit box; rendering
+//! applies a random affine jitter (rotation, scale, shear, translation),
+//! draws anti-aliased strokes with randomized thickness, then adds pixel
+//! noise. The result is a class-structured image distribution that a
+//! permutation-invariant MLP must genuinely learn — which is what the
+//! paper's regularization comparison needs.
+
+use crate::util::Rng;
+
+/// Stroke endpoints in [0,1]^2 glyph space, (x0, y0, x1, y1).
+type Seg = (f32, f32, f32, f32);
+
+/// Polyline skeletons per digit (x grows right, y grows DOWN).
+pub fn digit_segments(d: u8) -> Vec<Seg> {
+    // 7-segment-style frame with diagonals where it helps separability.
+    const L: f32 = 0.30; // left
+    const R: f32 = 0.70; // right
+    const T: f32 = 0.18; // top
+    const M: f32 = 0.50; // middle
+    const B: f32 = 0.82; // bottom
+    match d {
+        0 => vec![(L, T, R, T), (R, T, R, B), (R, B, L, B), (L, B, L, T), (L, T, R, B)],
+        1 => vec![(0.5, T, 0.5, B), (0.38, T + 0.10, 0.5, T)],
+        2 => vec![(L, T, R, T), (R, T, R, M), (R, M, L, B), (L, B, R, B)],
+        3 => vec![(L, T, R, T), (R, T, R, B), (L, M, R, M), (L, B, R, B)],
+        4 => vec![(L, T, L, M), (L, M, R, M), (R, T, R, B)],
+        5 => vec![(R, T, L, T), (L, T, L, M), (L, M, R, M), (R, M, R, B), (R, B, L, B)],
+        6 => vec![(R, T, L, T), (L, T, L, B), (L, B, R, B), (R, B, R, M), (R, M, L, M)],
+        7 => vec![(L, T, R, T), (R, T, 0.45, B)],
+        8 => vec![(L, T, R, T), (R, T, R, B), (R, B, L, B), (L, B, L, T), (L, M, R, M)],
+        9 => vec![(R, M, L, M), (L, M, L, T), (L, T, R, T), (R, T, R, B), (R, B, L, B)],
+        _ => panic!("digit out of range: {d}"),
+    }
+}
+
+/// Affine jitter parameters drawn per sample.
+pub struct Jitter {
+    pub rot: f32,
+    pub scale_x: f32,
+    pub scale_y: f32,
+    pub shear: f32,
+    pub dx: f32,
+    pub dy: f32,
+    pub thickness: f32,
+    pub intensity: f32,
+}
+
+impl Jitter {
+    pub fn sample(rng: &mut Rng) -> Self {
+        Self {
+            rot: rng.range(-0.26, 0.26), // ~±15 degrees
+            scale_x: rng.range(0.80, 1.15),
+            scale_y: rng.range(0.80, 1.15),
+            shear: rng.range(-0.15, 0.15),
+            dx: rng.range(-0.07, 0.07),
+            dy: rng.range(-0.07, 0.07),
+            thickness: rng.range(0.045, 0.085),
+            intensity: rng.range(0.75, 1.0),
+        }
+    }
+
+    /// Map a glyph-space point through the jitter, still in unit coords.
+    fn apply(&self, x: f32, y: f32) -> (f32, f32) {
+        let (cx, cy) = (x - 0.5, y - 0.5);
+        let xs = cx * self.scale_x + cy * self.shear;
+        let ys = cy * self.scale_y;
+        let (s, c) = self.rot.sin_cos();
+        let xr = xs * c - ys * s;
+        let yr = xs * s + ys * c;
+        (xr + 0.5 + self.dx, yr + 0.5 + self.dy)
+    }
+}
+
+fn dist_to_seg(px: f32, py: f32, seg: &Seg) -> f32 {
+    let (x0, y0, x1, y1) = *seg;
+    let (dx, dy) = (x1 - x0, y1 - y0);
+    let len2 = dx * dx + dy * dy;
+    let t = if len2 > 0.0 {
+        (((px - x0) * dx + (py - y0) * dy) / len2).clamp(0.0, 1.0)
+    } else {
+        0.0
+    };
+    let (qx, qy) = (x0 + t * dx, y0 + t * dy);
+    ((px - qx).powi(2) + (py - qy).powi(2)).sqrt()
+}
+
+/// Render digit `d` into an `hw x hw` grayscale buffer in [0,1].
+pub fn render_digit(d: u8, hw: usize, rng: &mut Rng, noise: f32) -> Vec<f32> {
+    let jit = Jitter::sample(rng);
+    let segs: Vec<Seg> = digit_segments(d)
+        .iter()
+        .map(|&(x0, y0, x1, y1)| {
+            let (a, b) = jit.apply(x0, y0);
+            let (c, e) = jit.apply(x1, y1);
+            (a, b, c, e)
+        })
+        .collect();
+    let mut img = vec![0f32; hw * hw];
+    let t = jit.thickness;
+    for py in 0..hw {
+        for px in 0..hw {
+            let ux = (px as f32 + 0.5) / hw as f32;
+            let uy = (py as f32 + 0.5) / hw as f32;
+            let mut dmin = f32::INFINITY;
+            for s in &segs {
+                dmin = dmin.min(dist_to_seg(ux, uy, s));
+            }
+            // soft-edged stroke: 1 inside, linear falloff over one pixel
+            let edge = 1.0 / hw as f32;
+            let v = ((t - dmin) / edge + 0.5).clamp(0.0, 1.0) * jit.intensity;
+            img[py * hw + px] = v;
+        }
+    }
+    if noise > 0.0 {
+        for v in img.iter_mut() {
+            *v = (*v + noise * rng.normal()).clamp(0.0, 1.0);
+        }
+    }
+    img
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_digits_have_segments() {
+        for d in 0..10u8 {
+            assert!(!digit_segments(d).is_empty());
+        }
+    }
+
+    #[test]
+    fn render_is_in_unit_range_and_nonempty() {
+        let mut rng = Rng::new(1);
+        for d in 0..10u8 {
+            let img = render_digit(d, 28, &mut rng, 0.05);
+            assert_eq!(img.len(), 784);
+            let mx = img.iter().cloned().fold(0.0f32, f32::max);
+            let mn = img.iter().cloned().fold(1.0f32, f32::min);
+            assert!(mx <= 1.0 && mn >= 0.0);
+            assert!(mx > 0.5, "digit {d} rendered too faint: {mx}");
+            let ink: f32 = img.iter().sum();
+            assert!(ink > 10.0, "digit {d} has almost no ink: {ink}");
+        }
+    }
+
+    #[test]
+    fn different_digits_look_different() {
+        // Render without jitter-heavy noise and compare mean absolute
+        // difference between class prototypes.
+        let mut imgs = vec![];
+        for d in 0..10u8 {
+            let mut acc = vec![0f32; 784];
+            for seed in 0..8u64 {
+                let mut rng = Rng::new(seed * 10 + d as u64);
+                let img = render_digit(d, 28, &mut rng, 0.0);
+                for (a, b) in acc.iter_mut().zip(img) {
+                    *a += b / 8.0;
+                }
+            }
+            imgs.push(acc);
+        }
+        for a in 0..10 {
+            for b in (a + 1)..10 {
+                let mad: f32 = imgs[a]
+                    .iter()
+                    .zip(&imgs[b])
+                    .map(|(x, y)| (x - y).abs())
+                    .sum::<f32>()
+                    / 784.0;
+                assert!(mad > 0.02, "digits {a} and {b} are too similar: {mad}");
+            }
+        }
+    }
+
+    #[test]
+    fn same_seed_same_image() {
+        let a = render_digit(5, 28, &mut Rng::new(7), 0.05);
+        let b = render_digit(5, 28, &mut Rng::new(7), 0.05);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,243 @@
+//! Real-dataset loaders: MNIST IDX and CIFAR-10 binary formats.
+//!
+//! If the user drops the original files under a data directory the
+//! experiments run on the real corpora; otherwise callers fall back to the
+//! synthetic generators. Expected layout (uncompressed):
+//!
+//!   <dir>/mnist/train-images-idx3-ubyte   + train-labels-idx1-ubyte
+//!   <dir>/mnist/t10k-images-idx3-ubyte    + t10k-labels-idx1-ubyte
+//!   <dir>/cifar-10-batches-bin/data_batch_{1..5}.bin + test_batch.bin
+//!
+//! SVHN ships as MATLAB .mat only; convert to CIFAR-style binary records
+//! (1 label byte + 3072 CHW bytes) as svhn_train.bin / svhn_test.bin.
+
+use std::fs;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::dataset::Dataset;
+
+fn read_u32_be(b: &[u8], off: usize) -> u32 {
+    u32::from_be_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
+}
+
+/// Parse an IDX image file (magic 0x00000803) into row-major [0,1] floats.
+pub fn load_idx_images(path: &Path) -> Result<(Vec<f32>, usize, usize, usize)> {
+    let mut buf = vec![];
+    fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?
+        .read_to_end(&mut buf)?;
+    if buf.len() < 16 {
+        bail!("{}: truncated IDX header", path.display());
+    }
+    let magic = read_u32_be(&buf, 0);
+    if magic != 0x0000_0803 {
+        bail!("{}: bad IDX image magic {magic:#x}", path.display());
+    }
+    let n = read_u32_be(&buf, 4) as usize;
+    let h = read_u32_be(&buf, 8) as usize;
+    let w = read_u32_be(&buf, 12) as usize;
+    let want = 16 + n * h * w;
+    if buf.len() != want {
+        bail!("{}: expected {want} bytes, got {}", path.display(), buf.len());
+    }
+    let x = buf[16..].iter().map(|&b| b as f32 / 255.0).collect();
+    Ok((x, n, h, w))
+}
+
+/// Parse an IDX label file (magic 0x00000801).
+pub fn load_idx_labels(path: &Path) -> Result<Vec<u8>> {
+    let mut buf = vec![];
+    fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?
+        .read_to_end(&mut buf)?;
+    if buf.len() < 8 {
+        bail!("{}: truncated IDX header", path.display());
+    }
+    let magic = read_u32_be(&buf, 0);
+    if magic != 0x0000_0801 {
+        bail!("{}: bad IDX label magic {magic:#x}", path.display());
+    }
+    let n = read_u32_be(&buf, 4) as usize;
+    if buf.len() != 8 + n {
+        bail!("{}: label count mismatch", path.display());
+    }
+    Ok(buf[8..].to_vec())
+}
+
+/// Load MNIST train or test split from `<dir>/mnist/`.
+pub fn load_mnist(dir: &Path, train: bool) -> Result<Dataset> {
+    let (img, lbl) = if train {
+        ("train-images-idx3-ubyte", "train-labels-idx1-ubyte")
+    } else {
+        ("t10k-images-idx3-ubyte", "t10k-labels-idx1-ubyte")
+    };
+    let base = dir.join("mnist");
+    let (x, n, h, w) = load_idx_images(&base.join(img))?;
+    let labels = load_idx_labels(&base.join(lbl))?;
+    if labels.len() != n {
+        bail!("mnist: {n} images but {} labels", labels.len());
+    }
+    let mut ds = Dataset::new("mnist", (h, w, 1), 10);
+    ds.x = x;
+    ds.labels = labels;
+    Ok(ds)
+}
+
+/// Parse CIFAR-10-style binary records (1 label + c*h*w CHW bytes) and
+/// convert to the HWC layout the models expect.
+pub fn load_cifar_records(path: &Path, h: usize, w: usize, c: usize) -> Result<Dataset> {
+    let mut buf = vec![];
+    fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?
+        .read_to_end(&mut buf)?;
+    let rec = 1 + h * w * c;
+    if buf.len() % rec != 0 {
+        bail!("{}: size {} not a multiple of record {rec}", path.display(), buf.len());
+    }
+    let n = buf.len() / rec;
+    let mut ds = Dataset::new("cifar-bin", (h, w, c), 10);
+    let mut row = vec![0f32; h * w * c];
+    for i in 0..n {
+        let r = &buf[i * rec..(i + 1) * rec];
+        let label = r[0];
+        if label > 9 {
+            bail!("{}: label {label} out of range at record {i}", path.display());
+        }
+        // CHW -> HWC
+        for ch in 0..c {
+            for y in 0..h {
+                for x in 0..w {
+                    row[(y * w + x) * c + ch] = r[1 + ch * h * w + y * w + x] as f32 / 255.0;
+                }
+            }
+        }
+        ds.push(&row, label);
+    }
+    Ok(ds)
+}
+
+/// Load CIFAR-10 from `<dir>/cifar-10-batches-bin/`.
+pub fn load_cifar10(dir: &Path, train: bool) -> Result<Dataset> {
+    let base = dir.join("cifar-10-batches-bin");
+    let mut out = Dataset::new("cifar10", (32, 32, 3), 10);
+    let files: Vec<String> = if train {
+        (1..=5).map(|i| format!("data_batch_{i}.bin")).collect()
+    } else {
+        vec!["test_batch.bin".to_string()]
+    };
+    for f in files {
+        let part = load_cifar_records(&base.join(&f), 32, 32, 3)?;
+        out.x.extend_from_slice(&part.x);
+        out.labels.extend_from_slice(&part.labels);
+    }
+    out.name = "cifar10".into();
+    Ok(out)
+}
+
+/// Load SVHN from CIFAR-style converted binaries, if present.
+pub fn load_svhn(dir: &Path, train: bool) -> Result<Dataset> {
+    let f = if train { "svhn_train.bin" } else { "svhn_test.bin" };
+    let mut ds = load_cifar_records(&dir.join("svhn").join(f), 32, 32, 3)?;
+    ds.name = "svhn".into();
+    Ok(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("bc_loader_test_{}", std::process::id()));
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn write_idx_images(path: &Path, n: usize, h: usize, w: usize) {
+        let mut buf = vec![];
+        buf.extend_from_slice(&0x0000_0803u32.to_be_bytes());
+        buf.extend_from_slice(&(n as u32).to_be_bytes());
+        buf.extend_from_slice(&(h as u32).to_be_bytes());
+        buf.extend_from_slice(&(w as u32).to_be_bytes());
+        for i in 0..n * h * w {
+            buf.push((i % 256) as u8);
+        }
+        fs::File::create(path).unwrap().write_all(&buf).unwrap();
+    }
+
+    fn write_idx_labels(path: &Path, labels: &[u8]) {
+        let mut buf = vec![];
+        buf.extend_from_slice(&0x0000_0801u32.to_be_bytes());
+        buf.extend_from_slice(&(labels.len() as u32).to_be_bytes());
+        buf.extend_from_slice(labels);
+        fs::File::create(path).unwrap().write_all(&buf).unwrap();
+    }
+
+    #[test]
+    fn idx_roundtrip() {
+        let d = tmpdir();
+        let img = d.join("img");
+        let lbl = d.join("lbl");
+        write_idx_images(&img, 3, 4, 5);
+        write_idx_labels(&lbl, &[0, 1, 2]);
+        let (x, n, h, w) = load_idx_images(&img).unwrap();
+        assert_eq!((n, h, w), (3, 4, 5));
+        assert_eq!(x.len(), 60);
+        assert!((x[1] - 1.0 / 255.0).abs() < 1e-6);
+        assert_eq!(load_idx_labels(&lbl).unwrap(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn idx_bad_magic_rejected() {
+        let d = tmpdir();
+        let p = d.join("bad");
+        fs::File::create(&p).unwrap().write_all(&[0u8; 32]).unwrap();
+        assert!(load_idx_images(&p).is_err());
+        assert!(load_idx_labels(&p).is_err());
+    }
+
+    #[test]
+    fn cifar_records_chw_to_hwc() {
+        let d = tmpdir();
+        let p = d.join("batch.bin");
+        // 1 record: label 7, image where channel 0 = 10, ch1 = 20, ch2 = 30
+        let h = 2;
+        let w = 2;
+        let mut buf = vec![7u8];
+        for ch in 0..3u8 {
+            for _ in 0..h * w {
+                buf.push((ch + 1) * 10);
+            }
+        }
+        fs::File::create(&p).unwrap().write_all(&buf).unwrap();
+        let ds = load_cifar_records(&p, h, w, 3).unwrap();
+        assert_eq!(ds.len(), 1);
+        assert_eq!(ds.labels[0], 7);
+        let r = ds.row(0);
+        // HWC: first pixel has channels (10, 20, 30)/255
+        assert!((r[0] - 10.0 / 255.0).abs() < 1e-6);
+        assert!((r[1] - 20.0 / 255.0).abs() < 1e-6);
+        assert!((r[2] - 30.0 / 255.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cifar_bad_label_rejected() {
+        let d = tmpdir();
+        let p = d.join("badlabel.bin");
+        let mut buf = vec![10u8]; // invalid class
+        buf.extend(vec![0u8; 12]);
+        fs::File::create(&p).unwrap().write_all(&buf).unwrap();
+        assert!(load_cifar_records(&p, 2, 2, 3).is_err());
+    }
+
+    #[test]
+    fn missing_files_error_cleanly() {
+        let d = tmpdir();
+        assert!(load_mnist(&d, true).is_err());
+        assert!(load_cifar10(&d, false).is_err());
+        assert!(load_svhn(&d, true).is_err());
+    }
+}

@@ -1,0 +1,111 @@
+//! Dataset substrate: containers, synthetic generators, real-file loaders.
+//!
+//! `load_or_synth` implements the substitution policy from DESIGN.md par.7:
+//! real MNIST / CIFAR-10 / SVHN files are used when present under the data
+//! directory, otherwise the procedural generators produce shape-identical
+//! class-structured stand-ins.
+
+pub mod dataset;
+pub mod glyph;
+pub mod loaders;
+pub mod synth;
+
+pub use dataset::{Dataset, SplitData};
+
+use std::path::Path;
+
+/// Which benchmark a run targets; carries the paper's protocol constants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Corpus {
+    Mnist,
+    Cifar10,
+    Svhn,
+}
+
+impl Corpus {
+    pub fn parse(s: &str) -> Option<Corpus> {
+        match s.to_ascii_lowercase().as_str() {
+            "mnist" => Some(Corpus::Mnist),
+            "cifar10" | "cifar-10" | "cifar" => Some(Corpus::Cifar10),
+            "svhn" => Some(Corpus::Svhn),
+            _ => None,
+        }
+    }
+
+    /// Validation-set size as a fraction of the paper's (train, val) split:
+    /// MNIST holds out the last 10000 of 60000, CIFAR-10 the last 5000 of
+    /// 50000, SVHN we mirror CIFAR-10's 10%.
+    pub fn val_fraction(self) -> f64 {
+        match self {
+            Corpus::Mnist => 10_000.0 / 60_000.0,
+            Corpus::Cifar10 => 5_000.0 / 50_000.0,
+            Corpus::Svhn => 0.1,
+        }
+    }
+}
+
+/// Load a (train, test) pair: real files when available, synthetic
+/// otherwise. `n_train`/`n_test` bound the sizes (0 = full real size or a
+/// CPU-scale default for synthetic).
+pub fn load_or_synth(
+    corpus: Corpus,
+    data_dir: Option<&Path>,
+    n_train: usize,
+    n_test: usize,
+    seed: u64,
+) -> (Dataset, Dataset, bool) {
+    if let Some(dir) = data_dir {
+        let loaded = match corpus {
+            Corpus::Mnist => loaders::load_mnist(dir, true)
+                .and_then(|tr| loaders::load_mnist(dir, false).map(|te| (tr, te))),
+            Corpus::Cifar10 => loaders::load_cifar10(dir, true)
+                .and_then(|tr| loaders::load_cifar10(dir, false).map(|te| (tr, te))),
+            Corpus::Svhn => loaders::load_svhn(dir, true)
+                .and_then(|tr| loaders::load_svhn(dir, false).map(|te| (tr, te))),
+        };
+        if let Ok((mut tr, mut te)) = loaded {
+            if n_train > 0 && n_train < tr.len() {
+                tr = tr.slice(0, n_train);
+            }
+            if n_test > 0 && n_test < te.len() {
+                te = te.slice(0, n_test);
+            }
+            return (tr, te, true);
+        }
+    }
+    let (def_train, def_test) = (8_000, 2_000);
+    let ntr = if n_train > 0 { n_train } else { def_train };
+    let nte = if n_test > 0 { n_test } else { def_test };
+    let (tr, te) = match corpus {
+        Corpus::Mnist => (synth::synth_mnist(ntr, seed), synth::synth_mnist(nte, seed + 1)),
+        Corpus::Cifar10 => (synth::synth_cifar(ntr, seed), synth::synth_cifar(nte, seed + 1)),
+        Corpus::Svhn => (synth::synth_svhn(ntr, seed), synth::synth_svhn(nte, seed + 1)),
+    };
+    (tr, te, false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_parse() {
+        assert_eq!(Corpus::parse("MNIST"), Some(Corpus::Mnist));
+        assert_eq!(Corpus::parse("cifar-10"), Some(Corpus::Cifar10));
+        assert_eq!(Corpus::parse("nope"), None);
+    }
+
+    #[test]
+    fn synth_fallback_sizes() {
+        let (tr, te, real) = load_or_synth(Corpus::Mnist, None, 100, 40, 7);
+        assert!(!real);
+        assert_eq!(tr.len(), 100);
+        assert_eq!(te.len(), 40);
+    }
+
+    #[test]
+    fn train_and_test_sets_differ() {
+        let (tr, te, _) = load_or_synth(Corpus::Cifar10, None, 50, 50, 7);
+        assert_ne!(tr.x, te.x);
+    }
+}

@@ -1,0 +1,197 @@
+//! Hardware cost model: the paper's efficiency arithmetic, made explicit.
+//!
+//! Sec. 1/5 claims: (a) BinaryConnect removes the multiplications from the
+//! forward and backward propagations — about 2/3 of all training
+//! multiplications — enabling ~3x specialized-hardware training speedups;
+//! (b) at test time, deterministic BC removes multiplications entirely
+//! from the weight inner loops and cuts weight memory >= 16x (32x vs f32).
+//!
+//! We count multiply and accumulate operations per training step from the
+//! model's parameter spec, exactly as a hardware designer would budget a
+//! datapath, and reproduce the claimed ratios in `benches/hw_claims.rs`.
+
+use crate::runtime::manifest::ParamInfo;
+
+/// Multiply / accumulate counts for one phase.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct OpCount {
+    pub mults: u64,
+    pub adds: u64,
+}
+
+impl OpCount {
+    fn add(&mut self, o: OpCount) {
+        self.mults += o.mults;
+        self.adds += o.adds;
+    }
+}
+
+/// Per-step op counts, by back-propagation phase (paper Sec. 2.3's three
+/// steps).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepCost {
+    /// 1. forward propagation
+    pub forward: OpCount,
+    /// 2. backward propagation (gradients w.r.t. activations)
+    pub backward: OpCount,
+    /// 3. parameter gradients + update
+    pub update: OpCount,
+}
+
+impl StepCost {
+    pub fn total_mults(&self) -> u64 {
+        self.forward.mults + self.backward.mults + self.update.mults
+    }
+
+    pub fn total_adds(&self) -> u64 {
+        self.forward.adds + self.backward.adds + self.update.adds
+    }
+}
+
+/// MACs of a weight tensor applied to a batch: dense (k,n) -> batch*k*n,
+/// conv (kh,kw,cin,cout) at spatial hw -> batch*hw*hw*kh*kw*cin*cout.
+/// `spatial` carries the output H*W per conv layer (1 for dense).
+fn layer_macs(p: &ParamInfo, batch: u64, spatial: u64) -> u64 {
+    let numel: u64 = p.shape.iter().map(|&d| d as u64).product();
+    batch * spatial * numel
+}
+
+/// Estimate per-step op counts for a model spec.
+///
+/// `spatial_of` maps a weight param's name to its output spatial size
+/// (H*W); dense layers return 1. `binary` selects BinaryConnect (weights
+/// are ±1 during propagations) versus a conventional real-weight net.
+pub fn step_cost<F: Fn(&str) -> u64>(
+    params: &[ParamInfo],
+    batch: u64,
+    binary: bool,
+    spatial_of: F,
+) -> StepCost {
+    let mut cost = StepCost::default();
+    for p in params {
+        match p.kind.as_str() {
+            "weight" => {
+                let macs = layer_macs(p, batch, spatial_of(&p.name));
+                let numel: u64 = p.shape.iter().map(|&d| d as u64).product();
+                // 1. forward: x @ w_b — binary weights need no multiplies
+                cost.forward.add(OpCount {
+                    mults: if binary { 0 } else { macs },
+                    adds: macs,
+                });
+                // 2. backward: g @ w_b^T — same shape, same saving
+                cost.backward.add(OpCount {
+                    mults: if binary { 0 } else { macs },
+                    adds: macs,
+                });
+                // 3. parameter gradient dW = a^T g: real x real — the
+                //    multiplications BinaryConnect does NOT remove — plus
+                //    the update arithmetic itself.
+                cost.update.add(OpCount { mults: macs + numel, adds: macs + numel });
+            }
+            "affine" => {
+                let numel: u64 = p.shape.iter().map(|&d| d as u64).product();
+                // BN affine fwd/bwd + its update: one mult/add per element
+                // per example (tiny next to the GEMMs, counted for honesty)
+                cost.forward.add(OpCount { mults: batch * numel, adds: batch * numel });
+                cost.backward.add(OpCount { mults: batch * numel, adds: batch * numel });
+                cost.update.add(OpCount { mults: numel, adds: numel });
+            }
+            _ => {} // bn_stat: no arithmetic in the datapath model
+        }
+    }
+    cost
+}
+
+/// The headline ratio: fraction of multiplications removed by BC.
+pub fn mult_reduction(real: &StepCost, bc: &StepCost) -> f64 {
+    1.0 - bc.total_mults() as f64 / real.total_mults() as f64
+}
+
+/// Memory model for test-time weights.
+#[derive(Clone, Copy, Debug)]
+pub struct MemoryModel {
+    pub f32_bytes: u64,
+    pub f16_bytes: u64,
+    pub packed_bytes: u64,
+}
+
+pub fn weight_memory(params: &[ParamInfo]) -> MemoryModel {
+    let scalars: u64 = params
+        .iter()
+        .filter(|p| p.kind == "weight")
+        .map(|p| p.shape.iter().map(|&d| d as u64).product::<u64>())
+        .sum();
+    MemoryModel {
+        f32_bytes: scalars * 4,
+        f16_bytes: scalars * 2,
+        packed_bytes: scalars.div_ceil(8),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dense(name: &str, k: usize, n: usize) -> ParamInfo {
+        ParamInfo { name: name.into(), shape: vec![k, n], kind: "weight".into(), glorot: 0.1 }
+    }
+
+    fn affine(name: &str, n: usize) -> ParamInfo {
+        ParamInfo { name: name.into(), shape: vec![n], kind: "affine".into(), glorot: 0.0 }
+    }
+
+    fn stat(name: &str, n: usize) -> ParamInfo {
+        ParamInfo { name: name.into(), shape: vec![n], kind: "bn_stat".into(), glorot: 0.0 }
+    }
+
+    #[test]
+    fn pure_dense_net_reduction_approaches_two_thirds() {
+        // With only GEMMs (the asymptotic case the paper cites), fwd and
+        // bwd multiplications vanish: reduction -> 2/3 as layers grow.
+        let params = vec![dense("l0", 1024, 1024), dense("l1", 1024, 1024)];
+        let real = step_cost(&params, 100, false, |_| 1);
+        let bc = step_cost(&params, 100, true, |_| 1);
+        let red = mult_reduction(&real, &bc);
+        assert!((red - 2.0 / 3.0).abs() < 0.01, "reduction = {red}");
+    }
+
+    #[test]
+    fn bn_affine_shrinks_reduction_slightly() {
+        let params = vec![dense("l0", 256, 256), affine("bn.g", 256), stat("bn.m", 256)];
+        let real = step_cost(&params, 64, false, |_| 1);
+        let bc = step_cost(&params, 64, true, |_| 1);
+        let red = mult_reduction(&real, &bc);
+        assert!(red > 0.6 && red < 2.0 / 3.0, "reduction = {red}");
+    }
+
+    #[test]
+    fn conv_spatial_multiplier_counts() {
+        let conv = ParamInfo {
+            name: "conv0.W".into(),
+            shape: vec![3, 3, 3, 16],
+            kind: "weight".into(),
+            glorot: 0.1,
+        };
+        let c = step_cost(&[conv], 2, false, |_| 32 * 32);
+        // fwd MACs = batch * spatial * numel = 2*1024*432
+        assert_eq!(c.forward.mults, 2 * 1024 * 432);
+    }
+
+    #[test]
+    fn adds_survive_binarization() {
+        let params = vec![dense("l0", 128, 128)];
+        let real = step_cost(&params, 10, false, |_| 1);
+        let bc = step_cost(&params, 10, true, |_| 1);
+        assert_eq!(real.total_adds(), bc.total_adds());
+        assert!(bc.forward.mults == 0 && bc.backward.mults == 0);
+        assert!(bc.update.mults > 0); // the remaining third
+    }
+
+    #[test]
+    fn memory_model_ratios() {
+        let params = vec![dense("l0", 1024, 1024), affine("b", 1024)];
+        let m = weight_memory(&params);
+        assert_eq!(m.f32_bytes / m.packed_bytes, 32);
+        assert_eq!(m.f16_bytes / m.packed_bytes, 16); // the paper's "16x"
+    }
+}

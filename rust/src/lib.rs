@@ -1,0 +1,34 @@
+//! # BinaryConnect — training DNNs with binary weights during propagations
+//!
+//! A production-shaped reproduction of Courbariaux, Bengio & David,
+//! *BinaryConnect* (NIPS 2015), as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1** (`python/compile/kernels/`) — Pallas kernels for the
+//!   binarization ops, the blocked GEMM, the fused clip-updates and the
+//!   squared-hinge loss.
+//! * **Layer 2** (`python/compile/`) — the paper's MLP and VGG-ish CNN,
+//!   three optimizers, and Algorithm 1 as one jitted `train_step`, lowered
+//!   once to HLO text (`make artifacts`).
+//! * **Layer 3** (this crate) — the coordinator: datasets, preprocessing,
+//!   minibatch pipeline, the PJRT runtime executing the AOT artifacts, the
+//!   experiment driver reproducing every table/figure, a bit-packed
+//!   multiplication-free inference engine, and the hardware cost model
+//!   behind the paper's efficiency claims.
+//!
+//! Python never runs on the training/request path; after `make artifacts`
+//! the Rust binary is self-contained.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for measured
+//! reproductions of Tables 1-2 and Figures 1-3.
+
+pub mod bench_harness;
+pub mod binary;
+pub mod coordinator;
+pub mod data;
+pub mod hw;
+pub mod pipeline;
+pub mod preprocess;
+pub mod prop;
+pub mod runtime;
+pub mod stats;
+pub mod util;

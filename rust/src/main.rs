@@ -1,0 +1,301 @@
+//! `bcrun` — the BinaryConnect coordinator CLI.
+//!
+//! Subcommands:
+//!   info                         list artifact models and their specs
+//!   train                        train one configuration, dump curves
+//!   hw                           print the hardware cost-model table
+//!   export  --out <path>         train, then pack det-BC weights to disk
+//!   infer   --packed <path>      run the packed engine on a test set
+//!
+//! Examples (after `make artifacts`):
+//!   bcrun train --model mlp --dataset mnist --mode stoch --epochs 20
+//!   bcrun train --model cnn --dataset cifar10 --opt adam --mode det
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use anyhow::{anyhow, Result};
+
+use binaryconnect::coordinator::{protocol, train, LrSchedule, TrainOpts};
+use binaryconnect::data::{Corpus, SplitData};
+use binaryconnect::hw;
+use binaryconnect::runtime::{Manifest, Mode, Opt, Runtime};
+use binaryconnect::stats::{feature_tiles, write_pgm, Csv, Histogram};
+use binaryconnect::util::Args;
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+const USAGE: &str = "\
+usage: bcrun <info|train|hw|export|infer> [flags]
+  common:  --artifacts DIR (default artifacts) --data-dir DIR
+  train:   --model NAME --dataset mnist|cifar10|svhn --mode none|det|stoch
+           --opt sgd|nesterov|adam --epochs N --lr-start F --lr-end F
+           --dropout F --no-lr-scale --seed N --n-train N --n-test N
+           --patience N --curves FILE.csv --features FILE.pgm
+           --histogram FILE.csv --quiet --no-zca --zca-eps F
+           --eval-mode none|det|stoch
+  hw:      --model NAME --batch N
+  export:  train flags + --out FILE.bcpack   (train, then pack det weights)
+  infer:   --packed FILE.bcpack --dataset D [--n-test N] (mult-free engine)";
+
+fn run() -> Result<()> {
+    let args = Args::parse().map_err(|e| anyhow!(e))?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "info" => cmd_info(&args),
+        "train" => cmd_train(&args),
+        "hw" => cmd_hw(&args),
+        "export" => cmd_export(&args),
+        "infer" => cmd_infer(&args),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn manifest(args: &Args) -> Result<Manifest> {
+    let dir = PathBuf::from(args.str("artifacts", "artifacts"));
+    Manifest::load(&dir)
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let m = manifest(args)?;
+    println!("artifact dir: {} (scale {})", m.dir.display(), m.scale);
+    for model in &m.models {
+        println!(
+            "  {:<10} batch {:<4} input {:?}  {} tensors / {} scalars  pallas={}",
+            model.name,
+            model.batch,
+            model.input_shape,
+            model.params.len(),
+            model.n_scalars,
+            model.use_pallas
+        );
+    }
+    Ok(())
+}
+
+/// Load + preprocess a dataset per the paper's pipeline for that corpus.
+pub fn prepare_data(corpus: Corpus, args: &Args, seed: u64) -> Result<(SplitData, bool)> {
+    let opts = protocol::DataOpts {
+        data_dir: args.opt_str("data-dir").map(PathBuf::from),
+        n_train: args.usize("n-train", 0),
+        n_test: args.usize("n-test", 0),
+        zca: !args.bool("no-zca", false),
+        zca_samples: args.usize("zca-samples", 4000),
+        zca_eps: args.f32("zca-eps", 3.0) as f64,
+        seed,
+    };
+    protocol::prepare(corpus, &opts)
+}
+
+pub fn opts_from_args(args: &Args) -> Result<TrainOpts> {
+    let epochs = args.usize("epochs", 20);
+    let lr_start = args.f32("lr-start", 0.02);
+    let lr_end = args.f32("lr-end", lr_start * 0.1);
+    Ok(TrainOpts {
+        epochs,
+        schedule: LrSchedule::Exponential { start: lr_start, end: lr_end, epochs },
+        mode: Mode::parse(&args.str("mode", "det")).ok_or_else(|| anyhow!("bad --mode"))?,
+        opt: Opt::parse(&args.str("opt", "sgd")).ok_or_else(|| anyhow!("bad --opt"))?,
+        momentum: args.f32("momentum", 0.9),
+        beta2: args.f32("beta2", 0.999),
+        eps: args.f32("eps", 1e-8),
+        dropout: args.f32("dropout", 0.0),
+        in_dropout: args.f32("in-dropout", 0.0),
+        bn_momentum: args.f32("bn-momentum", 0.9),
+        lr_scale: !args.bool("no-lr-scale", false),
+        seed: args.u64("seed", 1),
+        patience: args.usize("patience", 0),
+        verbose: !args.bool("quiet", false),
+        eval_override: args.opt_str("eval-mode").and_then(|s| Mode::parse(&s)),
+    })
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let m = manifest(args)?;
+    let model_name = args.str("model", "mlp");
+    let info = m.model(&model_name)?;
+    let corpus = Corpus::parse(&args.str("dataset", "mnist"))
+        .ok_or_else(|| anyhow!("bad --dataset"))?;
+    let opts = opts_from_args(args)?;
+
+    let (data, real) = prepare_data(corpus, args, opts.seed)?;
+    eprintln!(
+        "dataset: {} ({} train / {} val / {} test, {})",
+        data.train.name,
+        data.train.len(),
+        data.val.len(),
+        data.test.len(),
+        if real { "real files" } else { "synthetic" }
+    );
+
+    let rt = Runtime::cpu()?;
+    let model = rt.load_model(info)?;
+    let result = train(&model, &data, &opts)?;
+
+    println!(
+        "mode={} opt={} epochs={} -> best val err {:.4} (epoch {}), test err {:.4}, {} steps in {:.1}s",
+        opts.mode.label(),
+        opts.opt.label(),
+        result.curves.len(),
+        result.best_val_err,
+        result.best_epoch,
+        result.test_err,
+        result.steps,
+        result.total_seconds
+    );
+
+    if let Some(path) = args.opt_str("curves") {
+        let mut csv = Csv::new(&["epoch", "lr", "train_loss", "train_err", "val_err"]);
+        for r in &result.curves {
+            csv.rowf(&[r.epoch as f64, r.lr as f64, r.train_loss, r.train_err, r.val_err]);
+        }
+        csv.save(&PathBuf::from(&path))?;
+        eprintln!("wrote {path}");
+    }
+    if let Some(path) = args.opt_str("histogram") {
+        // Figure 2 plots w/H in [-1, 1]; real weights live in ±H with H
+        // the layer's Glorot coefficient.
+        let h_scale = info.params[0].glorot.max(1e-12) as f32;
+        let w0: Vec<f32> =
+            result.state.param_vec(0)?.iter().map(|v| v / h_scale).collect();
+        let h = Histogram::build(&w0, -1.0, 1.0, 40);
+        std::fs::write(&path, h.to_csv())?;
+        eprintln!("wrote {path}");
+    }
+    if let Some(path) = args.opt_str("features") {
+        let w0 = result.state.param_vec(0)?;
+        let in_dim = info.params[0].shape[0];
+        let units = info.params[0].shape[1];
+        let side = (in_dim as f64).sqrt() as usize;
+        if side * side == in_dim {
+            let (img, w, h) = feature_tiles(&w0, in_dim, units, side, 100, 10);
+            write_pgm(&PathBuf::from(&path), &img, w, h)?;
+            eprintln!("wrote {path}");
+        } else {
+            eprintln!("features: input dim {in_dim} is not square; skipped");
+        }
+    }
+    Ok(())
+}
+
+/// Train (det-BC), then fold + pack the binary weights into a .bcpack file
+/// servable by the multiplication-free engine (paper Sec. 2.6 method 1).
+fn cmd_export(args: &Args) -> Result<()> {
+    use binaryconnect::binary::{pack_mlp, save_packed};
+
+    let m = manifest(args)?;
+    let model_name = args.str("model", "mlp");
+    let info = m.model(&model_name)?;
+    let corpus = Corpus::parse(&args.str("dataset", "mnist"))
+        .ok_or_else(|| anyhow!("bad --dataset"))?;
+    let mut opts = opts_from_args(args)?;
+    opts.mode = Mode::Det; // packed export is the deterministic test-time path
+
+    let (data, _) = prepare_data(corpus, args, opts.seed)?;
+    let rt = Runtime::cpu()?;
+    let model = rt.load_model(info)?;
+    let result = train(&model, &data, &opts)?;
+    eprintln!("trained: test err {:.4}", result.test_err);
+
+    let packed = pack_mlp(info, &result.state)?;
+    let out = args.str("out", "model.bcpack");
+    save_packed(&packed, std::path::Path::new(&out))?;
+    println!(
+        "wrote {out}: {} layers, {} weight bytes packed ({}x smaller than f32)",
+        packed.layers.len(),
+        packed.weight_memory_bytes(),
+        packed.f32_weight_memory_bytes() / packed.weight_memory_bytes().max(1)
+    );
+    Ok(())
+}
+
+/// Serve a .bcpack model on a test set with the packed engine.
+fn cmd_infer(args: &Args) -> Result<()> {
+    use binaryconnect::binary::load_packed;
+    use binaryconnect::util::Timer;
+
+    let path = args.str("packed", "model.bcpack");
+    let packed = load_packed(std::path::Path::new(&path))?;
+    let corpus = Corpus::parse(&args.str("dataset", "mnist"))
+        .ok_or_else(|| anyhow!("bad --dataset"))?;
+    let (data, real) = prepare_data(corpus, args, args.u64("seed", 1))?;
+    anyhow::ensure!(
+        data.test.dim == packed.in_dim,
+        "model expects {} features, dataset has {}",
+        packed.in_dim,
+        data.test.dim
+    );
+    let t = Timer::start();
+    let err = packed.test_error(&data.test, args.usize("batch", 256));
+    let dt = t.elapsed_s();
+    println!(
+        "{}: {} test examples ({}) -> err {:.4}, {:.0} img/s, {} weight bytes, zero weight-loop multiplications",
+        path,
+        data.test.len(),
+        if real { "real" } else { "synthetic" },
+        err,
+        data.test.len() as f64 / dt,
+        packed.weight_memory_bytes(),
+    );
+    Ok(())
+}
+
+fn cmd_hw(args: &Args) -> Result<()> {
+    let m = manifest(args)?;
+    let model_name = args.str("model", "mlp");
+    let info = m.model(&model_name)?;
+    let batch = args.usize("batch", info.batch) as u64;
+
+    // spatial sizes for the CNN's conv layers (SAME conv, MP2 after pairs)
+    let hw_of = |name: &str| -> u64 {
+        if !name.starts_with("conv") {
+            return 1;
+        }
+        let idx: usize = name
+            .trim_start_matches("conv")
+            .split('.')
+            .next()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0);
+        let hw = 32usize >> (idx / 2).min(3); // 32,32,16,16,8,8
+        (hw * hw) as u64
+    };
+
+    let real = hw::step_cost(&info.params, batch, false, hw_of);
+    let bc = hw::step_cost(&info.params, batch, true, hw_of);
+    println!("model {model_name}, batch {batch} — per-step op counts:");
+    println!(
+        "  conventional: {:>14} mults  {:>14} adds",
+        real.total_mults(),
+        real.total_adds()
+    );
+    println!(
+        "  BinaryConnect:{:>14} mults  {:>14} adds",
+        bc.total_mults(),
+        bc.total_adds()
+    );
+    println!(
+        "  multiplications removed: {:.1}% (paper: ~66.7%)",
+        100.0 * hw::mult_reduction(&real, &bc)
+    );
+    let mem = hw::weight_memory(&info.params);
+    println!(
+        "  test-time weight memory: f32 {} KiB -> packed {} KiB ({}x; paper claims >= 16x vs 16-bit = {}x)",
+        mem.f32_bytes / 1024,
+        mem.packed_bytes / 1024,
+        mem.f32_bytes / mem.packed_bytes.max(1),
+        mem.f16_bytes / mem.packed_bytes.max(1),
+    );
+    Ok(())
+}

@@ -1,0 +1,208 @@
+//! Minibatch pipeline: shuffled sampling, one-hot target encoding, and a
+//! double-buffered prefetch thread with bounded-channel backpressure.
+//!
+//! The PJRT executor consumes host batches; batch assembly (gather +
+//! one-hot encode) is cheap but not free, so a background thread builds the
+//! next batches while the current step executes. A `sync_channel(depth)`
+//! bounds memory and applies backpressure if the producer outruns the
+//! trainer (std threads; tokio is not in the offline registry and adds
+//! nothing to a synchronous training loop).
+
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::thread::JoinHandle;
+
+use crate::data::Dataset;
+use crate::util::Rng;
+
+/// A fully-assembled minibatch in the wire layout the HLO expects.
+pub struct Batch {
+    /// batch * dim features (row-major).
+    pub x: Vec<f32>,
+    /// batch * n_classes targets in {-1, +1} (L2-SVM convention).
+    pub y: Vec<f32>,
+    /// number of real (non-padding) examples; == batch for training.
+    pub n_valid: usize,
+    /// epoch-relative batch index.
+    pub index: usize,
+}
+
+/// Encode labels as +/-1 one-vs-rest rows (hinge-loss targets).
+pub fn encode_targets(labels: &[u8], n_classes: usize, out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(labels.len() * n_classes, -1.0);
+    for (i, &l) in labels.iter().enumerate() {
+        out[i * n_classes + l as usize] = 1.0;
+    }
+}
+
+/// Assemble the batch whose example indices are `idx` (padding repeats the
+/// last index; `n_valid` records how many are real).
+pub fn gather_batch(ds: &Dataset, idx: &[usize], batch: usize, index: usize) -> Batch {
+    assert!(!idx.is_empty() && idx.len() <= batch);
+    let dim = ds.dim;
+    let mut x = Vec::with_capacity(batch * dim);
+    let mut labels = Vec::with_capacity(batch);
+    for &i in idx {
+        x.extend_from_slice(ds.row(i));
+        labels.push(ds.labels[i]);
+    }
+    let last = *idx.last().unwrap();
+    for _ in idx.len()..batch {
+        x.extend_from_slice(ds.row(last));
+        labels.push(ds.labels[last]);
+    }
+    let mut y = Vec::new();
+    encode_targets(&labels, ds.n_classes, &mut y);
+    Batch { x, y, n_valid: idx.len(), index }
+}
+
+/// Plan of batches for one pass over a dataset.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Plan {
+    /// random order, drop the final partial batch (training).
+    Shuffled { seed: u64 },
+    /// in-order, pad the final partial batch (evaluation).
+    Sequential,
+}
+
+/// Number of batches a plan will produce.
+pub fn n_batches(n: usize, batch: usize, plan: Plan) -> usize {
+    match plan {
+        Plan::Shuffled { .. } => n / batch,
+        Plan::Sequential => n.div_ceil(batch),
+    }
+}
+
+/// Iterate batch index lists for one epoch (no data copying here).
+pub fn batch_indices(n: usize, batch: usize, plan: Plan) -> Vec<Vec<usize>> {
+    match plan {
+        Plan::Shuffled { seed } => {
+            let mut rng = Rng::new(seed);
+            let perm = rng.permutation(n);
+            perm.chunks_exact(batch)
+                .map(|c| c.iter().map(|&i| i as usize).collect())
+                .collect()
+        }
+        Plan::Sequential => (0..n)
+            .collect::<Vec<_>>()
+            .chunks(batch)
+            .map(|c| c.to_vec())
+            .collect(),
+    }
+}
+
+/// Background prefetcher: builds batches on a worker thread.
+pub struct Prefetcher {
+    rx: Option<Receiver<Batch>>,
+    handle: Option<JoinHandle<()>>,
+    pub n_batches: usize,
+}
+
+impl Prefetcher {
+    /// Spawn a producer for one epoch over `ds`. `depth` bounds the queue.
+    pub fn spawn(ds: &Dataset, batch: usize, plan: Plan, depth: usize) -> Prefetcher {
+        let plans = batch_indices(ds.len(), batch, plan);
+        let n = plans.len();
+        let ds = ds.clone(); // datasets are Arc-able later; clone is fine at this scale
+        let (tx, rx) = sync_channel(depth.max(1));
+        let handle = std::thread::spawn(move || {
+            for (bi, idx) in plans.into_iter().enumerate() {
+                let b = gather_batch(&ds, &idx, batch, bi);
+                if tx.send(b).is_err() {
+                    return; // consumer dropped early
+                }
+            }
+        });
+        Prefetcher { rx: Some(rx), handle: Some(handle), n_batches: n }
+    }
+
+    pub fn next(&mut self) -> Option<Batch> {
+        self.rx.as_ref().and_then(|rx| rx.recv().ok())
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        // Drop the receiver FIRST so a producer blocked on a full channel
+        // sees a send error and exits; only then join.
+        drop(self.rx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::synth_mnist;
+
+    #[test]
+    fn encode_targets_pm1() {
+        let mut y = vec![];
+        encode_targets(&[0, 2], 3, &mut y);
+        assert_eq!(y, vec![1.0, -1.0, -1.0, -1.0, -1.0, 1.0]);
+    }
+
+    #[test]
+    fn shuffled_plan_covers_dataset_once() {
+        let plans = batch_indices(100, 10, Plan::Shuffled { seed: 3 });
+        assert_eq!(plans.len(), 10);
+        let mut all: Vec<usize> = plans.into_iter().flatten().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shuffled_drops_partial() {
+        let plans = batch_indices(105, 10, Plan::Shuffled { seed: 3 });
+        assert_eq!(plans.len(), 10);
+        assert_eq!(n_batches(105, 10, Plan::Shuffled { seed: 3 }), 10);
+    }
+
+    #[test]
+    fn sequential_pads_partial() {
+        let plans = batch_indices(25, 10, Plan::Sequential);
+        assert_eq!(plans.len(), 3);
+        assert_eq!(plans[2], vec![20, 21, 22, 23, 24]);
+    }
+
+    #[test]
+    fn different_seeds_different_order() {
+        let a = batch_indices(50, 5, Plan::Shuffled { seed: 1 });
+        let b = batch_indices(50, 5, Plan::Shuffled { seed: 2 });
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn gather_batch_pads_and_counts() {
+        let ds = synth_mnist(30, 1);
+        let b = gather_batch(&ds, &[28, 29], 8, 0);
+        assert_eq!(b.n_valid, 2);
+        assert_eq!(b.x.len(), 8 * 784);
+        assert_eq!(b.y.len(), 8 * 10);
+        // padding repeats the last row
+        assert_eq!(&b.x[784..2 * 784], &b.x[2 * 784..3 * 784]);
+    }
+
+    #[test]
+    fn prefetcher_yields_all_batches() {
+        let ds = synth_mnist(64, 2);
+        let mut pf = Prefetcher::spawn(&ds, 16, Plan::Shuffled { seed: 9 }, 2);
+        assert_eq!(pf.n_batches, 4);
+        let mut count = 0;
+        while let Some(b) = pf.next() {
+            assert_eq!(b.n_valid, 16);
+            count += 1;
+        }
+        assert_eq!(count, 4);
+    }
+
+    #[test]
+    fn prefetcher_early_drop_does_not_hang() {
+        let ds = synth_mnist(256, 3);
+        let mut pf = Prefetcher::spawn(&ds, 8, Plan::Sequential, 1);
+        let _ = pf.next();
+        drop(pf); // must not deadlock on the blocked producer
+    }
+}

@@ -1,0 +1,502 @@
+//! Input preprocessing: global contrast normalization + ZCA whitening
+//! (the paper's CIFAR-10 / SVHN pipeline, Sec. 3.2) and per-feature
+//! standardization (MNIST).
+//!
+//! ZCA fits on the training split only and is then applied to val/test with
+//! the same statistics — fitting on test would leak. The whitening matrix
+//! for D = 3072 costs one O(D^3) eigendecomposition (see `linalg`); fits
+//! are cached to disk keyed by dataset name + size.
+
+pub mod linalg;
+
+use std::path::Path;
+
+use crate::data::Dataset;
+use linalg::sym_eig;
+
+/// Global contrast normalization, in place, per image:
+/// x <- s * (x - mean(x)) / max(eps, ||x - mean(x)||_2 / sqrt(dim)).
+pub fn gcn(ds: &mut Dataset, scale: f32, eps: f32) {
+    let dim = ds.dim;
+    for row in ds.x.chunks_mut(dim) {
+        let mean = row.iter().sum::<f32>() / dim as f32;
+        let mut ss = 0.0f32;
+        for v in row.iter_mut() {
+            *v -= mean;
+            ss += *v * *v;
+        }
+        let norm = (ss / dim as f32).sqrt().max(eps);
+        for v in row.iter_mut() {
+            *v = scale * *v / norm;
+        }
+    }
+}
+
+/// Per-feature standardization fit on a training set.
+pub struct Standardizer {
+    pub mean: Vec<f32>,
+    pub std: Vec<f32>,
+}
+
+impl Standardizer {
+    pub fn fit(ds: &Dataset) -> Self {
+        let d = ds.dim;
+        let n = ds.len().max(1);
+        let mut mean = vec![0f64; d];
+        for row in ds.x.chunks(d) {
+            for (m, &v) in mean.iter_mut().zip(row) {
+                *m += v as f64;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= n as f64;
+        }
+        let mut var = vec![0f64; d];
+        for row in ds.x.chunks(d) {
+            for ((s, &v), m) in var.iter_mut().zip(row).zip(&mean) {
+                let c = v as f64 - m;
+                *s += c * c;
+            }
+        }
+        let std = var
+            .iter()
+            .map(|&s| ((s / n as f64).sqrt().max(1e-6)) as f32)
+            .collect();
+        Self { mean: mean.iter().map(|&m| m as f32).collect(), std }
+    }
+
+    pub fn apply(&self, ds: &mut Dataset) {
+        let d = ds.dim;
+        for row in ds.x.chunks_mut(d) {
+            for ((v, m), s) in row.iter_mut().zip(&self.mean).zip(&self.std) {
+                *v = (*v - m) / s;
+            }
+        }
+    }
+}
+
+/// ZCA whitening: W = U diag((lambda + eps)^-1/2) U^T, held in the
+/// factored form  W = s0*I + U diag(D) U^T  with U the top-r sample
+/// eigenvectors and s0 = 1/sqrt(eps).
+///
+/// When the fit uses n < d samples (always true at CIFAR scale here), the
+/// sample covariance has rank <= n-1; eigenpairs come EXACTLY from the
+/// n x n Gram matrix (O(n^3) instead of O(d^3) — the d = 3072
+/// eigendecomposition would cost minutes, the n = 2000 Gram seconds), and
+/// every null-space direction is whitened by the constant 1/sqrt(eps).
+/// Application is two thin GEMVs per row (2*d*r) instead of a d^2 GEMV.
+pub struct Zca {
+    pub mean: Vec<f32>,
+    /// d x r row-major eigenbasis.
+    u: Vec<f32>,
+    /// r entries: 1/sqrt(lambda_j + eps) - s0.
+    diag: Vec<f32>,
+    s0: f32,
+    pub d: usize,
+    pub r: usize,
+}
+
+impl Zca {
+    /// Fit on (a subsample of) the training set. `max_samples` bounds the
+    /// Gram-matrix cost; 0 = use all rows.
+    pub fn fit(ds: &Dataset, eps: f64, max_samples: usize) -> Result<Self, String> {
+        let d = ds.dim;
+        let n_all = ds.len();
+        let n = if max_samples > 0 { n_all.min(max_samples) } else { n_all };
+        if n < 2 {
+            return Err("zca: need at least 2 samples".into());
+        }
+        let threads = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(4);
+        // mean
+        let mut mean = vec![0f64; d];
+        for i in 0..n {
+            for (m, &v) in mean.iter_mut().zip(ds.row(i)) {
+                *m += v as f64;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= n as f64;
+        }
+        // centered data, f64, row-major n x d
+        let mut xc = vec![0f64; n * d];
+        for i in 0..n {
+            for (j, &v) in ds.row(i).iter().enumerate() {
+                xc[i * d + j] = v as f64 - mean[j];
+            }
+        }
+        // Gram matrix G = Xc Xc^T / (n-1), threaded over row blocks
+        let mut g = vec![0f64; n * n];
+        let rows_per = n.div_ceil(threads).max(1);
+        std::thread::scope(|s| {
+            for (t, gchunk) in g.chunks_mut(rows_per * n).enumerate() {
+                let lo = t * rows_per;
+                let xc = &xc;
+                s.spawn(move || {
+                    for (ri, grow) in gchunk.chunks_mut(n).enumerate() {
+                        let i = lo + ri;
+                        let xi = &xc[i * d..(i + 1) * d];
+                        for (j, gv) in grow.iter_mut().enumerate().skip(i) {
+                            let xj = &xc[j * d..(j + 1) * d];
+                            let mut acc = 0.0;
+                            for (a, b) in xi.iter().zip(xj) {
+                                acc += a * b;
+                            }
+                            *gv = acc / (n - 1) as f64;
+                        }
+                    }
+                });
+            }
+        });
+        for i in 0..n {
+            for j in 0..i {
+                g[i * n + j] = g[j * n + i];
+            }
+        }
+        let eig = sym_eig(&g, n)?;
+        // keep eigenvalues above a floor; they are ascending -> take tail
+        let tol = 1e-10 * eig.values[n - 1].max(1e-30);
+        let kept: Vec<usize> =
+            (0..n).rev().filter(|&j| eig.values[j] > tol).collect();
+        let r = kept.len();
+        let s0 = (1.0 / eps.sqrt()) as f32;
+        // U[:, j] = Xc^T v_j / sqrt((n-1) * lambda_j)  (exact unit vectors)
+        let mut u = vec![0f32; d * r];
+        let mut diag = vec![0f32; r];
+        let cols_per = r.div_ceil(threads).max(1);
+        std::thread::scope(|s| {
+            for tb in 0..threads {
+                let lo = tb * cols_per;
+                let hi = ((tb + 1) * cols_per).min(r);
+                if lo >= hi {
+                    break;
+                }
+                let kept = &kept;
+                let eigv = &eig;
+                let xc = &xc;
+                // each worker fills its own column range via raw pointer
+                // arithmetic avoided: use interior chunks through unsafe-free
+                // trick — write into a local then merge
+                let handle = s.spawn(move || {
+                    let mut local = vec![0f32; d * (hi - lo)];
+                    for (cl, &jj) in kept[lo..hi].iter().enumerate() {
+                        let lam = eigv.values[jj];
+                        let scale = 1.0 / ((n - 1) as f64 * lam).sqrt();
+                        for i in 0..n {
+                            let vij = eigv.vectors[i * n + jj];
+                            if vij == 0.0 {
+                                continue;
+                            }
+                            let f = vij * scale;
+                            let xrow = &xc[i * d..(i + 1) * d];
+                            let lcol = &mut local[cl * d..(cl + 1) * d];
+                            for (lv, &xv) in lcol.iter_mut().zip(xrow) {
+                                *lv += (f * xv) as f32;
+                            }
+                        }
+                    }
+                    (lo, hi, local)
+                });
+                let (lo, hi, local) = handle.join().unwrap();
+                for (cl, col) in (lo..hi).enumerate() {
+                    for i in 0..d {
+                        u[i * r + col] = local[cl * d + i];
+                    }
+                }
+            }
+        });
+        for (out, &jj) in diag.iter_mut().zip(&kept) {
+            *out = (1.0 / (eig.values[jj] + eps).sqrt()) as f32 - s0;
+        }
+        Ok(Self { mean: mean.iter().map(|&m| m as f32).collect(), u, diag, s0, d, r })
+    }
+
+    /// The whitening matrix row `i` (materialized on demand; tests only).
+    pub fn w_row(&self, i: usize) -> Vec<f32> {
+        let mut row = vec![0f32; self.d];
+        row[i] = self.s0;
+        for j in 0..self.r {
+            let f = self.u[i * self.r + j] * self.diag[j];
+            if f == 0.0 {
+                continue;
+            }
+            for (o, chunk) in row.iter_mut().zip(0..self.d) {
+                *o += f * self.u[chunk * self.r + j];
+            }
+        }
+        row
+    }
+
+    /// Whiten a dataset in place: y = s0*(x-m) + U (D * (U^T (x-m))).
+    pub fn apply(&self, ds: &mut Dataset) {
+        assert_eq!(ds.dim, self.d);
+        let d = self.d;
+        let r = self.r;
+        let n = ds.len();
+        let threads = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(4);
+        let rows_per = n.div_ceil(threads).max(1);
+        let u = &self.u;
+        let diag = &self.diag;
+        let mean = &self.mean;
+        let s0 = self.s0;
+        std::thread::scope(|s| {
+            for chunk in ds.x.chunks_mut(rows_per * d) {
+                s.spawn(move || {
+                    let mut cen = vec![0f32; d];
+                    let mut t = vec![0f32; r];
+                    for row in chunk.chunks_mut(d) {
+                        for ((c, &v), m) in cen.iter_mut().zip(row.iter()).zip(mean) {
+                            *c = v - m;
+                        }
+                        // t = D * (U^T cen)
+                        t.iter_mut().for_each(|v| *v = 0.0);
+                        for (k, &ck) in cen.iter().enumerate() {
+                            if ck == 0.0 {
+                                continue;
+                            }
+                            let urow = &u[k * r..(k + 1) * r];
+                            for (tv, &uv) in t.iter_mut().zip(urow) {
+                                *tv += ck * uv;
+                            }
+                        }
+                        for (tv, &dv) in t.iter_mut().zip(diag) {
+                            *tv *= dv;
+                        }
+                        // row = s0 * cen + U t
+                        for (i, out) in row.iter_mut().enumerate() {
+                            let urow = &u[i * r..(i + 1) * r];
+                            let mut acc = s0 * cen[i];
+                            for (&uv, &tv) in urow.iter().zip(t.iter()) {
+                                acc += uv * tv;
+                            }
+                            *out = acc;
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    /// Cache serialization:
+    /// [d u64][r u64][s0 f32][mean d f32][diag r f32][u d*r f32], LE.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        use std::io::Write;
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(&(self.d as u64).to_le_bytes())?;
+        f.write_all(&(self.r as u64).to_le_bytes())?;
+        f.write_all(&self.s0.to_le_bytes())?;
+        for v in self.mean.iter().chain(self.diag.iter()).chain(self.u.iter()) {
+            f.write_all(&v.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> std::io::Result<Self> {
+        use std::io::Read;
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut b8 = [0u8; 8];
+        f.read_exact(&mut b8)?;
+        let d = u64::from_le_bytes(b8) as usize;
+        f.read_exact(&mut b8)?;
+        let r = u64::from_le_bytes(b8) as usize;
+        let mut b4 = [0u8; 4];
+        f.read_exact(&mut b4)?;
+        let s0 = f32::from_le_bytes(b4);
+        let mut buf = vec![0u8; 4 * (d + r + d * r)];
+        f.read_exact(&mut buf)?;
+        let vals: Vec<f32> = buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Self {
+            mean: vals[..d].to_vec(),
+            diag: vals[d..d + r].to_vec(),
+            u: vals[d + r..].to_vec(),
+            s0,
+            d,
+            r,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_ds(n: usize, d: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let mut ds = Dataset::new("t", (1, d, 1), 2);
+        // correlated features so whitening has something to do
+        for i in 0..n {
+            let base = rng.normal();
+            let row: Vec<f32> = (0..d)
+                .map(|j| base * (1.0 + j as f32 * 0.1) + 0.3 * rng.normal() + j as f32)
+                .collect();
+            ds.push(&row, (i % 2) as u8);
+        }
+        ds
+    }
+
+    #[test]
+    fn gcn_zero_mean_unit_contrast() {
+        let mut ds = random_ds(20, 16, 1);
+        gcn(&mut ds, 1.0, 1e-8);
+        for i in 0..ds.len() {
+            let r = ds.row(i);
+            let mean: f32 = r.iter().sum::<f32>() / 16.0;
+            let rms: f32 = (r.iter().map(|v| v * v).sum::<f32>() / 16.0).sqrt();
+            assert!(mean.abs() < 1e-4, "mean={mean}");
+            assert!((rms - 1.0).abs() < 1e-3, "rms={rms}");
+        }
+    }
+
+    #[test]
+    fn gcn_constant_image_stays_finite() {
+        let mut ds = Dataset::new("c", (1, 4, 1), 1);
+        ds.push(&[0.5; 4], 0);
+        gcn(&mut ds, 1.0, 1e-8);
+        assert!(ds.x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn standardizer_zero_mean_unit_var() {
+        let mut ds = random_ds(500, 8, 2);
+        let st = Standardizer::fit(&ds);
+        st.apply(&mut ds);
+        let d = ds.dim;
+        for j in 0..d {
+            let col: Vec<f32> = (0..ds.len()).map(|i| ds.row(i)[j]).collect();
+            let mean: f32 = col.iter().sum::<f32>() / col.len() as f32;
+            let var: f32 =
+                col.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / col.len() as f32;
+            assert!(mean.abs() < 1e-3);
+            assert!((var - 1.0).abs() < 0.02, "var={var}");
+        }
+    }
+
+    #[test]
+    fn zca_whitens_covariance() {
+        let mut ds = random_ds(800, 6, 3);
+        let zca = Zca::fit(&ds, 1e-6, 0).unwrap();
+        zca.apply(&mut ds);
+        let d = ds.dim;
+        let n = ds.len();
+        // empirical covariance ~ identity
+        let mut mean = vec![0f64; d];
+        for i in 0..n {
+            for (m, &v) in mean.iter_mut().zip(ds.row(i)) {
+                *m += v as f64 / n as f64;
+            }
+        }
+        for a in 0..d {
+            for b in 0..d {
+                let mut c = 0.0;
+                for i in 0..n {
+                    let r = ds.row(i);
+                    c += (r[a] as f64 - mean[a]) * (r[b] as f64 - mean[b]);
+                }
+                c /= (n - 1) as f64;
+                let want = if a == b { 1.0 } else { 0.0 };
+                assert!((c - want).abs() < 0.05, "cov[{a}{b}]={c}");
+            }
+        }
+    }
+
+    #[test]
+    fn zca_is_symmetric_transform() {
+        let ds = random_ds(200, 5, 4);
+        let zca = Zca::fit(&ds, 1e-5, 0).unwrap();
+        let w: Vec<Vec<f32>> = (0..5).map(|i| zca.w_row(i)).collect();
+        for i in 0..5 {
+            for j in 0..5 {
+                let diff = w[i][j] - w[j][i];
+                assert!(diff.abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn zca_save_load_roundtrip() {
+        let mut ds = random_ds(100, 4, 5);
+        let zca = Zca::fit(&ds, 1e-5, 0).unwrap();
+        let path = std::env::temp_dir().join(format!("zca_test_{}.bin", std::process::id()));
+        zca.save(&path).unwrap();
+        let loaded = Zca::load(&path).unwrap();
+        assert_eq!(zca.d, loaded.d);
+        assert_eq!(zca.r, loaded.r);
+        assert_eq!(zca.mean, loaded.mean);
+        let mut ds2 = ds.clone();
+        zca.apply(&mut ds);
+        loaded.apply(&mut ds2);
+        assert_eq!(ds.x, ds2.x);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn zca_subsample_close_to_full() {
+        let ds = random_ds(1000, 4, 6);
+        let full = Zca::fit(&ds, 1e-4, 0).unwrap();
+        let sub = Zca::fit(&ds, 1e-4, 500).unwrap();
+        let mut a = ds.clone();
+        let mut b = ds.clone();
+        full.apply(&mut a);
+        sub.apply(&mut b);
+        let mad: f32 = a.x.iter().zip(&b.x).map(|(x, y)| (x - y).abs()).sum::<f32>()
+            / a.x.len() as f32;
+        assert!(mad < 0.3, "subsampled fit too far from full: {mad}");
+    }
+
+    #[test]
+    fn zca_tall_data_uses_full_rank_and_whitens() {
+        // n > d: rank = d, the identity+lowrank form must still whiten.
+        let mut ds = random_ds(400, 3, 7);
+        let zca = Zca::fit(&ds, 1e-6, 0).unwrap();
+        assert_eq!(zca.r, 3);
+        zca.apply(&mut ds);
+        let n = ds.len();
+        for a in 0..3 {
+            for b in 0..3 {
+                let mut c = 0.0f64;
+                let ma: f64 = (0..n).map(|i| ds.row(i)[a] as f64).sum::<f64>() / n as f64;
+                let mb: f64 = (0..n).map(|i| ds.row(i)[b] as f64).sum::<f64>() / n as f64;
+                for i in 0..n {
+                    c += (ds.row(i)[a] as f64 - ma) * (ds.row(i)[b] as f64 - mb);
+                }
+                c /= (n - 1) as f64;
+                let want = if a == b { 1.0 } else { 0.0 };
+                assert!((c - want).abs() < 0.05, "cov[{a}{b}]={c}");
+            }
+        }
+    }
+
+    #[test]
+    fn zca_wide_data_exact_on_span() {
+        // n < d (the CIFAR-scale regime): components in the data span are
+        // whitened to unit variance.
+        let mut ds = random_ds(60, 100, 8);
+        let zca = Zca::fit(&ds, 1e-8, 0).unwrap();
+        assert!(zca.r < 60, "rank must be < n");
+        zca.apply(&mut ds);
+        // projections onto former principal directions have variance ~1:
+        // total variance should be close to the rank (span whitened to 1,
+        // null space contributes ~0 since data lives in the span)
+        let n = ds.len();
+        let d = ds.dim;
+        let mut mean = vec![0f64; d];
+        for i in 0..n {
+            for (m, &v) in mean.iter_mut().zip(ds.row(i)) {
+                *m += v as f64 / n as f64;
+            }
+        }
+        let mut total = 0.0f64;
+        for i in 0..n {
+            for (j, &v) in ds.row(i).iter().enumerate() {
+                let c = v as f64 - mean[j];
+                total += c * c;
+            }
+        }
+        total /= (n - 1) as f64;
+        let r = zca.r as f64;
+        assert!((total - r).abs() / r < 0.15, "total var {total} vs rank {r}");
+    }
+}

@@ -1,0 +1,117 @@
+//! Minimal property-based testing harness (the offline registry has no
+//! proptest/quickcheck).
+//!
+//! `check` runs a property over N generated cases from a seeded RNG and, on
+//! failure, reports the failing case's Debug form plus the seed that
+//! reproduces it. No shrinking — generators are kept small-biased instead
+//! (sizes are drawn log-uniformly so tiny cases appear often).
+
+use crate::util::Rng;
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Seed can be pinned via env for reproducing CI failures.
+        let seed = std::env::var("PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xB17E5);
+        Self { cases: 64, seed }
+    }
+}
+
+/// Run `prop` over `cfg.cases` values produced by `gen`.
+/// Panics with a reproducible report on the first failure.
+pub fn check_with<T: std::fmt::Debug>(
+    cfg: &Config,
+    name: &str,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(case_seed);
+        let value = gen(&mut rng);
+        if let Err(msg) = prop(&value) {
+            panic!(
+                "property '{name}' failed on case {case} (PROP_SEED={case_seed}):\n  \
+                 input: {value:?}\n  error: {msg}"
+            );
+        }
+    }
+}
+
+/// `check` with the default config.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    gen: impl FnMut(&mut Rng) -> T,
+    prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    check_with(&Config::default(), name, gen, prop);
+}
+
+/// Log-uniform size in [1, max] — biases toward small cases.
+pub fn log_size(rng: &mut Rng, max: usize) -> usize {
+    let lmax = (max as f64).ln();
+    ((rng.uniform_f64() * lmax).exp() as usize).clamp(1, max)
+}
+
+/// A vector of standard-normal f32s with log-uniform length.
+pub fn normal_vec(rng: &mut Rng, max_len: usize) -> Vec<f32> {
+    let n = log_size(rng, max_len);
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut seen = 0;
+        check(
+            "counts",
+            |r| r.below(100),
+            |_| {
+                seen += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(seen, Config::default().cases);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_reports() {
+        check("fails", |r| r.below(10), |&v| if v < 10 { Err("boom".into()) } else { Ok(()) });
+    }
+
+    #[test]
+    fn log_size_in_bounds_and_biased_small() {
+        let mut rng = Rng::new(1);
+        let mut small = 0;
+        for _ in 0..1000 {
+            let s = log_size(&mut rng, 1000);
+            assert!((1..=1000).contains(&s));
+            if s <= 31 {
+                small += 1;
+            }
+        }
+        // log-uniform: P(size <= sqrt-ish range) ~ 1/2
+        assert!(small > 300, "small sizes too rare: {small}");
+    }
+
+    #[test]
+    fn normal_vec_length_bounds() {
+        let mut rng = Rng::new(2);
+        for _ in 0..100 {
+            let v = normal_vec(&mut rng, 50);
+            assert!(!v.is_empty() && v.len() <= 50);
+        }
+    }
+}

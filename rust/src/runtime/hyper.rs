@@ -1,0 +1,168 @@
+//! The hyper vector: Rust mirror of python/compile/hyper.py.
+//!
+//! One f32[16] row carries every per-step scalar knob; the layouts MUST
+//! stay in sync (an integration test cross-checks against the manifest).
+
+/// Binarization mode during propagations (paper Sec. 2.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// real-valued weights — the "No regularizer" baseline
+    None = 0,
+    /// Eq. 1 sign binarization
+    Det = 1,
+    /// Eq. 2 stochastic binarization
+    Stoch = 2,
+}
+
+impl Mode {
+    pub fn parse(s: &str) -> Option<Mode> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" | "real" | "noreg" => Some(Mode::None),
+            "det" | "deterministic" => Some(Mode::Det),
+            "stoch" | "stochastic" => Some(Mode::Stoch),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Mode::None => "none",
+            Mode::Det => "det",
+            Mode::Stoch => "stoch",
+        }
+    }
+}
+
+/// Optimizer selector (paper Sec. 2.5, Table 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Opt {
+    Sgd = 0,
+    Nesterov = 1,
+    Adam = 2,
+}
+
+impl Opt {
+    pub fn parse(s: &str) -> Option<Opt> {
+        match s.to_ascii_lowercase().as_str() {
+            "sgd" => Some(Opt::Sgd),
+            "nesterov" | "momentum" => Some(Opt::Nesterov),
+            "adam" => Some(Opt::Adam),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Opt::Sgd => "SGD",
+            Opt::Nesterov => "Nesterov",
+            Opt::Adam => "ADAM",
+        }
+    }
+}
+
+pub const HYPER_LEN: usize = 16;
+
+/// Per-step hyperparameters; `to_vec` produces the HLO input row.
+#[derive(Clone, Debug)]
+pub struct Hyper {
+    pub lr: f32,
+    pub mode: Mode,
+    pub opt: Opt,
+    pub momentum: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub dropout: f32,
+    pub bn_momentum: f32,
+    pub lr_scale: bool,
+    pub step: u32,
+    pub seed: u32,
+    pub in_dropout: f32,
+}
+
+impl Default for Hyper {
+    fn default() -> Self {
+        Self {
+            lr: 0.01,
+            mode: Mode::Det,
+            opt: Opt::Sgd,
+            momentum: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            dropout: 0.0,
+            bn_momentum: 0.9,
+            lr_scale: true,
+            step: 1,
+            seed: 0,
+            in_dropout: 0.0,
+        }
+    }
+}
+
+impl Hyper {
+    pub fn to_vec(&self) -> Vec<f32> {
+        let mut v = vec![0f32; HYPER_LEN];
+        v[0] = self.lr;
+        v[1] = self.mode as i32 as f32;
+        v[2] = self.opt as i32 as f32;
+        v[3] = self.momentum;
+        v[4] = self.beta2;
+        v[5] = self.eps;
+        v[6] = self.dropout;
+        v[7] = self.bn_momentum;
+        v[8] = if self.lr_scale { 1.0 } else { 0.0 };
+        v[9] = self.step as f32;
+        v[10] = self.seed as f32;
+        v[11] = self.in_dropout;
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_matches_python_indices() {
+        let h = Hyper {
+            lr: 0.5,
+            mode: Mode::Stoch,
+            opt: Opt::Adam,
+            momentum: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            dropout: 0.25,
+            bn_momentum: 0.95,
+            lr_scale: true,
+            step: 42,
+            seed: 1234,
+            in_dropout: 0.2,
+        };
+        let v = h.to_vec();
+        assert_eq!(v.len(), HYPER_LEN);
+        assert_eq!(v[0], 0.5); // lr
+        assert_eq!(v[1], 2.0); // mode
+        assert_eq!(v[2], 2.0); // opt
+        assert_eq!(v[8], 1.0); // lr_scale
+        assert_eq!(v[9], 42.0); // step
+        assert_eq!(v[10], 1234.0); // seed
+        assert_eq!(v[11], 0.2); // in_dropout
+    }
+
+    #[test]
+    fn parse_labels() {
+        assert_eq!(Mode::parse("Det"), Some(Mode::Det));
+        assert_eq!(Mode::parse("stochastic"), Some(Mode::Stoch));
+        assert_eq!(Mode::parse("none"), Some(Mode::None));
+        assert_eq!(Opt::parse("ADAM"), Some(Opt::Adam));
+        assert_eq!(Opt::parse("bogus"), None);
+    }
+
+    #[test]
+    fn seeds_survive_f32_roundtrip() {
+        // f32 is exact through 2^24; the coordinator draws seeds below that.
+        for seed in [0u32, 1, 1 << 20, (1 << 24) - 1] {
+            let h = Hyper { seed, ..Default::default() };
+            assert_eq!(h.to_vec()[10] as u32, seed);
+        }
+    }
+}

@@ -1,0 +1,216 @@
+//! Parse `artifacts/manifest.json` — the contract between the Python
+//! compile path (python/compile/aot.py) and this runtime.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "weight" | "affine" | "bn_stat" (see python/compile/models.py).
+    pub kind: String,
+    /// Glorot LR-scaling coefficient (0 for non-weights).
+    pub glorot: f64,
+}
+
+impl ParamInfo {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub batch: usize,
+    pub classes: usize,
+    pub input_shape: Vec<usize>,
+    pub params: Vec<ParamInfo>,
+    pub n_scalars: usize,
+    pub use_pallas: bool,
+    pub init_path: PathBuf,
+    pub train_path: PathBuf,
+    pub eval_path: PathBuf,
+}
+
+impl ModelInfo {
+    /// flattened feature dim of one example.
+    pub fn input_dim(&self) -> usize {
+        self.input_shape[1..].iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub scale: usize,
+    pub hyper_len: usize,
+    pub models: Vec<ModelInfo>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts` first)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let hyper_len = j
+            .get("hyper")
+            .and_then(|h| h.get("len"))
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow!("manifest: missing hyper.len"))?;
+        let scale = j.get("scale").and_then(|v| v.as_usize()).unwrap_or(1);
+        let models_obj = j
+            .get("models")
+            .and_then(|m| m.as_obj())
+            .ok_or_else(|| anyhow!("manifest: missing models"))?;
+        let mut models = vec![];
+        for (name, m) in models_obj {
+            let get_usize = |k: &str| {
+                m.get(k)
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| anyhow!("manifest: model {name} missing {k}"))
+            };
+            let params_json = m
+                .get("params")
+                .and_then(|p| p.as_arr())
+                .ok_or_else(|| anyhow!("manifest: model {name} missing params"))?;
+            let mut params = vec![];
+            for p in params_json {
+                params.push(ParamInfo {
+                    name: p
+                        .get("name")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| anyhow!("param missing name"))?
+                        .to_string(),
+                    shape: p
+                        .get("shape")
+                        .and_then(|v| v.as_arr())
+                        .ok_or_else(|| anyhow!("param missing shape"))?
+                        .iter()
+                        .map(|x| x.as_usize().unwrap_or(0))
+                        .collect(),
+                    kind: p
+                        .get("kind")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or("weight")
+                        .to_string(),
+                    glorot: p.get("glorot").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                });
+            }
+            let arts = m
+                .get("artifacts")
+                .ok_or_else(|| anyhow!("manifest: model {name} missing artifacts"))?;
+            let art = |k: &str| -> Result<PathBuf> {
+                Ok(dir.join(
+                    arts.get(k)
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| anyhow!("model {name} missing artifact {k}"))?,
+                ))
+            };
+            let input_shape: Vec<usize> = m
+                .get("input_shape")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("model {name} missing input_shape"))?
+                .iter()
+                .map(|x| x.as_usize().unwrap_or(0))
+                .collect();
+            let n_tensors = get_usize("n_param_tensors")?;
+            if n_tensors != params.len() {
+                bail!("model {name}: n_param_tensors {n_tensors} != params {}", params.len());
+            }
+            models.push(ModelInfo {
+                name: name.clone(),
+                batch: get_usize("batch")?,
+                classes: get_usize("classes")?,
+                input_shape,
+                params,
+                n_scalars: get_usize("n_scalars")?,
+                use_pallas: m.get("use_pallas").and_then(|v| v.as_bool()).unwrap_or(true),
+                init_path: art("init")?,
+                train_path: art("train")?,
+                eval_path: art("eval")?,
+            });
+        }
+        Ok(Manifest { scale, hyper_len, models, dir: dir.to_path_buf() })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| {
+                let names: Vec<&str> = self.models.iter().map(|m| m.name.as_str()).collect();
+                anyhow!("model '{name}' not in manifest (have: {})", names.join(", "))
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1, "scale": 1,
+      "hyper": {"len": 16, "lr": 0},
+      "models": {
+        "m": {
+          "batch": 4, "classes": 10, "input_shape": [4, 8],
+          "n_param_tensors": 2, "n_scalars": 90, "use_pallas": true,
+          "params": [
+            {"name": "l0.W", "shape": [8, 10], "kind": "weight", "glorot": 0.5},
+            {"name": "out.b", "shape": [10], "kind": "affine", "glorot": 0.0}
+          ],
+          "artifacts": {"init": "m_init.hlo.txt", "train": "m_train.hlo.txt",
+                        "eval": "m_eval.hlo.txt"}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.hyper_len, 16);
+        let model = m.model("m").unwrap();
+        assert_eq!(model.batch, 4);
+        assert_eq!(model.params.len(), 2);
+        assert_eq!(model.params[0].numel(), 80);
+        assert_eq!(model.params[0].kind, "weight");
+        assert_eq!(model.input_dim(), 8);
+        assert!(model.train_path.ends_with("m_train.hlo.txt"));
+    }
+
+    #[test]
+    fn unknown_model_lists_available() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        let err = format!("{}", m.model("nope").unwrap_err());
+        assert!(err.contains("have: m"), "{err}");
+    }
+
+    #[test]
+    fn tensor_count_mismatch_rejected() {
+        let bad = SAMPLE.replace("\"n_param_tensors\": 2", "\"n_param_tensors\": 3");
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn parses_generated_manifest_if_present() {
+        let dir = Path::new("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(dir).unwrap();
+            assert!(m.model("mlp").is_ok());
+            let mlp = m.model("mlp").unwrap();
+            // 3 hidden x (W + 4 bn) + out W + b
+            assert_eq!(mlp.params.len(), 17);
+            assert!(mlp.params.iter().any(|p| p.kind == "bn_stat"));
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Runtime layer: PJRT client wrapper, artifact manifest, hyper vector.
+//!
+//! Loads the HLO-text artifacts produced by `make artifacts`
+//! (python/compile/aot.py) and executes them from the Rust hot path —
+//! Python never runs at request time. Pattern adapted from
+//! /opt/xla-example/load_hlo/.
+
+pub mod hyper;
+pub mod manifest;
+pub mod session;
+
+pub use hyper::{Hyper, Mode, Opt, HYPER_LEN};
+pub use manifest::{Manifest, ModelInfo, ParamInfo};
+pub use session::{Model, Runtime, StepMetrics, TrainState};

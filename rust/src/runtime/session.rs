@@ -1,0 +1,190 @@
+//! PJRT session: load HLO-text artifacts, compile once, execute many.
+//!
+//! The Python side lowered `init` / `train_step` / `eval_step` per model
+//! (python/compile/aot.py); this module owns the PJRT client and the
+//! training state, feeding params/slots back step after step. CPU PJRT's
+//! "device" memory is host memory, so the literal round-trip per step is a
+//! memcpy — measured in EXPERIMENTS.md par.Perf.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::hyper::Hyper;
+use super::manifest::ModelInfo;
+
+/// Shared PJRT client (CPU).
+pub struct Runtime {
+    pub client: PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime { client: PjRtClient::cpu().context("create PJRT CPU client")? })
+    }
+
+    fn compile(&self, path: &Path) -> Result<PjRtLoadedExecutable> {
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        self.client
+            .compile(&XlaComputation::from_proto(&proto))
+            .with_context(|| format!("compile {}", path.display()))
+    }
+
+    /// Load and compile a model's three artifacts.
+    pub fn load_model(&self, info: &ModelInfo) -> Result<Model> {
+        Ok(Model {
+            info: info.clone(),
+            init: self.compile(&info.init_path)?,
+            train: self.compile(&info.train_path)?,
+            eval: self.compile(&info.eval_path)?,
+        })
+    }
+}
+
+/// A compiled model: init/train/eval executables + metadata.
+pub struct Model {
+    pub info: ModelInfo,
+    init: PjRtLoadedExecutable,
+    train: PjRtLoadedExecutable,
+    eval: PjRtLoadedExecutable,
+}
+
+/// Training state: flat param and optimizer-slot literals in spec order.
+pub struct TrainState {
+    pub params: Vec<Literal>,
+    pub m: Vec<Literal>,
+    pub v: Vec<Literal>,
+}
+
+impl TrainState {
+    /// Deep-copy (literal data is host memory under CPU PJRT).
+    pub fn snapshot(&self) -> Result<TrainState> {
+        let copy = |ls: &Vec<Literal>| -> Result<Vec<Literal>> {
+            ls.iter()
+                .map(|l| {
+                    let v = l.to_vec::<f32>()?;
+                    let shape = l.array_shape()?;
+                    let dims: Vec<i64> = shape.dims().to_vec();
+                    Ok(Literal::vec1(&v).reshape(&dims)?)
+                })
+                .collect()
+        };
+        Ok(TrainState { params: copy(&self.params)?, m: copy(&self.m)?, v: copy(&self.v)? })
+    }
+
+    /// Fetch one param tensor to host (histograms, feature dumps, packing).
+    pub fn param_vec(&self, idx: usize) -> Result<Vec<f32>> {
+        Ok(self.params[idx].to_vec::<f32>()?)
+    }
+}
+
+/// Scalar metrics returned by one train step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepMetrics {
+    pub loss: f32,
+    pub n_err: f32,
+}
+
+impl Model {
+    fn n(&self) -> usize {
+        self.info.params.len()
+    }
+
+    fn literal_x(&self, x: &[f32]) -> Result<Literal> {
+        let dims: Vec<i64> = self.info.input_shape.iter().map(|&d| d as i64).collect();
+        let want: usize = self.info.input_shape.iter().product();
+        if x.len() != want {
+            bail!("x has {} elements, model expects {}", x.len(), want);
+        }
+        Ok(Literal::vec1(x).reshape(&dims)?)
+    }
+
+    fn literal_y(&self, y: &[f32]) -> Result<Literal> {
+        let b = self.info.batch as i64;
+        let c = self.info.classes as i64;
+        if y.len() != (b * c) as usize {
+            bail!("y has {} elements, expected {}", y.len(), b * c);
+        }
+        Ok(Literal::vec1(y).reshape(&[b, c])?)
+    }
+
+    /// Run the init artifact -> fresh TrainState.
+    pub fn init_state(&self, hyper: &Hyper) -> Result<TrainState> {
+        let hv = Literal::vec1(&hyper.to_vec());
+        let out = self.init.execute::<Literal>(&[hv])?[0][0].to_literal_sync()?;
+        let mut parts = out.to_tuple()?;
+        let n = self.n();
+        if parts.len() != 3 * n {
+            bail!("init returned {} tensors, expected {}", parts.len(), 3 * n);
+        }
+        let v = parts.split_off(2 * n);
+        let m = parts.split_off(n);
+        Ok(TrainState { params: parts, m, v })
+    }
+
+    /// One Algorithm-1 step: binarized fwd/bwd + clipped real-weight update.
+    pub fn train_step(
+        &self,
+        state: &mut TrainState,
+        x: &[f32],
+        y: &[f32],
+        hyper: &Hyper,
+    ) -> Result<StepMetrics> {
+        let n = self.n();
+        let xl = self.literal_x(x)?;
+        let yl = self.literal_y(y)?;
+        let hv = Literal::vec1(&hyper.to_vec());
+        let mut args: Vec<&Literal> = Vec::with_capacity(3 * n + 3);
+        args.extend(state.params.iter());
+        args.extend(state.m.iter());
+        args.extend(state.v.iter());
+        args.push(&xl);
+        args.push(&yl);
+        args.push(&hv);
+        let out = self.train.execute::<&Literal>(&args)?[0][0].to_literal_sync()?;
+        let mut parts = out.to_tuple()?;
+        if parts.len() != 3 * n + 2 {
+            bail!("train returned {} tensors, expected {}", parts.len(), 3 * n + 2);
+        }
+        let n_err = parts.pop().unwrap().to_vec::<f32>()?[0];
+        let loss = parts.pop().unwrap().to_vec::<f32>()?[0];
+        let v = parts.split_off(2 * n);
+        let m = parts.split_off(n);
+        state.params = parts;
+        state.m = m;
+        state.v = v;
+        Ok(StepMetrics { loss, n_err })
+    }
+
+    /// Evaluate one (padded) batch -> per-example (loss, err) vectors.
+    pub fn eval_batch(
+        &self,
+        state: &TrainState,
+        x: &[f32],
+        y: &[f32],
+        hyper: &Hyper,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let xl = self.literal_x(x)?;
+        let yl = self.literal_y(y)?;
+        let hv = Literal::vec1(&hyper.to_vec());
+        let mut args: Vec<&Literal> = Vec::with_capacity(self.n() + 3);
+        args.extend(state.params.iter());
+        args.push(&xl);
+        args.push(&yl);
+        args.push(&hv);
+        let out = self.eval.execute::<&Literal>(&args)?[0][0].to_literal_sync()?;
+        let (lossv, errv) = out.to_tuple2()?;
+        Ok((lossv.to_vec::<f32>()?, errv.to_vec::<f32>()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Integration tests that need built artifacts live in
+    // rust/tests/integration_runtime.rs; unit-testable pieces are covered
+    // via manifest/hyper tests.
+}

@@ -1,0 +1,244 @@
+//! Metrics & visualization substrate: histograms (Figure 2), first-layer
+//! feature tiles as PGM images (Figure 1), CSV curve files (Figure 3) and
+//! mean/std aggregation (Table 2's "± " entries).
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+/// Fixed-range histogram.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f32,
+    pub hi: f32,
+    pub counts: Vec<u64>,
+    pub n_under: u64,
+    pub n_over: u64,
+}
+
+impl Histogram {
+    pub fn build(values: &[f32], lo: f32, hi: f32, bins: usize) -> Histogram {
+        assert!(bins > 0 && hi > lo);
+        let mut h = Histogram { lo, hi, counts: vec![0; bins], n_under: 0, n_over: 0 };
+        let scale = bins as f32 / (hi - lo);
+        for &v in values {
+            if v < lo {
+                h.n_under += 1;
+            } else if v >= hi {
+                // count hi itself into the last bin, true overflow beyond
+                if v == hi {
+                    h.counts[bins - 1] += 1;
+                } else {
+                    h.n_over += 1;
+                }
+            } else {
+                let b = ((v - lo) * scale) as usize;
+                h.counts[b.min(bins - 1)] += 1;
+            }
+        }
+        h
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum::<u64>() + self.n_under + self.n_over
+    }
+
+    pub fn bin_center(&self, i: usize) -> f32 {
+        let w = (self.hi - self.lo) / self.counts.len() as f32;
+        self.lo + (i as f32 + 0.5) * w
+    }
+
+    /// Fraction of mass in bins whose center's |x| >= `thresh` — used to
+    /// quantify Figure 2's "weights pile up near +/-1" observation.
+    pub fn mass_beyond(&self, thresh: f32) -> f64 {
+        let total = self.total().max(1) as f64;
+        let mut m = self.n_under + self.n_over;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if self.bin_center(i).abs() >= thresh {
+                m += c;
+            }
+        }
+        m as f64 / total
+    }
+
+    /// CSV: bin_center,count per line.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("bin_center,count\n");
+        for (i, &c) in self.counts.iter().enumerate() {
+            let _ = writeln!(s, "{:.6},{}", self.bin_center(i), c);
+        }
+        s
+    }
+
+    /// Console rendering (the paper's Figure 2 at terminal resolution).
+    pub fn to_ascii(&self, width: usize) -> String {
+        let max = self.counts.iter().copied().max().unwrap_or(1).max(1);
+        let mut s = String::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            let bar = (c as usize * width) / max as usize;
+            let _ = writeln!(s, "{:>7.3} |{}{}", self.bin_center(i), "#".repeat(bar), "");
+        }
+        s
+    }
+}
+
+/// mean and (population) std of a sample — Table 2 aggregates.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    (mean, var.sqrt())
+}
+
+/// Write a PGM (P5) grayscale image.
+pub fn write_pgm(path: &Path, pixels: &[u8], w: usize, h: usize) -> std::io::Result<()> {
+    assert_eq!(pixels.len(), w * h);
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    write!(f, "P5\n{w} {h}\n255\n")?;
+    f.write_all(pixels)?;
+    Ok(())
+}
+
+/// Tile the first `n_tiles` columns of a (in_dim x units) weight matrix as
+/// (side x side) feature images in a grid — Figure 1's visualization.
+/// Returns (pixels, width, height).
+pub fn feature_tiles(
+    w: &[f32],
+    in_dim: usize,
+    units: usize,
+    side: usize,
+    n_tiles: usize,
+    cols: usize,
+) -> (Vec<u8>, usize, usize) {
+    assert_eq!(side * side, in_dim, "input is not square-image shaped");
+    assert_eq!(w.len(), in_dim * units);
+    let n = n_tiles.min(units);
+    let rows = n.div_ceil(cols);
+    let pad = 2;
+    let width = cols * (side + pad) + pad;
+    let height = rows * (side + pad) + pad;
+    let mut img = vec![32u8; width * height]; // dark gray background
+    for t in 0..n {
+        // per-tile contrast normalization, like the paper's feature plots
+        let col: Vec<f32> = (0..in_dim).map(|i| w[i * units + t]).collect();
+        let maxabs = col.iter().fold(0f32, |a, &b| a.max(b.abs())).max(1e-12);
+        let r0 = pad + (t / cols) * (side + pad);
+        let c0 = pad + (t % cols) * (side + pad);
+        for y in 0..side {
+            for x in 0..side {
+                let v = col[y * side + x] / maxabs; // [-1, 1]
+                let px = ((v * 0.5 + 0.5) * 255.0) as u8;
+                img[(r0 + y) * width + (c0 + x)] = px;
+            }
+        }
+    }
+    (img, width, height)
+}
+
+/// Minimal CSV writer for training curves and bench tables.
+pub struct Csv {
+    out: String,
+    n_cols: usize,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Csv {
+        Csv { out: format!("{}\n", header.join(",")), n_cols: header.len() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.n_cols, "csv row arity mismatch");
+        self.out.push_str(&cells.join(","));
+        self.out.push('\n');
+    }
+
+    pub fn rowf(&mut self, cells: &[f64]) {
+        self.row(&cells.iter().map(|c| format!("{c:.6}")).collect::<Vec<_>>());
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, &self.out)
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_bins_and_total() {
+        let h = Histogram::build(&[-1.0, -0.5, 0.0, 0.5, 0.999, 1.0, 2.0], -1.0, 1.0, 4);
+        // bins: [-1,-.5) [-0.5,0) [0,.5) [.5,1]; 1.0 folds into the last
+        assert_eq!(h.counts, vec![1, 1, 1, 3]);
+        assert_eq!(h.n_over, 1); // 2.0
+        assert_eq!(h.total(), 7);
+    }
+
+    #[test]
+    fn histogram_mass_beyond() {
+        let vals = vec![-0.95; 50].into_iter().chain(vec![0.0; 50]).collect::<Vec<_>>();
+        let h = Histogram::build(&vals, -1.0, 1.0, 40);
+        let frac = h.mass_beyond(0.9);
+        assert!((frac - 0.5).abs() < 0.01, "{frac}");
+    }
+
+    #[test]
+    fn histogram_csv_lines() {
+        let h = Histogram::build(&[0.0, 0.1], -1.0, 1.0, 2);
+        let csv = h.to_csv();
+        assert!(csv.starts_with("bin_center,count\n"));
+        assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    fn mean_std_known() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((m - 2.5).abs() < 1e-12);
+        assert!((s - (1.25f64).sqrt()).abs() < 1e-12);
+        assert_eq!(mean_std(&[]), (0.0, 0.0));
+    }
+
+    #[test]
+    fn feature_tiles_dimensions() {
+        let in_dim = 16; // 4x4
+        let units = 10;
+        let w = vec![0.5f32; in_dim * units];
+        let (img, wid, hei) = feature_tiles(&w, in_dim, units, 4, 6, 3);
+        assert_eq!(img.len(), wid * hei);
+        assert_eq!(wid, 3 * 6 + 2);
+        assert_eq!(hei, 2 * 6 + 2);
+    }
+
+    #[test]
+    fn csv_writer_rows() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.rowf(&[1.0, 2.0]);
+        c.row(&["x".into(), "y".into()]);
+        let s = c.as_str();
+        assert_eq!(s.lines().count(), 3);
+        assert!(s.starts_with("a,b\n"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn csv_arity_checked() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.rowf(&[1.0]);
+    }
+
+    #[test]
+    fn pgm_writes_header() {
+        let p = std::env::temp_dir().join(format!("bc_pgm_{}.pgm", std::process::id()));
+        write_pgm(&p, &[0, 128, 255, 64], 2, 2).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert!(bytes.starts_with(b"P5\n2 2\n255\n"));
+        let _ = std::fs::remove_file(&p);
+    }
+}

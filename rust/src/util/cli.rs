@@ -1,0 +1,152 @@
+//! Tiny CLI argument substrate (no clap in the offline registry).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments, with typed getters and a generated usage line.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    seen: Vec<String>,
+}
+
+impl Args {
+    pub fn parse_from<I: IntoIterator<Item = String>>(items: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminator: rest positional
+                    out.positional.extend(it.by_ref());
+                    break;
+                }
+                let (key, val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let val = match val {
+                    Some(v) => v,
+                    None => {
+                        // consume next token as the value unless it looks
+                        // like another flag — then treat as boolean.
+                        match it.peek() {
+                            Some(nxt) if !nxt.starts_with("--") => it.next().unwrap(),
+                            _ => "true".to_string(),
+                        }
+                    }
+                };
+                out.seen.push(key.clone());
+                out.flags.insert(key, val);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn parse() -> Result<Args, String> {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.flags.get(key).cloned()
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f32(&self, key: &str, default: f32) -> f32 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        match self.flags.get(key).map(|s| s.as_str()) {
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(_) => default,
+            None => default,
+        }
+    }
+
+    /// Error out on unknown flags so typos do not silently use defaults.
+    pub fn check_known(&self, known: &[&str]) -> Result<(), String> {
+        for k in &self.seen {
+            if !known.contains(&k.as_str()) {
+                return Err(format!(
+                    "unknown flag --{k}; known flags: {}",
+                    known.join(", ")
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse_from(s.iter().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_key_value_forms() {
+        let a = args(&["train", "--lr", "0.01", "--epochs=50", "--verbose"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.f32("lr", 0.0), 0.01);
+        assert_eq!(a.usize("epochs", 0), 50);
+        assert!(a.bool("verbose", false));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args(&[]);
+        assert_eq!(a.usize("missing", 7), 7);
+        assert_eq!(a.str("name", "x"), "x");
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let a = args(&["--x", "1", "--", "--not-a-flag"]);
+        assert_eq!(a.positional, vec!["--not-a-flag"]);
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = args(&["--shift=-3.5"]);
+        assert_eq!(a.f32("shift", 0.0), -3.5);
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = args(&["--good", "1", "--bad", "2"]);
+        assert!(a.check_known(&["good"]).is_err());
+        assert!(a.check_known(&["good", "bad"]).is_ok());
+    }
+}

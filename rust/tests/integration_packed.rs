@@ -1,0 +1,93 @@
+//! Integration: the packed multiplication-free engine must agree with the
+//! PJRT deterministic-BC evaluation on identical trained parameters —
+//! i.e. paper Sec. 2.6 method 1 has ONE semantics across both engines.
+//! Skipped when artifacts are absent.
+
+use binaryconnect::binary::{load_packed, pack_mlp, save_packed};
+use binaryconnect::coordinator::{mnist_opts, train};
+use binaryconnect::data::{synth::synth_mnist, SplitData};
+use binaryconnect::pipeline::{gather_batch, Plan};
+use binaryconnect::preprocess::Standardizer;
+use binaryconnect::runtime::{Hyper, Manifest, Mode, Model, Runtime};
+
+fn mlp() -> Option<Model> {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts");
+        return None;
+    }
+    let m = Manifest::load(dir).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    Some(rt.load_model(m.model("mlp").unwrap()).unwrap())
+}
+
+#[test]
+fn packed_engine_matches_pjrt_det_eval() {
+    let Some(model) = mlp() else { return };
+    // short real training so BN stats / weights are non-trivial
+    let mut train_ds = synth_mnist(1000, 31);
+    let mut test_ds = synth_mnist(300, 32);
+    let st = Standardizer::fit(&train_ds);
+    st.apply(&mut train_ds);
+    st.apply(&mut test_ds);
+    let data = SplitData::from_train_test(train_ds, test_ds, 150);
+    let opts = mnist_opts(Mode::Det, 6, 77);
+    let r = train(&model, &data, &opts).unwrap();
+
+    let packed = pack_mlp(&model.info, &r.state).unwrap();
+
+    // disk round trip must be lossless
+    let path = std::env::temp_dir().join(format!("bc_it_pack_{}.bcpack", std::process::id()));
+    save_packed(&packed, &path).unwrap();
+    let packed = load_packed(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    // compare per-example decisions on full batches
+    let batch = model.info.batch;
+    let idx: Vec<usize> = (0..batch).collect();
+    let b = gather_batch(&data.test, &idx, batch, 0);
+    let hyper = Hyper { mode: Mode::Det, ..Default::default() };
+    let (_, errv) = model.eval_batch(&r.state, &b.x, &b.y, &hyper).unwrap();
+
+    let preds = packed.classify(&b.x, batch);
+    let mut disagreements = 0;
+    for i in 0..batch {
+        let label = data.test.labels[i] as usize;
+        let pjrt_correct = errv[i] == 0.0;
+        let packed_correct = preds[i] == label;
+        if pjrt_correct != packed_correct {
+            disagreements += 1;
+        }
+    }
+    // identical math up to f32 summation order; allow a whisker of ties
+    assert!(
+        disagreements <= batch / 50,
+        "{disagreements}/{batch} decision disagreements between engines"
+    );
+
+    // aggregate error must match closely too
+    let packed_err = packed.test_error(&data.test, 64);
+    assert!(
+        (packed_err - r.test_err).abs() < 0.05,
+        "packed {packed_err} vs pjrt {}",
+        r.test_err
+    );
+}
+
+#[test]
+fn packed_memory_is_about_32x_smaller() {
+    let Some(model) = mlp() else { return };
+    let state = model.init_state(&Hyper::default()).unwrap();
+    let packed = pack_mlp(&model.info, &state).unwrap();
+    let ratio = packed.f32_weight_memory_bytes() as f64 / packed.weight_memory_bytes() as f64;
+    assert!(ratio > 28.0, "only {ratio}x");
+}
+
+#[test]
+fn eval_plan_batches_are_deterministic() {
+    // evaluation must not depend on the order batches are built in
+    let ds = synth_mnist(130, 5);
+    let plans = binaryconnect::pipeline::batch_indices(ds.len(), 50, Plan::Sequential);
+    assert_eq!(plans.len(), 3);
+    assert_eq!(plans[2].len(), 30);
+}

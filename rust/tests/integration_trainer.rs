@@ -1,0 +1,123 @@
+//! End-to-end coordinator tests: full training runs over the real stack
+//! (synthetic data -> pipeline -> PJRT train/eval -> model selection).
+//! Skipped when artifacts are absent.
+
+use binaryconnect::coordinator::{train, trials, LrSchedule, TrainOpts};
+use binaryconnect::data::{synth::synth_mnist, SplitData};
+use binaryconnect::preprocess::Standardizer;
+use binaryconnect::runtime::{Manifest, Mode, Model, Opt, Runtime};
+
+fn mlp() -> Option<Model> {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts");
+        return None;
+    }
+    let m = Manifest::load(dir).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    Some(rt.load_model(m.model("mlp").unwrap()).unwrap())
+}
+
+fn small_data(n_train: usize, n_test: usize, seed: u64) -> SplitData {
+    let mut train = synth_mnist(n_train, seed);
+    let mut test = synth_mnist(n_test, seed + 1);
+    let st = Standardizer::fit(&train);
+    st.apply(&mut train);
+    st.apply(&mut test);
+    SplitData::from_train_test(train, test, n_train / 6)
+}
+
+fn opts(mode: Mode, epochs: usize) -> TrainOpts {
+    TrainOpts {
+        epochs,
+        schedule: LrSchedule::Exponential { start: 0.002, end: 0.0004, epochs },
+        mode,
+        opt: Opt::Adam,
+        seed: 42,
+        verbose: false,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn det_bc_learns_synthetic_mnist() {
+    let Some(model) = mlp() else { return };
+    let data = small_data(1200, 300, 5);
+    let r = train(&model, &data, &opts(Mode::Det, 10)).unwrap();
+    assert_eq!(r.curves.len(), 10);
+    assert!(r.best_val_err < 0.4, "val err {}", r.best_val_err);
+    assert!(r.test_err < 0.5, "test err {}", r.test_err);
+    // training cost decreased
+    let first = r.curves.first().unwrap().train_loss;
+    let last = r.curves.last().unwrap().train_loss;
+    assert!(last < first, "loss {first} -> {last}");
+    assert_eq!(r.steps, 10 * (1000 / model.info.batch));
+}
+
+#[test]
+fn bc_raises_training_cost_vs_baseline() {
+    // Fig. 3's qualitative claim: BC behaves like a regularizer — the
+    // training cost stays higher than the unregularized baseline.
+    let Some(model) = mlp() else { return };
+    let data = small_data(1200, 300, 6);
+    let base = train(&model, &data, &opts(Mode::None, 6)).unwrap();
+    let bc = train(&model, &data, &opts(Mode::Det, 6)).unwrap();
+    let b_loss = base.curves.last().unwrap().train_loss;
+    let c_loss = bc.curves.last().unwrap().train_loss;
+    assert!(
+        b_loss < c_loss,
+        "expected baseline train cost {b_loss} < BC {c_loss}"
+    );
+}
+
+#[test]
+fn early_stopping_respects_patience() {
+    let Some(model) = mlp() else { return };
+    let data = small_data(600, 100, 7);
+    let mut o = opts(Mode::Det, 60);
+    o.patience = 2;
+    let r = train(&model, &data, &o).unwrap();
+    if r.curves.len() < 60 {
+        // stopped early: best epoch is at least `patience` before the end
+        assert!(r.curves.len() - 1 - r.best_epoch >= 2);
+    }
+}
+
+#[test]
+fn trials_aggregate_mean_std() {
+    let Some(model) = mlp() else { return };
+    let data = small_data(600, 150, 8);
+    let s = trials(&model, &data, &opts(Mode::Det, 4), 3).unwrap();
+    assert_eq!(s.test_errs.len(), 3);
+    let lo = s.test_errs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = s.test_errs.iter().cloned().fold(0.0, f64::max);
+    assert!(s.mean >= lo && s.mean <= hi);
+    assert!(s.std >= 0.0);
+}
+
+#[test]
+fn curves_record_decaying_lr() {
+    let Some(model) = mlp() else { return };
+    let data = small_data(600, 100, 9);
+    let r = train(&model, &data, &opts(Mode::Det, 5)).unwrap();
+    for (e, rec) in r.curves.iter().enumerate() {
+        assert_eq!(rec.epoch, e);
+        if e > 0 {
+            assert!(rec.lr < r.curves[e - 1].lr, "lr must decay");
+        }
+    }
+}
+
+#[test]
+fn test_err_reported_at_best_val_epoch() {
+    let Some(model) = mlp() else { return };
+    let data = small_data(900, 200, 10);
+    let r = train(&model, &data, &opts(Mode::Det, 8)).unwrap();
+    let best = r
+        .curves
+        .iter()
+        .map(|c| c.val_err)
+        .fold(f64::INFINITY, f64::min);
+    assert_eq!(r.best_val_err, best);
+    assert!(r.test_err.is_finite());
+}

@@ -1,0 +1,258 @@
+//! Property-based tests on coordinator invariants, using the in-repo
+//! `prop` harness (no proptest crate offline). These cover routing/
+//! batching/state invariants that must hold for ANY input, not just the
+//! happy path.
+
+use binaryconnect::binary::packed::{dense_f32, BitMatrix};
+use binaryconnect::coordinator::LrSchedule;
+use binaryconnect::data::Dataset;
+use binaryconnect::pipeline::{batch_indices, encode_targets, gather_batch, n_batches, Plan};
+use binaryconnect::prop::{check, log_size};
+use binaryconnect::stats::{mean_std, Histogram};
+use binaryconnect::util::Rng;
+
+#[test]
+fn prop_shuffled_batches_partition_dataset() {
+    check(
+        "shuffled batches partition",
+        |r| {
+            let n = log_size(r, 3000);
+            let b = log_size(r, 64);
+            (n, b, r.next_u64())
+        },
+        |&(n, b, seed)| {
+            let plans = batch_indices(n, b, Plan::Shuffled { seed });
+            if plans.len() != n / b {
+                return Err(format!("{} batches, expected {}", plans.len(), n / b));
+            }
+            let mut seen = vec![false; n];
+            for p in &plans {
+                if p.len() != b {
+                    return Err("ragged training batch".into());
+                }
+                for &i in p {
+                    if i >= n {
+                        return Err(format!("index {i} out of range {n}"));
+                    }
+                    if seen[i] {
+                        return Err(format!("index {i} repeated"));
+                    }
+                    seen[i] = true;
+                }
+            }
+            if seen.iter().filter(|&&s| s).count() != (n / b) * b {
+                return Err("coverage mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sequential_batches_cover_everything_in_order() {
+    check(
+        "sequential covers all",
+        |r| (log_size(r, 2000), log_size(r, 64)),
+        |&(n, b)| {
+            let plans = batch_indices(n, b, Plan::Sequential);
+            if plans.len() != n_batches(n, b, Plan::Sequential) {
+                return Err("n_batches mismatch".into());
+            }
+            let flat: Vec<usize> = plans.into_iter().flatten().collect();
+            if flat != (0..n).collect::<Vec<_>>() {
+                return Err("not the identity order".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_targets_one_hot_pm1() {
+    check(
+        "targets are +/-1 one-hot",
+        |r| {
+            let n = log_size(r, 200);
+            let c = 2 + r.below(19);
+            let labels: Vec<u8> = (0..n).map(|_| r.below(c) as u8).collect();
+            (labels, c)
+        },
+        |(labels, c)| {
+            let mut y = vec![];
+            encode_targets(labels, *c, &mut y);
+            for (i, row) in y.chunks(*c).enumerate() {
+                let pos: Vec<usize> =
+                    row.iter().enumerate().filter(|(_, &v)| v == 1.0).map(|(j, _)| j).collect();
+                if pos.len() != 1 || pos[0] != labels[i] as usize {
+                    return Err(format!("row {i} not one-hot at label"));
+                }
+                if row.iter().any(|&v| v != 1.0 && v != -1.0) {
+                    return Err("values outside {-1,+1}".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_gather_batch_pads_with_last_row() {
+    check(
+        "gather pads correctly",
+        |r| {
+            let dim = 1 + r.below(20);
+            let n = 2 + r.below(50);
+            let batch = 1 + r.below(32);
+            let take = 1 + r.below(batch.min(n));
+            (dim, n, batch, take, r.next_u64())
+        },
+        |&(dim, n, batch, take, seed)| {
+            let mut rng = Rng::new(seed);
+            let mut ds = Dataset::new("p", (1, dim, 1), 4);
+            for _ in 0..n {
+                let row: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+                ds.push(&row, rng.below(4) as u8);
+            }
+            let idx: Vec<usize> = (0..take).map(|_| rng.below(n)).collect();
+            let b = gather_batch(&ds, &idx, batch, 0);
+            if b.n_valid != take || b.x.len() != batch * dim {
+                return Err("size bookkeeping wrong".into());
+            }
+            // all padding rows equal the last real row
+            let last = &b.x[(take - 1) * dim..take * dim];
+            for p in take..batch {
+                if &b.x[p * dim..(p + 1) * dim] != last {
+                    return Err(format!("padding row {p} differs"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_packed_matmul_equals_sign_gemm() {
+    check(
+        "packed == sign gemm",
+        |r| {
+            let b = 1 + r.below(4);
+            let k = 1 + r.below(300);
+            let n = 1 + r.below(24);
+            let w: Vec<f32> = (0..k * n).map(|_| r.normal()).collect();
+            let x: Vec<f32> = (0..b * k).map(|_| r.normal()).collect();
+            (b, k, n, w, x)
+        },
+        |(b, k, n, w, x)| {
+            let (b, k, n) = (*b, *k, *n);
+            let bm = BitMatrix::pack(w, k, n);
+            let mut y = vec![0f32; b * n];
+            bm.matmul(x, b, &mut y);
+            let ws: Vec<f32> = w.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect();
+            let mut yref = vec![0f32; b * n];
+            dense_f32(x, &ws, b, k, n, &mut yref);
+            for (i, (a, r)) in y.iter().zip(&yref).enumerate() {
+                if (a - r).abs() > 2e-3 * (1.0 + r.abs()) {
+                    return Err(format!("mismatch at {i}: {a} vs {r}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_lr_schedule_bounded_and_monotone() {
+    check(
+        "exp schedule bounded + monotone",
+        |r| {
+            let start = 10f32.powf(-(r.uniform() * 3.0)); // 1 .. 1e-3
+            let end = start * 10f32.powf(-(1.0 + r.uniform() * 2.0));
+            let epochs = 2 + r.below(200);
+            (start, end, epochs)
+        },
+        |&(start, end, epochs)| {
+            let s = LrSchedule::Exponential { start, end, epochs };
+            let mut prev = f32::INFINITY;
+            for e in 0..epochs {
+                let lr = s.at(e);
+                if !(lr <= start * 1.0001 && lr >= end * 0.9999) {
+                    return Err(format!("lr {lr} escapes [{end}, {start}] at {e}"));
+                }
+                if lr > prev {
+                    return Err(format!("lr increased at epoch {e}"));
+                }
+                prev = lr;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_histogram_conserves_mass() {
+    check(
+        "histogram mass conserved",
+        |r| {
+            let n = log_size(r, 5000);
+            let vals: Vec<f32> = (0..n).map(|_| r.normal() * 2.0).collect();
+            let bins = 1 + r.below(100);
+            (vals, bins)
+        },
+        |(vals, bins)| {
+            let h = Histogram::build(vals, -1.0, 1.0, *bins);
+            if h.total() as usize != vals.len() {
+                return Err(format!("{} != {}", h.total(), vals.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_mean_std_translation_invariance() {
+    check(
+        "std is translation invariant",
+        |r| {
+            let v: Vec<f64> = (0..2 + r.below(100)).map(|_| r.normal() as f64).collect();
+            let shift = r.normal() as f64 * 10.0;
+            (v, shift)
+        },
+        |(v, shift)| {
+            let (m1, s1) = mean_std(v);
+            let shifted: Vec<f64> = v.iter().map(|x| x + shift).collect();
+            let (m2, s2) = mean_std(&shifted);
+            if (m2 - m1 - shift).abs() > 1e-9 {
+                return Err("mean did not translate".into());
+            }
+            if (s2 - s1).abs() > 1e-9 {
+                return Err("std changed under translation".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bitmatrix_sign_agrees_with_source() {
+    check(
+        "bit-pack preserves signs",
+        |r| {
+            let k = 1 + r.below(200);
+            let n = 1 + r.below(16);
+            let w: Vec<f32> = (0..k * n).map(|_| r.normal()).collect();
+            (k, n, w)
+        },
+        |(k, n, w)| {
+            let bm = BitMatrix::pack(w, *k, *n);
+            for row in 0..*k {
+                for col in 0..*n {
+                    let want = if w[row * n + col] >= 0.0 { 1.0 } else { -1.0 };
+                    if bm.sign(row, col) != want {
+                        return Err(format!("sign mismatch at ({row},{col})"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
