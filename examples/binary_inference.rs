@@ -5,24 +5,21 @@
 //!
 //!     cargo run --release --example binary_inference -- --epochs 15
 
-use anyhow::Result;
-
 use binaryconnect::bench_harness::{bench, fmt_time, Table};
 use binaryconnect::binary::packed::dense_f32;
 use binaryconnect::binary::{load_packed, pack_mlp, save_packed};
 use binaryconnect::coordinator::{mnist_opts, prepare, train, DataOpts};
 use binaryconnect::data::Corpus;
-use binaryconnect::runtime::{Manifest, Mode, Runtime};
+use binaryconnect::runtime::{Executor, Mode, ReferenceExecutor};
+use binaryconnect::util::error::{Error, Result};
 use binaryconnect::util::Args;
 
 fn main() -> Result<()> {
-    let args = Args::parse().map_err(anyhow::Error::msg)?;
+    let args = Args::parse().map_err(Error::msg)?;
     let epochs = args.usize("epochs", 15);
 
-    let manifest = Manifest::load(std::path::Path::new(&args.str("artifacts", "artifacts")))?;
-    let info = manifest.model("mlp")?;
-    let rt = Runtime::cpu()?;
-    let model = rt.load_model(info)?;
+    let model = ReferenceExecutor::builtin("mlp")?;
+    let info = model.info().clone();
 
     let (data, _) = prepare(
         Corpus::Mnist,
@@ -32,12 +29,12 @@ fn main() -> Result<()> {
     eprintln!("training det-BC MLP for {epochs} epochs ...");
     let result = train(&model, &data, &mnist_opts(Mode::Det, epochs, 11))?;
     eprintln!(
-        "trained: val err {:.4}, PJRT-eval test err {:.4}",
+        "trained: val err {:.4}, reference-eval test err {:.4}",
         result.best_val_err, result.test_err
     );
 
     // ---- fold into the packed engine and round-trip through disk
-    let packed = pack_mlp(info, &result.state)?;
+    let packed = pack_mlp(&info, &result.state)?;
     let path = std::env::temp_dir().join("bc_mlp_packed.bin");
     save_packed(&packed, &path)?;
     let packed = load_packed(&path)?;
@@ -45,7 +42,7 @@ fn main() -> Result<()> {
 
     let packed_err = packed.test_error(&data.test, 256);
     println!(
-        "\naccuracy:   PJRT (binary weights) {:.4}  |  packed engine {:.4}  (must match closely)",
+        "\naccuracy:   reference (binary weights) {:.4}  |  packed engine {:.4}  (must match closely)",
         result.test_err, packed_err
     );
 

@@ -8,22 +8,19 @@
 //!
 //!     cargo run --release --example mnist_mlp -- --epochs 30 --trials 3
 
-use anyhow::Result;
-
 use binaryconnect::bench_harness::Table;
 use binaryconnect::coordinator::{dropout_opts, mnist_opts, prepare, trials, DataOpts};
 use binaryconnect::data::Corpus;
-use binaryconnect::runtime::{Manifest, Mode, Runtime};
+use binaryconnect::runtime::{Mode, ReferenceExecutor};
+use binaryconnect::util::error::{Error, Result};
 use binaryconnect::util::Args;
 
 fn main() -> Result<()> {
-    let args = Args::parse().map_err(anyhow::Error::msg)?;
+    let args = Args::parse().map_err(Error::msg)?;
     let epochs = args.usize("epochs", 25);
     let n_trials = args.usize("trials", 3);
 
-    let manifest = Manifest::load(std::path::Path::new(&args.str("artifacts", "artifacts")))?;
-    let rt = Runtime::cpu()?;
-    let model = rt.load_model(manifest.model("mlp")?)?;
+    let model = ReferenceExecutor::builtin("mlp")?;
 
     let (data, real) = prepare(
         Corpus::Mnist,

@@ -1,32 +1,31 @@
-//! Quickstart: the end-to-end driver proving all three layers compose.
+//! Quickstart: the end-to-end driver proving the layers compose.
 //!
 //! Trains the BinaryConnect MLP (deterministic binarization, Algorithm 1)
 //! on a small synthetic MNIST for a few hundred steps through the full
-//! stack — Rust coordinator -> PJRT -> AOT HLO containing the Pallas
-//! kernels — and logs the loss curve. Run with:
+//! stack — data pipeline -> Executor backend -> model selection — and logs
+//! the loss curve. Runs on the pure-Rust reference backend, so a plain
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
 //!
-//! The run recorded in EXPERIMENTS.md par."End-to-end validation" is this
-//! binary's output.
-
-use anyhow::Result;
+//! works from a clean checkout with no artifacts.
 
 use binaryconnect::coordinator::{mnist_opts, prepare, train, DataOpts};
 use binaryconnect::data::Corpus;
-use binaryconnect::runtime::{Manifest, Mode, Runtime};
+use binaryconnect::runtime::{Executor, Mode, ReferenceExecutor};
+use binaryconnect::util::error::Result;
 
 fn main() -> Result<()> {
-    let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
-    let info = manifest.model("mlp")?;
+    let model = ReferenceExecutor::builtin("mlp")?;
+    let info = model.info().clone();
     println!(
-        "model: mlp — {} param tensors, {} scalars, batch {}",
+        "model: {} — {} param tensors, {} scalars, batch {}",
+        info.name,
         info.params.len(),
         info.n_scalars,
         info.batch
     );
 
-    // ~3000 synthetic MNIST digits -> 25 train batches/epoch
+    // ~3000 synthetic MNIST digits -> 23 train batches/epoch
     let (data, real) = prepare(
         Corpus::Mnist,
         &DataOpts { n_train: 3000, n_test: 600, ..Default::default() },
@@ -40,9 +39,6 @@ fn main() -> Result<()> {
         if real { "real" } else { "synthetic" }
     );
 
-    let rt = Runtime::cpu()?;
-    let model = rt.load_model(info)?;
-
     let mut opts = mnist_opts(Mode::Det, 16, 42);
     opts.verbose = true; // per-epoch progress to stderr
     let result = train(&model, &data, &opts)?;
@@ -50,7 +46,10 @@ fn main() -> Result<()> {
     println!("\nloss curve (train squared hinge, per epoch):");
     for r in &result.curves {
         let bar = "*".repeat((r.train_loss.min(60.0) * 1.0) as usize / 2);
-        println!("  epoch {:>2}  loss {:>8.3}  val err {:>6.3}  {}", r.epoch, r.train_loss, r.val_err, bar);
+        println!(
+            "  epoch {:>2}  loss {:>8.3}  val err {:>6.3}  {}",
+            r.epoch, r.train_loss, r.val_err, bar
+        );
     }
     println!(
         "\n{} steps in {:.1}s ({:.1} steps/s)",
@@ -64,10 +63,9 @@ fn main() -> Result<()> {
     );
 
     // the BinaryConnect invariant: real weights clipped to ±H
-    for (lit, p) in result.state.params.iter().zip(&model.info.params) {
+    for (t, p) in result.state.params.iter().zip(&info.params) {
         if p.kind == "weight" {
-            let v = lit.to_vec::<f32>()?;
-            let maxabs = v.iter().fold(0f32, |a, &b| a.max(b.abs()));
+            let maxabs = t.iter().fold(0f32, |a, &b| a.max(b.abs()));
             assert!(maxabs <= p.glorot as f32 + 1e-6, "{} escaped clip box", p.name);
         }
     }

@@ -1,27 +1,27 @@
 //! Figure 1: first-layer features of the MNIST MLP by regularizer.
 //!
-//! Trains under each regime and writes a PGM tile sheet of the first 100
-//! first-layer features (per-tile contrast normalized, like the paper's
-//! plot). The paper's qualitative claim: each regularizer leaves a
-//! visibly different feature texture.
+//! Trains under each regime (reference backend) and writes a PGM tile
+//! sheet of the first-layer features (per-tile contrast normalized, like
+//! the paper's plot). The paper's qualitative claim: each regularizer
+//! leaves a visibly different feature texture.
 //!
 //! Run: cargo bench --bench fig1_features [-- --epochs N]
 //! Writes fig1_none.pgm, fig1_det.pgm, fig1_stoch.pgm, fig1_dropout.pgm.
 
 use binaryconnect::coordinator::{dropout_opts, mnist_opts, prepare, train, DataOpts};
 use binaryconnect::data::Corpus;
-use binaryconnect::runtime::{Manifest, Mode, Runtime};
+use binaryconnect::runtime::{Executor, Mode, ReferenceExecutor};
 use binaryconnect::stats::{feature_tiles, write_pgm};
+use binaryconnect::util::error::{Error, Result};
 use binaryconnect::util::Args;
+use binaryconnect::{anyhow, ensure};
 
-fn main() -> anyhow::Result<()> {
-    let args = Args::parse().map_err(anyhow::Error::msg)?;
+fn main() -> Result<()> {
+    let args = Args::parse().map_err(Error::msg)?;
     let epochs = args.usize("epochs", 10);
 
-    let manifest = Manifest::load(std::path::Path::new(&args.str("artifacts", "artifacts")))?;
-    let info = manifest.model("mlp")?;
-    let rt = Runtime::cpu()?;
-    let model = rt.load_model(info)?;
+    let model = ReferenceExecutor::builtin(&args.str("model", "mlp"))?;
+    let info = model.info().clone();
     let (data, _) = prepare(
         Corpus::Mnist,
         &DataOpts { n_train: args.usize("n-train", 3000), n_test: 500, ..Default::default() },
@@ -30,7 +30,8 @@ fn main() -> anyhow::Result<()> {
     let in_dim = info.params[0].shape[0];
     let units = info.params[0].shape[1];
     let side = (in_dim as f64).sqrt() as usize;
-    anyhow::ensure!(side * side == in_dim, "input not square");
+    ensure!(side * side == in_dim, "input not square");
+    let n_tiles = units.min(100);
 
     let regimes = [
         ("none", mnist_opts(Mode::None, epochs, 17)),
@@ -38,14 +39,15 @@ fn main() -> anyhow::Result<()> {
         ("stoch", mnist_opts(Mode::Stoch, epochs, 17)),
         ("dropout", dropout_opts(&mnist_opts(Mode::None, epochs, 17))),
     ];
-    println!("Figure 1 — first-layer feature sheets (100 tiles each):");
+    println!("Figure 1 — first-layer feature sheets ({n_tiles} tiles each):");
     for (label, opts) in regimes {
         eprintln!("[fig1] {label} ...");
         let r = train(&model, &data, &opts)?;
         let w0 = r.state.param_vec(0)?;
-        let (img, w, h) = feature_tiles(&w0, in_dim, units, side, 100, 10);
+        let (img, w, h) = feature_tiles(&w0, in_dim, units, side, n_tiles, 10);
         let path = format!("fig1_{label}.pgm");
-        write_pgm(std::path::Path::new(&path), &img, w, h)?;
+        write_pgm(std::path::Path::new(&path), &img, w, h)
+            .map_err(|e| anyhow!("write {path}: {e}"))?;
         // quantify texture difference: fraction of near-saturated pixels
         let sat = img.iter().filter(|&&p| p < 30 || p > 225).count() as f64
             / img.len() as f64;

@@ -12,18 +12,17 @@
 
 use binaryconnect::coordinator::{mnist_opts, prepare, train, DataOpts};
 use binaryconnect::data::Corpus;
-use binaryconnect::runtime::{Manifest, Mode, Runtime};
+use binaryconnect::runtime::{Executor, Mode, ReferenceExecutor};
 use binaryconnect::stats::Histogram;
+use binaryconnect::util::error::{Error, Result};
 use binaryconnect::util::Args;
 
-fn main() -> anyhow::Result<()> {
-    let args = Args::parse().map_err(anyhow::Error::msg)?;
+fn main() -> Result<()> {
+    let args = Args::parse().map_err(Error::msg)?;
     let epochs = args.usize("epochs", 15);
 
-    let manifest = Manifest::load(std::path::Path::new(&args.str("artifacts", "artifacts")))?;
-    let info = manifest.model("mlp")?;
-    let rt = Runtime::cpu()?;
-    let model = rt.load_model(info)?;
+    let model = ReferenceExecutor::builtin(&args.str("model", "mlp"))?;
+    let info = model.info().clone();
     let (data, _) = prepare(
         Corpus::Mnist,
         &DataOpts { n_train: args.usize("n-train", 3000), n_test: 500, ..Default::default() },

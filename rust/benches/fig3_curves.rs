@@ -1,26 +1,30 @@
-//! Figure 3: training curves of the CNN on CIFAR-10 by regularizer.
+//! Figure 3: training curves on CIFAR-10 by regularizer.
 //!
 //! Paper's qualitative claims: both BinaryConnect versions (dotted lines:
 //! training cost; solid: validation error) (a) keep the training cost
 //! HIGHER and train slower than the unregularized net, and (b) reach a
 //! LOWER validation error — the signature of a Dropout-like regularizer.
 //!
+//! On the reference backend the paper's CNN is stood in for by the
+//! `cifar_mlp` dense model (the regularizer comparison is architecture-
+//! agnostic); build with `--features pjrt` and pass `--model cnn_small`
+//! under the PJRT backend for the convolutional version.
+//!
 //! Run: cargo bench --bench fig3_curves [-- --epochs N --n-train N]
 //! Writes fig3_<regime>.csv and prints the claim checks.
 
 use binaryconnect::coordinator::{cnn_opts, prepare, train, DataOpts};
 use binaryconnect::data::Corpus;
-use binaryconnect::runtime::{Manifest, Mode, Runtime};
+use binaryconnect::runtime::{Mode, ReferenceExecutor};
 use binaryconnect::stats::Csv;
+use binaryconnect::util::error::{Error, Result};
 use binaryconnect::util::Args;
 
-fn main() -> anyhow::Result<()> {
-    let args = Args::parse().map_err(anyhow::Error::msg)?;
+fn main() -> Result<()> {
+    let args = Args::parse().map_err(Error::msg)?;
     let epochs = args.usize("epochs", 8);
 
-    let manifest = Manifest::load(std::path::Path::new(&args.str("artifacts", "artifacts")))?;
-    let rt = Runtime::cpu()?;
-    let model = rt.load_model(manifest.model(&args.str("model", "cnn_small"))?)?;
+    let model = ReferenceExecutor::builtin(&args.str("model", "cifar_mlp"))?;
     let (data, real) = prepare(
         Corpus::Cifar10,
         &DataOpts {
@@ -31,7 +35,7 @@ fn main() -> anyhow::Result<()> {
         },
     )?;
     eprintln!(
-        "[fig3] CNN on CIFAR-10 ({}), {} epochs",
+        "[fig3] cifar_mlp on CIFAR-10 ({}), {} epochs",
         if real { "real" } else { "synthetic" },
         epochs
     );

@@ -7,11 +7,15 @@
 //!   * Test-time deterministic BC: no multiplications in the weight inner
 //!     loops and >= 16x less weight memory (vs 16-bit floats; 32x vs f32).
 //!
+//! Model specs come from the builtin registry (including the full-scale
+//! CNN specs, which the cost model can price without executing them).
+//!
 //! Run: cargo bench --bench hw_claims
 
 use binaryconnect::bench_harness::Table;
 use binaryconnect::hw;
-use binaryconnect::runtime::Manifest;
+use binaryconnect::runtime::reference::builtin_info;
+use binaryconnect::util::error::Result;
 
 fn spatial_of(name: &str) -> u64 {
     if !name.starts_with("conv") {
@@ -27,8 +31,8 @@ fn spatial_of(name: &str) -> u64 {
     (hw * hw) as u64
 }
 
-fn main() -> anyhow::Result<()> {
-    let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
+fn main() -> Result<()> {
+    let names = ["mlp", "cnn", "cnn_small"];
 
     let mut table = Table::new(&[
         "model",
@@ -37,8 +41,8 @@ fn main() -> anyhow::Result<()> {
         "removed",
         "speedup (mult-bound)",
     ]);
-    for name in ["mlp", "cnn", "cnn_small"] {
-        let info = manifest.model(name)?;
+    for name in names {
+        let info = builtin_info(name).expect("builtin spec");
         let real = hw::step_cost(&info.params, info.batch as u64, false, spatial_of);
         let bc = hw::step_cost(&info.params, info.batch as u64, true, spatial_of);
         let removed = hw::mult_reduction(&real, &bc);
@@ -54,8 +58,8 @@ fn main() -> anyhow::Result<()> {
     table.print();
 
     let mut mem = Table::new(&["model", "f32 weights", "f16 weights", "packed (1-bit)", "vs f16"]);
-    for name in ["mlp", "cnn", "cnn_small"] {
-        let info = manifest.model(name)?;
+    for name in names {
+        let info = builtin_info(name).expect("builtin spec");
         let m = hw::weight_memory(&info.params);
         mem.row(&[
             name.to_string(),
@@ -69,7 +73,7 @@ fn main() -> anyhow::Result<()> {
     mem.print();
 
     println!("\nphase breakdown for the MLP (per step, batch included):");
-    let info = manifest.model("mlp")?;
+    let info = builtin_info("mlp").expect("builtin spec");
     let real = hw::step_cost(&info.params, info.batch as u64, false, spatial_of);
     let bc = hw::step_cost(&info.params, info.batch as u64, true, spatial_of);
     let mut ph = Table::new(&["phase", "real mults", "BC mults", "adds (both)"]);
@@ -92,6 +96,6 @@ fn main() -> anyhow::Result<()> {
         format!("{:.3e}", real.update.adds as f64),
     ]);
     ph.print();
-    println!("(phases 1-2 lose their multiplications under BC; phase 3 keeps them — hence ~2/3)");
+    println!("(phases 1-2 go multiplication-free under BC; phase 3 keeps its real MACs)");
     Ok(())
 }

@@ -1,18 +1,18 @@
-//! Performance microbenches for the hot paths (EXPERIMENTS.md par.Perf):
+//! Performance microbenches for the hot paths:
 //!
 //!   * packed sign-accumulate GEMM vs naive f32 GEMM (inference hot path)
-//!   * PJRT train-step latency: Pallas-GEMM artifact vs native-dot artifact
-//!     (the L1 ablation), plus the literal round-trip overhead
+//!   * reference-backend train/eval step latency per builtin MLP model
 //!
 //! Run: cargo bench --bench perf_gemm [-- --iters N]
 
 use binaryconnect::bench_harness::{bench, fmt_time, Table};
 use binaryconnect::binary::packed::{dense_f32, BitMatrix};
-use binaryconnect::runtime::{Hyper, Manifest, Mode, Opt, Runtime};
+use binaryconnect::runtime::{Executor, Hyper, Mode, Opt, ReferenceExecutor};
+use binaryconnect::util::error::{Error, Result};
 use binaryconnect::util::{Args, Rng};
 
-fn main() -> anyhow::Result<()> {
-    let args = Args::parse().map_err(anyhow::Error::msg)?;
+fn main() -> Result<()> {
+    let args = Args::parse().map_err(Error::msg)?;
     let iters = args.usize("iters", 15);
 
     // ---------- packed vs f32 GEMM ----------
@@ -29,6 +29,7 @@ fn main() -> anyhow::Result<()> {
             dense_f32(&x, &w, b, k, n, &mut y);
             std::hint::black_box(&y);
         });
+        let mut y = vec![0f32; b * n];
         let rp = bench("packed", 2, iters, || {
             bm.matmul(&x, b, &mut y);
             std::hint::black_box(&y);
@@ -43,26 +44,19 @@ fn main() -> anyhow::Result<()> {
     }
     t.print();
 
-    // ---------- PJRT step latency: pallas vs native ----------
-    let dir = std::path::Path::new("artifacts");
-    if !dir.join("manifest.json").exists() {
-        println!("\n(no artifacts; skipping PJRT step benches)");
-        return Ok(());
-    }
-    let manifest = Manifest::load(dir)?;
-    let rt = Runtime::cpu()?;
-    println!("\nPJRT train/eval step latency (mlp = Pallas GEMM, mlp_ng = native dot):");
+    // ---------- reference-backend step latency ----------
+    println!("\nreference-backend train/eval step latency (builtin MLPs):");
     let mut t2 = Table::new(&["model", "train step", "eval step", "steps/s (train)"]);
-    for name in ["mlp", "mlp_ng", "cnn_small"] {
-        let model = rt.load_model(manifest.model(name)?)?;
+    for name in ["mlp_small", "mlp", "cifar_mlp"] {
+        let model = ReferenceExecutor::builtin(name)?;
         let mut state = model.init_state(&Hyper::default())?;
-        let nx: usize = model.info.input_shape.iter().product();
+        let nx: usize = model.info().input_shape.iter().product();
         let mut r = Rng::new(9);
         let x: Vec<f32> = (0..nx).map(|_| r.normal()).collect();
-        let bc = model.info.batch * model.info.classes;
+        let bc = model.info().batch * model.info().classes;
         let mut y = vec![-1.0f32; bc];
-        for i in 0..model.info.batch {
-            y[i * model.info.classes + r.below(model.info.classes)] = 1.0;
+        for i in 0..model.info().batch {
+            y[i * model.info().classes + r.below(model.info().classes)] = 1.0;
         }
         let mut step = 0u32;
         let h0 = Hyper { lr: 0.001, mode: Mode::Det, opt: Opt::Adam, ..Default::default() };
@@ -82,24 +76,7 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     t2.print();
-    println!("\n(mlp vs mlp_ng isolates the Pallas-kernel cost inside the lowered HLO)");
-
-    // ---------- step-latency breakdown: where does the time go? ----------
-    let model = rt.load_model(manifest.model("mlp")?)?;
-    let state = model.init_state(&Hyper::default())?;
-    let nx: usize = model.info.input_shape.iter().product();
-    let mut r = Rng::new(11);
-    let x: Vec<f32> = (0..nx).map(|_| r.normal()).collect();
-    let dims: Vec<i64> = model.info.input_shape.iter().map(|&d| d as i64).collect();
-    let r_lit = bench("literal build", 3, 50, || {
-        let xl = xla::Literal::vec1(&x).reshape(&dims).unwrap();
-        std::hint::black_box(xl);
-    });
-    let r_snap = bench("state snapshot (host copy of all params+slots)", 1, 10, || {
-        std::hint::black_box(state.snapshot().unwrap());
-    });
-    println!("\nstep-overhead components (mlp):");
-    println!("  input-literal build : {} per step", fmt_time(r_lit.mean_s));
-    println!("  full-state host copy: {} (only on snapshot, not per step)", fmt_time(r_snap.mean_s));
+    println!("\n(per-step cost is dominated by the three dense GEMMs; see hw_claims");
+    println!(" for the multiplier-count model these latencies put in context)");
     Ok(())
 }

@@ -1,26 +1,29 @@
-//! Table 1: test error of a (small) CNN on CIFAR-10 by optimization
-//! method x learning-rate scaling (deterministic BinaryConnect).
+//! Table 1: test error on CIFAR-10 by optimization method x learning-rate
+//! scaling (deterministic BinaryConnect).
 //!
 //! Paper values (full scale, 500 epochs):
 //!     SGD       15.65 / 11.45   Nesterov  —(diverged row blank) / 11.30
 //!     ADAM      12.81 / 10.47
 //! Shape to reproduce: LR scaling improves every optimizer; ADAM+scaling
-//! is best. Run: cargo bench --bench table1 [-- --epochs N --n-train N]
+//! is best. On the reference backend the CNN is stood in for by the
+//! `cifar_mlp` dense model (the optimizer x scaling comparison is
+//! architecture-agnostic).
+//!
+//! Run: cargo bench --bench table1 [-- --epochs N --n-train N]
 
 use binaryconnect::bench_harness::Table;
 use binaryconnect::coordinator::{cnn_opts, prepare, train, DataOpts};
 use binaryconnect::data::Corpus;
-use binaryconnect::runtime::{Manifest, Mode, Opt, Runtime};
+use binaryconnect::runtime::{Mode, Opt, ReferenceExecutor};
+use binaryconnect::util::error::{Error, Result};
 use binaryconnect::util::Args;
 
-fn main() -> anyhow::Result<()> {
-    let args = Args::parse().map_err(anyhow::Error::msg)?;
+fn main() -> Result<()> {
+    let args = Args::parse().map_err(Error::msg)?;
     let epochs = args.usize("epochs", 6);
     let n_train = args.usize("n-train", 1200);
 
-    let manifest = Manifest::load(std::path::Path::new(&args.str("artifacts", "artifacts")))?;
-    let rt = Runtime::cpu()?;
-    let model = rt.load_model(manifest.model("cnn_small")?)?;
+    let model = ReferenceExecutor::builtin(&args.str("model", "cifar_mlp"))?;
     let (data, real) = prepare(
         Corpus::Cifar10,
         &DataOpts {
@@ -31,14 +34,14 @@ fn main() -> anyhow::Result<()> {
         },
     )?;
     eprintln!(
-        "[table1] small CNN, det-BC, {} train / {} test ({}), {epochs} epochs",
+        "[table1] cifar_mlp, det-BC, {} train / {} test ({}), {epochs} epochs",
         data.train.len() + data.val.len(),
         data.test.len(),
         if real { "real" } else { "synthetic" }
     );
 
     // per-optimizer base LRs (the paper tunes per cell; these come from a
-    // coarse sweep on the synthetic stand-in, EXPERIMENTS.md par.T1)
+    // coarse sweep on the synthetic stand-in)
     let base_lr = |opt: Opt, scaled: bool| -> f32 {
         match (opt, scaled) {
             (Opt::Sgd, true) => 0.003,
@@ -71,7 +74,7 @@ fn main() -> anyhow::Result<()> {
         }
         table.row(&cells);
     }
-    println!("\nTable 1 — measured on this testbed (det-BC small CNN, synthetic CIFAR scale):");
+    println!("\nTable 1 — measured on this testbed (det-BC, synthetic CIFAR scale):");
     table.print();
     println!("paper:  SGD 15.65/11.45  Nesterov —/11.30  ADAM 12.81/10.47");
 

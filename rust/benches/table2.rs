@@ -8,28 +8,27 @@
 //!     dropout     1.01±0.04     —        —
 //!
 //! Shape to reproduce: BC is never worse than no-regularizer, stoch <= det,
-//! and on MNIST dropout is the strongest regularizer. Datasets are scaled
-//! (see DESIGN.md par.3 scale note); pass --epochs/--n-train to go larger.
+//! and on MNIST dropout is the strongest regularizer. On the reference
+//! backend the CIFAR/SVHN CNNs are stood in for by dense models (see
+//! DESIGN.md); pass --epochs/--n-train to go larger.
 //!
 //! Run: cargo bench --bench table2 [-- --epochs N --trials N]
 
 use binaryconnect::bench_harness::Table;
 use binaryconnect::coordinator::{
-    cnn_opts, dropout_opts, mnist_opts, prepare, trials, DataOpts, TrainOpts,
+    dropout_opts, mnist_opts, prepare, trials, DataOpts, TrainOpts,
 };
 use binaryconnect::data::Corpus;
-use binaryconnect::runtime::{Manifest, Mode, Runtime};
+use binaryconnect::runtime::{Mode, ReferenceExecutor};
+use binaryconnect::util::error::{Error, Result};
 use binaryconnect::util::Args;
 
-fn main() -> anyhow::Result<()> {
-    let args = Args::parse().map_err(anyhow::Error::msg)?;
+fn main() -> Result<()> {
+    let args = Args::parse().map_err(Error::msg)?;
     let mnist_epochs = args.usize("epochs", 25);
     let cnn_epochs = args.usize("cnn-epochs", 14);
     let n_trials = args.usize("trials", 2);
     let data_dir = args.opt_str("data-dir").map(std::path::PathBuf::from);
-
-    let manifest = Manifest::load(std::path::Path::new(&args.str("artifacts", "artifacts")))?;
-    let rt = Runtime::cpu()?;
 
     let methods: [(&str, Mode, bool); 4] = [
         ("No regularizer", Mode::None, false),
@@ -43,7 +42,7 @@ fn main() -> anyhow::Result<()> {
 
     // ---------- MNIST (MLP, SGD, multi-trial mean ± std) ----------
     {
-        let model = rt.load_model(manifest.model("mlp")?)?;
+        let model = ReferenceExecutor::builtin("mlp")?;
         let (data, _) = prepare(
             Corpus::Mnist,
             &DataOpts {
@@ -62,12 +61,13 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    // ---------- CIFAR-10 and SVHN (CNNs, ADAM, single run; dropout row
-    //            blank as in the paper) ----------
-    for (corpus, model_name, n_tr) in
-        [(Corpus::Cifar10, "cnn", 800usize), (Corpus::Svhn, "cnn_small", 800)]
-    {
-        let model = rt.load_model(manifest.model(model_name)?)?;
+    // ---------- CIFAR-10 and SVHN (dense stand-ins, ADAM, single run;
+    //            dropout row blank as in the paper) ----------
+    for (corpus, model_name, n_tr) in [
+        (Corpus::Cifar10, "cifar_mlp", 800usize),
+        (Corpus::Svhn, "svhn_mlp", 800),
+    ] {
+        let model = ReferenceExecutor::builtin(model_name)?;
         let (data, _) = prepare(
             corpus,
             &DataOpts {
@@ -83,11 +83,11 @@ fn main() -> anyhow::Result<()> {
                 continue;
             }
             eprintln!("[table2/{:?}] {name} ...", corpus);
-            let mut o = cnn_opts(*mode, cnn_epochs, 37);
+            let mut o = binaryconnect::coordinator::cnn_opts(*mode, cnn_epochs, 37);
             if *mode == Mode::Stoch {
                 // Sec.-2.6 method 1 (det weights) keeps BN calibrated in
-                // the short-training regime; see DESIGN.md par.6. The
-                // stoch CNN cells remain step-budget-limited (footnote).
+                // the short-training regime; the stoch cells remain
+                // step-budget-limited (footnote).
                 o.eval_override = Some(Mode::Det);
             }
             let r = binaryconnect::coordinator::train(&model, &data, &o)?;
@@ -106,10 +106,10 @@ fn main() -> anyhow::Result<()> {
         "paper:  none 1.30±0.04 / 10.64 / 2.44 ; det 1.29±0.08 / 9.90 / 2.30 ;\n        stoch 1.18±0.04 / 8.27 / 2.15 ; dropout 1.01±0.04 / — / —"
     );
     println!(
-        "* stoch CNN cells are step-budget-limited on this testbed: an 8-layer\n\
-         stochastic net polarizes over ~1e5+ steps (paper: 500 epochs = ~450k\n\
-         steps; this run: ~{} steps). The MNIST column, where the step budget\n\
-         suffices, reproduces the paper's stoch <= det ordering.",
+        "* stoch cells are step-budget-limited on this testbed: polarization\n\
+         needs ~1e5+ steps (paper: 500 epochs = ~450k steps; this run: ~{}\n\
+         steps). The MNIST column, where the step budget suffices, reproduces\n\
+         the paper's stoch <= det ordering.",
         cnn_epochs * 800 / 50
     );
     Ok(())

@@ -158,6 +158,8 @@ impl PackedLayer {
     pub fn forward(&self, x: &[f32], b: usize, y: &mut [f32]) {
         self.bits.matmul(x, b, y);
         let n = self.bits.n;
+        assert_eq!(self.scale.len(), n, "scale length must match layer width");
+        assert_eq!(self.shift.len(), n, "shift length must match layer width");
         for bi in 0..b {
             let row = &mut y[bi * n..(bi + 1) * n];
             for ((v, &s), &t) in row.iter_mut().zip(&self.scale).zip(&self.shift) {
@@ -184,7 +186,9 @@ impl PackedMlp {
     /// Fold (W, BN) stacks into packed layers.
     /// `weights[i]` is row-major (k x n); `bn[i]` is Some((gamma, beta,
     /// mean, var)) for hidden layers, None for the output layer whose
-    /// `bias` applies instead.
+    /// `bias` applies instead.  `bias` belongs to the LAST layer only: a
+    /// BN-less hidden layer gets identity scale and zero shift, never the
+    /// output bias (whose length would not even match the layer width).
     pub fn build(
         weights: Vec<(Vec<f32>, usize, usize)>,
         bn: Vec<Option<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)>>,
@@ -213,7 +217,12 @@ impl PackedMlp {
                     (scale, shift)
                 }
                 None => {
-                    let shift = bias.clone().unwrap_or_else(|| vec![0.0; n]);
+                    let shift = if last {
+                        bias.clone().unwrap_or_else(|| vec![0.0; n])
+                    } else {
+                        vec![0.0; n]
+                    };
+                    assert_eq!(shift.len(), n, "bias length must match the output width");
                     (vec![1.0; n], shift)
                 }
             };
@@ -400,6 +409,38 @@ mod tests {
                 .0;
             assert_eq!(preds[bi], am);
         }
+    }
+
+    #[test]
+    fn bn_less_hidden_layer_does_not_inherit_output_bias() {
+        // regression: a BN-less hidden layer used to clone the output bias
+        // into its shift, silently truncated by zip when lengths differed.
+        let w1 = rand_mat(4, 6, 20); // hidden, 6 units, no BN
+        let w2 = rand_mat(6, 2, 21); // output, 2 units
+        let mlp = PackedMlp::build(
+            vec![(w1, 4, 6), (w2, 6, 2)],
+            vec![None, None],
+            Some(vec![0.5, -0.5]),
+        );
+        assert_eq!(mlp.layers[0].shift, vec![0.0; 6], "hidden shift must stay zero");
+        assert_eq!(mlp.layers[0].scale, vec![1.0; 6]);
+        assert_eq!(mlp.layers[1].shift, vec![0.5, -0.5], "output keeps its bias");
+        // and the forward pass works on well-formed shapes
+        let out = mlp.forward(&[1.0, -1.0, 0.5, 0.25], 1);
+        assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "scale length")]
+    fn forward_rejects_mismatched_affine_lengths() {
+        let layer = PackedLayer {
+            bits: BitMatrix::pack(&[1.0, -1.0], 1, 2),
+            scale: vec![1.0], // wrong length: 1 instead of 2
+            shift: vec![0.0, 0.0],
+            relu: false,
+        };
+        let mut y = vec![0f32; 2];
+        layer.forward(&[1.0], 1, &mut y);
     }
 
     #[test]

@@ -4,7 +4,8 @@
 
 use std::path::Path;
 
-use anyhow::{anyhow, Result};
+use crate::anyhow;
+use crate::util::error::Result;
 
 use crate::data::{load_or_synth, Corpus, SplitData};
 use crate::preprocess::{gcn, Standardizer, Zca};

@@ -1,12 +1,15 @@
 //! The training loop (Algorithm 1 driven at full-epoch granularity) and
 //! multi-seed trial aggregation.
-
-use anyhow::Result;
+//!
+//! Backend-agnostic: everything goes through the [`Executor`] trait, so
+//! the same loop drives the pure-Rust reference backend and (with the
+//! `pjrt` feature) the PJRT artifact path.
 
 use crate::data::SplitData;
 use crate::pipeline::{Plan, Prefetcher};
-use crate::runtime::{Hyper, Mode, Model, Opt, TrainState};
+use crate::runtime::{Executor, Hyper, Mode, Opt, TrainState};
 use crate::stats::mean_std;
+use crate::util::error::Result;
 use crate::util::{Rng, Timer};
 
 use super::schedule::LrSchedule;
@@ -99,12 +102,12 @@ pub struct RunResult {
 
 /// Evaluate a dataset (padded batching), masked to valid examples.
 pub fn evaluate(
-    model: &Model,
+    model: &dyn Executor,
     state: &TrainState,
     ds: &crate::data::Dataset,
     hyper: &Hyper,
 ) -> Result<(f64, f64)> {
-    let batch = model.info.batch;
+    let batch = model.info().batch;
     let mut pf = Prefetcher::spawn(ds, batch, Plan::Sequential, 2);
     let mut loss_sum = 0f64;
     let mut err_sum = 0f64;
@@ -122,13 +125,13 @@ pub fn evaluate(
 }
 
 /// Train one model per the paper's protocol.
-pub fn train(model: &Model, data: &SplitData, opts: &TrainOpts) -> Result<RunResult> {
+pub fn train(model: &dyn Executor, data: &SplitData, opts: &TrainOpts) -> Result<RunResult> {
     let total = Timer::start();
     let mut rng = Rng::new(opts.seed);
     let init_hyper = Hyper { seed: (opts.seed & 0xFF_FFFF) as u32, ..Default::default() };
     let mut state = model.init_state(&init_hyper)?;
 
-    let batch = model.info.batch;
+    let batch = model.info().batch;
     let mut curves = vec![];
     let mut best_val = f64::INFINITY;
     let mut best_epoch = 0usize;
@@ -232,7 +235,7 @@ pub struct TrialSummary {
 }
 
 pub fn trials(
-    model: &Model,
+    model: &dyn Executor,
     data: &SplitData,
     opts: &TrainOpts,
     n_trials: usize,

@@ -15,7 +15,8 @@ use std::fs;
 use std::io::Read;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 
 use super::dataset::Dataset;
 

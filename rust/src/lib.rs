@@ -10,16 +10,19 @@
 //!   three optimizers, and Algorithm 1 as one jitted `train_step`, lowered
 //!   once to HLO text (`make artifacts`).
 //! * **Layer 3** (this crate) — the coordinator: datasets, preprocessing,
-//!   minibatch pipeline, the PJRT runtime executing the AOT artifacts, the
-//!   experiment driver reproducing every table/figure, a bit-packed
-//!   multiplication-free inference engine, and the hardware cost model
-//!   behind the paper's efficiency claims.
+//!   minibatch pipeline, a backend-pluggable [`runtime::Executor`] with a
+//!   pure-Rust reference backend (and, behind the `pjrt` cargo feature,
+//!   the PJRT runtime executing the AOT artifacts), the experiment driver
+//!   reproducing every table/figure, a bit-packed multiplication-free
+//!   inference engine, and the hardware cost model behind the paper's
+//!   efficiency claims.
 //!
-//! Python never runs on the training/request path; after `make artifacts`
-//! the Rust binary is self-contained.
+//! The default build is fully self-contained: no Python, no artifacts, no
+//! external crates — `cargo test` and every bench/example run end-to-end
+//! on the reference backend with synthetic data.
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for measured
-//! reproductions of Tables 1-2 and Figures 1-3.
+//! See DESIGN.md (repo root) for the module inventory and the
+//! backend/feature matrix.
 
 pub mod bench_harness;
 pub mod binary;

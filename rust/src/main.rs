@@ -1,27 +1,31 @@
 //! `bcrun` — the BinaryConnect coordinator CLI.
 //!
 //! Subcommands:
-//!   info                         list artifact models and their specs
+//!   info                         list models (builtin + artifact manifest)
 //!   train                        train one configuration, dump curves
 //!   hw                           print the hardware cost-model table
 //!   export  --out <path>         train, then pack det-BC weights to disk
 //!   infer   --packed <path>      run the packed engine on a test set
 //!
-//! Examples (after `make artifacts`):
+//! The backend defaults to the pure-Rust reference executor; pass
+//! `--backend pjrt` (with the `pjrt` cargo feature built in) to run the
+//! AOT HLO artifacts instead.
+//!
+//! Examples:
 //!   bcrun train --model mlp --dataset mnist --mode stoch --epochs 20
-//!   bcrun train --model cnn --dataset cifar10 --opt adam --mode det
+//!   bcrun train --model cifar_mlp --dataset cifar10 --opt adam --mode det
 
 use std::path::PathBuf;
 use std::process::ExitCode;
 
-use anyhow::{anyhow, Result};
-
 use binaryconnect::coordinator::{protocol, train, LrSchedule, TrainOpts};
 use binaryconnect::data::{Corpus, SplitData};
 use binaryconnect::hw;
-use binaryconnect::runtime::{Manifest, Mode, Opt, Runtime};
+use binaryconnect::runtime::{reference, Executor, Manifest, Mode, Opt, ReferenceExecutor};
 use binaryconnect::stats::{feature_tiles, write_pgm, Csv, Histogram};
+use binaryconnect::util::error::Result;
 use binaryconnect::util::Args;
+use binaryconnect::{anyhow, bail, ensure};
 
 fn main() -> ExitCode {
     match run() {
@@ -35,7 +39,8 @@ fn main() -> ExitCode {
 
 const USAGE: &str = "\
 usage: bcrun <info|train|hw|export|infer> [flags]
-  common:  --artifacts DIR (default artifacts) --data-dir DIR
+  common:  --backend reference|pjrt (default reference)
+           --artifacts DIR (default artifacts, pjrt only) --data-dir DIR
   train:   --model NAME --dataset mnist|cifar10|svhn --mode none|det|stoch
            --opt sgd|nesterov|adam --epochs N --lr-start F --lr-end F
            --dropout F --no-lr-scale --seed N --n-train N --n-test N
@@ -62,24 +67,80 @@ fn run() -> Result<()> {
     }
 }
 
-fn manifest(args: &Args) -> Result<Manifest> {
-    let dir = PathBuf::from(args.str("artifacts", "artifacts"));
-    Manifest::load(&dir)
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.str("artifacts", "artifacts"))
+}
+
+/// Build the selected backend's executor for `--model`.
+fn load_executor(args: &Args) -> Result<Box<dyn Executor>> {
+    let model_name = args.str("model", "mlp");
+    let backend = args.str("backend", "reference");
+    match backend.as_str() {
+        "reference" => Ok(Box::new(ReferenceExecutor::builtin(&model_name)?)),
+        #[cfg(feature = "pjrt")]
+        "pjrt" => {
+            let m = Manifest::load(&artifacts_dir(args))?;
+            let rt = binaryconnect::runtime::Runtime::cpu()?;
+            Ok(Box::new(rt.load_model(m.model(&model_name)?)?))
+        }
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => bail!(
+            "this build has no PJRT backend; rebuild with `--features pjrt` \
+             (needs the offline xla crate, see DESIGN.md)"
+        ),
+        other => bail!("unknown --backend {other} (want reference or pjrt)"),
+    }
+}
+
+/// Resolve a model spec by name: the artifact manifest wins when present
+/// (its specs carry the real trained-scale shapes), otherwise the builtin
+/// registry — so spec-only uses like `hw` work for both backends.
+fn model_spec(args: &Args, name: &str) -> Result<binaryconnect::runtime::ModelInfo> {
+    let dir = artifacts_dir(args);
+    if dir.join("manifest.json").exists() {
+        let m = Manifest::load(&dir)?;
+        if let Ok(info) = m.model(name) {
+            return Ok(info.clone());
+        }
+    }
+    reference::builtin_info(name).ok_or_else(|| {
+        anyhow!(
+            "model '{name}' is neither in the artifact manifest nor builtin (builtin: {})",
+            reference::builtin_names().join(", ")
+        )
+    })
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
-    let m = manifest(args)?;
-    println!("artifact dir: {} (scale {})", m.dir.display(), m.scale);
-    for model in &m.models {
+    println!("builtin models (reference backend; cnn* are spec-only):");
+    for name in reference::builtin_names() {
+        let info = reference::builtin_info(name).unwrap();
         println!(
-            "  {:<10} batch {:<4} input {:?}  {} tensors / {} scalars  pallas={}",
-            model.name,
-            model.batch,
-            model.input_shape,
-            model.params.len(),
-            model.n_scalars,
-            model.use_pallas
+            "  {:<10} batch {:<4} input {:?}  {} tensors / {} scalars",
+            info.name,
+            info.batch,
+            info.input_shape,
+            info.params.len(),
+            info.n_scalars,
         );
+    }
+    let dir = artifacts_dir(args);
+    if dir.join("manifest.json").exists() {
+        let m = Manifest::load(&dir)?;
+        println!("artifact dir: {} (scale {})", m.dir.display(), m.scale);
+        for model in &m.models {
+            println!(
+                "  {:<10} batch {:<4} input {:?}  {} tensors / {} scalars  pallas={}",
+                model.name,
+                model.batch,
+                model.input_shape,
+                model.params.len(),
+                model.n_scalars,
+                model.use_pallas
+            );
+        }
+    } else {
+        println!("(no artifact manifest at {}; pjrt backend unavailable)", dir.display());
     }
     Ok(())
 }
@@ -122,9 +183,8 @@ pub fn opts_from_args(args: &Args) -> Result<TrainOpts> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let m = manifest(args)?;
-    let model_name = args.str("model", "mlp");
-    let info = m.model(&model_name)?;
+    let model = load_executor(args)?;
+    let info = model.info().clone();
     let corpus = Corpus::parse(&args.str("dataset", "mnist"))
         .ok_or_else(|| anyhow!("bad --dataset"))?;
     let opts = opts_from_args(args)?;
@@ -138,10 +198,15 @@ fn cmd_train(args: &Args) -> Result<()> {
         data.test.len(),
         if real { "real files" } else { "synthetic" }
     );
+    ensure!(
+        data.train.dim == info.input_dim(),
+        "model {} expects {} features, dataset has {}",
+        info.name,
+        info.input_dim(),
+        data.train.dim
+    );
 
-    let rt = Runtime::cpu()?;
-    let model = rt.load_model(info)?;
-    let result = train(&model, &data, &opts)?;
+    let result = train(model.as_ref(), &data, &opts)?;
 
     println!(
         "mode={} opt={} epochs={} -> best val err {:.4} (epoch {}), test err {:.4}, {} steps in {:.1}s",
@@ -194,21 +259,18 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_export(args: &Args) -> Result<()> {
     use binaryconnect::binary::{pack_mlp, save_packed};
 
-    let m = manifest(args)?;
-    let model_name = args.str("model", "mlp");
-    let info = m.model(&model_name)?;
+    let model = load_executor(args)?;
+    let info = model.info().clone();
     let corpus = Corpus::parse(&args.str("dataset", "mnist"))
         .ok_or_else(|| anyhow!("bad --dataset"))?;
     let mut opts = opts_from_args(args)?;
     opts.mode = Mode::Det; // packed export is the deterministic test-time path
 
     let (data, _) = prepare_data(corpus, args, opts.seed)?;
-    let rt = Runtime::cpu()?;
-    let model = rt.load_model(info)?;
-    let result = train(&model, &data, &opts)?;
+    let result = train(model.as_ref(), &data, &opts)?;
     eprintln!("trained: test err {:.4}", result.test_err);
 
-    let packed = pack_mlp(info, &result.state)?;
+    let packed = pack_mlp(&info, &result.state)?;
     let out = args.str("out", "model.bcpack");
     save_packed(&packed, std::path::Path::new(&out))?;
     println!(
@@ -230,7 +292,7 @@ fn cmd_infer(args: &Args) -> Result<()> {
     let corpus = Corpus::parse(&args.str("dataset", "mnist"))
         .ok_or_else(|| anyhow!("bad --dataset"))?;
     let (data, real) = prepare_data(corpus, args, args.u64("seed", 1))?;
-    anyhow::ensure!(
+    ensure!(
         data.test.dim == packed.in_dim,
         "model expects {} features, dataset has {}",
         packed.in_dim,
@@ -252,9 +314,8 @@ fn cmd_infer(args: &Args) -> Result<()> {
 }
 
 fn cmd_hw(args: &Args) -> Result<()> {
-    let m = manifest(args)?;
     let model_name = args.str("model", "mlp");
-    let info = m.model(&model_name)?;
+    let info = model_spec(args, &model_name)?;
     let batch = args.usize("batch", info.batch) as u64;
 
     // spatial sizes for the CNN's conv layers (SAME conv, MP2 after pairs)

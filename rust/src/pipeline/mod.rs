@@ -1,7 +1,8 @@
 //! Minibatch pipeline: shuffled sampling, one-hot target encoding, and a
 //! double-buffered prefetch thread with bounded-channel backpressure.
 //!
-//! The PJRT executor consumes host batches; batch assembly (gather +
+//! The [`Executor`](crate::runtime::Executor) backends consume host
+//! batches; batch assembly (gather +
 //! one-hot encode) is cheap but not free, so a background thread builds the
 //! next batches while the current step executes. A `sync_channel(depth)`
 //! bounds memory and applies backpressure if the producer outruns the
@@ -27,10 +28,19 @@ pub struct Batch {
 }
 
 /// Encode labels as +/-1 one-vs-rest rows (hinge-loss targets).
+///
+/// Panics with a diagnosable message on a label outside `0..n_classes`
+/// (corrupt data used to surface as an opaque out-of-bounds `Vec` index
+/// deep inside this loop).
 pub fn encode_targets(labels: &[u8], n_classes: usize, out: &mut Vec<f32>) {
     out.clear();
     out.resize(labels.len() * n_classes, -1.0);
     for (i, &l) in labels.iter().enumerate() {
+        assert!(
+            (l as usize) < n_classes,
+            "encode_targets: label {l} at index {i} out of range (n_classes = {n_classes}); \
+             dataset is corrupt or mislabeled"
+        );
         out[i * n_classes + l as usize] = 1.0;
     }
 }
@@ -142,6 +152,13 @@ mod tests {
         let mut y = vec![];
         encode_targets(&[0, 2], 3, &mut y);
         assert_eq!(y, vec![1.0, -1.0, -1.0, -1.0, -1.0, 1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn encode_targets_rejects_corrupt_label() {
+        let mut y = vec![];
+        encode_targets(&[0, 3], 3, &mut y); // label 3 with n_classes 3
     }
 
     #[test]

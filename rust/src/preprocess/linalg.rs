@@ -185,6 +185,71 @@ pub fn sym_eig(a: &[f64], n: usize) -> Result<SymEig, String> {
     Ok(SymEig { values: d, vectors: z, n })
 }
 
+/// C[m x n] = A[m x k] @ B[k x n], row-major f32 — the reference backend's
+/// forward GEMM (ikj loop order, contiguous inner stride).
+pub fn matmul_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut c = vec![0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+    c
+}
+
+/// C[k x n] = A^T @ B where A is (m x k) and B is (m x n) — the backward
+/// pass's weight-gradient GEMM (dW = X^T dZ).
+pub fn matmul_at_b(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), m * n);
+    let mut c = vec![0f32; k * n];
+    for t in 0..m {
+        let arow = &a[t * k..(t + 1) * k];
+        let brow = &b[t * n..(t + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+    c
+}
+
+/// C[m x k] = A @ B^T where A is (m x n) and B is (k x n) — the backward
+/// pass's activation-gradient GEMM (dX = dZ W^T).
+pub fn matmul_a_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(b.len(), k * n);
+    let mut c = vec![0f32; m * k];
+    for t in 0..m {
+        let arow = &a[t * n..(t + 1) * n];
+        let crow = &mut c[t * k..(t + 1) * k];
+        for (i, cv) in crow.iter_mut().enumerate() {
+            let brow = &b[i * n..(i + 1) * n];
+            let mut acc = 0f32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            *cv = acc;
+        }
+    }
+    c
+}
+
 /// C = A * B for row-major square-free shapes: A is (m x k), B is (k x n).
 pub fn matmul(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
     let mut c = vec![0.0; m * n];
@@ -295,5 +360,48 @@ mod tests {
         let b = vec![5.0, 6.0, 7.0, 8.0];
         let c = matmul(&a, &b, 2, 2, 2);
         assert_eq!(c, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_f32_matches_f64() {
+        let a = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2x3
+        let b = vec![7.0f32, 8.0, 9.0, 10.0, 11.0, 12.0]; // 3x2
+        let c = matmul_f32(&a, &b, 2, 3, 2);
+        assert_eq!(c, vec![58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn transposed_gemms_agree_with_explicit_transpose() {
+        let mut rng = Rng::new(31);
+        let (m, k, n) = (5, 7, 4);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+
+        // A^T B via explicit transpose of A
+        let mut at = vec![0f32; k * m];
+        for t in 0..m {
+            for i in 0..k {
+                at[i * m + t] = a[t * k + i];
+            }
+        }
+        let want = matmul_f32(&at, &b, k, m, n);
+        let got = matmul_at_b(&a, &b, m, k, n);
+        for (x, y) in got.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+
+        // B W^T via explicit transpose of W
+        let mut wt = vec![0f32; n * k];
+        for i in 0..k {
+            for j in 0..n {
+                wt[j * k + i] = w[i * n + j];
+            }
+        }
+        let want = matmul_f32(&b, &wt, m, n, k);
+        let got = matmul_a_bt(&b, &w, m, n, k);
+        for (x, y) in got.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
     }
 }

@@ -3,9 +3,9 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
-
+use crate::util::error::{Context, Result};
 use crate::util::Json;
+use crate::{anyhow, bail};
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct ParamInfo {

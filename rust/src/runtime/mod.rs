@@ -1,14 +1,124 @@
-//! Runtime layer: PJRT client wrapper, artifact manifest, hyper vector.
+//! Runtime layer: the backend-pluggable [`Executor`] abstraction, the
+//! artifact manifest, the hyper vector, and the backends themselves.
 //!
-//! Loads the HLO-text artifacts produced by `make artifacts`
-//! (python/compile/aot.py) and executes them from the Rust hot path —
-//! Python never runs at request time. Pattern adapted from
-//! /opt/xla-example/load_hlo/.
+//! Two backends implement [`Executor`]:
+//!
+//! * [`reference::ReferenceExecutor`] — a pure-Rust f32 implementation of
+//!   Algorithm 1 for the paper's MLP (binarize -> forward -> backward via
+//!   the straight-through estimator -> clipped SGD/Nesterov/ADAM update).
+//!   Always available; the default.
+//! * `session::Model` — the PJRT path executing AOT-lowered HLO artifacts
+//!   (python/compile/aot.py). Gated behind the `pjrt` cargo feature since
+//!   it needs the offline `xla` crate (see DESIGN.md).
+//!
+//! Tensors cross the trait boundary as flat row-major `Vec<f32>` in spec
+//! order — the same wire format the HLO artifacts use — so the trainer,
+//! the packed-export path and the tests are backend-agnostic.
 
 pub mod hyper;
 pub mod manifest;
+pub mod reference;
+#[cfg(feature = "pjrt")]
 pub mod session;
 
 pub use hyper::{Hyper, Mode, Opt, HYPER_LEN};
 pub use manifest::{Manifest, ModelInfo, ParamInfo};
-pub use session::{Model, Runtime, StepMetrics, TrainState};
+pub use reference::ReferenceExecutor;
+#[cfg(feature = "pjrt")]
+pub use session::{Model, Runtime};
+
+use crate::anyhow;
+use crate::util::error::Result;
+
+/// Training state: flat param and optimizer-slot tensors in spec order.
+///
+/// `m`/`v` are the optimizer slots (zeros where the optimizer does not use
+/// them, so every optimizer shares one layout).
+#[derive(Clone, Debug, Default)]
+pub struct TrainState {
+    pub params: Vec<Vec<f32>>,
+    pub m: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+}
+
+impl TrainState {
+    /// Deep copy (tensors are plain host vectors).
+    pub fn snapshot(&self) -> TrainState {
+        self.clone()
+    }
+
+    /// Fetch one param tensor (histograms, feature dumps, packing).
+    pub fn param_vec(&self, idx: usize) -> Result<Vec<f32>> {
+        self.params.get(idx).cloned().ok_or_else(|| {
+            anyhow!("param index {idx} out of range ({} tensors)", self.params.len())
+        })
+    }
+}
+
+/// Scalar metrics returned by one train step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepMetrics {
+    /// mean squared-hinge loss over the batch.
+    pub loss: f32,
+    /// number of misclassified examples in the batch.
+    pub n_err: f32,
+}
+
+/// A training/eval backend: load -> init -> train_step -> eval_step over
+/// flat `Vec<f32>` tensors.
+///
+/// One `Executor` owns one compiled/validated model; the coordinator drives
+/// it without knowing which engine is underneath.
+pub trait Executor {
+    /// The model's spec (param shapes/kinds, batch, classes, input shape).
+    fn info(&self) -> &ModelInfo;
+
+    /// Fresh state: initialized params, zeroed optimizer slots.
+    fn init_state(&self, hyper: &Hyper) -> Result<TrainState>;
+
+    /// One Algorithm-1 step: binarized fwd/bwd + clipped real-weight update.
+    fn train_step(
+        &self,
+        state: &mut TrainState,
+        x: &[f32],
+        y: &[f32],
+        hyper: &Hyper,
+    ) -> Result<StepMetrics>;
+
+    /// Evaluate one (padded) batch -> per-example (loss, err) vectors.
+    fn eval_batch(
+        &self,
+        state: &TrainState,
+        x: &[f32],
+        y: &[f32],
+        hyper: &Hyper,
+    ) -> Result<(Vec<f32>, Vec<f32>)>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn train_state_param_vec_bounds() {
+        let s = TrainState {
+            params: vec![vec![1.0, 2.0]],
+            m: vec![vec![0.0; 2]],
+            v: vec![vec![0.0; 2]],
+        };
+        assert_eq!(s.param_vec(0).unwrap(), vec![1.0, 2.0]);
+        assert!(s.param_vec(1).is_err());
+    }
+
+    #[test]
+    fn snapshot_is_independent() {
+        let mut s = TrainState {
+            params: vec![vec![1.0]],
+            m: vec![vec![0.0]],
+            v: vec![vec![0.0]],
+        };
+        let snap = s.snapshot();
+        s.params[0][0] = 9.0;
+        assert_eq!(snap.params[0][0], 1.0);
+    }
+}

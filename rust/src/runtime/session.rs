@@ -1,18 +1,23 @@
 //! PJRT session: load HLO-text artifacts, compile once, execute many.
 //!
-//! The Python side lowered `init` / `train_step` / `eval_step` per model
-//! (python/compile/aot.py); this module owns the PJRT client and the
-//! training state, feeding params/slots back step after step. CPU PJRT's
-//! "device" memory is host memory, so the literal round-trip per step is a
-//! memcpy — measured in EXPERIMENTS.md par.Perf.
+//! Gated behind the `pjrt` cargo feature: it needs the offline `xla` crate
+//! (see DESIGN.md).  The Python side lowered `init` / `train_step` /
+//! `eval_step` per model (python/compile/aot.py); this module owns the
+//! PJRT client and adapts the artifacts to the backend-agnostic
+//! [`Executor`] trait.  State crosses the trait boundary as flat
+//! `Vec<f32>` tensors; CPU PJRT's "device" memory is host memory, so the
+//! literal round-trip per step is a memcpy.
 
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
 use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::util::error::{Context, Result};
+use crate::{anyhow, bail};
 
 use super::hyper::Hyper;
 use super::manifest::ModelInfo;
+use super::{Executor, StepMetrics, TrainState};
 
 /// Shared PJRT client (CPU).
 pub struct Runtime {
@@ -21,17 +26,18 @@ pub struct Runtime {
 
 impl Runtime {
     pub fn cpu() -> Result<Runtime> {
-        Ok(Runtime { client: PjRtClient::cpu().context("create PJRT CPU client")? })
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("create PJRT CPU client: {e}"))?;
+        Ok(Runtime { client })
     }
 
     fn compile(&self, path: &Path) -> Result<PjRtLoadedExecutable> {
         let proto = HloModuleProto::from_text_file(
             path.to_str().context("non-utf8 artifact path")?,
         )
-        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        .map_err(|e| anyhow!("parse HLO text {}: {e}", path.display()))?;
         self.client
             .compile(&XlaComputation::from_proto(&proto))
-            .with_context(|| format!("compile {}", path.display()))
+            .map_err(|e| anyhow!("compile {}: {e}", path.display()))
     }
 
     /// Load and compile a model's three artifacts.
@@ -53,42 +59,6 @@ pub struct Model {
     eval: PjRtLoadedExecutable,
 }
 
-/// Training state: flat param and optimizer-slot literals in spec order.
-pub struct TrainState {
-    pub params: Vec<Literal>,
-    pub m: Vec<Literal>,
-    pub v: Vec<Literal>,
-}
-
-impl TrainState {
-    /// Deep-copy (literal data is host memory under CPU PJRT).
-    pub fn snapshot(&self) -> Result<TrainState> {
-        let copy = |ls: &Vec<Literal>| -> Result<Vec<Literal>> {
-            ls.iter()
-                .map(|l| {
-                    let v = l.to_vec::<f32>()?;
-                    let shape = l.array_shape()?;
-                    let dims: Vec<i64> = shape.dims().to_vec();
-                    Ok(Literal::vec1(&v).reshape(&dims)?)
-                })
-                .collect()
-        };
-        Ok(TrainState { params: copy(&self.params)?, m: copy(&self.m)?, v: copy(&self.v)? })
-    }
-
-    /// Fetch one param tensor to host (histograms, feature dumps, packing).
-    pub fn param_vec(&self, idx: usize) -> Result<Vec<f32>> {
-        Ok(self.params[idx].to_vec::<f32>()?)
-    }
-}
-
-/// Scalar metrics returned by one train step.
-#[derive(Clone, Copy, Debug)]
-pub struct StepMetrics {
-    pub loss: f32,
-    pub n_err: f32,
-}
-
 impl Model {
     fn n(&self) -> usize {
         self.info.params.len()
@@ -100,7 +70,9 @@ impl Model {
         if x.len() != want {
             bail!("x has {} elements, model expects {}", x.len(), want);
         }
-        Ok(Literal::vec1(x).reshape(&dims)?)
+        Literal::vec1(x)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape x literal: {e}"))
     }
 
     fn literal_y(&self, y: &[f32]) -> Result<Literal> {
@@ -109,25 +81,71 @@ impl Model {
         if y.len() != (b * c) as usize {
             bail!("y has {} elements, expected {}", y.len(), b * c);
         }
-        Ok(Literal::vec1(y).reshape(&[b, c])?)
+        Literal::vec1(y)
+            .reshape(&[b, c])
+            .map_err(|e| anyhow!("reshape y literal: {e}"))
+    }
+
+    /// Flat tensor -> shaped literal for param index `i`.
+    fn literal_param(&self, i: usize, data: &[f32]) -> Result<Literal> {
+        let dims: Vec<i64> = self.info.params[i].shape.iter().map(|&d| d as i64).collect();
+        Literal::vec1(data)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape param {}: {e}", self.info.params[i].name))
+    }
+
+    fn state_literals(&self, state: &TrainState) -> Result<Vec<Literal>> {
+        let n = self.n();
+        if state.params.len() != n || state.m.len() != n || state.v.len() != n {
+            bail!("state has {} tensors, model expects {}", state.params.len(), n);
+        }
+        let mut out = Vec::with_capacity(3 * n);
+        for group in [&state.params, &state.m, &state.v] {
+            for (i, t) in group.iter().enumerate() {
+                out.push(self.literal_param(i, t)?);
+            }
+        }
+        Ok(out)
+    }
+
+    fn to_vecs(parts: Vec<Literal>) -> Result<Vec<Vec<f32>>> {
+        parts
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("literal to host: {e}")))
+            .collect()
+    }
+}
+
+impl Executor for Model {
+    fn info(&self) -> &ModelInfo {
+        &self.info
     }
 
     /// Run the init artifact -> fresh TrainState.
-    pub fn init_state(&self, hyper: &Hyper) -> Result<TrainState> {
+    fn init_state(&self, hyper: &Hyper) -> Result<TrainState> {
         let hv = Literal::vec1(&hyper.to_vec());
-        let out = self.init.execute::<Literal>(&[hv])?[0][0].to_literal_sync()?;
-        let mut parts = out.to_tuple()?;
+        let out = self
+            .init
+            .execute::<Literal>(&[hv])
+            .map_err(|e| anyhow!("init execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("init fetch: {e}"))?;
+        let mut parts = out.to_tuple().map_err(|e| anyhow!("init untuple: {e}"))?;
         let n = self.n();
         if parts.len() != 3 * n {
             bail!("init returned {} tensors, expected {}", parts.len(), 3 * n);
         }
         let v = parts.split_off(2 * n);
         let m = parts.split_off(n);
-        Ok(TrainState { params: parts, m, v })
+        Ok(TrainState {
+            params: Model::to_vecs(parts)?,
+            m: Model::to_vecs(m)?,
+            v: Model::to_vecs(v)?,
+        })
     }
 
     /// One Algorithm-1 step: binarized fwd/bwd + clipped real-weight update.
-    pub fn train_step(
+    fn train_step(
         &self,
         state: &mut TrainState,
         x: &[f32],
@@ -138,30 +156,42 @@ impl Model {
         let xl = self.literal_x(x)?;
         let yl = self.literal_y(y)?;
         let hv = Literal::vec1(&hyper.to_vec());
+        let lits = self.state_literals(state)?;
         let mut args: Vec<&Literal> = Vec::with_capacity(3 * n + 3);
-        args.extend(state.params.iter());
-        args.extend(state.m.iter());
-        args.extend(state.v.iter());
+        args.extend(lits.iter());
         args.push(&xl);
         args.push(&yl);
         args.push(&hv);
-        let out = self.train.execute::<&Literal>(&args)?[0][0].to_literal_sync()?;
-        let mut parts = out.to_tuple()?;
+        let out = self
+            .train
+            .execute::<&Literal>(&args)
+            .map_err(|e| anyhow!("train execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("train fetch: {e}"))?;
+        let mut parts = out.to_tuple().map_err(|e| anyhow!("train untuple: {e}"))?;
         if parts.len() != 3 * n + 2 {
             bail!("train returned {} tensors, expected {}", parts.len(), 3 * n + 2);
         }
-        let n_err = parts.pop().unwrap().to_vec::<f32>()?[0];
-        let loss = parts.pop().unwrap().to_vec::<f32>()?[0];
+        let n_err = parts
+            .pop()
+            .unwrap()
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("n_err to host: {e}"))?[0];
+        let loss = parts
+            .pop()
+            .unwrap()
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("loss to host: {e}"))?[0];
         let v = parts.split_off(2 * n);
         let m = parts.split_off(n);
-        state.params = parts;
-        state.m = m;
-        state.v = v;
+        state.params = Model::to_vecs(parts)?;
+        state.m = Model::to_vecs(m)?;
+        state.v = Model::to_vecs(v)?;
         Ok(StepMetrics { loss, n_err })
     }
 
     /// Evaluate one (padded) batch -> per-example (loss, err) vectors.
-    pub fn eval_batch(
+    fn eval_batch(
         &self,
         state: &TrainState,
         x: &[f32],
@@ -171,20 +201,25 @@ impl Model {
         let xl = self.literal_x(x)?;
         let yl = self.literal_y(y)?;
         let hv = Literal::vec1(&hyper.to_vec());
+        let mut lits = Vec::with_capacity(self.n());
+        for (i, t) in state.params.iter().enumerate() {
+            lits.push(self.literal_param(i, t)?);
+        }
         let mut args: Vec<&Literal> = Vec::with_capacity(self.n() + 3);
-        args.extend(state.params.iter());
+        args.extend(lits.iter());
         args.push(&xl);
         args.push(&yl);
         args.push(&hv);
-        let out = self.eval.execute::<&Literal>(&args)?[0][0].to_literal_sync()?;
-        let (lossv, errv) = out.to_tuple2()?;
-        Ok((lossv.to_vec::<f32>()?, errv.to_vec::<f32>()?))
+        let out = self
+            .eval
+            .execute::<&Literal>(&args)
+            .map_err(|e| anyhow!("eval execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("eval fetch: {e}"))?;
+        let (lossv, errv) = out.to_tuple2().map_err(|e| anyhow!("eval untuple: {e}"))?;
+        Ok((
+            lossv.to_vec::<f32>().map_err(|e| anyhow!("lossv to host: {e}"))?,
+            errv.to_vec::<f32>().map_err(|e| anyhow!("errv to host: {e}"))?,
+        ))
     }
-}
-
-#[cfg(test)]
-mod tests {
-    // Integration tests that need built artifacts live in
-    // rust/tests/integration_runtime.rs; unit-testable pieces are covered
-    // via manifest/hyper tests.
 }

@@ -1,16 +1,18 @@
-//! Utility substrates: PRNG, JSON, CLI parsing, timing.
+//! Utility substrates: errors, PRNG, JSON, CLI parsing, timing.
 //!
-//! The offline crate registry only carries the `xla` dependency tree, so
-//! these replace `rand`, `serde`/`serde_json`, `clap` and parts of
-//! `criterion` respectively (DESIGN.md par.2, "vendored-dependency
+//! The offline crate registry carries no general-purpose dependencies, so
+//! these replace `anyhow`, `rand`, `serde`/`serde_json`, `clap` and parts
+//! of `criterion` respectively (DESIGN.md, "vendored-dependency
 //! constraint").
 
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod rng;
 pub mod timer;
 
 pub use cli::Args;
+pub use error::{Context, Error, Result};
 pub use json::Json;
 pub use rng::{Rng, SplitMix64};
 pub use timer::{LatencyStats, Timer};

@@ -39,8 +39,12 @@ impl Rng {
     }
 
     /// Derive an independent stream (for per-trial / per-worker RNGs).
+    ///
+    /// The tag is mixed through SplitMix64 before xoring: a plain
+    /// `tag.wrapping_mul(...)` is 0 for tag 0, which would make
+    /// `fork(0)` collide with `Rng::new(next_u64())`.
     pub fn fork(&mut self, tag: u64) -> Rng {
-        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+        Rng::new(self.next_u64() ^ SplitMix64::new(tag).next_u64())
     }
 
     #[inline]
@@ -194,5 +198,17 @@ mod tests {
         let mut b = root.fork(1);
         let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
         assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn fork_zero_tag_differs_from_untagged_stream() {
+        // regression: tag 0 used to contribute nothing to the fork seed,
+        // so fork(0) collided with Rng::new(next_u64()).
+        let mut root_a = Rng::new(17);
+        let mut root_b = Rng::new(17);
+        let mut forked = root_a.fork(0);
+        let mut plain = Rng::new(root_b.next_u64());
+        let same = (0..64).filter(|_| forked.next_u64() == plain.next_u64()).count();
+        assert_eq!(same, 0, "fork(0) must not collide with the untagged stream");
     }
 }

@@ -1,29 +1,22 @@
 //! Integration: the packed multiplication-free engine must agree with the
-//! PJRT deterministic-BC evaluation on identical trained parameters —
-//! i.e. paper Sec. 2.6 method 1 has ONE semantics across both engines.
-//! Skipped when artifacts are absent.
+//! reference backend's deterministic-BC evaluation on identical trained
+//! parameters — i.e. paper Sec. 2.6 method 1 has ONE semantics across
+//! both engines.
 
 use binaryconnect::binary::{load_packed, pack_mlp, save_packed};
 use binaryconnect::coordinator::{mnist_opts, train};
 use binaryconnect::data::{synth::synth_mnist, SplitData};
 use binaryconnect::pipeline::{gather_batch, Plan};
 use binaryconnect::preprocess::Standardizer;
-use binaryconnect::runtime::{Hyper, Manifest, Mode, Model, Runtime};
+use binaryconnect::runtime::{Executor, Hyper, Mode, ReferenceExecutor};
 
-fn mlp() -> Option<Model> {
-    let dir = std::path::Path::new("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: no artifacts");
-        return None;
-    }
-    let m = Manifest::load(dir).unwrap();
-    let rt = Runtime::cpu().unwrap();
-    Some(rt.load_model(m.model("mlp").unwrap()).unwrap())
+fn mlp() -> ReferenceExecutor {
+    ReferenceExecutor::builtin("mlp").unwrap()
 }
 
 #[test]
-fn packed_engine_matches_pjrt_det_eval() {
-    let Some(model) = mlp() else { return };
+fn packed_engine_matches_reference_det_eval() {
+    let model = mlp();
     // short real training so BN stats / weights are non-trivial
     let mut train_ds = synth_mnist(1000, 31);
     let mut test_ds = synth_mnist(300, 32);
@@ -34,7 +27,7 @@ fn packed_engine_matches_pjrt_det_eval() {
     let opts = mnist_opts(Mode::Det, 6, 77);
     let r = train(&model, &data, &opts).unwrap();
 
-    let packed = pack_mlp(&model.info, &r.state).unwrap();
+    let packed = pack_mlp(model.info(), &r.state).unwrap();
 
     // disk round trip must be lossless
     let path = std::env::temp_dir().join(format!("bc_it_pack_{}.bcpack", std::process::id()));
@@ -43,7 +36,7 @@ fn packed_engine_matches_pjrt_det_eval() {
     let _ = std::fs::remove_file(&path);
 
     // compare per-example decisions on full batches
-    let batch = model.info.batch;
+    let batch = model.info().batch;
     let idx: Vec<usize> = (0..batch).collect();
     let b = gather_batch(&data.test, &idx, batch, 0);
     let hyper = Hyper { mode: Mode::Det, ..Default::default() };
@@ -53,15 +46,15 @@ fn packed_engine_matches_pjrt_det_eval() {
     let mut disagreements = 0;
     for i in 0..batch {
         let label = data.test.labels[i] as usize;
-        let pjrt_correct = errv[i] == 0.0;
+        let ref_correct = errv[i] == 0.0;
         let packed_correct = preds[i] == label;
-        if pjrt_correct != packed_correct {
+        if ref_correct != packed_correct {
             disagreements += 1;
         }
     }
     // identical math up to f32 summation order; allow a whisker of ties
     assert!(
-        disagreements <= batch / 50,
+        disagreements <= batch.div_ceil(50),
         "{disagreements}/{batch} decision disagreements between engines"
     );
 
@@ -69,16 +62,16 @@ fn packed_engine_matches_pjrt_det_eval() {
     let packed_err = packed.test_error(&data.test, 64);
     assert!(
         (packed_err - r.test_err).abs() < 0.05,
-        "packed {packed_err} vs pjrt {}",
+        "packed {packed_err} vs reference {}",
         r.test_err
     );
 }
 
 #[test]
 fn packed_memory_is_about_32x_smaller() {
-    let Some(model) = mlp() else { return };
+    let model = mlp();
     let state = model.init_state(&Hyper::default()).unwrap();
-    let packed = pack_mlp(&model.info, &state).unwrap();
+    let packed = pack_mlp(model.info(), &state).unwrap();
     let ratio = packed.f32_weight_memory_bytes() as f64 / packed.weight_memory_bytes() as f64;
     assert!(ratio > 28.0, "only {ratio}x");
 }

