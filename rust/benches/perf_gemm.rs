@@ -1,39 +1,93 @@
 //! Performance microbenches for the hot paths:
 //!
+//!   * f32 GEMM kernels: seed-era naive vs blocked (1 thread) vs blocked +
+//!     pool (the kernel-layer speedup, isolated)
 //!   * packed sign-accumulate GEMM vs naive f32 GEMM (inference hot path)
-//!   * reference-backend train/eval step latency per builtin MLP model
+//!   * train/eval step: seed-era baseline path vs the packed/workspace
+//!     fast path, per builtin MLP and at the paper's 3x1024 MLP scale —
+//!     the headline "train-step speedup vs current main" number
 //!
-//! Run: cargo bench --bench perf_gemm [-- --iters N]
+//! Run: cargo bench --bench perf_gemm [-- --iters N] [--json BENCH_perf.json]
+//!
+//! `--json` writes machine-readable results (name, mean_s, iters, shape)
+//! so the perf trajectory is tracked from PR to PR (BENCH_perf.json at the
+//! repo root holds the last committed run; regenerate it with the command
+//! above from `rust/`).
 
-use binaryconnect::bench_harness::{bench, fmt_time, Table};
-use binaryconnect::binary::packed::{dense_f32, BitMatrix};
+use binaryconnect::bench_harness::{bench, fmt_time, JsonReport, Table};
+use binaryconnect::binary::packed::BitMatrix;
+use binaryconnect::kernel;
+use binaryconnect::runtime::reference::mlp_info;
 use binaryconnect::runtime::{Executor, Hyper, Mode, Opt, ReferenceExecutor};
 use binaryconnect::util::error::{Error, Result};
-use binaryconnect::util::{Args, Rng};
+use binaryconnect::util::{pool, Args, Rng};
 
 fn main() -> Result<()> {
     let args = Args::parse().map_err(Error::msg)?;
+    args.check_known(&["iters", "json"]).map_err(Error::msg)?;
     let iters = args.usize("iters", 15);
+    let mut report = JsonReport::new();
+    println!("threads: {}", pool::global().n_threads);
+    report.metric("threads", pool::global().n_threads as f64);
 
-    // ---------- packed vs f32 GEMM ----------
-    println!("packed sign-GEMM vs f32 GEMM (batch 64):");
-    let mut t = Table::new(&["k x n", "f32", "packed", "ratio", "weight mem ratio"]);
+    // ---------- f32 GEMM kernels: naive vs blocked vs blocked+pool ----------
+    println!("\nf32 GEMM kernel (C = A·B, batch 100):");
+    let mut t = Table::new(&["k x n", "naive (seed)", "blocked 1T", "blocked+pool", "speedup"]);
     let mut rng = Rng::new(5);
+    for (k, n) in [(256, 256), (1024, 1024)] {
+        let m = 100;
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let mut c = vec![0f32; m * n];
+        let shape = format!("{m}x{k}x{n}");
+        let rn = bench("gemm_naive", 2, iters, || {
+            kernel::gemm_naive(&a, &b, m, k, n, &mut c);
+            std::hint::black_box(&c);
+        });
+        let rs = bench("gemm_serial", 2, iters, || {
+            kernel::gemm_serial(&a, &b, m, k, n, &mut c);
+            std::hint::black_box(&c);
+        });
+        let rp = bench("gemm_pool", 2, iters, || {
+            kernel::gemm(&a, &b, m, k, n, &mut c);
+            std::hint::black_box(&c);
+        });
+        report.add(&rn, &shape);
+        report.add(&rs, &shape);
+        report.add(&rp, &shape);
+        t.row(&[
+            format!("{k}x{n}"),
+            fmt_time(rn.mean_s),
+            fmt_time(rs.mean_s),
+            fmt_time(rp.mean_s),
+            format!("{:.2}x", rn.mean_s / rp.mean_s),
+        ]);
+    }
+    t.print();
+
+    // ---------- packed sign-GEMM vs f32 GEMM ----------
+    println!("\npacked sign-GEMM vs f32 GEMM (batch 64):");
+    let mut t = Table::new(&["k x n", "f32 naive", "packed", "ratio", "weight mem ratio"]);
     for (k, n) in [(256, 256), (784, 1024), (1024, 1024)] {
         let b = 64;
         let w: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
         let x: Vec<f32> = (0..b * k).map(|_| rng.normal()).collect();
         let bm = BitMatrix::pack(&w, k, n);
+        let shape = format!("{k}x{n} b={b}");
         let mut y = vec![0f32; b * n];
-        let rf = bench("f32", 2, iters, || {
-            dense_f32(&x, &w, b, k, n, &mut y);
+        let rf = bench("f32_naive", 2, iters, || {
+            kernel::gemm_naive(&x, &w, b, k, n, &mut y);
             std::hint::black_box(&y);
         });
         let mut y = vec![0f32; b * n];
+        let mut xt = vec![0f32; k * b];
+        let mut totals = vec![0f32; b];
         let rp = bench("packed", 2, iters, || {
-            bm.matmul(&x, b, &mut y);
+            bm.matmul_scaled_into(&x, b, 1.0, &mut y, &mut xt, &mut totals);
             std::hint::black_box(&y);
         });
+        report.add(&rf, &shape);
+        report.add(&rp, &shape);
         t.row(&[
             format!("{k}x{n}"),
             fmt_time(rf.mean_s),
@@ -44,39 +98,79 @@ fn main() -> Result<()> {
     }
     t.print();
 
-    // ---------- reference-backend step latency ----------
-    println!("\nreference-backend train/eval step latency (builtin MLPs):");
-    let mut t2 = Table::new(&["model", "train step", "eval step", "steps/s (train)"]);
-    for name in ["mlp_small", "mlp", "cifar_mlp"] {
-        let model = ReferenceExecutor::builtin(name)?;
-        let mut state = model.init_state(&Hyper::default())?;
-        let nx: usize = model.info().input_shape.iter().product();
+    // ---------- train/eval step: baseline (seed path) vs fast ----------
+    println!("\ntrain/eval step: seed-era baseline vs packed+workspace fast path (det/ADAM):");
+    let mut t2 = Table::new(&[
+        "model",
+        "train base",
+        "train fast",
+        "speedup",
+        "eval fast",
+        "steps/s (fast)",
+    ]);
+    // mlp1024 is the paper's MNIST scale: 784 -> 3x1024 -> 10, batch 100.
+    let customs = [
+        ("mlp", None),
+        ("cifar_mlp", None),
+        ("mlp1024", Some(mlp_info("mlp1024", 784, 1024, 3, 10, 100))),
+    ];
+    for (name, custom) in customs {
+        let fast = match &custom {
+            Some(info) => ReferenceExecutor::new(info.clone())?,
+            None => ReferenceExecutor::builtin(name)?,
+        };
+        let mut base = match custom {
+            Some(info) => ReferenceExecutor::new(info)?,
+            None => ReferenceExecutor::builtin(name)?,
+        };
+        base.set_fast(false);
+        let mut state_f = fast.init_state(&Hyper::default())?;
+        let mut state_b = fast.init_state(&Hyper::default())?;
+        let nx: usize = fast.info().input_shape.iter().product();
         let mut r = Rng::new(9);
         let x: Vec<f32> = (0..nx).map(|_| r.normal()).collect();
-        let bc = model.info().batch * model.info().classes;
+        let bc = fast.info().batch * fast.info().classes;
         let mut y = vec![-1.0f32; bc];
-        for i in 0..model.info().batch {
-            y[i * model.info().classes + r.below(model.info().classes)] = 1.0;
+        for i in 0..fast.info().batch {
+            y[i * fast.info().classes + r.below(fast.info().classes)] = 1.0;
         }
-        let mut step = 0u32;
         let h0 = Hyper { lr: 0.001, mode: Mode::Det, opt: Opt::Adam, ..Default::default() };
-        let rtr = bench("train", 3, iters, || {
+        let mut step = 0u32;
+        let rb = bench("train_baseline", 2, iters, || {
             step += 1;
             let h = Hyper { step, seed: step, ..h0.clone() };
-            model.train_step(&mut state, &x, &y, &h).unwrap();
+            base.train_step(&mut state_b, &x, &y, &h).unwrap();
         });
-        let rev = bench("eval", 3, iters, || {
-            model.eval_batch(&state, &x, &y, &h0).unwrap();
+        let mut step = 0u32;
+        let rf = bench("train_fast", 2, iters, || {
+            step += 1;
+            let h = Hyper { step, seed: step, ..h0.clone() };
+            fast.train_step(&mut state_f, &x, &y, &h).unwrap();
         });
+        let re = bench("eval_fast", 2, iters, || {
+            fast.eval_batch(&state_f, &x, &y, &h0).unwrap();
+        });
+        let speedup = rb.mean_s / rf.mean_s;
+        report.add(&rb, name);
+        report.add(&rf, name);
+        report.add(&re, name);
+        report.metric(&format!("train_step_speedup_{name}"), speedup);
         t2.row(&[
             name.to_string(),
-            fmt_time(rtr.mean_s),
-            fmt_time(rev.mean_s),
-            format!("{:.1}", 1.0 / rtr.mean_s),
+            fmt_time(rb.mean_s),
+            fmt_time(rf.mean_s),
+            format!("{speedup:.2}x"),
+            fmt_time(re.mean_s),
+            format!("{:.1}", 1.0 / rf.mean_s),
         ]);
     }
     t2.print();
-    println!("\n(per-step cost is dominated by the three dense GEMMs; see hw_claims");
-    println!(" for the multiplier-count model these latencies put in context)");
+    println!("\n(speedup = seed-era dense/naive/allocating step vs packed sign-GEMM +");
+    println!(" blocked multithreaded kernels + zero-alloc workspace; see EXPERIMENTS.md)");
+
+    if let Some(path) = args.opt_str("json") {
+        report.save("perf_gemm", std::path::Path::new(&path))?;
+        eprintln!("wrote {path}");
+    }
     Ok(())
 }

@@ -1,10 +1,16 @@
 //! Benchmark harness substrate (criterion is not in the offline registry).
 //!
-//! Provides warmup + timed iterations with mean/p50/p99 reporting, and a
+//! Provides warmup + timed iterations with mean/p50/p99 reporting, a
 //! paper-style table printer used by every `benches/*.rs` target to emit
-//! the same rows the paper's tables/figures report.
+//! the same rows the paper's tables/figures report, and a machine-readable
+//! JSON sink ([`JsonReport`], the `--json <path>` flag) so perf
+//! trajectories can be tracked across PRs (`perf_gemm` writes
+//! `BENCH_perf.json` with it).
 
-use crate::util::{LatencyStats, Timer};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::{Json, LatencyStats, Timer};
 
 /// Result of timing one benchmark case.
 #[derive(Clone, Debug)]
@@ -93,6 +99,51 @@ impl Table {
     }
 }
 
+/// Machine-readable bench results accumulator for `--json <path>`.
+///
+/// Each [`JsonReport::add`] records `{name, mean_s, p50_s, min_s, iters,
+/// shape}`; [`JsonReport::metric`] records derived scalars (speedup
+/// ratios). [`JsonReport::save`] writes one deterministic JSON object.
+#[derive(Default)]
+pub struct JsonReport {
+    entries: Vec<Json>,
+}
+
+impl JsonReport {
+    pub fn new() -> JsonReport {
+        JsonReport::default()
+    }
+
+    /// Record one timed result and its problem shape (e.g. "1024x1024 b=100").
+    pub fn add(&mut self, r: &BenchResult, shape: &str) {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(r.name.clone()));
+        m.insert("mean_s".to_string(), Json::Num(r.mean_s));
+        m.insert("p50_s".to_string(), Json::Num(r.p50_s));
+        m.insert("min_s".to_string(), Json::Num(r.min_s));
+        m.insert("iters".to_string(), Json::Num(r.iters as f64));
+        m.insert("shape".to_string(), Json::Str(shape.to_string()));
+        self.entries.push(Json::Obj(m));
+    }
+
+    /// Record a derived scalar (e.g. a speedup ratio).
+    pub fn metric(&mut self, name: &str, value: f64) {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(name.to_string()));
+        m.insert("value".to_string(), Json::Num(value));
+        self.entries.push(Json::Obj(m));
+    }
+
+    /// Write `{"bench": <bench>, "generated": true, "results": [...]}`.
+    pub fn save(&self, bench: &str, path: &Path) -> std::io::Result<()> {
+        let mut top = BTreeMap::new();
+        top.insert("bench".to_string(), Json::Str(bench.to_string()));
+        top.insert("generated".to_string(), Json::Bool(true));
+        top.insert("results".to_string(), Json::Arr(self.entries.clone()));
+        std::fs::write(path, Json::Obj(top).to_string())
+    }
+}
+
 /// Format seconds human-readably.
 pub fn fmt_time(s: f64) -> String {
     if s < 1e-6 {
@@ -143,5 +194,29 @@ mod tests {
     fn table_checks_arity() {
         let mut t = Table::new(&["a"]);
         t.row(&["x".into(), "y".into()]);
+    }
+
+    #[test]
+    fn json_report_roundtrips() {
+        let mut rep = JsonReport::new();
+        let r = bench("unit", 0, 3, || {
+            std::hint::black_box(1 + 1);
+        });
+        rep.add(&r, "2x2");
+        rep.metric("speedup", 4.25);
+        let path = std::env::temp_dir()
+            .join(format!("bc_bench_json_{}.json", std::process::id()));
+        rep.save("perf_test", &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("perf_test"));
+        assert_eq!(j.get("generated").unwrap().as_bool(), Some(true));
+        let results = j.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].get("name").unwrap().as_str(), Some("unit"));
+        assert_eq!(results[0].get("iters").unwrap().as_usize(), Some(3));
+        assert_eq!(results[0].get("shape").unwrap().as_str(), Some("2x2"));
+        assert_eq!(results[1].get("value").unwrap().as_f64(), Some(4.25));
     }
 }

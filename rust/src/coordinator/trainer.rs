@@ -177,6 +177,7 @@ pub fn train(model: &dyn Executor, data: &SplitData, opts: &TrainOpts) -> Result
         }
         let train_loss = loss_sum / seen.max(1) as f64;
         let train_err = err_sum / seen.max(1) as f64;
+        let train_seconds = t.elapsed_s();
 
         let (_, val_err) = evaluate(model, &state, &data.val, &eval_hyper)?;
         let rec = EpochRecord {
@@ -188,9 +189,12 @@ pub fn train(model: &dyn Executor, data: &SplitData, opts: &TrainOpts) -> Result
             seconds: t.elapsed_s(),
         };
         if opts.verbose {
+            // train-phase throughput only (rec.seconds also covers the
+            // validation pass)
+            let steps_per_s = pf.n_batches as f64 / train_seconds.max(1e-9);
             eprintln!(
-                "epoch {:>3}  lr {:.5}  train loss {:.4}  train err {:.4}  val err {:.4}  ({:.1}s)",
-                epoch, lr, train_loss, train_err, val_err, rec.seconds
+                "epoch {:>3}  lr {:.5}  train loss {:.4}  train err {:.4}  val err {:.4}  ({:.1}s, {:.0} steps/s)",
+                epoch, lr, train_loss, train_err, val_err, rec.seconds, steps_per_s
             );
         }
         curves.push(rec);

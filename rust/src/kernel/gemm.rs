@@ -1,0 +1,416 @@
+//! Blocked f32 GEMM kernels (C = A·B, A^T·B, A·B^T).
+//!
+//! Layout is row-major throughout. The blocked kernels tile k and n so the
+//! streamed B panel stays cache-resident across output rows, process four
+//! output rows per pass to amortize that panel traffic, and keep the
+//! seed's zero-skip (activations are ~half zeros after ReLU/dropout, so
+//! skipping a zero A value skips a whole vector row update). Parallelism
+//! is over disjoint output-row blocks via `util::pool::par_rows`; a row is
+//! never split across threads and its (k-tile, n-tile) reduction order is
+//! fixed, so results are identical for any thread count.
+
+use crate::util::pool::{global, par_rows, SendPtr};
+
+/// k-tile: the B panel rows kept hot while sweeping output rows.
+const KB: usize = 256;
+/// n-tile: the B panel width; KB*NB*4 = 256 KiB stays L2-resident.
+const NB: usize = 256;
+/// i-tile for the outer-product A^T·B kernel's C block.
+const IB: usize = 64;
+/// Below this many multiply-adds, dispatch overhead beats the pool.
+const PAR_MIN_WORK: usize = 1 << 16;
+
+fn row_grain(rows: usize) -> usize {
+    let t = global().n_threads;
+    rows.div_ceil(t * 4).max(4)
+}
+
+// ---------------------------------------------------------------------------
+// C[m x n] = A[m x k] @ B[k x n]
+// ---------------------------------------------------------------------------
+
+/// Compute rows `lo..hi` of C = A·B into `c` (which holds exactly those
+/// rows). Fixed (kb, jb) tile order per row -> thread-count independent.
+fn gemm_rows(a: &[f32], b: &[f32], k: usize, n: usize, lo: usize, hi: usize, c: &mut [f32]) {
+    c.fill(0.0);
+    let rows = hi - lo;
+    let mut kb = 0;
+    while kb < k {
+        let ke = (kb + KB).min(k);
+        let mut jb = 0;
+        while jb < n {
+            let je = (jb + NB).min(n);
+            let mut r = 0usize;
+            // 4-row strips: one B-panel read feeds four C rows.
+            while r + 4 <= rows {
+                let i = lo + r;
+                let (c01, c23) = c[r * n..(r + 4) * n].split_at_mut(2 * n);
+                let (c0, c1) = c01.split_at_mut(n);
+                let (c2, c3) = c23.split_at_mut(n);
+                let c0 = &mut c0[jb..je];
+                let c1 = &mut c1[jb..je];
+                let c2 = &mut c2[jb..je];
+                let c3 = &mut c3[jb..je];
+                for p in kb..ke {
+                    let a0 = a[i * k + p];
+                    let a1 = a[(i + 1) * k + p];
+                    let a2 = a[(i + 2) * k + p];
+                    let a3 = a[(i + 3) * k + p];
+                    if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                        continue;
+                    }
+                    let br = &b[p * n + jb..p * n + je];
+                    for ((((cv0, cv1), cv2), cv3), &bv) in c0
+                        .iter_mut()
+                        .zip(c1.iter_mut())
+                        .zip(c2.iter_mut())
+                        .zip(c3.iter_mut())
+                        .zip(br)
+                    {
+                        *cv0 += a0 * bv;
+                        *cv1 += a1 * bv;
+                        *cv2 += a2 * bv;
+                        *cv3 += a3 * bv;
+                    }
+                }
+                r += 4;
+            }
+            // tail rows, one at a time (same per-row order as the strip)
+            while r < rows {
+                let i = lo + r;
+                let crow = &mut c[r * n + jb..r * n + je];
+                for p in kb..ke {
+                    let av = a[i * k + p];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let br = &b[p * n + jb..p * n + je];
+                    for (cv, &bv) in crow.iter_mut().zip(br) {
+                        *cv += av * bv;
+                    }
+                }
+                r += 1;
+            }
+            jb = je;
+        }
+        kb = ke;
+    }
+}
+
+/// C = A·B, blocked + parallel (the default forward kernel).
+pub fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "gemm: A length");
+    assert_eq!(b.len(), k * n, "gemm: B length");
+    assert_eq!(c.len(), m * n, "gemm: C length");
+    if m * k * n < PAR_MIN_WORK {
+        gemm_rows(a, b, k, n, 0, m, c);
+        return;
+    }
+    let cp = SendPtr(c.as_mut_ptr());
+    par_rows(m, row_grain(m), &|lo, hi| {
+        // SAFETY: par_rows hands out disjoint row ranges of C.
+        let rows = unsafe { cp.slice(lo * n, (hi - lo) * n) };
+        gemm_rows(a, b, k, n, lo, hi, rows);
+    });
+}
+
+/// C = A·B, blocked, single-threaded; bit-for-bit equal to [`gemm`].
+pub fn gemm_serial(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    gemm_rows(a, b, k, n, 0, m, c);
+}
+
+/// The seed's ikj loop (one row of B streamed per A value, zero-skip):
+/// correctness oracle and "current main" perf baseline.
+pub fn gemm_naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    for (arow, crow) in a.chunks_exact(k).zip(c.chunks_exact_mut(n)) {
+        crow.fill(0.0);
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// C[k x n] = A^T @ B   (A is m x k, B is m x n) — the dW = X^T·dZ kernel
+// ---------------------------------------------------------------------------
+
+/// Compute C rows `ilo..ihi` (features of A) into `c`. Outer-product form
+/// preserves the zero-skip on A (post-ReLU activations): a zero
+/// activation skips an entire row update of width NB.
+#[allow(clippy::too_many_arguments)]
+fn at_b_rows(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    ilo: usize,
+    ihi: usize,
+    c: &mut [f32],
+) {
+    c.fill(0.0);
+    let rows = ihi - ilo;
+    let mut jb = 0;
+    while jb < n {
+        let je = (jb + NB).min(n);
+        let mut ib = 0;
+        while ib < rows {
+            let ie = (ib + IB).min(rows);
+            for t in 0..m {
+                let arow = &a[t * k + ilo + ib..t * k + ilo + ie];
+                let brow = &b[t * n + jb..t * n + je];
+                for (r2, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let base = (ib + r2) * n;
+                    let crow = &mut c[base + jb..base + je];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * bv;
+                    }
+                }
+            }
+            ib = ie;
+        }
+        jb = je;
+    }
+}
+
+/// C = A^T·B, blocked + parallel over C-row (feature) blocks.
+pub fn gemm_at_b(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "gemm_at_b: A length");
+    assert_eq!(b.len(), m * n, "gemm_at_b: B length");
+    assert_eq!(c.len(), k * n, "gemm_at_b: C length");
+    if m * k * n < PAR_MIN_WORK {
+        at_b_rows(a, b, m, k, n, 0, k, c);
+        return;
+    }
+    let cp = SendPtr(c.as_mut_ptr());
+    par_rows(k, row_grain(k), &|ilo, ihi| {
+        // SAFETY: disjoint C row ranges.
+        let rows = unsafe { cp.slice(ilo * n, (ihi - ilo) * n) };
+        at_b_rows(a, b, m, k, n, ilo, ihi, rows);
+    });
+}
+
+/// C = A^T·B, blocked, single-threaded; bit-for-bit equal to [`gemm_at_b`].
+pub fn gemm_at_b_serial(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), m * n);
+    assert_eq!(c.len(), k * n);
+    at_b_rows(a, b, m, k, n, 0, k, c);
+}
+
+/// The seed's A^T·B loop (per-sample outer products, zero-skip).
+pub fn gemm_at_b_naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), m * n);
+    assert_eq!(c.len(), k * n);
+    c.fill(0.0);
+    for (arow, brow) in a.chunks_exact(k).zip(b.chunks_exact(n)) {
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// C[m x k] = A @ B^T   (A is m x n, B is k x n) — the dX = dZ·W^T kernel
+// ---------------------------------------------------------------------------
+
+/// Eight-accumulator dot product; fixed reduction order (chunks of 8, then
+/// pairwise fold, then the tail) so every call site agrees bit-for-bit.
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = [0f32; 8];
+    let mut ac = a.chunks_exact(8);
+    let mut bc = b.chunks_exact(8);
+    for (av, bv) in (&mut ac).zip(&mut bc) {
+        for ((s, &x), &y) in acc.iter_mut().zip(av).zip(bv) {
+            *s += x * y;
+        }
+    }
+    let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3]))
+        + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for (&av, &bv) in ac.remainder().iter().zip(bc.remainder()) {
+        s += av * bv;
+    }
+    s
+}
+
+/// Compute C rows `lo..hi` (batch rows) into `c`; n is tiled so the B rows
+/// being dotted stay cache-resident.
+fn a_bt_rows(a: &[f32], b: &[f32], n: usize, k: usize, lo: usize, hi: usize, c: &mut [f32]) {
+    c.fill(0.0);
+    let mut nb = 0;
+    while nb < n {
+        let ne = (nb + NB).min(n);
+        for (r, crow) in c.chunks_exact_mut(k).enumerate() {
+            let t = lo + r;
+            let arow = &a[t * n + nb..t * n + ne];
+            for (i, cv) in crow.iter_mut().enumerate() {
+                let brow = &b[i * n + nb..i * n + ne];
+                *cv += dot(arow, brow);
+            }
+        }
+        nb = ne;
+    }
+}
+
+/// C = A·B^T, blocked + parallel over C-row (batch) blocks.
+pub fn gemm_a_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, c: &mut [f32]) {
+    assert_eq!(a.len(), m * n, "gemm_a_bt: A length");
+    assert_eq!(b.len(), k * n, "gemm_a_bt: B length");
+    assert_eq!(c.len(), m * k, "gemm_a_bt: C length");
+    if m * k * n < PAR_MIN_WORK {
+        a_bt_rows(a, b, n, k, 0, m, c);
+        return;
+    }
+    let cp = SendPtr(c.as_mut_ptr());
+    par_rows(m, row_grain(m), &|lo, hi| {
+        // SAFETY: disjoint C row ranges.
+        let rows = unsafe { cp.slice(lo * k, (hi - lo) * k) };
+        a_bt_rows(a, b, n, k, lo, hi, rows);
+    });
+}
+
+/// C = A·B^T, blocked, single-threaded; bit-for-bit equal to [`gemm_a_bt`].
+pub fn gemm_a_bt_serial(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, c: &mut [f32]) {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * k);
+    a_bt_rows(a, b, n, k, 0, m, c);
+}
+
+/// The seed's A·B^T loop (single-accumulator row dots).
+pub fn gemm_a_bt_naive(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, c: &mut [f32]) {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * k);
+    for (arow, crow) in a.chunks_exact(n).zip(c.chunks_exact_mut(k)) {
+        for (i, cv) in crow.iter_mut().enumerate() {
+            let brow = &b[i * n..(i + 1) * n];
+            let mut acc = 0f32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            *cv = acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand(len: usize, seed: u64, sparsity: f32) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..len)
+            .map(|_| if rng.uniform() < sparsity { 0.0 } else { rng.normal() })
+            .collect()
+    }
+
+    fn close(xs: &[f32], ys: &[f32], tol: f32) {
+        assert_eq!(xs.len(), ys.len());
+        for (i, (x, y)) in xs.iter().zip(ys).enumerate() {
+            assert!((x - y).abs() <= tol * (1.0 + y.abs()), "[{i}] {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn blocked_gemm_matches_naive_across_shapes() {
+        // shapes straddling the KB/NB tile edges and non-multiples of 4
+        for (m, k, n, seed) in
+            [(1, 1, 1, 1u64), (3, 5, 7, 2), (7, 257, 300, 3), (100, 256, 256, 4), (13, 300, 9, 5)]
+        {
+            let a = rand(m * k, seed, 0.4);
+            let b = rand(k * n, seed + 50, 0.0);
+            let mut want = vec![0f32; m * n];
+            gemm_naive(&a, &b, m, k, n, &mut want);
+            let mut got = vec![0f32; m * n];
+            gemm(&a, &b, m, k, n, &mut got);
+            close(&got, &want, 1e-4);
+            let mut st = vec![0f32; m * n];
+            gemm_serial(&a, &b, m, k, n, &mut st);
+            assert_eq!(st, got, "pooled vs serial must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn blocked_at_b_matches_naive() {
+        for (m, k, n, seed) in [(4, 6, 3, 10u64), (33, 300, 70, 11), (64, 128, 257, 12)] {
+            let a = rand(m * k, seed, 0.5);
+            let b = rand(m * n, seed + 50, 0.0);
+            let mut want = vec![0f32; k * n];
+            gemm_at_b_naive(&a, &b, m, k, n, &mut want);
+            let mut got = vec![0f32; k * n];
+            gemm_at_b(&a, &b, m, k, n, &mut got);
+            close(&got, &want, 1e-4);
+            let mut st = vec![0f32; k * n];
+            gemm_at_b_serial(&a, &b, m, k, n, &mut st);
+            assert_eq!(st, got);
+        }
+    }
+
+    #[test]
+    fn blocked_a_bt_matches_naive() {
+        for (m, n, k, seed) in [(5, 9, 4, 20u64), (40, 300, 33, 21), (64, 257, 128, 22)] {
+            let a = rand(m * n, seed, 0.0);
+            let b = rand(k * n, seed + 50, 0.0);
+            let mut want = vec![0f32; m * k];
+            gemm_a_bt_naive(&a, &b, m, n, k, &mut want);
+            let mut got = vec![0f32; m * k];
+            gemm_a_bt(&a, &b, m, n, k, &mut got);
+            close(&got, &want, 1e-4);
+            let mut st = vec![0f32; m * k];
+            gemm_a_bt_serial(&a, &b, m, n, k, &mut st);
+            assert_eq!(st, got);
+        }
+    }
+
+    #[test]
+    fn kernels_overwrite_stale_output() {
+        // C buffers are reused across steps by the workspace; every kernel
+        // must fully overwrite, never accumulate into, stale contents.
+        let a = vec![1.0f32, 2.0];
+        let b = vec![3.0f32, 4.0];
+        let mut c = vec![99.0f32];
+        gemm(&a, &b, 1, 2, 1, &mut c);
+        assert_eq!(c, vec![11.0]);
+        let mut c2 = vec![99.0f32, 99.0, 99.0, 99.0];
+        gemm_at_b(&a, &b, 1, 2, 2, &mut c2); // A 1x2, B 1x2 -> C 2x2
+        assert_eq!(c2, vec![3.0, 4.0, 6.0, 8.0]);
+        let mut c3 = vec![99.0f32];
+        gemm_a_bt(&a, &b, 1, 2, 1, &mut c3); // A 1x2, B 1x2 -> C 1x1
+        assert_eq!(c3, vec![11.0]);
+    }
+
+    #[test]
+    fn dot_fixed_order_is_stable() {
+        let a = rand(37, 7, 0.0);
+        let b = rand(37, 8, 0.0);
+        assert_eq!(dot(&a, &b), dot(&a, &b));
+        // against f64 reference within f32 noise
+        let want: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+        assert!((dot(&a, &b) as f64 - want).abs() < 1e-3 * (1.0 + want.abs()));
+    }
+}

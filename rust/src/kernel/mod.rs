@@ -1,0 +1,29 @@
+//! The crate's hot-path kernel layer.
+//!
+//! One home for every dense f32 GEMM the training loop, the preprocessing
+//! pipeline and the packed engine touch (previously duplicated between
+//! `preprocess::linalg` and `binary::packed::dense_f32`). Three variants
+//! per operation:
+//!
+//! * `gemm*`          — register-blocked, cache-tiled, parallelized over
+//!   output-row blocks on the [`util::pool`](crate::util::pool) thread
+//!   pool. The default everywhere.
+//! * `gemm*_serial`   — the same blocked kernel on one thread. Per output
+//!   row the two are **bit-for-bit identical** (rows never split across
+//!   threads and the reduction order per row is fixed), which the
+//!   `prop_invariants` suite pins down.
+//! * `gemm*_naive`    — the seed's allocation-era loops, kept as the
+//!   correctness oracle and as the honest "current main" baseline the
+//!   `perf_gemm` bench measures speedups against.
+//!
+//! All kernels write into caller-provided `&mut [f32]` buffers so the
+//! training loop can run allocation-free out of its per-executor
+//! workspace (`runtime/reference.rs`); the bit-packed sign kernels live
+//! with their data layout in `binary/packed.rs`.
+
+mod gemm;
+
+pub use gemm::{
+    gemm, gemm_a_bt, gemm_a_bt_naive, gemm_a_bt_serial, gemm_at_b, gemm_at_b_naive,
+    gemm_at_b_serial, gemm_naive, gemm_serial,
+};

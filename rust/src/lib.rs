@@ -12,10 +12,12 @@
 //! * **Layer 3** (this crate) — the coordinator: datasets, preprocessing,
 //!   minibatch pipeline, a backend-pluggable [`runtime::Executor`] with a
 //!   pure-Rust reference backend (and, behind the `pjrt` cargo feature,
-//!   the PJRT runtime executing the AOT artifacts), the experiment driver
-//!   reproducing every table/figure, a bit-packed multiplication-free
-//!   inference engine, and the hardware cost model behind the paper's
-//!   efficiency claims.
+//!   the PJRT runtime executing the AOT artifacts), the [`kernel`]
+//!   hot-path layer (blocked multithreaded f32 GEMM + the packed sign-GEMM
+//!   training path over the [`util::pool`] fork-join pool), the experiment
+//!   driver reproducing every table/figure, a bit-packed
+//!   multiplication-free inference engine, and the hardware cost model
+//!   behind the paper's efficiency claims.
 //!
 //! The default build is fully self-contained: no Python, no artifacts, no
 //! external crates — `cargo test` and every bench/example run end-to-end
@@ -29,9 +31,55 @@ pub mod binary;
 pub mod coordinator;
 pub mod data;
 pub mod hw;
+pub mod kernel;
 pub mod pipeline;
 pub mod preprocess;
 pub mod prop;
 pub mod runtime;
 pub mod stats;
 pub mod util;
+
+/// Thread-local allocation counter backing the zero-allocation
+/// steady-state `train_step` test (see `runtime/reference.rs`). Compiled
+/// into the lib test binary only; integration tests and release builds use
+/// the system allocator untouched.
+#[cfg(test)]
+pub(crate) mod test_alloc {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::cell::Cell;
+
+    thread_local! {
+        static ALLOCS: Cell<u64> = const { Cell::new(0) };
+    }
+
+    /// Allocations (malloc + realloc) made by the *calling thread* since
+    /// process start. Thread-local so concurrently running tests cannot
+    /// pollute each other's counts.
+    pub fn thread_allocs() -> u64 {
+        ALLOCS.with(|c| c.get())
+    }
+
+    struct CountingAlloc;
+
+    // SAFETY: delegates verbatim to `System`; only bumps a thread-local
+    // counter (a const-initialized, Drop-free TLS cell — no reentrant
+    // allocation).
+    unsafe impl GlobalAlloc for CountingAlloc {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+            System.alloc(layout)
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout)
+        }
+
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+            System.realloc(ptr, layout, new_size)
+        }
+    }
+
+    #[global_allocator]
+    static COUNTER: CountingAlloc = CountingAlloc;
+}

@@ -41,6 +41,7 @@ const USAGE: &str = "\
 usage: bcrun <info|train|hw|export|infer> [flags]
   common:  --backend reference|pjrt (default reference)
            --artifacts DIR (default artifacts, pjrt only) --data-dir DIR
+           env BCRUN_THREADS=N caps the kernel thread pool (default: all cores)
   train:   --model NAME --dataset mnist|cifar10|svhn --mode none|det|stoch
            --opt sgd|nesterov|adam --epochs N --lr-start F --lr-end F
            --dropout F --no-lr-scale --seed N --n-train N --n-test N
@@ -52,6 +53,9 @@ usage: bcrun <info|train|hw|export|infer> [flags]
   infer:   --packed FILE.bcpack --dataset D [--n-test N] (mult-free engine)";
 
 fn run() -> Result<()> {
+    // Fail fast on an unparseable BCRUN_THREADS: the pool would otherwise
+    // panic deep inside the first GEMM of the first step.
+    binaryconnect::util::pool::n_threads_from_env().map_err(|e| anyhow!(e))?;
     let args = Args::parse().map_err(|e| anyhow!(e))?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {

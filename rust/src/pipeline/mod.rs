@@ -13,7 +13,13 @@ use std::sync::mpsc::{sync_channel, Receiver};
 use std::thread::JoinHandle;
 
 use crate::data::Dataset;
+use crate::util::pool::{par_rows, SendPtr};
 use crate::util::Rng;
+
+/// Below this many gathered f32s the pool dispatch costs more than the
+/// copy; stay serial so small-batch gathers never contend with the
+/// trainer's GEMMs for the pool.
+const PAR_GATHER_MIN: usize = 1 << 18;
 
 /// A fully-assembled minibatch in the wire layout the HLO expects.
 pub struct Batch {
@@ -46,21 +52,36 @@ pub fn encode_targets(labels: &[u8], n_classes: usize, out: &mut Vec<f32>) {
 }
 
 /// Assemble the batch whose example indices are `idx` (padding repeats the
-/// last index; `n_valid` records how many are real).
+/// last index; `n_valid` records how many are real). Large gathers copy
+/// row blocks in parallel on the fork-join pool.
 pub fn gather_batch(ds: &Dataset, idx: &[usize], batch: usize, index: usize) -> Batch {
     assert!(!idx.is_empty() && idx.len() <= batch);
     let dim = ds.dim;
-    let mut x = Vec::with_capacity(batch * dim);
-    let mut labels = Vec::with_capacity(batch);
-    for &i in idx {
-        x.extend_from_slice(ds.row(i));
-        labels.push(ds.labels[i]);
-    }
     let last = *idx.last().unwrap();
-    for _ in idx.len()..batch {
-        x.extend_from_slice(ds.row(last));
-        labels.push(ds.labels[last]);
+    let src_of = |row: usize| -> usize {
+        if row < idx.len() {
+            idx[row]
+        } else {
+            last
+        }
+    };
+    let mut x = vec![0f32; batch * dim];
+    let fill = |lo: usize, out: &mut [f32]| {
+        for (r, chunk) in out.chunks_exact_mut(dim).enumerate() {
+            chunk.copy_from_slice(ds.row(src_of(lo + r)));
+        }
+    };
+    if batch * dim >= PAR_GATHER_MIN {
+        let xp = SendPtr(x.as_mut_ptr());
+        par_rows(batch, 16, &|lo, hi| {
+            // SAFETY: disjoint row ranges of x.
+            let out = unsafe { xp.slice(lo * dim, (hi - lo) * dim) };
+            fill(lo, out);
+        });
+    } else {
+        fill(0, &mut x);
     }
+    let labels: Vec<u8> = (0..batch).map(|r| ds.labels[src_of(r)]).collect();
     let mut y = Vec::new();
     encode_targets(&labels, ds.n_classes, &mut y);
     Batch { x, y, n_valid: idx.len(), index }

@@ -6,6 +6,11 @@
 //! (QL with implicit shifts on the tridiagonal), giving the full
 //! eigendecomposition A = V diag(d) V^T. O(n^3), done once per dataset and
 //! cached; n = 3072 for CIFAR-scale ZCA.
+//!
+//! The f32 GEMM trio that used to live here moved to [`crate::kernel`]
+//! (blocked + multithreaded); `matmul_f32`/`matmul_at_b`/`matmul_a_bt`
+//! remain as allocating back-compat wrappers, and the f64 `matmul` rides
+//! the same thread pool.
 
 /// Column-major-agnostic square matrix as a flat row-major Vec<f64>.
 #[derive(Clone)]
@@ -185,87 +190,56 @@ pub fn sym_eig(a: &[f64], n: usize) -> Result<SymEig, String> {
     Ok(SymEig { values: d, vectors: z, n })
 }
 
-/// C[m x n] = A[m x k] @ B[k x n], row-major f32 — the reference backend's
-/// forward GEMM (ikj loop order, contiguous inner stride).
+/// C[m x n] = A[m x k] @ B[k x n], row-major f32. Allocating wrapper over
+/// the blocked, pool-parallel [`kernel::gemm`](crate::kernel::gemm) (the
+/// GEMM trio's one home since the kernel-layer refactor).
 pub fn matmul_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(b.len(), k * n);
     let mut c = vec![0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let crow = &mut c[i * n..(i + 1) * n];
-        for (p, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[p * n..(p + 1) * n];
-            for (cv, &bv) in crow.iter_mut().zip(brow) {
-                *cv += av * bv;
-            }
-        }
-    }
+    crate::kernel::gemm(a, b, m, k, n, &mut c);
     c
 }
 
 /// C[k x n] = A^T @ B where A is (m x k) and B is (m x n) — the backward
-/// pass's weight-gradient GEMM (dW = X^T dZ).
+/// pass's weight-gradient GEMM (dW = X^T dZ); wraps
+/// [`kernel::gemm_at_b`](crate::kernel::gemm_at_b).
 pub fn matmul_at_b(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(b.len(), m * n);
     let mut c = vec![0f32; k * n];
-    for t in 0..m {
-        let arow = &a[t * k..(t + 1) * k];
-        let brow = &b[t * n..(t + 1) * n];
-        for (i, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let crow = &mut c[i * n..(i + 1) * n];
-            for (cv, &bv) in crow.iter_mut().zip(brow) {
-                *cv += av * bv;
-            }
-        }
-    }
+    crate::kernel::gemm_at_b(a, b, m, k, n, &mut c);
     c
 }
 
 /// C[m x k] = A @ B^T where A is (m x n) and B is (k x n) — the backward
-/// pass's activation-gradient GEMM (dX = dZ W^T).
+/// pass's activation-gradient GEMM (dX = dZ W^T); wraps
+/// [`kernel::gemm_a_bt`](crate::kernel::gemm_a_bt).
 pub fn matmul_a_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
-    assert_eq!(a.len(), m * n);
-    assert_eq!(b.len(), k * n);
     let mut c = vec![0f32; m * k];
-    for t in 0..m {
-        let arow = &a[t * n..(t + 1) * n];
-        let crow = &mut c[t * k..(t + 1) * k];
-        for (i, cv) in crow.iter_mut().enumerate() {
-            let brow = &b[i * n..(i + 1) * n];
-            let mut acc = 0f32;
-            for (&av, &bv) in arow.iter().zip(brow) {
-                acc += av * bv;
-            }
-            *cv = acc;
-        }
-    }
+    crate::kernel::gemm_a_bt(a, b, m, n, k, &mut c);
     c
 }
 
-/// C = A * B for row-major square-free shapes: A is (m x k), B is (k x n).
+/// C = A * B for row-major f64 (ZCA whitening); row blocks ride the
+/// fork-join pool, each row keeping the seed's zero-skip ikj order.
 pub fn matmul(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
     let mut c = vec![0.0; m * n];
-    for i in 0..m {
-        for p in 0..k {
-            let av = a[i * k + p];
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[p * n..(p + 1) * n];
-            let crow = &mut c[i * n..(i + 1) * n];
-            for j in 0..n {
-                crow[j] += av * brow[j];
+    let cp = crate::util::pool::SendPtr(c.as_mut_ptr());
+    crate::util::pool::par_rows(m, 8, &|lo, hi| {
+        // SAFETY: par_rows hands out disjoint row ranges of C.
+        let rows = unsafe { cp.slice(lo * n, (hi - lo) * n) };
+        for (r, crow) in rows.chunks_exact_mut(n).enumerate() {
+            let i = lo + r;
+            for (p, &av) in a[i * k..(i + 1) * k].iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[p * n..(p + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * bv;
+                }
             }
         }
-    }
+    });
     c
 }
 

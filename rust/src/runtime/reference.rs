@@ -6,7 +6,7 @@
 //!
 //! * **binarize** (Eqs. 1-3): deterministic sign to ±H or stochastic ±H
 //!   with p = hard_sigmoid(w/H), H the layer's Glorot coefficient;
-//! * **forward**: dense GEMM on the binarized weights, batch norm (train:
+//! * **forward**: GEMM on the binarized weights, batch norm (train:
 //!   batch statistics + running-stat update; eval: running statistics),
 //!   ReLU, inverted dropout, L2-SVM squared-hinge output;
 //! * **backward**: straight-through estimator — the gradient w.r.t. the
@@ -16,8 +16,29 @@
 //!   scaling (lr / H for ADAM, lr / H^2 for SGD and Nesterov) and the
 //!   Sec.-2.4 clip of the real-valued weights to [-H, H].
 //!
-//! The GEMMs come from `preprocess::linalg` and the RNG from `util::rng`,
-//! so the whole train/eval step is deterministic given `Hyper::seed`.
+//! ## The fast path (default)
+//!
+//! In `Mode::Det`/`Mode::Stoch` the binarized weights never materialize as
+//! f32: each step packs their sign bits into a workspace-owned
+//! [`BitMatrix`] and runs the forward `z = H·sign_gemm(a, Wb)` and the STE
+//! backward `dX = dZ·Wb^T` as accumulation-only packed kernels — the
+//! paper's "multiplications replaced by accumulations" claim realized
+//! inside training. The weight gradient `dW = a^T·dZ` and the
+//! `Mode::None` baseline use the blocked multithreaded f32 kernels in
+//! [`crate::kernel`]. All intermediates live in a per-executor
+//! [`Workspace`], so a warmed-up `train_step` performs **zero heap
+//! allocations** (pinned by a counting-allocator test below). Kernels
+//! parallelize over the `util::pool` fork-join pool; results are
+//! identical for any `BCRUN_THREADS`.
+//!
+//! `set_fast(false)` selects the seed-era dense path (f32 binarize copy +
+//! naive single-threaded GEMMs + per-step allocations), kept as the
+//! correctness oracle for the packed path (property-tested to agree
+//! within 1e-4) and as the honest "current main" baseline `perf_gemm`
+//! measures speedups against.
+//!
+//! The GEMMs come from `crate::kernel` and the RNG from `util::rng`, so
+//! the whole train/eval step is deterministic given `Hyper::seed`.
 //!
 //! A small builtin model registry replaces the artifact manifest for this
 //! backend: CPU-scale MLP specs for each corpus, plus spec-only CNN
@@ -25,8 +46,10 @@
 //! be executed without the `pjrt` feature.
 
 use std::path::PathBuf;
+use std::sync::Mutex;
 
-use crate::preprocess::linalg::{matmul_a_bt, matmul_at_b, matmul_f32};
+use crate::binary::packed::BitMatrix;
+use crate::kernel;
 use crate::util::error::Result;
 use crate::util::Rng;
 use crate::{anyhow, bail};
@@ -275,6 +298,8 @@ fn plan(info: &ModelInfo) -> Result<Vec<DenseLayer>> {
     Ok(layers)
 }
 
+/// Materialize the binarized weights as f32 (the seed-era dense path;
+/// the fast path packs bits instead — see [`BitMatrix::pack_det_into`]).
 fn binarize(w: &[f32], h: f32, mode: Mode, rng: &mut Rng) -> Vec<f32> {
     match mode {
         Mode::None => w.to_vec(),
@@ -304,30 +329,133 @@ fn argmax(row: &[f32]) -> usize {
     best
 }
 
-/// Per-layer forward caches needed by the backward pass.
-struct Cache {
-    /// b x k input activations (post previous dropout).
-    a_in: Vec<f32>,
-    /// k x n binarized weights used in the forward GEMM.
-    wb: Vec<f32>,
+/// Per-example squared-hinge loss + error indicator and d(loss)/d(z) for
+/// loss = mean over the batch, written into caller buffers (row slices
+/// hoisted — no per-element index arithmetic).
+fn metrics_into(
+    logits: &[f32],
+    y: &[f32],
+    c: usize,
+    lossv: &mut [f32],
+    errv: &mut [f32],
+    dlogits: &mut [f32],
+) {
+    let bf = lossv.len() as f32;
+    for (((zrow, yrow), (lv, ev)), drow) in logits
+        .chunks_exact(c)
+        .zip(y.chunks_exact(c))
+        .zip(lossv.iter_mut().zip(errv.iter_mut()))
+        .zip(dlogits.chunks_exact_mut(c))
+    {
+        let mut acc = 0f32;
+        for ((dv, &zv), &yv) in drow.iter_mut().zip(zrow).zip(yrow) {
+            let margin = (1.0 - yv * zv).max(0.0);
+            acc += margin * margin;
+            *dv = -2.0 * margin * yv / bf;
+        }
+        *lv = acc;
+        *ev = if argmax(zrow) != argmax(yrow) { 1.0 } else { 0.0 };
+    }
+}
+
+/// Preallocated per-step buffers. Built lazily on the first step and
+/// reused for the executor's lifetime, so a steady-state `train_step`
+/// allocates nothing (see `steady_state_train_step_is_allocation_free`).
+struct Workspace {
+    /// acts[li] = b x k input to layer li (acts[0] = dropped-out batch);
+    /// acts[n_layers] = b x classes logits.
+    acts: Vec<Vec<f32>>,
     /// b x n normalized pre-affine BN activations (hidden layers only).
-    xhat: Vec<f32>,
+    xhat: Vec<Vec<f32>>,
     /// n per-unit 1/sqrt(var + eps) (hidden layers only).
-    inv_std: Vec<f32>,
+    inv_std: Vec<Vec<f32>>,
     /// b x n combined ReLU x dropout multiplier (hidden layers only).
-    gate: Vec<f32>,
+    gate: Vec<Vec<f32>>,
+    /// batch-stat scratch (max layer width).
+    mean: Vec<f32>,
+    var: Vec<f32>,
+    /// per-layer packed sign matrices, re-packed in place every step.
+    bits: Vec<BitMatrix>,
+    /// transpose scratch for the packed kernels (max_dim * b).
+    xt: Vec<f32>,
+    /// tmatmul selected-sum accumulator (max_k * b).
+    acc: Vec<f32>,
+    /// per-example row totals (b).
+    totals: Vec<f32>,
+    /// backward ping-pong buffers (b * max_dim each).
+    d0: Vec<f32>,
+    d1: Vec<f32>,
+    /// per-param gradient buffers (+ which ones a step produced).
+    grads: Vec<Vec<f32>>,
+    grad_used: Vec<bool>,
+    /// metrics buffers.
+    lossv: Vec<f32>,
+    errv: Vec<f32>,
+    dlogits: Vec<f32>,
+}
+
+impl Workspace {
+    fn build(info: &ModelInfo, layers: &[DenseLayer]) -> Workspace {
+        let b = info.batch;
+        let nl = layers.len();
+        let mut acts = Vec::with_capacity(nl + 1);
+        acts.push(vec![0f32; b * layers[0].k]);
+        for l in layers {
+            acts.push(vec![0f32; b * l.n]);
+        }
+        let mut xhat = Vec::with_capacity(nl);
+        let mut inv_std = Vec::with_capacity(nl);
+        let mut gate = Vec::with_capacity(nl);
+        for l in layers {
+            if l.bn.is_some() {
+                xhat.push(vec![0f32; b * l.n]);
+                inv_std.push(vec![0f32; l.n]);
+                gate.push(vec![0f32; b * l.n]);
+            } else {
+                xhat.push(Vec::new());
+                inv_std.push(Vec::new());
+                gate.push(Vec::new());
+            }
+        }
+        let max_dim = layers.iter().map(|l| l.k.max(l.n)).max().unwrap_or(1);
+        let max_k = layers.iter().map(|l| l.k).max().unwrap_or(1);
+        let max_n = layers.iter().map(|l| l.n).max().unwrap_or(1);
+        Workspace {
+            acts,
+            xhat,
+            inv_std,
+            gate,
+            mean: vec![0f32; max_n],
+            var: vec![0f32; max_n],
+            bits: layers.iter().map(|l| BitMatrix::zeroed(l.k, l.n)).collect(),
+            xt: vec![0f32; max_dim * b],
+            acc: vec![0f32; max_k * b],
+            totals: vec![0f32; b],
+            d0: vec![0f32; b * max_dim],
+            d1: vec![0f32; b * max_dim],
+            grads: info.params.iter().map(|p| vec![0f32; p.numel()]).collect(),
+            grad_used: vec![false; info.params.len()],
+            lossv: vec![0f32; b],
+            errv: vec![0f32; b],
+            dlogits: vec![0f32; b * info.classes],
+        }
+    }
 }
 
 pub struct ReferenceExecutor {
     info: ModelInfo,
     layers: Vec<DenseLayer>,
+    /// true (default): packed/blocked workspace path; false: the seed-era
+    /// dense allocating path (benchmark baseline + correctness oracle).
+    fast: bool,
+    ws: Mutex<Option<Workspace>>,
 }
 
 impl ReferenceExecutor {
     /// Validate a dense-MLP spec into an executable plan.
     pub fn new(info: ModelInfo) -> Result<ReferenceExecutor> {
         let layers = plan(&info)?;
-        Ok(ReferenceExecutor { info, layers })
+        Ok(ReferenceExecutor { info, layers, fast: true, ws: Mutex::new(None) })
     }
 
     /// Load a builtin model by name (see [`builtin_info`]).
@@ -336,6 +464,13 @@ impl ReferenceExecutor {
             anyhow!("no builtin model '{name}' (have: {})", builtin_names().join(", "))
         })?;
         ReferenceExecutor::new(info)
+    }
+
+    /// Select the kernel path: `true` = packed + blocked + workspace
+    /// (default), `false` = the seed-era dense baseline. Train/eval
+    /// results agree within f32 reorder noise (property-tested at 1e-4).
+    pub fn set_fast(&mut self, fast: bool) {
+        self.fast = fast;
     }
 
     fn check_batch(&self, x: &[f32], y: &[f32]) -> Result<()> {
@@ -350,32 +485,665 @@ impl ReferenceExecutor {
         Ok(())
     }
 
-    /// Per-example squared-hinge loss + error indicator, and d(loss)/d(z)
-    /// for loss = mean over the batch.
-    fn metrics(
-        &self,
-        logits: &[f32],
-        y: &[f32],
-    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    /// Allocating metrics wrapper (baseline path + eval).
+    fn metrics(&self, logits: &[f32], y: &[f32]) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
         let b = self.info.batch;
         let c = self.info.classes;
         let mut lossv = vec![0f32; b];
         let mut errv = vec![0f32; b];
         let mut dlogits = vec![0f32; b * c];
-        let bf = b as f32;
-        for t in 0..b {
-            let zrow = &logits[t * c..(t + 1) * c];
-            let yrow = &y[t * c..(t + 1) * c];
-            let mut acc = 0f32;
-            for j in 0..c {
-                let margin = (1.0 - yrow[j] * zrow[j]).max(0.0);
-                acc += margin * margin;
-                dlogits[t * c + j] = -2.0 * margin * yrow[j] / bf;
-            }
-            lossv[t] = acc;
-            errv[t] = if argmax(zrow) != argmax(yrow) { 1.0 } else { 0.0 };
-        }
+        metrics_into(logits, y, c, &mut lossv, &mut errv, &mut dlogits);
         (lossv, errv, dlogits)
+    }
+
+    /// Sec. 2.4 clip + Sec. 2.5 LR scaling + optimizer update, shared by
+    /// the fast and baseline paths (in place; allocation-free).
+    fn apply_updates(
+        &self,
+        state: &mut TrainState,
+        hyper: &Hyper,
+        grads: &[Vec<f32>],
+        used: &[bool],
+    ) {
+        let lr = hyper.lr;
+        let mode = hyper.mode;
+        for (i, p) in self.info.params.iter().enumerate() {
+            if !used[i] {
+                continue;
+            }
+            let g = &grads[i];
+            let (lr_j, clip, h) = if p.kind == "weight" {
+                let c = p.glorot as f32;
+                let pow = match hyper.opt {
+                    Opt::Adam => 1,
+                    _ => 2,
+                };
+                let lr_j = if hyper.lr_scale { lr / c.powi(pow) } else { lr };
+                (lr_j, mode != Mode::None, c)
+            } else {
+                (lr, false, 1.0f32)
+            };
+            let w = &mut state.params[i];
+            let m = &mut state.m[i];
+            let v = &mut state.v[i];
+            match hyper.opt {
+                Opt::Sgd => {
+                    for (wv, &gv) in w.iter_mut().zip(g) {
+                        let mut wn = *wv - lr_j * gv;
+                        if clip {
+                            wn = wn.clamp(-h, h);
+                        }
+                        *wv = wn;
+                    }
+                }
+                Opt::Nesterov => {
+                    let mu = hyper.momentum;
+                    for ((wv, mv), &gv) in w.iter_mut().zip(m.iter_mut()).zip(g) {
+                        let mn = mu * *mv - lr_j * gv;
+                        let mut wn = *wv + mu * mn - lr_j * gv;
+                        if clip {
+                            wn = wn.clamp(-h, h);
+                        }
+                        *mv = mn;
+                        *wv = wn;
+                    }
+                }
+                Opt::Adam => {
+                    let b1 = hyper.momentum;
+                    let b2 = hyper.beta2;
+                    let t = hyper.step as f32;
+                    let corr1 = 1.0 - b1.powf(t);
+                    let corr2 = 1.0 - b2.powf(t);
+                    for (((wv, mv), vv), &gv) in
+                        w.iter_mut().zip(m.iter_mut()).zip(v.iter_mut()).zip(g)
+                    {
+                        let mn = b1 * *mv + (1.0 - b1) * gv;
+                        let vn = b2 * *vv + (1.0 - b2) * gv * gv;
+                        let m_hat = mn / corr1;
+                        let v_hat = vn / corr2;
+                        let mut wn = *wv - lr_j * m_hat / (v_hat.sqrt() + hyper.eps);
+                        if clip {
+                            wn = wn.clamp(-h, h);
+                        }
+                        *mv = mn;
+                        *vv = vn;
+                        *wv = wn;
+                    }
+                }
+            }
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // fast path: packed sign-GEMM + workspace, zero steady-state allocs
+    // -----------------------------------------------------------------
+
+    fn train_step_fast(
+        &self,
+        state: &mut TrainState,
+        x: &[f32],
+        y: &[f32],
+        hyper: &Hyper,
+    ) -> Result<StepMetrics> {
+        self.check_batch(x, y)?;
+        let b = self.info.batch;
+        let c = self.info.classes;
+        let bf = b as f32;
+        let mode = hyper.mode;
+        let mut rng = Rng::new(TRAIN_SALT ^ hyper.seed as u64);
+        let nl = self.layers.len();
+        let mut guard = self.ws.lock().unwrap();
+        let ws = guard.get_or_insert_with(|| Workspace::build(&self.info, &self.layers));
+
+        // ---- forward ----
+        {
+            let a0 = &mut ws.acts[0];
+            a0.copy_from_slice(x);
+            if hyper.in_dropout > 0.0 {
+                let p = hyper.in_dropout;
+                let scale = 1.0 / (1.0 - p).max(1e-6);
+                for v in a0.iter_mut() {
+                    if rng.uniform() < p {
+                        *v = 0.0;
+                    } else {
+                        *v *= scale;
+                    }
+                }
+            }
+        }
+        for (li, layer) in self.layers.iter().enumerate() {
+            let n = layer.n;
+            let k = layer.k;
+            // z = a_in @ Wb into acts[li + 1]
+            let (alo, ahi) = ws.acts.split_at_mut(li + 1);
+            let a_in: &[f32] = &alo[li];
+            let z: &mut [f32] = &mut ahi[0];
+            match mode {
+                Mode::None => kernel::gemm(a_in, &state.params[layer.w], b, k, n, z),
+                Mode::Det => {
+                    let bits = &mut ws.bits[li];
+                    bits.pack_det_into(&state.params[layer.w], k, n);
+                    bits.matmul_scaled_into(a_in, b, layer.h, z, &mut ws.xt, &mut ws.totals);
+                }
+                Mode::Stoch => {
+                    let bits = &mut ws.bits[li];
+                    bits.pack_stoch_into(&state.params[layer.w], k, n, layer.h, &mut rng);
+                    bits.matmul_scaled_into(a_in, b, layer.h, z, &mut ws.xt, &mut ws.totals);
+                }
+            }
+            if li == nl - 1 {
+                let bias = &state.params[layer.bias.unwrap()];
+                for zrow in z.chunks_exact_mut(n) {
+                    for (zv, &bv) in zrow.iter_mut().zip(bias) {
+                        *zv += bv;
+                    }
+                }
+            } else {
+                let gi = layer.bn.unwrap();
+                // batch statistics (biased variance, like jnp.var)
+                let mean = &mut ws.mean[..n];
+                let var = &mut ws.var[..n];
+                mean.fill(0.0);
+                for zrow in z.chunks_exact(n) {
+                    for (mj, &v) in mean.iter_mut().zip(zrow) {
+                        *mj += v;
+                    }
+                }
+                for mj in mean.iter_mut() {
+                    *mj /= bf;
+                }
+                var.fill(0.0);
+                for zrow in z.chunks_exact(n) {
+                    for ((vj, &v), &mj) in var.iter_mut().zip(zrow).zip(&*mean) {
+                        let cv = v - mj;
+                        *vj += cv * cv;
+                    }
+                }
+                for vj in var.iter_mut() {
+                    *vj /= bf;
+                }
+                let inv_std = &mut ws.inv_std[li];
+                for (o, &v) in inv_std.iter_mut().zip(&*var) {
+                    *o = 1.0 / (v + BN_EPS).sqrt();
+                }
+                let xhat = &mut ws.xhat[li];
+                for (xrow, zrow) in xhat.chunks_exact_mut(n).zip(z.chunks_exact(n)) {
+                    for (((xv, &zv), &mj), &is) in
+                        xrow.iter_mut().zip(zrow).zip(&*mean).zip(&*inv_std)
+                    {
+                        *xv = (zv - mj) * is;
+                    }
+                }
+                // running-stat update in place (nothing reads rmean/rvar
+                // again this step; equivalent to the seed's deferred write)
+                let mom = hyper.bn_momentum;
+                for (r, &mj) in state.params[gi + 2].iter_mut().zip(&*mean) {
+                    *r = mom * *r + (1.0 - mom) * mj;
+                }
+                for (r, &vj) in state.params[gi + 3].iter_mut().zip(&*var) {
+                    *r = mom * *r + (1.0 - mom) * vj;
+                }
+                // affine + ReLU + inverted dropout, z becomes acts[li + 1]
+                let gamma = &state.params[gi];
+                let beta = &state.params[gi + 1];
+                let p = hyper.dropout;
+                let dscale = 1.0 / (1.0 - p).max(1e-6);
+                let gate = &mut ws.gate[li];
+                for (zrow, (xrow, grow)) in z
+                    .chunks_exact_mut(n)
+                    .zip(ws.xhat[li].chunks_exact(n).zip(gate.chunks_exact_mut(n)))
+                {
+                    for (j, (zv, gv)) in zrow.iter_mut().zip(grow.iter_mut()).enumerate() {
+                        let yv = gamma[j] * xrow[j] + beta[j];
+                        let s = if p > 0.0 {
+                            if rng.uniform() < p {
+                                0.0
+                            } else {
+                                dscale
+                            }
+                        } else {
+                            1.0
+                        };
+                        if yv > 0.0 {
+                            *gv = s;
+                            *zv = yv * s;
+                        } else {
+                            *gv = 0.0;
+                            *zv = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+
+        // ---- loss / metrics ----
+        metrics_into(&ws.acts[nl], y, c, &mut ws.lossv, &mut ws.errv, &mut ws.dlogits);
+        let loss = ws.lossv.iter().sum::<f32>() / bf;
+        let n_err = ws.errv.iter().sum::<f32>();
+
+        // ---- backward (straight-through on the binarized weights) ----
+        for u in ws.grad_used.iter_mut() {
+            *u = false;
+        }
+        ws.d0[..b * c].copy_from_slice(&ws.dlogits);
+        let mut cur_in_d0 = true;
+        for li in (0..nl).rev() {
+            let layer = &self.layers[li];
+            let n = layer.n;
+            let k = layer.k;
+            let (dcur, dnext) = if cur_in_d0 {
+                (&mut ws.d0, &mut ws.d1)
+            } else {
+                (&mut ws.d1, &mut ws.d0)
+            };
+            let dz: &mut [f32] = &mut dcur[..b * n];
+            if li == nl - 1 {
+                let bidx = layer.bias.unwrap();
+                let db = &mut ws.grads[bidx];
+                db.fill(0.0);
+                for drow in dz.chunks_exact(n) {
+                    for (gv, &d) in db.iter_mut().zip(drow) {
+                        *gv += d;
+                    }
+                }
+                ws.grad_used[bidx] = true;
+            } else {
+                // through ReLU + dropout
+                for (drow, grow) in dz.chunks_exact_mut(n).zip(ws.gate[li].chunks_exact(n)) {
+                    for (dv, &g) in drow.iter_mut().zip(grow) {
+                        *dv *= g;
+                    }
+                }
+                // batch-norm backward through the batch statistics
+                let gi = layer.bn.unwrap();
+                let xhat: &[f32] = &ws.xhat[li];
+                let inv_std: &[f32] = &ws.inv_std[li];
+                let gamma: &[f32] = &state.params[gi];
+                let (glo, ghi) = ws.grads.split_at_mut(gi + 1);
+                let dgamma = &mut glo[gi]; // sum_dy_xhat
+                let dbeta = &mut ghi[0]; // sum_dy
+                dgamma.fill(0.0);
+                dbeta.fill(0.0);
+                for (drow, xrow) in dz.chunks_exact(n).zip(xhat.chunks_exact(n)) {
+                    for (((sg, sb), &d), &xv) in
+                        dgamma.iter_mut().zip(dbeta.iter_mut()).zip(drow).zip(xrow)
+                    {
+                        *sb += d;
+                        *sg += d * xv;
+                    }
+                }
+                for (drow, xrow) in dz.chunks_exact_mut(n).zip(xhat.chunks_exact(n)) {
+                    for (j, dv) in drow.iter_mut().enumerate() {
+                        *dv = gamma[j] * inv_std[j] / bf
+                            * (bf * *dv - dbeta[j] - xrow[j] * dgamma[j]);
+                    }
+                }
+                ws.grad_used[gi] = true;
+                ws.grad_used[gi + 1] = true;
+            }
+            // dW = a_in^T · dZ (dense f32: dZ is real-valued either way)
+            kernel::gemm_at_b(&ws.acts[li], dz, b, k, n, &mut ws.grads[layer.w]);
+            ws.grad_used[layer.w] = true;
+            // dX = dZ · Wb^T for the next layer down
+            if li > 0 {
+                let dx: &mut [f32] = &mut dnext[..b * k];
+                match mode {
+                    Mode::None => {
+                        kernel::gemm_a_bt(dz, &state.params[layer.w], b, n, k, dx)
+                    }
+                    _ => ws.bits[li].tmatmul_scaled_into(
+                        dz,
+                        b,
+                        layer.h,
+                        dx,
+                        &mut ws.xt,
+                        &mut ws.acc,
+                        &mut ws.totals,
+                    ),
+                }
+                cur_in_d0 = !cur_in_d0;
+            }
+        }
+
+        // ---- parameter update ----
+        self.apply_updates(state, hyper, &ws.grads, &ws.grad_used);
+        Ok(StepMetrics { loss, n_err })
+    }
+
+    fn eval_batch_fast(
+        &self,
+        state: &TrainState,
+        x: &[f32],
+        y: &[f32],
+        hyper: &Hyper,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        self.check_batch(x, y)?;
+        let b = self.info.batch;
+        let c = self.info.classes;
+        let mut rng = Rng::new(EVAL_SALT ^ hyper.seed as u64);
+        let nl = self.layers.len();
+        let mut guard = self.ws.lock().unwrap();
+        let ws = guard.get_or_insert_with(|| Workspace::build(&self.info, &self.layers));
+
+        ws.acts[0].copy_from_slice(x);
+        for (li, layer) in self.layers.iter().enumerate() {
+            let n = layer.n;
+            let k = layer.k;
+            let (alo, ahi) = ws.acts.split_at_mut(li + 1);
+            let a_in: &[f32] = &alo[li];
+            let z: &mut [f32] = &mut ahi[0];
+            match hyper.mode {
+                Mode::None => kernel::gemm(a_in, &state.params[layer.w], b, k, n, z),
+                Mode::Det => {
+                    let bits = &mut ws.bits[li];
+                    bits.pack_det_into(&state.params[layer.w], k, n);
+                    bits.matmul_scaled_into(a_in, b, layer.h, z, &mut ws.xt, &mut ws.totals);
+                }
+                Mode::Stoch => {
+                    let bits = &mut ws.bits[li];
+                    bits.pack_stoch_into(&state.params[layer.w], k, n, layer.h, &mut rng);
+                    bits.matmul_scaled_into(a_in, b, layer.h, z, &mut ws.xt, &mut ws.totals);
+                }
+            }
+            if li == nl - 1 {
+                let bias = &state.params[layer.bias.unwrap()];
+                for zrow in z.chunks_exact_mut(n) {
+                    for (zv, &bv) in zrow.iter_mut().zip(bias) {
+                        *zv += bv;
+                    }
+                }
+            } else {
+                let gi = layer.bn.unwrap();
+                let gamma = &state.params[gi];
+                let beta = &state.params[gi + 1];
+                let rmean = &state.params[gi + 2];
+                let rvar = &state.params[gi + 3];
+                let inv_std = &mut ws.inv_std[li];
+                for (o, &v) in inv_std.iter_mut().zip(rvar) {
+                    *o = 1.0 / (v + BN_EPS).sqrt();
+                }
+                for zrow in z.chunks_exact_mut(n) {
+                    for (j, zv) in zrow.iter_mut().enumerate() {
+                        let yv = (*zv - rmean[j]) * inv_std[j] * gamma[j] + beta[j];
+                        *zv = yv.max(0.0);
+                    }
+                }
+            }
+        }
+        metrics_into(&ws.acts[nl], y, c, &mut ws.lossv, &mut ws.errv, &mut ws.dlogits);
+        Ok((ws.lossv.clone(), ws.errv.clone()))
+    }
+
+    // -----------------------------------------------------------------
+    // baseline path: the seed's dense allocating step (naive kernels)
+    // -----------------------------------------------------------------
+
+    fn train_step_baseline(
+        &self,
+        state: &mut TrainState,
+        x: &[f32],
+        y: &[f32],
+        hyper: &Hyper,
+    ) -> Result<StepMetrics> {
+        struct Cache {
+            a_in: Vec<f32>,
+            wb: Vec<f32>,
+            xhat: Vec<f32>,
+            inv_std: Vec<f32>,
+            gate: Vec<f32>,
+        }
+
+        self.check_batch(x, y)?;
+        let b = self.info.batch;
+        let bf = b as f32;
+        let mode = hyper.mode;
+        let mut rng = Rng::new(TRAIN_SALT ^ hyper.seed as u64);
+        let nl = self.layers.len();
+
+        // ---- forward, caching what the backward pass needs ----
+        let mut a: Vec<f32> = x.to_vec();
+        if hyper.in_dropout > 0.0 {
+            let p = hyper.in_dropout;
+            let scale = 1.0 / (1.0 - p).max(1e-6);
+            for v in a.iter_mut() {
+                if rng.uniform() < p {
+                    *v = 0.0;
+                } else {
+                    *v *= scale;
+                }
+            }
+        }
+        let mut caches: Vec<Cache> = Vec::with_capacity(nl);
+        let mut bn_stat_updates: Vec<(usize, Vec<f32>)> = vec![];
+        for (li, layer) in self.layers.iter().enumerate() {
+            let wb = binarize(&state.params[layer.w], layer.h, mode, &mut rng);
+            let n = layer.n;
+            let mut z = vec![0f32; b * n];
+            kernel::gemm_naive(&a, &wb, b, layer.k, n, &mut z);
+            if li == nl - 1 {
+                let bias = &state.params[layer.bias.unwrap()];
+                for zrow in z.chunks_exact_mut(n) {
+                    for (zv, &bv) in zrow.iter_mut().zip(bias) {
+                        *zv += bv;
+                    }
+                }
+                let a_in = std::mem::replace(&mut a, z);
+                caches.push(Cache {
+                    a_in,
+                    wb,
+                    xhat: vec![],
+                    inv_std: vec![],
+                    gate: vec![],
+                });
+            } else {
+                let gi = layer.bn.unwrap();
+                // batch statistics (biased variance, like jnp.var)
+                let mut mean = vec![0f32; n];
+                for zrow in z.chunks_exact(n) {
+                    for (mj, &v) in mean.iter_mut().zip(zrow) {
+                        *mj += v;
+                    }
+                }
+                for mj in mean.iter_mut() {
+                    *mj /= bf;
+                }
+                let mut var = vec![0f32; n];
+                for zrow in z.chunks_exact(n) {
+                    for ((vj, &v), &mj) in var.iter_mut().zip(zrow).zip(&mean) {
+                        let cv = v - mj;
+                        *vj += cv * cv;
+                    }
+                }
+                for vj in var.iter_mut() {
+                    *vj /= bf;
+                }
+                let inv_std: Vec<f32> =
+                    var.iter().map(|&v| 1.0 / (v + BN_EPS).sqrt()).collect();
+                let mut xhat = vec![0f32; b * n];
+                for (xrow, zrow) in xhat.chunks_exact_mut(n).zip(z.chunks_exact(n)) {
+                    for (((xv, &zv), &mj), &is) in
+                        xrow.iter_mut().zip(zrow).zip(&mean).zip(&inv_std)
+                    {
+                        *xv = (zv - mj) * is;
+                    }
+                }
+                // running-stat update (applied to state after backward)
+                let mom = hyper.bn_momentum;
+                let rmean = &state.params[gi + 2];
+                let rvar = &state.params[gi + 3];
+                bn_stat_updates.push((
+                    gi + 2,
+                    rmean
+                        .iter()
+                        .zip(&mean)
+                        .map(|(&r, &m)| mom * r + (1.0 - mom) * m)
+                        .collect(),
+                ));
+                bn_stat_updates.push((
+                    gi + 3,
+                    rvar.iter()
+                        .zip(&var)
+                        .map(|(&r, &v)| mom * r + (1.0 - mom) * v)
+                        .collect(),
+                ));
+                // affine + ReLU + inverted dropout
+                let gamma = &state.params[gi];
+                let beta = &state.params[gi + 1];
+                let p = hyper.dropout;
+                let dscale = 1.0 / (1.0 - p).max(1e-6);
+                let mut gate = vec![0f32; b * n];
+                let mut next = vec![0f32; b * n];
+                for ((nrow, xrow), grow) in next
+                    .chunks_exact_mut(n)
+                    .zip(xhat.chunks_exact(n))
+                    .zip(gate.chunks_exact_mut(n))
+                {
+                    for (j, (nv, gv)) in nrow.iter_mut().zip(grow.iter_mut()).enumerate() {
+                        let yv = gamma[j] * xrow[j] + beta[j];
+                        let s = if p > 0.0 {
+                            if rng.uniform() < p {
+                                0.0
+                            } else {
+                                dscale
+                            }
+                        } else {
+                            1.0
+                        };
+                        if yv > 0.0 {
+                            *gv = s;
+                            *nv = yv * s;
+                        }
+                    }
+                }
+                let a_in = std::mem::replace(&mut a, next);
+                caches.push(Cache { a_in, wb, xhat, inv_std, gate });
+            }
+        }
+        let logits = a;
+        let (lossv, errv, dlogits) = self.metrics(&logits, y);
+        let loss = lossv.iter().sum::<f32>() / bf;
+        let n_err = errv.iter().sum::<f32>();
+
+        // ---- backward (straight-through on the binarized weights) ----
+        let mut grads: Vec<Vec<f32>> =
+            self.info.params.iter().map(|_| Vec::new()).collect();
+        let mut used = vec![false; self.info.params.len()];
+        let mut dcur = dlogits;
+        for li in (0..nl).rev() {
+            let layer = &self.layers[li];
+            let cache = &caches[li];
+            let n = layer.n;
+            let dz: Vec<f32>;
+            if li == nl - 1 {
+                let mut db = vec![0f32; n];
+                for drow in dcur.chunks_exact(n) {
+                    for (dj, &d) in db.iter_mut().zip(drow) {
+                        *dj += d;
+                    }
+                }
+                grads[layer.bias.unwrap()] = db;
+                used[layer.bias.unwrap()] = true;
+                dz = dcur;
+            } else {
+                // through ReLU + dropout
+                let mut dy = dcur;
+                for (dv, &g) in dy.iter_mut().zip(&cache.gate) {
+                    *dv *= g;
+                }
+                // batch-norm backward through the batch statistics
+                let gi = layer.bn.unwrap();
+                let gamma = &state.params[gi];
+                let mut sum_dy = vec![0f32; n];
+                let mut sum_dy_xhat = vec![0f32; n];
+                for (drow, xrow) in dy.chunks_exact(n).zip(cache.xhat.chunks_exact(n)) {
+                    for (((sd, sx), &d), &xv) in
+                        sum_dy.iter_mut().zip(sum_dy_xhat.iter_mut()).zip(drow).zip(xrow)
+                    {
+                        *sd += d;
+                        *sx += d * xv;
+                    }
+                }
+                let mut dzv = vec![0f32; b * n];
+                for ((zrow, drow), xrow) in dzv
+                    .chunks_exact_mut(n)
+                    .zip(dy.chunks_exact(n))
+                    .zip(cache.xhat.chunks_exact(n))
+                {
+                    for (j, zv) in zrow.iter_mut().enumerate() {
+                        *zv = gamma[j] * cache.inv_std[j] / bf
+                            * (bf * drow[j] - sum_dy[j] - xrow[j] * sum_dy_xhat[j]);
+                    }
+                }
+                grads[gi] = sum_dy_xhat; // dgamma
+                grads[gi + 1] = sum_dy; // dbeta
+                used[gi] = true;
+                used[gi + 1] = true;
+                dz = dzv;
+            }
+            let mut dw = vec![0f32; layer.k * n];
+            kernel::gemm_at_b_naive(&cache.a_in, &dz, b, layer.k, n, &mut dw);
+            grads[layer.w] = dw;
+            used[layer.w] = true;
+            dcur = if li > 0 {
+                let mut dx = vec![0f32; b * layer.k];
+                kernel::gemm_a_bt_naive(&dz, &cache.wb, b, n, layer.k, &mut dx);
+                dx
+            } else {
+                vec![]
+            };
+        }
+
+        // ---- parameter update (Sec. 2.4 clip + Sec. 2.5 LR scaling) ----
+        for (idx, stat) in bn_stat_updates {
+            state.params[idx] = stat;
+        }
+        self.apply_updates(state, hyper, &grads, &used);
+        Ok(StepMetrics { loss, n_err })
+    }
+
+    fn eval_batch_baseline(
+        &self,
+        state: &TrainState,
+        x: &[f32],
+        y: &[f32],
+        hyper: &Hyper,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        self.check_batch(x, y)?;
+        let b = self.info.batch;
+        let mut rng = Rng::new(EVAL_SALT ^ hyper.seed as u64);
+        let nl = self.layers.len();
+        let mut a: Vec<f32> = x.to_vec();
+        for (li, layer) in self.layers.iter().enumerate() {
+            let wb = binarize(&state.params[layer.w], layer.h, hyper.mode, &mut rng);
+            let n = layer.n;
+            let mut z = vec![0f32; b * n];
+            kernel::gemm_naive(&a, &wb, b, layer.k, n, &mut z);
+            if li == nl - 1 {
+                let bias = &state.params[layer.bias.unwrap()];
+                for zrow in z.chunks_exact_mut(n) {
+                    for (zv, &bv) in zrow.iter_mut().zip(bias) {
+                        *zv += bv;
+                    }
+                }
+            } else {
+                let gi = layer.bn.unwrap();
+                let gamma = &state.params[gi];
+                let beta = &state.params[gi + 1];
+                let rmean = &state.params[gi + 2];
+                let rvar = &state.params[gi + 3];
+                let inv_std: Vec<f32> =
+                    rvar.iter().map(|&v| 1.0 / (v + BN_EPS).sqrt()).collect();
+                for zrow in z.chunks_exact_mut(n) {
+                    for (j, zv) in zrow.iter_mut().enumerate() {
+                        let yv = (*zv - rmean[j]) * inv_std[j] * gamma[j] + beta[j];
+                        *zv = yv.max(0.0);
+                    }
+                }
+            }
+            a = z;
+        }
+        let (lossv, errv, _) = self.metrics(&a, y);
+        Ok((lossv, errv))
     }
 }
 
@@ -413,257 +1181,11 @@ impl Executor for ReferenceExecutor {
         y: &[f32],
         hyper: &Hyper,
     ) -> Result<StepMetrics> {
-        self.check_batch(x, y)?;
-        let b = self.info.batch;
-        let bf = b as f32;
-        let mode = hyper.mode;
-        let mut rng = Rng::new(TRAIN_SALT ^ hyper.seed as u64);
-        let n_layers = self.layers.len();
-
-        // ---- forward, caching what the backward pass needs ----
-        let mut a: Vec<f32> = x.to_vec();
-        if hyper.in_dropout > 0.0 {
-            let p = hyper.in_dropout;
-            let scale = 1.0 / (1.0 - p).max(1e-6);
-            for v in a.iter_mut() {
-                if rng.uniform() < p {
-                    *v = 0.0;
-                } else {
-                    *v *= scale;
-                }
-            }
+        if self.fast {
+            self.train_step_fast(state, x, y, hyper)
+        } else {
+            self.train_step_baseline(state, x, y, hyper)
         }
-        let mut caches: Vec<Cache> = Vec::with_capacity(n_layers);
-        let mut bn_stat_updates: Vec<(usize, Vec<f32>)> = vec![];
-        for (li, layer) in self.layers.iter().enumerate() {
-            let wb = binarize(&state.params[layer.w], layer.h, mode, &mut rng);
-            let n = layer.n;
-            let mut z = matmul_f32(&a, &wb, b, layer.k, n);
-            if li == n_layers - 1 {
-                let bias = &state.params[layer.bias.unwrap()];
-                for t in 0..b {
-                    for (zv, &bv) in z[t * n..(t + 1) * n].iter_mut().zip(bias) {
-                        *zv += bv;
-                    }
-                }
-                let a_in = std::mem::replace(&mut a, z);
-                caches.push(Cache {
-                    a_in,
-                    wb,
-                    xhat: vec![],
-                    inv_std: vec![],
-                    gate: vec![],
-                });
-            } else {
-                let gi = layer.bn.unwrap();
-                // batch statistics (biased variance, like jnp.var)
-                let mut mean = vec![0f32; n];
-                for t in 0..b {
-                    for (mj, &v) in mean.iter_mut().zip(&z[t * n..(t + 1) * n]) {
-                        *mj += v;
-                    }
-                }
-                for mj in mean.iter_mut() {
-                    *mj /= bf;
-                }
-                let mut var = vec![0f32; n];
-                for t in 0..b {
-                    for j in 0..n {
-                        let c = z[t * n + j] - mean[j];
-                        var[j] += c * c;
-                    }
-                }
-                for vj in var.iter_mut() {
-                    *vj /= bf;
-                }
-                let inv_std: Vec<f32> =
-                    var.iter().map(|&v| 1.0 / (v + BN_EPS).sqrt()).collect();
-                let mut xhat = vec![0f32; b * n];
-                for t in 0..b {
-                    for j in 0..n {
-                        xhat[t * n + j] = (z[t * n + j] - mean[j]) * inv_std[j];
-                    }
-                }
-                // running-stat update (applied to state after backward)
-                let mom = hyper.bn_momentum;
-                let rmean = &state.params[gi + 2];
-                let rvar = &state.params[gi + 3];
-                bn_stat_updates.push((
-                    gi + 2,
-                    rmean
-                        .iter()
-                        .zip(&mean)
-                        .map(|(&r, &m)| mom * r + (1.0 - mom) * m)
-                        .collect(),
-                ));
-                bn_stat_updates.push((
-                    gi + 3,
-                    rvar.iter()
-                        .zip(&var)
-                        .map(|(&r, &v)| mom * r + (1.0 - mom) * v)
-                        .collect(),
-                ));
-                // affine + ReLU + inverted dropout
-                let gamma = &state.params[gi];
-                let beta = &state.params[gi + 1];
-                let p = hyper.dropout;
-                let dscale = 1.0 / (1.0 - p).max(1e-6);
-                let mut gate = vec![0f32; b * n];
-                let mut next = vec![0f32; b * n];
-                for t in 0..b {
-                    for j in 0..n {
-                        let idx = t * n + j;
-                        let yv = gamma[j] * xhat[idx] + beta[j];
-                        let s = if p > 0.0 {
-                            if rng.uniform() < p {
-                                0.0
-                            } else {
-                                dscale
-                            }
-                        } else {
-                            1.0
-                        };
-                        if yv > 0.0 {
-                            gate[idx] = s;
-                            next[idx] = yv * s;
-                        }
-                    }
-                }
-                let a_in = std::mem::replace(&mut a, next);
-                caches.push(Cache { a_in, wb, xhat, inv_std, gate });
-            }
-        }
-        let logits = a;
-        let (lossv, errv, dlogits) = self.metrics(&logits, y);
-        let loss = lossv.iter().sum::<f32>() / bf;
-        let n_err = errv.iter().sum::<f32>();
-
-        // ---- backward (straight-through on the binarized weights) ----
-        let mut grads: Vec<Option<Vec<f32>>> = vec![None; self.info.params.len()];
-        let mut dcur = dlogits;
-        for li in (0..n_layers).rev() {
-            let layer = &self.layers[li];
-            let cache = &caches[li];
-            let n = layer.n;
-            let dz: Vec<f32>;
-            if li == n_layers - 1 {
-                let mut db = vec![0f32; n];
-                for t in 0..b {
-                    for (dj, &d) in db.iter_mut().zip(&dcur[t * n..(t + 1) * n]) {
-                        *dj += d;
-                    }
-                }
-                grads[layer.bias.unwrap()] = Some(db);
-                dz = dcur;
-            } else {
-                // through ReLU + dropout
-                let mut dy = dcur;
-                for (dv, &g) in dy.iter_mut().zip(&cache.gate) {
-                    *dv *= g;
-                }
-                // batch-norm backward through the batch statistics
-                let gi = layer.bn.unwrap();
-                let gamma = &state.params[gi];
-                let mut sum_dy = vec![0f32; n];
-                let mut sum_dy_xhat = vec![0f32; n];
-                for t in 0..b {
-                    for j in 0..n {
-                        let d = dy[t * n + j];
-                        sum_dy[j] += d;
-                        sum_dy_xhat[j] += d * cache.xhat[t * n + j];
-                    }
-                }
-                let mut dzv = vec![0f32; b * n];
-                for t in 0..b {
-                    for j in 0..n {
-                        let idx = t * n + j;
-                        dzv[idx] = gamma[j] * cache.inv_std[j] / bf
-                            * (bf * dy[idx] - sum_dy[j] - cache.xhat[idx] * sum_dy_xhat[j]);
-                    }
-                }
-                grads[gi] = Some(sum_dy_xhat); // dgamma
-                grads[gi + 1] = Some(sum_dy); // dbeta
-                dz = dzv;
-            }
-            grads[layer.w] = Some(matmul_at_b(&cache.a_in, &dz, b, layer.k, n));
-            dcur = if li > 0 {
-                matmul_a_bt(&dz, &cache.wb, b, n, layer.k)
-            } else {
-                vec![]
-            };
-        }
-
-        // ---- parameter update (Sec. 2.4 clip + Sec. 2.5 LR scaling) ----
-        for (idx, stat) in bn_stat_updates {
-            state.params[idx] = stat;
-        }
-        let lr = hyper.lr;
-        for (i, p) in self.info.params.iter().enumerate() {
-            let g = match grads[i].take() {
-                Some(g) => g,
-                None => continue,
-            };
-            let (lr_j, clip, h) = if p.kind == "weight" {
-                let c = p.glorot as f32;
-                let pow = match hyper.opt {
-                    Opt::Adam => 1,
-                    _ => 2,
-                };
-                let lr_j = if hyper.lr_scale { lr / c.powi(pow) } else { lr };
-                (lr_j, mode != Mode::None, c)
-            } else {
-                (lr, false, 1.0f32)
-            };
-            let w = &mut state.params[i];
-            let m = &mut state.m[i];
-            let v = &mut state.v[i];
-            match hyper.opt {
-                Opt::Sgd => {
-                    for (wv, &gv) in w.iter_mut().zip(&g) {
-                        let mut wn = *wv - lr_j * gv;
-                        if clip {
-                            wn = wn.clamp(-h, h);
-                        }
-                        *wv = wn;
-                    }
-                }
-                Opt::Nesterov => {
-                    let mu = hyper.momentum;
-                    for ((wv, mv), &gv) in w.iter_mut().zip(m.iter_mut()).zip(&g) {
-                        let mn = mu * *mv - lr_j * gv;
-                        let mut wn = *wv + mu * mn - lr_j * gv;
-                        if clip {
-                            wn = wn.clamp(-h, h);
-                        }
-                        *mv = mn;
-                        *wv = wn;
-                    }
-                }
-                Opt::Adam => {
-                    let b1 = hyper.momentum;
-                    let b2 = hyper.beta2;
-                    let t = hyper.step as f32;
-                    let corr1 = 1.0 - b1.powf(t);
-                    let corr2 = 1.0 - b2.powf(t);
-                    for (((wv, mv), vv), &gv) in
-                        w.iter_mut().zip(m.iter_mut()).zip(v.iter_mut()).zip(&g)
-                    {
-                        let mn = b1 * *mv + (1.0 - b1) * gv;
-                        let vn = b2 * *vv + (1.0 - b2) * gv * gv;
-                        let m_hat = mn / corr1;
-                        let v_hat = vn / corr2;
-                        let mut wn = *wv - lr_j * m_hat / (v_hat.sqrt() + hyper.eps);
-                        if clip {
-                            wn = wn.clamp(-h, h);
-                        }
-                        *mv = mn;
-                        *vv = vn;
-                        *wv = wn;
-                    }
-                }
-            }
-        }
-        Ok(StepMetrics { loss, n_err })
     }
 
     fn eval_batch(
@@ -673,42 +1195,11 @@ impl Executor for ReferenceExecutor {
         y: &[f32],
         hyper: &Hyper,
     ) -> Result<(Vec<f32>, Vec<f32>)> {
-        self.check_batch(x, y)?;
-        let b = self.info.batch;
-        let mut rng = Rng::new(EVAL_SALT ^ hyper.seed as u64);
-        let n_layers = self.layers.len();
-        let mut a: Vec<f32> = x.to_vec();
-        for (li, layer) in self.layers.iter().enumerate() {
-            let wb = binarize(&state.params[layer.w], layer.h, hyper.mode, &mut rng);
-            let n = layer.n;
-            let mut z = matmul_f32(&a, &wb, b, layer.k, n);
-            if li == n_layers - 1 {
-                let bias = &state.params[layer.bias.unwrap()];
-                for t in 0..b {
-                    for (zv, &bv) in z[t * n..(t + 1) * n].iter_mut().zip(bias) {
-                        *zv += bv;
-                    }
-                }
-            } else {
-                let gi = layer.bn.unwrap();
-                let gamma = &state.params[gi];
-                let beta = &state.params[gi + 1];
-                let rmean = &state.params[gi + 2];
-                let rvar = &state.params[gi + 3];
-                let inv_std: Vec<f32> =
-                    rvar.iter().map(|&v| 1.0 / (v + BN_EPS).sqrt()).collect();
-                for t in 0..b {
-                    for j in 0..n {
-                        let idx = t * n + j;
-                        let yv = (z[idx] - rmean[j]) * inv_std[j] * gamma[j] + beta[j];
-                        z[idx] = yv.max(0.0);
-                    }
-                }
-            }
-            a = z;
+        if self.fast {
+            self.eval_batch_fast(state, x, y, hyper)
+        } else {
+            self.eval_batch_baseline(state, x, y, hyper)
         }
-        let (lossv, errv, _) = self.metrics(&a, y);
-        Ok((lossv, errv))
     }
 }
 
@@ -905,5 +1396,104 @@ mod tests {
             .unwrap()
             .0;
         assert_ne!(s1, s2, "stochastic eval must sample from the seed");
+    }
+
+    /// The packed/workspace fast path and the seed-era dense baseline are
+    /// the same algorithm up to f32 summation order.
+    #[test]
+    fn fast_and_baseline_paths_agree() {
+        for mode in [Mode::Det, Mode::Stoch, Mode::None] {
+            let fast = ReferenceExecutor::new(mlp_info("fb", 70, 33, 2, 5, 8)).unwrap();
+            let mut base = ReferenceExecutor::new(mlp_info("fb", 70, 33, 2, 5, 8)).unwrap();
+            base.set_fast(false);
+            let mut sf = fast.init_state(&Hyper { seed: 3, ..Default::default() }).unwrap();
+            let mut sb = sf.snapshot();
+            let (x, y) = tiny_batch(&fast, 9);
+            for step in 1..=3 {
+                let h = Hyper {
+                    lr: 0.05,
+                    mode,
+                    opt: Opt::Nesterov,
+                    step,
+                    seed: 100 + step,
+                    ..Default::default()
+                };
+                let mf = fast.train_step(&mut sf, &x, &y, &h).unwrap();
+                let mb = base.train_step(&mut sb, &x, &y, &h).unwrap();
+                assert!(
+                    (mf.loss - mb.loss).abs() < 1e-4 * (1.0 + mb.loss.abs()),
+                    "{mode:?} step {step}: loss {} vs {}",
+                    mf.loss,
+                    mb.loss
+                );
+                // n_err may differ only on an exact logit tie (fp reorder)
+                assert!((mf.n_err - mb.n_err).abs() <= 1.0, "{mode:?} step {step}");
+            }
+            for (pi, (pf, pb)) in sf.params.iter().zip(&sb.params).enumerate() {
+                for (j, (a, b)) in pf.iter().zip(pb).enumerate() {
+                    assert!(
+                        (a - b).abs() < 1e-4 * (1.0 + b.abs()),
+                        "{mode:?} param {pi}[{j}]: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Acceptance gate: after warmup, a train step allocates nothing on
+    /// the stepping thread in any mode (workspace + packed kernels +
+    /// pool dispatch are all allocation-free).
+    #[test]
+    fn steady_state_train_step_is_allocation_free() {
+        // k = 70 (not a multiple of 64) exercises the ragged bit-word
+        // paths; sizes big enough that the GEMMs take the pooled branch.
+        let exec = ReferenceExecutor::new(mlp_info("za", 70, 96, 2, 10, 32)).unwrap();
+        let mut state = exec.init_state(&Hyper::default()).unwrap();
+        let (x, y) = tiny_batch(&exec, 13);
+        let mut step = 0u32;
+        for mode in [Mode::Det, Mode::Stoch, Mode::None] {
+            let mut run = |steps: u32, step: &mut u32| {
+                for _ in 0..steps {
+                    *step += 1;
+                    let h = Hyper {
+                        lr: 0.01,
+                        mode,
+                        opt: Opt::Adam,
+                        dropout: 0.1,
+                        in_dropout: 0.1,
+                        step: *step,
+                        seed: *step,
+                        ..Default::default()
+                    };
+                    exec.train_step(&mut state, &x, &y, &h).unwrap();
+                }
+            };
+            run(3, &mut step); // warmup: workspace build + pool spawn
+            let before = crate::test_alloc::thread_allocs();
+            run(5, &mut step);
+            let after = crate::test_alloc::thread_allocs();
+            assert_eq!(
+                after - before,
+                0,
+                "steady-state train_step allocated in mode {mode:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn train_step_is_deterministic_for_any_thread_count() {
+        // the pool splits rows, never reductions: two identical runs on
+        // the same process (whatever BCRUN_THREADS resolved to) and the
+        // serial kernels must agree exactly. Cross-thread-count equality
+        // is enforced by kernel design (see kernel/gemm.rs tests).
+        let exec = ReferenceExecutor::new(mlp_info("dt", 130, 64, 2, 10, 16)).unwrap();
+        let mut s1 = exec.init_state(&Hyper { seed: 8, ..Default::default() }).unwrap();
+        let mut s2 = s1.snapshot();
+        let (x, y) = tiny_batch(&exec, 21);
+        let h = Hyper { lr: 0.02, mode: Mode::Det, step: 1, seed: 5, ..Default::default() };
+        let m1 = exec.train_step(&mut s1, &x, &y, &h).unwrap();
+        let m2 = exec.train_step(&mut s2, &x, &y, &h).unwrap();
+        assert_eq!(m1.loss, m2.loss);
+        assert_eq!(s1.params[0], s2.params[0]);
     }
 }

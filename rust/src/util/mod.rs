@@ -1,18 +1,21 @@
-//! Utility substrates: errors, PRNG, JSON, CLI parsing, timing.
+//! Utility substrates: errors, PRNG, JSON, CLI parsing, timing, and the
+//! fork-join thread pool.
 //!
 //! The offline crate registry carries no general-purpose dependencies, so
-//! these replace `anyhow`, `rand`, `serde`/`serde_json`, `clap` and parts
-//! of `criterion` respectively (DESIGN.md, "vendored-dependency
+//! these replace `anyhow`, `rand`, `serde`/`serde_json`, `clap`, parts of
+//! `criterion`, and `rayon` respectively (DESIGN.md, "vendored-dependency
 //! constraint").
 
 pub mod cli;
 pub mod error;
 pub mod json;
+pub mod pool;
 pub mod rng;
 pub mod timer;
 
 pub use cli::Args;
 pub use error::{Context, Error, Result};
 pub use json::Json;
+pub use pool::{par_rows, Pool, SendPtr};
 pub use rng::{Rng, SplitMix64};
 pub use timer::{LatencyStats, Timer};

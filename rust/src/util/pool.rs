@@ -1,0 +1,406 @@
+//! Vendored fork-join thread pool (std threads only; rayon is not in the
+//! offline registry).
+//!
+//! Design goals, in order:
+//!
+//! 1. **Zero steady-state allocation.** Dispatching a job allocates
+//!    nothing: the job is a borrowed closure published through a
+//!    `Mutex`-guarded slot, and workers pull block indices from one
+//!    `AtomicUsize` cursor. This is what lets a warmed-up
+//!    `ReferenceExecutor::train_step` run allocation-free (see the
+//!    counting-allocator test in `runtime/reference.rs`).
+//! 2. **Determinism.** There is no work stealing and no per-thread
+//!    accumulation: callers split work into blocks whose *results* are
+//!    independent of which thread runs them (e.g. disjoint row ranges of a
+//!    GEMM output). Kernel results are therefore bit-for-bit identical for
+//!    any `BCRUN_THREADS` value.
+//! 3. **Simplicity.** One job runs at a time (`submit` mutex); the caller
+//!    participates in its own job, so a 1-thread pool degenerates to a
+//!    plain loop with no synchronization.
+//!
+//! The global pool is sized by the `BCRUN_THREADS` env var when set
+//! (validated — a typo fails loudly, see [`n_threads_from_env`]), else by
+//! `std::thread::available_parallelism()`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// Type-erased borrowed job. SAFETY: the submitting thread keeps the
+/// closure alive (and blocks) until every worker has finished running it.
+type RawJob = *const (dyn Fn() + Sync);
+
+#[derive(Clone, Copy)]
+struct SendJob(RawJob);
+// SAFETY: the pointee is `Sync` (it is a `&(dyn Fn() + Sync)`) and outlives
+// its publication window, enforced by `Pool::run` blocking until done.
+unsafe impl Send for SendJob {}
+
+struct State {
+    /// Bumped once per dispatched job so workers run each job exactly once.
+    epoch: u64,
+    job: Option<SendJob>,
+    /// Workers still running the current job.
+    active: usize,
+    /// Set when a worker caught a panic in the current job; re-raised on
+    /// the submitting thread so a failing block aborts the step instead of
+    /// hanging it.
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+}
+
+/// Fixed-size fork-join pool; see the module docs for the contract.
+pub struct Pool {
+    shared: Arc<Shared>,
+    /// Serializes job submission (one job in flight at a time).
+    submit: Mutex<()>,
+    /// Total worker count including the participating caller.
+    pub n_threads: usize,
+    handles: Vec<JoinHandle<()>>,
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut last_epoch = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != last_epoch {
+                    if let Some(j) = st.job {
+                        last_epoch = st.epoch;
+                        break j;
+                    }
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        // SAFETY: see `RawJob` — the submitter blocks until `active == 0`.
+        let f: &(dyn Fn() + Sync) = unsafe { &*job.0 };
+        // Catch panics so a failing block can never leave `active`
+        // undecremented (which would deadlock the submitter); the flag
+        // re-raises the panic on the submitting thread.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+        let mut st = shared.state.lock().unwrap();
+        if result.is_err() {
+            st.panicked = true;
+        }
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+impl Pool {
+    /// Spawn a pool with `n_threads` total lanes (the caller is one lane,
+    /// so `n_threads - 1` OS threads are created; 1 means fully inline).
+    pub fn new(n_threads: usize) -> Pool {
+        let n_threads = n_threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                job: None,
+                active: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(n_threads - 1);
+        for _ in 1..n_threads {
+            let sh = Arc::clone(&shared);
+            handles.push(std::thread::spawn(move || worker_loop(&sh)));
+        }
+        Pool { shared, submit: Mutex::new(()), n_threads, handles }
+    }
+
+    /// Execute `block_fn(0..n_blocks)` across the pool, caller included,
+    /// returning when every block has run. Blocks are claimed from an
+    /// atomic cursor in index order; no allocation happens on this path.
+    pub fn run(&self, n_blocks: usize, block_fn: &(dyn Fn(usize) + Sync)) {
+        if n_blocks == 0 {
+            return;
+        }
+        if self.handles.is_empty() || n_blocks == 1 {
+            for i in 0..n_blocks {
+                block_fn(i);
+            }
+            return;
+        }
+        let cursor = AtomicUsize::new(0);
+        let drain = || loop {
+            let b = cursor.fetch_add(1, Ordering::Relaxed);
+            if b >= n_blocks {
+                break;
+            }
+            block_fn(b);
+        };
+        let _guard = self.submit.lock().unwrap();
+        let erased: &(dyn Fn() + Sync) = &drain;
+        // SAFETY: lifetime erasure only — we block below until every
+        // worker has finished running the closure.
+        let raw: SendJob = SendJob(unsafe {
+            std::mem::transmute::<&(dyn Fn() + Sync), RawJob>(erased)
+        });
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.epoch = st.epoch.wrapping_add(1);
+            st.job = Some(raw);
+            st.active = self.handles.len();
+            st.panicked = false;
+        }
+        self.shared.work_cv.notify_all();
+        // Even if the caller's own blocks panic, the job closure must stay
+        // alive until every worker is done with it: this guard waits on
+        // drop, which runs during unwinding too.
+        struct DoneWait<'a>(&'a Shared);
+        impl Drop for DoneWait<'_> {
+            fn drop(&mut self) {
+                let mut st = self.0.state.lock().unwrap();
+                while st.active > 0 {
+                    st = self.0.done_cv.wait(st).unwrap();
+                }
+                st.job = None;
+            }
+        }
+        let wait = DoneWait(&self.shared);
+        drain();
+        drop(wait);
+        let st = self.shared.state.lock().unwrap();
+        if st.panicked {
+            drop(st);
+            panic!("pool: a parallel block panicked on a worker thread");
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Pure parse of a `BCRUN_THREADS` value. `None` (unset) -> available
+/// parallelism; a set value must be a positive integer or the error names
+/// the offending value.
+pub fn parse_threads(var: Option<&str>) -> Result<usize, String> {
+    match var {
+        Some(v) => v
+            .trim()
+            .parse::<usize>()
+            .ok()
+            .filter(|&t| t >= 1)
+            .ok_or_else(|| {
+                format!("BCRUN_THREADS must be a positive integer, got '{v}'")
+            }),
+        None => Ok(std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)),
+    }
+}
+
+/// Parse the `BCRUN_THREADS` override from the environment. Checked early
+/// by `bcrun` so typos fail loudly instead of silently using a default.
+pub fn n_threads_from_env() -> Result<usize, String> {
+    match std::env::var("BCRUN_THREADS") {
+        Ok(v) => parse_threads(Some(&v)),
+        Err(std::env::VarError::NotPresent) => parse_threads(None),
+        Err(e) => Err(format!("BCRUN_THREADS is not valid unicode: {e}")),
+    }
+}
+
+static GLOBAL: OnceLock<Pool> = OnceLock::new();
+
+/// The process-wide pool every kernel dispatches to. First use spawns the
+/// workers; an invalid `BCRUN_THREADS` panics with the parse error
+/// (`bcrun` validates the variable up front to turn that into a clean
+/// CLI error instead).
+pub fn global() -> &'static Pool {
+    GLOBAL.get_or_init(|| {
+        let n = n_threads_from_env().unwrap_or_else(|e| panic!("{e}"));
+        Pool::new(n)
+    })
+}
+
+/// Split `n_rows` into `grain`-sized contiguous ranges and run
+/// `f(lo, hi)` for each across the global pool. The primitive every
+/// kernel parallelizes with; per-range results must not depend on the
+/// split (disjoint output ranges), which keeps results thread-count
+/// independent.
+pub fn par_rows(n_rows: usize, grain: usize, f: &(dyn Fn(usize, usize) + Sync)) {
+    if n_rows == 0 {
+        return;
+    }
+    let grain = grain.max(1);
+    let blocks = n_rows.div_ceil(grain);
+    let pool = global();
+    if blocks <= 1 || pool.n_threads == 1 {
+        f(0, n_rows);
+        return;
+    }
+    pool.run(blocks, &|bi| {
+        let lo = bi * grain;
+        let hi = (lo + grain).min(n_rows);
+        f(lo, hi);
+    });
+}
+
+/// Shared mutable base pointer for writing *disjoint* ranges of one buffer
+/// from pool blocks (the safe-slice route would need per-block ownership).
+pub struct SendPtr<T>(pub *mut T);
+
+// SAFETY: callers only touch disjoint ranges and the buffer outlives the
+// dispatch (the pool blocks until all ranges are written).
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    /// Reborrow `len` elements starting at `start` as a mutable slice.
+    ///
+    /// # Safety
+    ///
+    /// `start..start + len` must be in bounds of the original buffer, must
+    /// not overlap any range another thread touches concurrently, and the
+    /// buffer must outlive the use (guaranteed when called from a
+    /// [`Pool::run`] block over disjoint ranges).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice(&self, start: usize, len: usize) -> &mut [T] {
+        std::slice::from_raw_parts_mut(self.0.add(start), len)
+    }
+
+    /// Write one element at `idx`.
+    ///
+    /// # Safety
+    ///
+    /// Same contract as [`SendPtr::slice`] for the single index `idx`.
+    pub unsafe fn write(&self, idx: usize, value: T) {
+        std::ptr::write(self.0.add(idx), value);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn run_executes_every_block_exactly_once() {
+        let pool = Pool::new(4);
+        let hits: Vec<AtomicU64> = (0..97).map(|_| AtomicU64::new(0)).collect();
+        pool.run(97, &|b| {
+            hits[b].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        // a second job on the same pool also runs to completion
+        let total = AtomicU64::new(0);
+        pool.run(10, &|b| {
+            total.fetch_add(b as u64, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 45);
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = Pool::new(1);
+        let seen = std::sync::Mutex::new(Vec::new());
+        pool.run(5, &|b| {
+            seen.lock().unwrap().push(b);
+        });
+        assert_eq!(*seen.lock().unwrap(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn par_rows_covers_range_with_disjoint_writes() {
+        let n = 1003;
+        let mut out = vec![0u32; n];
+        let ptr = SendPtr(out.as_mut_ptr());
+        par_rows(n, 64, &|lo, hi| {
+            // SAFETY: ranges from par_rows are disjoint and in bounds.
+            let s = unsafe { ptr.slice(lo, hi - lo) };
+            for (off, v) in s.iter_mut().enumerate() {
+                *v = (lo + off) as u32;
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i as u32);
+        }
+    }
+
+    #[test]
+    fn concurrent_submitters_serialize() {
+        // two threads race to submit jobs; the submit mutex must keep each
+        // job's blocks consistent.
+        let pool = std::sync::Arc::new(Pool::new(3));
+        let mut joins = vec![];
+        for t in 0..2u64 {
+            let p = std::sync::Arc::clone(&pool);
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..50 {
+                    let sum = AtomicU64::new(0);
+                    p.run(20, &|b| {
+                        sum.fetch_add(b as u64 + t, Ordering::Relaxed);
+                    });
+                    assert_eq!(sum.load(Ordering::Relaxed), 190 + 20 * t);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn panicking_block_aborts_the_job_instead_of_deadlocking() {
+        let pool = Pool::new(3);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(64, &|b| {
+                assert!(b % 7 != 3, "boom at {b}");
+            });
+        }));
+        assert!(result.is_err(), "panic must propagate to the submitter");
+        // the pool stays usable for the next job
+        let total = AtomicU64::new(0);
+        pool.run(8, &|b| {
+            total.fetch_add(b as u64, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 28);
+    }
+
+    #[test]
+    fn thread_count_parsing() {
+        // pure parse only — setting the real env var would race the other
+        // tests' first-touch of the global pool.
+        assert_eq!(parse_threads(Some("3")), Ok(3));
+        assert_eq!(parse_threads(Some(" 8 ")), Ok(8));
+        assert!(parse_threads(None).unwrap() >= 1);
+        for bad in ["0", "-2", "abc", "1.5", ""] {
+            let err = parse_threads(Some(bad)).unwrap_err();
+            assert!(
+                err.contains("positive integer") && err.contains(bad.trim()),
+                "unhelpful error for {bad:?}: {err}"
+            );
+        }
+    }
+}
