@@ -6,17 +6,24 @@
 //!   * train/eval step: seed-era baseline path vs the packed/workspace
 //!     fast path, per builtin MLP and at the paper's 3x1024 MLP scale —
 //!     the headline "train-step speedup vs current main" number
+//!   * the SIMD dispatch ladder: the same f32 GEMM, packed sign-GEMM and
+//!     fast train step pinned to each ISA rung the host supports
+//!     (`gemm_avx2`, `packed_avx2`, `train_fast_avx2`, ... series), with
+//!     `*_speedup_vs_scalar` metrics — the dispatch layer's win isolated
+//!     from blocking/threading
 //!
 //! Run: cargo bench --bench perf_gemm [-- --iters N] [--json BENCH_perf.json]
 //!
-//! `--json` writes machine-readable results (name, mean_s, iters, shape)
-//! so the perf trajectory is tracked from PR to PR (BENCH_perf.json at the
+//! `--json` writes machine-readable results (name, mean_s, iters, shape,
+//! plus the machine block: cores, pool threads, detected/selected ISA) so
+//! the perf trajectory is tracked from PR to PR (BENCH_perf.json at the
 //! repo root holds the last committed run; regenerate it with the command
 //! above from `rust/`).
 
 use binaryconnect::bench_harness::{bench, fmt_time, JsonReport, Table};
 use binaryconnect::binary::packed::BitMatrix;
 use binaryconnect::kernel;
+use binaryconnect::kernel::simd::{self, Isa, ALL_ISAS};
 use binaryconnect::runtime::reference::mlp_info;
 use binaryconnect::runtime::{Executor, Hyper, Mode, Opt, ReferenceExecutor};
 use binaryconnect::util::error::{Error, Result};
@@ -27,7 +34,12 @@ fn main() -> Result<()> {
     args.check_known(&["iters", "json"]).map_err(Error::msg)?;
     let iters = args.usize("iters", 15);
     let mut report = JsonReport::new();
-    println!("threads: {}", pool::global().n_threads);
+    println!(
+        "threads: {} | simd: {} (detected {})",
+        pool::global().n_threads,
+        simd::active().name(),
+        simd::detect().name()
+    );
     report.metric("threads", pool::global().n_threads as f64);
 
     // ---------- f32 GEMM kernels: naive vs blocked vs blocked+pool ----------
@@ -167,6 +179,113 @@ fn main() -> Result<()> {
     t2.print();
     println!("\n(speedup = seed-era dense/naive/allocating step vs packed sign-GEMM +");
     println!(" blocked multithreaded kernels + zero-alloc workspace; see EXPERIMENTS.md)");
+
+    // ---------- SIMD dispatch ladder: per-ISA series ----------
+    let selected = simd::active();
+    println!(
+        "\nSIMD dispatch ladder (detected {}, selected {}):",
+        simd::detect().name(),
+        selected.name()
+    );
+    let mut t3 = Table::new(&[
+        "isa",
+        "gemm 1024 (1T)",
+        "packed b=64",
+        "packed b=100",
+        "train mlp1024",
+        "gemm x",
+        "packed x",
+        "packed100 x",
+        "train x",
+    ]);
+    let (m, k, n) = (100usize, 1024usize, 1024usize);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+    let bmat: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+    let mut c = vec![0f32; m * n];
+    let w: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+    // b=64: the AVX2 register-resident chunk exactly; b=100 (the mlp1024
+    // training batch) additionally exercises the ragged 36-wide tail
+    // chunk, so the tracked metric matches the real training shape.
+    let bb = 64usize;
+    let b100 = 100usize;
+    let x: Vec<f32> = (0..b100 * k).map(|_| rng.normal()).collect();
+    let bm = BitMatrix::pack(&w, k, n);
+    let mut y = vec![0f32; b100 * n];
+    let mut xt = vec![0f32; k * b100];
+    let mut totals = vec![0f32; b100];
+    let ladder = ReferenceExecutor::new(mlp_info("mlp1024", 784, 1024, 3, 10, 100))?;
+    // every rung restarts training from this exact state, so the ladder
+    // compares ISAs on identical work (sparsity/sign profiles drift as
+    // training progresses — sharing one evolving state would confound the
+    // speedup metric with that drift)
+    let lstate0 = ladder.init_state(&Hyper::default())?;
+    let nx: usize = ladder.info().input_shape.iter().product();
+    let mut r2 = Rng::new(77);
+    let lx: Vec<f32> = (0..nx).map(|_| r2.normal()).collect();
+    let classes = ladder.info().classes;
+    let mut ly = vec![-1.0f32; ladder.info().batch * classes];
+    for i in 0..ladder.info().batch {
+        ly[i * classes + r2.below(classes)] = 1.0;
+    }
+    let h0 = Hyper { lr: 0.001, mode: Mode::Det, opt: Opt::Adam, ..Default::default() };
+    let mut scalar_base: Option<(f64, f64, f64, f64)> = None;
+    // worst rung first: the scalar arm establishes the speedup baseline
+    for &isa in ALL_ISAS.iter().rev() {
+        if !isa.supported() {
+            continue;
+        }
+        simd::set_active(isa).map_err(Error::msg)?;
+        let mut lstate = lstate0.snapshot();
+        let mut lstep = 0u32;
+        let rg = bench(&format!("gemm_{}", isa.name()), 2, iters, || {
+            kernel::gemm_serial(&a, &bmat, m, k, n, &mut c);
+            std::hint::black_box(&c);
+        });
+        let rp = bench(&format!("packed_{}", isa.name()), 2, iters, || {
+            let xs = &x[..bb * k];
+            bm.matmul_scaled_into(xs, bb, 1.0, &mut y[..bb * n], &mut xt, &mut totals);
+            std::hint::black_box(&y);
+        });
+        let rp100 = bench(&format!("packed_b100_{}", isa.name()), 2, iters, || {
+            bm.matmul_scaled_into(&x, b100, 1.0, &mut y, &mut xt, &mut totals);
+            std::hint::black_box(&y);
+        });
+        let rt = bench(&format!("train_fast_{}", isa.name()), 2, iters, || {
+            lstep += 1;
+            let h = Hyper { step: lstep, seed: lstep, ..h0.clone() };
+            ladder.train_step(&mut lstate, &lx, &ly, &h).unwrap();
+        });
+        report.add(&rg, &format!("{k}x{n} b={m} 1T"));
+        report.add(&rp, &format!("{k}x{n} b={bb}"));
+        report.add(&rp100, &format!("{k}x{n} b={b100}"));
+        report.add(&rt, "mlp1024");
+        if isa == Isa::Scalar {
+            scalar_base = Some((rg.mean_s, rp.mean_s, rp100.mean_s, rt.mean_s));
+        }
+        let (g0, p0, p1, t0) = scalar_base.unwrap();
+        t3.row(&[
+            isa.name().to_string(),
+            fmt_time(rg.mean_s),
+            fmt_time(rp.mean_s),
+            fmt_time(rp100.mean_s),
+            fmt_time(rt.mean_s),
+            format!("{:.2}x", g0 / rg.mean_s),
+            format!("{:.2}x", p0 / rp.mean_s),
+            format!("{:.2}x", p1 / rp100.mean_s),
+            format!("{:.2}x", t0 / rt.mean_s),
+        ]);
+        if isa != Isa::Scalar {
+            let name = isa.name();
+            report.metric(&format!("gemm_{name}_speedup_vs_scalar"), g0 / rg.mean_s);
+            report.metric(&format!("packed_{name}_speedup_vs_scalar"), p0 / rp.mean_s);
+            report.metric(&format!("packed_b100_{name}_speedup_vs_scalar"), p1 / rp100.mean_s);
+            report.metric(&format!("train_fast_{name}_speedup_vs_scalar"), t0 / rt.mean_s);
+        }
+    }
+    simd::set_active(selected).map_err(Error::msg)?;
+    t3.print();
+    println!("(gemm series is single-threaded to isolate the ISA; packed/train ride the pool.");
+    println!(" acceptance: gemm_avx2 >= 2x scalar, packed SIMD >= 1.5x scalar)");
 
     if let Some(path) = args.opt_str("json") {
         report.save("perf_gemm", std::path::Path::new(&path))?;

@@ -10,7 +10,8 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use crate::util::{Json, LatencyStats, Timer};
+use crate::kernel::simd;
+use crate::util::{pool, Json, LatencyStats, Timer};
 
 /// Result of timing one benchmark case.
 #[derive(Clone, Debug)]
@@ -134,11 +135,21 @@ impl JsonReport {
         self.entries.push(Json::Obj(m));
     }
 
-    /// Write `{"bench": <bench>, "generated": true, "results": [...]}`.
+    /// Write `{"bench": <bench>, "generated": true, "machine": {...},
+    /// "results": [...]}`. The machine block (core count, pool threads,
+    /// detected and selected kernel ISA) is what makes `BENCH_perf.json`
+    /// entries comparable across hosts.
     pub fn save(&self, bench: &str, path: &Path) -> std::io::Result<()> {
+        let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        let mut machine = BTreeMap::new();
+        machine.insert("cores".to_string(), Json::Num(cores as f64));
+        machine.insert("pool_threads".to_string(), Json::Num(pool::global().n_threads as f64));
+        machine.insert("isa_detected".to_string(), Json::Str(simd::detect().name().to_string()));
+        machine.insert("isa_selected".to_string(), Json::Str(simd::active().name().to_string()));
         let mut top = BTreeMap::new();
         top.insert("bench".to_string(), Json::Str(bench.to_string()));
         top.insert("generated".to_string(), Json::Bool(true));
+        top.insert("machine".to_string(), Json::Obj(machine));
         top.insert("results".to_string(), Json::Arr(self.entries.clone()));
         std::fs::write(path, Json::Obj(top).to_string())
     }
@@ -212,6 +223,13 @@ mod tests {
         let j = Json::parse(&text).unwrap();
         assert_eq!(j.get("bench").unwrap().as_str(), Some("perf_test"));
         assert_eq!(j.get("generated").unwrap().as_bool(), Some(true));
+        let machine = j.get("machine").unwrap();
+        assert!(machine.get("cores").unwrap().as_usize().unwrap() >= 1);
+        assert!(machine.get("pool_threads").unwrap().as_usize().unwrap() >= 1);
+        let detected = machine.get("isa_detected").unwrap().as_str().unwrap();
+        assert!(["scalar", "sse2", "avx2"].contains(&detected), "{detected}");
+        let selected = machine.get("isa_selected").unwrap().as_str().unwrap();
+        assert!(["scalar", "sse2", "avx2"].contains(&selected), "{selected}");
         let results = j.get("results").unwrap().as_arr().unwrap();
         assert_eq!(results.len(), 2);
         assert_eq!(results[0].get("name").unwrap().as_str(), Some("unit"));

@@ -9,8 +9,20 @@
 //! training, not just inference. Column/row blocks ride the
 //! `util::pool` fork-join pool; every output element is produced by
 //! exactly one thread, so results are thread-count independent.
+//!
+//! The accumulation loops go through the runtime-dispatched
+//! [`crate::kernel::simd`] microkernel table: in the batched kernels the
+//! SIMD lanes map one-to-one onto batch columns (each decoded weight bit
+//! adds a contiguous activation stripe 8-at-a-time on AVX2, with the
+//! steady-state 64-column chunk held in registers), so every rung is
+//! **bit-exact** with the scalar path. The batch-1 forward instead lets
+//! each 64-bit sign word drive sign-flips of eight activation lanes at a
+//! time (XOR with a mask expanded from the bits) — same math, different
+//! association, property-tested against scalar within a 1e-5-scale bound.
+//! The `*_isa` variants pin an explicit rung for tests and benches.
 
 use crate::data::Dataset;
+use crate::kernel::simd::{self, Isa, Kernels};
 use crate::util::pool::{global as pool_global, par_rows, SendPtr};
 use crate::util::Rng;
 
@@ -143,12 +155,42 @@ impl BitMatrix {
         xt: &mut [f32],
         totals: &mut [f32],
     ) {
+        self.matmul_scaled_kern(simd::kernels(), x, b, scale, y, xt, totals);
+    }
+
+    /// [`BitMatrix::matmul_scaled_into`] pinned to an explicit ISA rung
+    /// (test/bench hook — no process-global dispatch mutation).
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul_scaled_into_isa(
+        &self,
+        isa: Isa,
+        x: &[f32],
+        b: usize,
+        scale: f32,
+        y: &mut [f32],
+        xt: &mut [f32],
+        totals: &mut [f32],
+    ) {
+        self.matmul_scaled_kern(simd::kernels_for(isa), x, b, scale, y, xt, totals);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn matmul_scaled_kern(
+        &self,
+        kern: &'static Kernels,
+        x: &[f32],
+        b: usize,
+        scale: f32,
+        y: &mut [f32],
+        xt: &mut [f32],
+        totals: &mut [f32],
+    ) {
         assert_eq!(x.len(), b * self.k);
         assert_eq!(y.len(), b * self.n);
         if b == 1 {
-            self.matmul_single_scaled(x, scale, y);
+            self.matmul_single_scaled(kern, x, scale, y);
         } else {
-            self.matmul_batched_scaled(x, b, scale, y, xt, totals);
+            self.matmul_batched_scaled(kern, x, b, scale, y, xt, totals);
         }
     }
 
@@ -160,10 +202,21 @@ impl BitMatrix {
         self.n.div_ceil(pool_global().n_threads * 4).max(1)
     }
 
-    fn matmul_single_scaled(&self, xrow: &[f32], scale: f32, y: &mut [f32]) {
-        let k = self.k;
+    /// Batch-1 forward. The scalar rung walks each column's set bits
+    /// (selected-sum plus the `2·sel − total` identity); the SIMD rungs
+    /// sign-flip eight input lanes per decoded byte of the weight word
+    /// (XOR with a mask expanded from the bits) and sum directly.
+    fn matmul_single_scaled(
+        &self,
+        kern: &'static Kernels,
+        xrow: &[f32],
+        scale: f32,
+        y: &mut [f32],
+    ) {
         let wpc = self.words_per_col;
-        let total: f32 = xrow.iter().sum();
+        // only the scalar rung's 2·sel − total identity consumes the input
+        // sum; the SIMD sign-flip kernels ignore it, so skip the O(k) pass
+        let total: f32 = if kern.isa == Isa::Scalar { xrow.iter().sum() } else { 0.0 };
         let words = &self.words;
         let yp = SendPtr(y.as_mut_ptr());
         par_rows(self.n, self.col_grain(1), &|jlo, jhi| {
@@ -172,34 +225,15 @@ impl BitMatrix {
             for (dj, yv) in ys.iter_mut().enumerate() {
                 let j = jlo + dj;
                 let col = &words[j * wpc..(j + 1) * wpc];
-                let mut sel = 0f32;
-                // selected-sum: adds only, gated by the weight bits
-                for (wi, &word) in col.iter().enumerate() {
-                    if word == 0 {
-                        continue;
-                    }
-                    let base = wi * 64;
-                    if word == u64::MAX && base + 64 <= k {
-                        // fast path: fully-positive word
-                        for &v in &xrow[base..base + 64] {
-                            sel += v;
-                        }
-                    } else {
-                        let mut m = word;
-                        while m != 0 {
-                            let t = m.trailing_zeros() as usize;
-                            sel += xrow[base + t];
-                            m &= m - 1;
-                        }
-                    }
-                }
-                *yv = scale * (2.0 * sel - total);
+                *yv = scale * (kern.sign_dot)(col, xrow, total);
             }
         });
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn matmul_batched_scaled(
         &self,
+        kern: &'static Kernels,
         x: &[f32],
         b: usize,
         scale: f32,
@@ -228,33 +262,24 @@ impl BitMatrix {
         let totals: &[f32] = totals;
         let words = &self.words;
         let yp = SendPtr(y.as_mut_ptr());
+        // per-ISA batch chunk: 64 keeps the whole strip in eight ymm
+        // registers on AVX2; scalar/SSE2 use 128 to halve the per-column
+        // bit-decode passes. Chunking cannot change results — SIMD lanes
+        // are batch columns, so every rung accumulates each column in the
+        // same order: bit-exact across ISAs and chunk widths.
+        let chunk = kern.sel_chunk.clamp(1, simd::SEL_CHUNK_MAX);
         par_rows(n, self.col_grain(b), &|jlo, jhi| {
             // selected-sum stripes, batch chunked so `sel` lives on the
             // stack (keeps the training step allocation-free)
-            const SEL_CHUNK: usize = 128;
-            let mut sel = [0f32; SEL_CHUNK];
+            let mut sel = [0f32; simd::SEL_CHUNK_MAX];
             for j in jlo..jhi {
                 let col = &words[j * wpc..(j + 1) * wpc];
                 let mut c0 = 0usize;
                 while c0 < b {
-                    let ce = (c0 + SEL_CHUNK).min(b);
+                    let ce = (c0 + chunk).min(b);
                     let sel = &mut sel[..ce - c0];
                     sel.fill(0.0);
-                    for (wi, &word) in col.iter().enumerate() {
-                        if word == 0 {
-                            continue;
-                        }
-                        let base = wi * 64;
-                        let mut m = word;
-                        while m != 0 {
-                            let t = m.trailing_zeros() as usize;
-                            let stripe = &xt[(base + t) * b + c0..(base + t) * b + ce];
-                            for (s, &v) in sel.iter_mut().zip(stripe) {
-                                *s += v;
-                            }
-                            m &= m - 1;
-                        }
-                    }
+                    (kern.sign_accum)(col, xt, b, c0, sel);
                     for (bi, &s) in (c0..ce).zip(sel.iter()) {
                         // SAFETY: element (bi, j) is written by exactly one
                         // thread (columns are partitioned).
@@ -274,6 +299,38 @@ impl BitMatrix {
     #[allow(clippy::too_many_arguments)]
     pub fn tmatmul_scaled_into(
         &self,
+        dz: &[f32],
+        b: usize,
+        scale: f32,
+        dx: &mut [f32],
+        dzt: &mut [f32],
+        acc: &mut [f32],
+        totals: &mut [f32],
+    ) {
+        self.tmatmul_scaled_kern(simd::kernels(), dz, b, scale, dx, dzt, acc, totals);
+    }
+
+    /// [`BitMatrix::tmatmul_scaled_into`] pinned to an explicit ISA rung
+    /// (test/bench hook — no process-global dispatch mutation).
+    #[allow(clippy::too_many_arguments)]
+    pub fn tmatmul_scaled_into_isa(
+        &self,
+        isa: Isa,
+        dz: &[f32],
+        b: usize,
+        scale: f32,
+        dx: &mut [f32],
+        dzt: &mut [f32],
+        acc: &mut [f32],
+        totals: &mut [f32],
+    ) {
+        self.tmatmul_scaled_kern(simd::kernels_for(isa), dz, b, scale, dx, dzt, acc, totals);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn tmatmul_scaled_kern(
+        &self,
+        kern: &'static Kernels,
         dz: &[f32],
         b: usize,
         scale: f32,
@@ -332,9 +389,8 @@ impl BitMatrix {
                         let t = m.trailing_zeros() as usize;
                         let i = base + t;
                         let arow = &mut arows[(i - ilo) * b..(i - ilo + 1) * b];
-                        for (s, &v) in arow.iter_mut().zip(stripe) {
-                            *s += v;
-                        }
+                        // lanes are batch columns: bit-exact on every ISA
+                        (kern.add)(arow, stripe);
                         m &= m - 1;
                     }
                 }

@@ -8,7 +8,16 @@
 //! is over disjoint output-row blocks via `util::pool::par_rows`; a row is
 //! never split across threads and its (k-tile, n-tile) reduction order is
 //! fixed, so results are identical for any thread count.
+//!
+//! The innermost loops (the 4-row axpy strip, the single-row axpy, the
+//! A·B^T dot) go through the runtime-dispatched microkernel table in
+//! [`super::simd`]: AVX2+FMA or SSE2 on x86_64, the original scalar loops
+//! everywhere else (and under `BCRUN_SIMD=scalar`). Pooled and serial
+//! variants fetch the same table, so their bit-for-bit equality survives
+//! dispatch; the `*_with` variants pin an explicit ISA for tests and the
+//! `perf_gemm` dispatch-ladder series.
 
+use super::simd::{self, Isa, Kernels};
 use crate::util::pool::{global, par_rows, SendPtr};
 
 /// k-tile: the B panel rows kept hot while sweeping output rows.
@@ -31,7 +40,17 @@ fn row_grain(rows: usize) -> usize {
 
 /// Compute rows `lo..hi` of C = A·B into `c` (which holds exactly those
 /// rows). Fixed (kb, jb) tile order per row -> thread-count independent.
-fn gemm_rows(a: &[f32], b: &[f32], k: usize, n: usize, lo: usize, hi: usize, c: &mut [f32]) {
+#[allow(clippy::too_many_arguments)]
+fn gemm_rows(
+    kern: &Kernels,
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    n: usize,
+    lo: usize,
+    hi: usize,
+    c: &mut [f32],
+) {
     c.fill(0.0);
     let rows = hi - lo;
     let mut kb = 0;
@@ -60,22 +79,13 @@ fn gemm_rows(a: &[f32], b: &[f32], k: usize, n: usize, lo: usize, hi: usize, c: 
                         continue;
                     }
                     let br = &b[p * n + jb..p * n + je];
-                    for ((((cv0, cv1), cv2), cv3), &bv) in c0
-                        .iter_mut()
-                        .zip(c1.iter_mut())
-                        .zip(c2.iter_mut())
-                        .zip(c3.iter_mut())
-                        .zip(br)
-                    {
-                        *cv0 += a0 * bv;
-                        *cv1 += a1 * bv;
-                        *cv2 += a2 * bv;
-                        *cv3 += a3 * bv;
-                    }
+                    (kern.axpy4)(&[a0, a1, a2, a3], br, c0, c1, c2, c3);
                 }
                 r += 4;
             }
-            // tail rows, one at a time (same per-row order as the strip)
+            // tail rows, one at a time (axpy1 ≡ one axpy4 row per ISA, so
+            // a row computes the same bits whether it fell in a strip or
+            // in the tail of a different pooled split)
             while r < rows {
                 let i = lo + r;
                 let crow = &mut c[r * n + jb..r * n + je];
@@ -85,9 +95,7 @@ fn gemm_rows(a: &[f32], b: &[f32], k: usize, n: usize, lo: usize, hi: usize, c: 
                         continue;
                     }
                     let br = &b[p * n + jb..p * n + je];
-                    for (cv, &bv) in crow.iter_mut().zip(br) {
-                        *cv += av * bv;
-                    }
+                    (kern.axpy1)(av, br, crow);
                 }
                 r += 1;
             }
@@ -102,15 +110,16 @@ pub fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
     assert_eq!(a.len(), m * k, "gemm: A length");
     assert_eq!(b.len(), k * n, "gemm: B length");
     assert_eq!(c.len(), m * n, "gemm: C length");
+    let kern = simd::kernels();
     if m * k * n < PAR_MIN_WORK {
-        gemm_rows(a, b, k, n, 0, m, c);
+        gemm_rows(kern, a, b, k, n, 0, m, c);
         return;
     }
     let cp = SendPtr(c.as_mut_ptr());
     par_rows(m, row_grain(m), &|lo, hi| {
         // SAFETY: par_rows hands out disjoint row ranges of C.
         let rows = unsafe { cp.slice(lo * n, (hi - lo) * n) };
-        gemm_rows(a, b, k, n, lo, hi, rows);
+        gemm_rows(kern, a, b, k, n, lo, hi, rows);
     });
 }
 
@@ -119,7 +128,16 @@ pub fn gemm_serial(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     assert_eq!(c.len(), m * n);
-    gemm_rows(a, b, k, n, 0, m, c);
+    gemm_rows(simd::kernels(), a, b, k, n, 0, m, c);
+}
+
+/// C = A·B with an explicit ISA rung, single-threaded. Test/bench hook:
+/// lets callers compare rungs without touching the global dispatch.
+pub fn gemm_with(isa: Isa, a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    gemm_rows(simd::kernels_for(isa), a, b, k, n, 0, m, c);
 }
 
 /// The seed's ikj loop (one row of B streamed per A value, zero-skip):
@@ -151,6 +169,7 @@ pub fn gemm_naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f
 /// activation skips an entire row update of width NB.
 #[allow(clippy::too_many_arguments)]
 fn at_b_rows(
+    kern: &Kernels,
     a: &[f32],
     b: &[f32],
     m: usize,
@@ -177,9 +196,7 @@ fn at_b_rows(
                     }
                     let base = (ib + r2) * n;
                     let crow = &mut c[base + jb..base + je];
-                    for (cv, &bv) in crow.iter_mut().zip(brow) {
-                        *cv += av * bv;
-                    }
+                    (kern.axpy1)(av, brow, crow);
                 }
             }
             ib = ie;
@@ -193,15 +210,16 @@ pub fn gemm_at_b(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f3
     assert_eq!(a.len(), m * k, "gemm_at_b: A length");
     assert_eq!(b.len(), m * n, "gemm_at_b: B length");
     assert_eq!(c.len(), k * n, "gemm_at_b: C length");
+    let kern = simd::kernels();
     if m * k * n < PAR_MIN_WORK {
-        at_b_rows(a, b, m, k, n, 0, k, c);
+        at_b_rows(kern, a, b, m, k, n, 0, k, c);
         return;
     }
     let cp = SendPtr(c.as_mut_ptr());
     par_rows(k, row_grain(k), &|ilo, ihi| {
         // SAFETY: disjoint C row ranges.
         let rows = unsafe { cp.slice(ilo * n, (ihi - ilo) * n) };
-        at_b_rows(a, b, m, k, n, ilo, ihi, rows);
+        at_b_rows(kern, a, b, m, k, n, ilo, ihi, rows);
     });
 }
 
@@ -210,7 +228,15 @@ pub fn gemm_at_b_serial(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), m * n);
     assert_eq!(c.len(), k * n);
-    at_b_rows(a, b, m, k, n, 0, k, c);
+    at_b_rows(simd::kernels(), a, b, m, k, n, 0, k, c);
+}
+
+/// C = A^T·B with an explicit ISA rung, single-threaded (test/bench hook).
+pub fn gemm_at_b_with(isa: Isa, a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), m * n);
+    assert_eq!(c.len(), k * n);
+    at_b_rows(simd::kernels_for(isa), a, b, m, k, n, 0, k, c);
 }
 
 /// The seed's A^T·B loop (per-sample outer products, zero-skip).
@@ -236,29 +262,20 @@ pub fn gemm_at_b_naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &m
 // C[m x k] = A @ B^T   (A is m x n, B is k x n) — the dX = dZ·W^T kernel
 // ---------------------------------------------------------------------------
 
-/// Eight-accumulator dot product; fixed reduction order (chunks of 8, then
-/// pairwise fold, then the tail) so every call site agrees bit-for-bit.
-#[inline]
-fn dot(a: &[f32], b: &[f32]) -> f32 {
-    let mut acc = [0f32; 8];
-    let mut ac = a.chunks_exact(8);
-    let mut bc = b.chunks_exact(8);
-    for (av, bv) in (&mut ac).zip(&mut bc) {
-        for ((s, &x), &y) in acc.iter_mut().zip(av).zip(bv) {
-            *s += x * y;
-        }
-    }
-    let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3]))
-        + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
-    for (&av, &bv) in ac.remainder().iter().zip(bc.remainder()) {
-        s += av * bv;
-    }
-    s
-}
-
 /// Compute C rows `lo..hi` (batch rows) into `c`; n is tiled so the B rows
-/// being dotted stay cache-resident.
-fn a_bt_rows(a: &[f32], b: &[f32], n: usize, k: usize, lo: usize, hi: usize, c: &mut [f32]) {
+/// being dotted stay cache-resident. The dot microkernel has a fixed
+/// per-ISA reduction order, so every call site agrees bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+fn a_bt_rows(
+    kern: &Kernels,
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    k: usize,
+    lo: usize,
+    hi: usize,
+    c: &mut [f32],
+) {
     c.fill(0.0);
     let mut nb = 0;
     while nb < n {
@@ -268,7 +285,7 @@ fn a_bt_rows(a: &[f32], b: &[f32], n: usize, k: usize, lo: usize, hi: usize, c: 
             let arow = &a[t * n + nb..t * n + ne];
             for (i, cv) in crow.iter_mut().enumerate() {
                 let brow = &b[i * n + nb..i * n + ne];
-                *cv += dot(arow, brow);
+                *cv += (kern.dot)(arow, brow);
             }
         }
         nb = ne;
@@ -280,15 +297,16 @@ pub fn gemm_a_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, c: &mut [f3
     assert_eq!(a.len(), m * n, "gemm_a_bt: A length");
     assert_eq!(b.len(), k * n, "gemm_a_bt: B length");
     assert_eq!(c.len(), m * k, "gemm_a_bt: C length");
+    let kern = simd::kernels();
     if m * k * n < PAR_MIN_WORK {
-        a_bt_rows(a, b, n, k, 0, m, c);
+        a_bt_rows(kern, a, b, n, k, 0, m, c);
         return;
     }
     let cp = SendPtr(c.as_mut_ptr());
     par_rows(m, row_grain(m), &|lo, hi| {
         // SAFETY: disjoint C row ranges.
         let rows = unsafe { cp.slice(lo * k, (hi - lo) * k) };
-        a_bt_rows(a, b, n, k, lo, hi, rows);
+        a_bt_rows(kern, a, b, n, k, lo, hi, rows);
     });
 }
 
@@ -297,7 +315,15 @@ pub fn gemm_a_bt_serial(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, c: &
     assert_eq!(a.len(), m * n);
     assert_eq!(b.len(), k * n);
     assert_eq!(c.len(), m * k);
-    a_bt_rows(a, b, n, k, 0, m, c);
+    a_bt_rows(simd::kernels(), a, b, n, k, 0, m, c);
+}
+
+/// C = A·B^T with an explicit ISA rung, single-threaded (test/bench hook).
+pub fn gemm_a_bt_with(isa: Isa, a: &[f32], b: &[f32], m: usize, n: usize, k: usize, c: &mut [f32]) {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * k);
+    a_bt_rows(simd::kernels_for(isa), a, b, n, k, 0, m, c);
 }
 
 /// The seed's A·B^T loop (single-accumulator row dots).
@@ -405,12 +431,30 @@ mod tests {
     }
 
     #[test]
-    fn dot_fixed_order_is_stable() {
-        let a = rand(37, 7, 0.0);
-        let b = rand(37, 8, 0.0);
-        assert_eq!(dot(&a, &b), dot(&a, &b));
-        // against f64 reference within f32 noise
-        let want: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
-        assert!((dot(&a, &b) as f64 - want).abs() < 1e-3 * (1.0 + want.abs()));
+    fn explicit_isa_variants_match_active_dispatch() {
+        // gemm_with(active) must equal gemm_serial (same table, same
+        // single-threaded path) — the hook is a pinning, not a fork.
+        let isa = simd::active();
+        let (m, k, n) = (7, 130, 65);
+        let a = rand(m * k, 31, 0.3);
+        let b = rand(k * n, 32, 0.0);
+        let mut via_serial = vec![0f32; m * n];
+        gemm_serial(&a, &b, m, k, n, &mut via_serial);
+        let mut via_with = vec![0f32; m * n];
+        gemm_with(isa, &a, &b, m, k, n, &mut via_with);
+        assert_eq!(via_serial, via_with);
+        let b2 = rand(m * n, 33, 0.0);
+        let mut s = vec![0f32; k * n];
+        gemm_at_b_serial(&a, &b2, m, k, n, &mut s);
+        let mut w = vec![0f32; k * n];
+        gemm_at_b_with(isa, &a, &b2, m, k, n, &mut w);
+        assert_eq!(s, w);
+        let a2 = rand(m * n, 34, 0.0);
+        let b3 = rand(k * n, 35, 0.0);
+        let mut s = vec![0f32; m * k];
+        gemm_a_bt_serial(&a2, &b3, m, n, k, &mut s);
+        let mut w = vec![0f32; m * k];
+        gemm_a_bt_with(isa, &a2, &b3, m, n, k, &mut w);
+        assert_eq!(s, w);
     }
 }

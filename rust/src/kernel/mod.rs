@@ -20,10 +20,17 @@
 //! training loop can run allocation-free out of its per-executor
 //! workspace (`runtime/reference.rs`); the bit-packed sign kernels live
 //! with their data layout in `binary/packed.rs`.
+//!
+//! Beneath the blocked/pooled structure, the innermost loops dispatch
+//! through the [`simd`] microkernel table — AVX2+FMA or SSE2 on x86_64
+//! (runtime-detected, `BCRUN_SIMD`-overridable), scalar elsewhere. The
+//! `gemm*_with` variants pin an explicit ISA rung for tests and the
+//! `perf_gemm` dispatch ladder.
 
 mod gemm;
+pub mod simd;
 
 pub use gemm::{
-    gemm, gemm_a_bt, gemm_a_bt_naive, gemm_a_bt_serial, gemm_at_b, gemm_at_b_naive,
-    gemm_at_b_serial, gemm_naive, gemm_serial,
+    gemm, gemm_a_bt, gemm_a_bt_naive, gemm_a_bt_serial, gemm_a_bt_with, gemm_at_b,
+    gemm_at_b_naive, gemm_at_b_serial, gemm_at_b_with, gemm_naive, gemm_serial, gemm_with,
 };

@@ -1,0 +1,528 @@
+//! Runtime-dispatched SIMD microkernels for the hot inner loops.
+//!
+//! The blocked GEMM trio (`kernel/gemm.rs`) and the packed sign-GEMM
+//! (`binary/packed.rs`) keep their tiling, threading and zero-skip
+//! structure, but their innermost loops go through a [`Kernels`] table of
+//! function pointers selected once per process:
+//!
+//! * **avx2** — 8-lane AVX2 + FMA microkernels, plus the bit-trick single
+//!   sign-dot (each 64-bit weight word drives sign-flips of activation
+//!   lanes via XOR with a mask expanded from the bits).
+//! * **sse2** — 4-lane baseline-x86_64 microkernels (always available on
+//!   `x86_64`; the rung the dispatcher lands on when AVX2 is absent).
+//! * **scalar** — portable Rust, byte-for-byte the kernels that shipped
+//!   before this layer existed. The correctness oracle for everything
+//!   above, and the only rung on non-x86 targets.
+//!
+//! Selection happens on first use: `BCRUN_SIMD={auto,avx2,sse2,scalar}`
+//! when set (validated like `BCRUN_THREADS` — a typo or an ISA the host
+//! cannot run fails loudly, and `bcrun` checks it up front), else the best
+//! rung `is_x86_feature_detected!` reports. [`set_active`] re-points the
+//! table at runtime — the hook `perf_gemm`'s dispatch-ladder series use;
+//! tests instead go through the side-door [`kernels_for`] so they never
+//! mutate process-global state.
+//!
+//! ## Safety boundary
+//!
+//! Every `unsafe` block of the SIMD layer lives in this directory
+//! (`x86.rs` for the ISA-specific intrinsics). The table entries are safe
+//! `fn`s: each shim validates slice lengths itself (so its `unsafe`
+//! contract never depends on a distant caller) and an AVX2 shim is only
+//! reachable through a table that runtime detection approved, so the
+//! `#[target_feature]` call inside it cannot fault. See DESIGN.md
+//! ("SIMD dispatch") for how to add an ISA.
+//!
+//! ## Exactness contract (pinned by `tests/simd_kernels.rs`)
+//!
+//! * `sign_accum` / `add` (the batched packed forward/backward): **bit
+//!   exact** across every ISA — lanes map one-to-one onto batch columns,
+//!   so the per-column f32 reduction order is identical by construction.
+//! * `axpy4` / `axpy1` / `dot` (the f32 GEMM trio) and `sign_dot` (the
+//!   batch-1 packed path): same math, different association (FMA and wide
+//!   accumulators) — equal to scalar within a 1e-5-scale bound.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::util::pool::env_setting;
+
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+/// The instruction-set rungs the dispatcher can select.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Isa {
+    /// Portable Rust (the pre-SIMD kernels, unchanged). Always supported.
+    Scalar,
+    /// 4-lane SSE2 (baseline on every `x86_64` target).
+    Sse2,
+    /// 8-lane AVX2 + FMA (runtime-detected).
+    Avx2,
+}
+
+impl Isa {
+    /// The `BCRUN_SIMD` spelling of this rung.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Sse2 => "sse2",
+            Isa::Avx2 => "avx2",
+        }
+    }
+
+    /// Can this host execute the rung's kernels?
+    pub fn supported(self) -> bool {
+        match self {
+            Isa::Scalar => true,
+            Isa::Sse2 => cfg!(target_arch = "x86_64"),
+            Isa::Avx2 => detect() == Isa::Avx2,
+        }
+    }
+}
+
+/// Every rung, best first (iterate + filter by [`Isa::supported`]).
+pub const ALL_ISAS: [Isa; 3] = [Isa::Avx2, Isa::Sse2, Isa::Scalar];
+
+/// `c_r[j] += a[r] * b[j]` for four output rows sharing one B panel.
+pub type Axpy4Fn = fn(&[f32; 4], &[f32], &mut [f32], &mut [f32], &mut [f32], &mut [f32]);
+/// `c[j] += a * b[j]`.
+pub type Axpy1Fn = fn(f32, &[f32], &mut [f32]);
+/// `Σ_i a[i] * b[i]`, fixed per-ISA reduction order.
+pub type DotFn = fn(&[f32], &[f32]) -> f32;
+/// `dst[i] += src[i]` over `dst.len()` lanes.
+pub type AddFn = fn(&mut [f32], &[f32]);
+/// Batched selected-sum: for every set bit (word-ascending, bit-ascending)
+/// at row `r` of the packed column, `sel[c] += xt[r * b + c0 + c]`.
+pub type SignAccumFn = fn(&[u64], &[f32], usize, usize, &mut [f32]);
+/// Batch-1 signed dot `Σ_i sign_i * x[i]` for one packed column; `total`
+/// is `Σ_i x[i]` (the scalar rung computes `2 * selected - total`, the
+/// SIMD rungs sign-flip lanes directly and ignore it).
+pub type SignDotFn = fn(&[u64], &[f32], f32) -> f32;
+
+/// Upper bound on [`Kernels::sel_chunk`]: the packed engine's stack
+/// accumulator strip is sized to this.
+pub const SEL_CHUNK_MAX: usize = 128;
+
+/// One ISA's microkernel table. All entries are safe `fn`s (shims over
+/// the `unsafe` internals); tables are `'static`, so fetching one
+/// allocates nothing.
+pub struct Kernels {
+    pub isa: Isa,
+    pub axpy4: Axpy4Fn,
+    pub axpy1: Axpy1Fn,
+    pub dot: DotFn,
+    pub add: AddFn,
+    pub sign_accum: SignAccumFn,
+    pub sign_dot: SignDotFn,
+    /// Batch-column chunk width for the packed batched kernels (<=
+    /// [`SEL_CHUNK_MAX`]). AVX2 uses 64 so the whole chunk lives in
+    /// eight ymm registers; scalar/SSE2 gain nothing from register
+    /// residency and use 128 to halve the per-column bit-decode passes.
+    /// Chunking never changes results (lanes are independent columns).
+    pub sel_chunk: usize,
+}
+
+static SCALAR: Kernels = Kernels {
+    isa: Isa::Scalar,
+    axpy4: scalar::axpy4,
+    axpy1: scalar::axpy1,
+    dot: scalar::dot,
+    add: scalar::add,
+    sign_accum: scalar::sign_accum,
+    sign_dot: scalar::sign_dot,
+    sel_chunk: 128,
+};
+
+#[cfg(target_arch = "x86_64")]
+static SSE2: Kernels = Kernels {
+    isa: Isa::Sse2,
+    axpy4: x86::sse2_axpy4,
+    axpy1: x86::sse2_axpy1,
+    dot: x86::sse2_dot,
+    add: x86::sse2_add,
+    sign_accum: x86::sse2_sign_accum,
+    sign_dot: x86::sse2_sign_dot,
+    sel_chunk: 128,
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX2: Kernels = Kernels {
+    isa: Isa::Avx2,
+    axpy4: x86::avx2_axpy4,
+    axpy1: x86::avx2_axpy1,
+    dot: x86::avx2_dot,
+    add: x86::avx2_add,
+    sign_accum: x86::avx2_sign_accum,
+    sign_dot: x86::avx2_sign_dot,
+    sel_chunk: 64,
+};
+
+/// Best rung this host can run (`is_x86_feature_detected!` on x86_64,
+/// scalar elsewhere). Pure query — does not touch the selection.
+pub fn detect() -> Isa {
+    detect_impl()
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_impl() -> Isa {
+    if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+        Isa::Avx2
+    } else {
+        Isa::Sse2
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect_impl() -> Isa {
+    Isa::Scalar
+}
+
+/// The table for one specific rung, independent of the global selection
+/// (the hook tests compare arms with — no process-global mutation).
+///
+/// # Panics
+///
+/// If the host cannot run `isa` (callers gate on [`Isa::supported`]).
+pub fn kernels_for(isa: Isa) -> &'static Kernels {
+    assert!(
+        isa.supported(),
+        "SIMD rung '{}' is not supported on this host (best: {})",
+        isa.name(),
+        detect().name()
+    );
+    match isa {
+        Isa::Scalar => &SCALAR,
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse2 => &SSE2,
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => &AVX2,
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => unreachable!("unsupported ISA passed the support check"),
+    }
+}
+
+const ISA_UNSET: u8 = 0;
+
+fn isa_code(isa: Isa) -> u8 {
+    match isa {
+        Isa::Scalar => 1,
+        Isa::Sse2 => 2,
+        Isa::Avx2 => 3,
+    }
+}
+
+fn isa_from_code(code: u8) -> Isa {
+    match code {
+        1 => Isa::Scalar,
+        2 => Isa::Sse2,
+        3 => Isa::Avx2,
+        _ => unreachable!("invalid ISA code {code}"),
+    }
+}
+
+static ACTIVE: AtomicU8 = AtomicU8::new(ISA_UNSET);
+
+/// The process-wide selected rung. First call resolves `BCRUN_SIMD` (an
+/// invalid value panics with the parse error — `bcrun` validates the
+/// variable up front to turn that into a clean CLI error instead).
+pub fn active() -> Isa {
+    match ACTIVE.load(Ordering::Acquire) {
+        ISA_UNSET => init_active(),
+        code => isa_from_code(code),
+    }
+}
+
+#[cold]
+fn init_active() -> Isa {
+    let isa = resolve_env().unwrap_or_else(|e| panic!("{e}"));
+    // A racing first use resolves the same value; last store wins.
+    ACTIVE.store(isa_code(isa), Ordering::Release);
+    isa
+}
+
+/// Re-point the dispatcher at `isa` (errors if the host cannot run it).
+/// This is the bench hook behind `perf_gemm`'s per-ISA series; regular
+/// code selects via `BCRUN_SIMD` and never calls this.
+pub fn set_active(isa: Isa) -> Result<(), String> {
+    if !isa.supported() {
+        return Err(format!(
+            "SIMD rung '{}' is not supported on this host (best: {})",
+            isa.name(),
+            detect().name()
+        ));
+    }
+    ACTIVE.store(isa_code(isa), Ordering::Release);
+    Ok(())
+}
+
+/// The active microkernel table (what every GEMM/packed entry point
+/// fetches per call — one atomic load, no allocation).
+pub fn kernels() -> &'static Kernels {
+    kernels_for(active())
+}
+
+/// Pure parse of a `BCRUN_SIMD` value. `None` (unset) and `"auto"` mean
+/// auto-detect; anything else must be a known rung or the error names the
+/// offending value.
+pub fn parse_simd(var: Option<&str>) -> Result<Option<Isa>, String> {
+    match var {
+        None => Ok(None),
+        Some(raw) => match raw.trim().to_ascii_lowercase().as_str() {
+            "auto" => Ok(None),
+            "avx2" => Ok(Some(Isa::Avx2)),
+            "sse2" => Ok(Some(Isa::Sse2)),
+            "scalar" => Ok(Some(Isa::Scalar)),
+            _ => Err(format!("BCRUN_SIMD must be one of auto|avx2|sse2|scalar, got '{raw}'")),
+        },
+    }
+}
+
+/// Parse the `BCRUN_SIMD` override from the environment (no support
+/// check — see [`resolve_env`] for the full fail-fast path).
+pub fn simd_from_env() -> Result<Option<Isa>, String> {
+    parse_simd(env_setting("BCRUN_SIMD")?.as_deref())
+}
+
+/// Resolve `BCRUN_SIMD` to a concrete runnable rung: unset/`auto` means
+/// the best detected ISA; an explicit rung must be one the host supports.
+/// Checked early by `bcrun` so both typos and impossible requests fail
+/// loudly instead of deep inside the first kernel.
+pub fn resolve_env() -> Result<Isa, String> {
+    match simd_from_env()? {
+        None => Ok(detect()),
+        Some(isa) if isa.supported() => Ok(isa),
+        Some(isa) => Err(format!(
+            "BCRUN_SIMD={} requested, but this host supports at most '{}' \
+             (use BCRUN_SIMD=auto to pick it up automatically)",
+            isa.name(),
+            detect().name()
+        )),
+    }
+}
+
+/// Highest row index with a set bit in a packed column, if any. Used by
+/// the SIMD shims to validate their stripe reads up front (O(words), paid
+/// once per column-chunk call).
+#[cfg(target_arch = "x86_64")]
+pub(crate) fn highest_set_row(col: &[u64]) -> Option<usize> {
+    for (wi, &word) in col.iter().enumerate().rev() {
+        if word != 0 {
+            return Some(wi * 64 + 63 - word.leading_zeros() as usize);
+        }
+    }
+    None
+}
+
+/// The portable microkernels — byte-for-byte the inner loops the blocked
+/// GEMM and the packed engine ran before the SIMD layer, so the scalar
+/// rung *is* the historical behavior (and the oracle the property tests
+/// compare every other rung against).
+mod scalar {
+    pub(super) fn axpy4(
+        a: &[f32; 4],
+        b: &[f32],
+        c0: &mut [f32],
+        c1: &mut [f32],
+        c2: &mut [f32],
+        c3: &mut [f32],
+    ) {
+        for ((((cv0, cv1), cv2), cv3), &bv) in c0
+            .iter_mut()
+            .zip(c1.iter_mut())
+            .zip(c2.iter_mut())
+            .zip(c3.iter_mut())
+            .zip(b)
+        {
+            *cv0 += a[0] * bv;
+            *cv1 += a[1] * bv;
+            *cv2 += a[2] * bv;
+            *cv3 += a[3] * bv;
+        }
+    }
+
+    pub(super) fn axpy1(a: f32, b: &[f32], c: &mut [f32]) {
+        for (cv, &bv) in c.iter_mut().zip(b) {
+            *cv += a * bv;
+        }
+    }
+
+    /// Eight-accumulator dot product; fixed reduction order (chunks of 8,
+    /// then pairwise fold, then the tail) so every call site agrees
+    /// bit-for-bit.
+    pub(super) fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let mut acc = [0f32; 8];
+        let mut ac = a.chunks_exact(8);
+        let mut bc = b.chunks_exact(8);
+        for (av, bv) in (&mut ac).zip(&mut bc) {
+            for ((s, &x), &y) in acc.iter_mut().zip(av).zip(bv) {
+                *s += x * y;
+            }
+        }
+        let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3]))
+            + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+        for (&av, &bv) in ac.remainder().iter().zip(bc.remainder()) {
+            s += av * bv;
+        }
+        s
+    }
+
+    pub(super) fn add(dst: &mut [f32], src: &[f32]) {
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d += s;
+        }
+    }
+
+    pub(super) fn sign_accum(col: &[u64], xt: &[f32], b: usize, c0: usize, sel: &mut [f32]) {
+        let len = sel.len();
+        for (wi, &word) in col.iter().enumerate() {
+            if word == 0 {
+                continue;
+            }
+            let base = wi * 64;
+            let mut m = word;
+            while m != 0 {
+                let t = m.trailing_zeros() as usize;
+                let off = (base + t) * b + c0;
+                let stripe = &xt[off..off + len];
+                for (s, &v) in sel.iter_mut().zip(stripe) {
+                    *s += v;
+                }
+                m &= m - 1;
+            }
+        }
+    }
+
+    pub(super) fn sign_dot(col: &[u64], x: &[f32], total: f32) -> f32 {
+        let k = x.len();
+        let mut sel = 0f32;
+        // selected-sum: adds only, gated by the weight bits
+        for (wi, &word) in col.iter().enumerate() {
+            if word == 0 {
+                continue;
+            }
+            let base = wi * 64;
+            if word == u64::MAX && base + 64 <= k {
+                // fast path: fully-positive word
+                for &v in &x[base..base + 64] {
+                    sel += v;
+                }
+            } else {
+                let mut m = word;
+                while m != 0 {
+                    let t = m.trailing_zeros() as usize;
+                    sel += x[base + t];
+                    m &= m - 1;
+                }
+            }
+        }
+        2.0 * sel - total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand(len: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..len).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn parse_is_validated() {
+        assert_eq!(parse_simd(None), Ok(None));
+        assert_eq!(parse_simd(Some("auto")), Ok(None));
+        assert_eq!(parse_simd(Some(" AVX2 ")), Ok(Some(Isa::Avx2)));
+        assert_eq!(parse_simd(Some("sse2")), Ok(Some(Isa::Sse2)));
+        assert_eq!(parse_simd(Some("scalar")), Ok(Some(Isa::Scalar)));
+        for bad in ["", "avx512", "yes", "1"] {
+            let err = parse_simd(Some(bad)).unwrap_err();
+            // the quoted form is non-vacuous even for the empty string
+            assert!(
+                err.contains("auto|avx2|sse2|scalar") && err.contains(&format!("'{bad}'")),
+                "unhelpful error for {bad:?}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn scalar_is_always_supported_and_detect_is_runnable() {
+        assert!(Isa::Scalar.supported());
+        assert!(detect().supported());
+        assert!(ALL_ISAS.iter().any(|i| i.supported()));
+        // the active selection resolves to something runnable
+        assert!(active().supported());
+        assert_eq!(kernels().isa, active());
+    }
+
+    #[test]
+    #[cfg(target_arch = "x86_64")]
+    fn sse2_is_baseline_on_x86_64() {
+        assert!(Isa::Sse2.supported());
+        assert_eq!(kernels_for(Isa::Sse2).isa, Isa::Sse2);
+    }
+
+    #[test]
+    fn dot_fixed_order_is_stable() {
+        let a = rand(37, 7);
+        let b = rand(37, 8);
+        for isa in ALL_ISAS.iter().filter(|i| i.supported()) {
+            let dot = kernels_for(*isa).dot;
+            assert_eq!(dot(&a, &b), dot(&a, &b), "{isa:?} dot not deterministic");
+            let want: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+            let got = dot(&a, &b) as f64;
+            assert!((got - want).abs() < 1e-3 * (1.0 + want.abs()), "{isa:?}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn every_supported_arm_runs_the_microkernels() {
+        // tail-heavy lengths: 1, 7 (sub-lane), 8, 9, 63, 64, 65
+        for &n in &[1usize, 7, 8, 9, 63, 64, 65] {
+            let b = rand(n, 100 + n as u64);
+            let a = [0.5f32, -1.25, 0.0, 2.0];
+            for isa in ALL_ISAS.iter().filter(|i| i.supported()) {
+                let kern = kernels_for(*isa);
+                let mut c: Vec<Vec<f32>> = (0..4).map(|r| rand(n, 200 + r as u64)).collect();
+                let mut want = c.clone();
+                for (r, w) in want.iter_mut().enumerate() {
+                    for (wv, &bv) in w.iter_mut().zip(&b) {
+                        *wv += a[r] * bv;
+                    }
+                }
+                let (h0, h1) = c.split_at_mut(2);
+                let (c0, c1) = h0.split_at_mut(1);
+                let (c2, c3) = h1.split_at_mut(1);
+                (kern.axpy4)(&a, &b, &mut c0[0], &mut c1[0], &mut c2[0], &mut c3[0]);
+                for (r, w) in want.iter().enumerate() {
+                    for (j, (&got, &wv)) in c[r].iter().zip(w).enumerate() {
+                        assert!(
+                            (got - wv).abs() < 1e-5 * (1.0 + wv.abs()),
+                            "{isa:?} axpy4 row {r} [{j}]: {got} vs {wv}"
+                        );
+                    }
+                }
+                // axpy1 agrees with row 1 of axpy4's math
+                let mut c1a = rand(n, 201);
+                let mut w1 = c1a.clone();
+                for (wv, &bv) in w1.iter_mut().zip(&b) {
+                    *wv += a[1] * bv;
+                }
+                (kern.axpy1)(a[1], &b, &mut c1a);
+                for (j, (&got, &wv)) in c1a.iter().zip(&w1).enumerate() {
+                    assert!(
+                        (got - wv).abs() < 1e-5 * (1.0 + wv.abs()),
+                        "{isa:?} axpy1 [{j}]: {got} vs {wv}"
+                    );
+                }
+                // add is bit-exact across arms (independent lanes)
+                let mut d = rand(n, 300);
+                let src = rand(n, 301);
+                let mut dw = d.clone();
+                scalar::add(&mut dw, &src);
+                (kern.add)(&mut d, &src);
+                assert_eq!(d, dw, "{isa:?} add must be bit-exact");
+            }
+        }
+    }
+}

@@ -1,0 +1,538 @@
+//! x86_64 microkernels: SSE2 (baseline, always runnable) and AVX2 + FMA
+//! (runtime-detected). This file is the crate's only home of SIMD
+//! intrinsics; everything `unsafe` is cordoned here behind safe shims.
+//!
+//! Shim contract: each `pub(super)` shim is a *safe* `fn` matching the
+//! [`super::Kernels`] table signature. It derives the element count from
+//! the slices it was handed (so the raw-pointer inner kernel can never
+//! read or write out of bounds, whatever the caller did), then calls the
+//! `unsafe` inner kernel. AVX2 shims are only reachable through the AVX2
+//! table, which [`super::kernels_for`] hands out strictly after runtime
+//! feature detection — that is what makes executing the
+//! `#[target_feature]` code sound.
+//!
+//! Exactness notes (see the module docs of [`super`]):
+//! * `*_add` / `*_sign_accum` are bit-exact with scalar (independent
+//!   lanes, same per-lane order).
+//! * `axpy1` and row `r` of `axpy4` produce bit-identical results within
+//!   one ISA (same vector-vs-tail boundary, same per-lane op), which is
+//!   what keeps the pooled and serial blocked GEMMs equal when a row
+//!   falls in a 4-strip in one split and in the tail of another.
+
+use std::arch::x86_64::*;
+
+// ---------------------------------------------------------------------
+// SSE2 (x86_64 baseline)
+// ---------------------------------------------------------------------
+
+pub(super) fn sse2_axpy4(
+    a: &[f32; 4],
+    b: &[f32],
+    c0: &mut [f32],
+    c1: &mut [f32],
+    c2: &mut [f32],
+    c3: &mut [f32],
+) {
+    let n = b.len().min(c0.len()).min(c1.len()).min(c2.len()).min(c3.len());
+    // SAFETY: SSE2 is baseline on x86_64; every offset below is < n,
+    // which is within all six slices by the min above.
+    unsafe {
+        axpy4_sse2(
+            a,
+            b.as_ptr(),
+            c0.as_mut_ptr(),
+            c1.as_mut_ptr(),
+            c2.as_mut_ptr(),
+            c3.as_mut_ptr(),
+            n,
+        )
+    }
+}
+
+unsafe fn axpy4_sse2(
+    a: &[f32; 4],
+    b: *const f32,
+    c0: *mut f32,
+    c1: *mut f32,
+    c2: *mut f32,
+    c3: *mut f32,
+    n: usize,
+) {
+    let va0 = _mm_set1_ps(a[0]);
+    let va1 = _mm_set1_ps(a[1]);
+    let va2 = _mm_set1_ps(a[2]);
+    let va3 = _mm_set1_ps(a[3]);
+    let mut j = 0usize;
+    while j + 4 <= n {
+        let vb = _mm_loadu_ps(b.add(j));
+        _mm_storeu_ps(c0.add(j), _mm_add_ps(_mm_loadu_ps(c0.add(j)), _mm_mul_ps(va0, vb)));
+        _mm_storeu_ps(c1.add(j), _mm_add_ps(_mm_loadu_ps(c1.add(j)), _mm_mul_ps(va1, vb)));
+        _mm_storeu_ps(c2.add(j), _mm_add_ps(_mm_loadu_ps(c2.add(j)), _mm_mul_ps(va2, vb)));
+        _mm_storeu_ps(c3.add(j), _mm_add_ps(_mm_loadu_ps(c3.add(j)), _mm_mul_ps(va3, vb)));
+        j += 4;
+    }
+    while j < n {
+        let bv = *b.add(j);
+        *c0.add(j) += a[0] * bv;
+        *c1.add(j) += a[1] * bv;
+        *c2.add(j) += a[2] * bv;
+        *c3.add(j) += a[3] * bv;
+        j += 1;
+    }
+}
+
+pub(super) fn sse2_axpy1(a: f32, b: &[f32], c: &mut [f32]) {
+    let n = b.len().min(c.len());
+    // SAFETY: SSE2 baseline; offsets < n are in bounds of both slices.
+    unsafe { axpy1_sse2(a, b.as_ptr(), c.as_mut_ptr(), n) }
+}
+
+unsafe fn axpy1_sse2(a: f32, b: *const f32, c: *mut f32, n: usize) {
+    let va = _mm_set1_ps(a);
+    let mut j = 0usize;
+    while j + 8 <= n {
+        let m0 = _mm_mul_ps(va, _mm_loadu_ps(b.add(j)));
+        _mm_storeu_ps(c.add(j), _mm_add_ps(_mm_loadu_ps(c.add(j)), m0));
+        let m1 = _mm_mul_ps(va, _mm_loadu_ps(b.add(j + 4)));
+        _mm_storeu_ps(c.add(j + 4), _mm_add_ps(_mm_loadu_ps(c.add(j + 4)), m1));
+        j += 8;
+    }
+    while j + 4 <= n {
+        let m0 = _mm_mul_ps(va, _mm_loadu_ps(b.add(j)));
+        _mm_storeu_ps(c.add(j), _mm_add_ps(_mm_loadu_ps(c.add(j)), m0));
+        j += 4;
+    }
+    while j < n {
+        *c.add(j) += a * *b.add(j);
+        j += 1;
+    }
+}
+
+pub(super) fn sse2_dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    // SAFETY: SSE2 baseline; reads stay below n.
+    unsafe { dot_sse2(a.as_ptr(), b.as_ptr(), n) }
+}
+
+unsafe fn dot_sse2(a: *const f32, b: *const f32, n: usize) -> f32 {
+    let mut acc0 = _mm_setzero_ps();
+    let mut acc1 = _mm_setzero_ps();
+    let mut j = 0usize;
+    while j + 8 <= n {
+        acc0 = _mm_add_ps(acc0, _mm_mul_ps(_mm_loadu_ps(a.add(j)), _mm_loadu_ps(b.add(j))));
+        let m1 = _mm_mul_ps(_mm_loadu_ps(a.add(j + 4)), _mm_loadu_ps(b.add(j + 4)));
+        acc1 = _mm_add_ps(acc1, m1);
+        j += 8;
+    }
+    if j + 4 <= n {
+        acc0 = _mm_add_ps(acc0, _mm_mul_ps(_mm_loadu_ps(a.add(j)), _mm_loadu_ps(b.add(j))));
+        j += 4;
+    }
+    let mut s = hsum128(_mm_add_ps(acc0, acc1));
+    while j < n {
+        s += *a.add(j) * *b.add(j);
+        j += 1;
+    }
+    s
+}
+
+pub(super) fn sse2_add(dst: &mut [f32], src: &[f32]) {
+    let n = dst.len().min(src.len());
+    // SAFETY: SSE2 baseline; offsets < n are within both slices.
+    unsafe { add_sse2(dst.as_mut_ptr(), src.as_ptr(), n) }
+}
+
+unsafe fn add_sse2(dst: *mut f32, src: *const f32, n: usize) {
+    let mut j = 0usize;
+    while j + 4 <= n {
+        _mm_storeu_ps(dst.add(j), _mm_add_ps(_mm_loadu_ps(dst.add(j)), _mm_loadu_ps(src.add(j))));
+        j += 4;
+    }
+    while j < n {
+        *dst.add(j) += *src.add(j);
+        j += 1;
+    }
+}
+
+pub(super) fn sse2_sign_accum(col: &[u64], xt: &[f32], b: usize, c0: usize, sel: &mut [f32]) {
+    if let Some(r) = super::highest_set_row(col) {
+        assert!(r * b + c0 + sel.len() <= xt.len(), "sign_accum: stripe out of bounds");
+    }
+    // SAFETY: the assert above bounds every stripe the inner kernel
+    // reads (bits only reach rows <= highest_set_row); sel writes stay
+    // below sel.len(). SSE2 baseline.
+    unsafe { sign_accum_sse2(col, xt.as_ptr(), b, c0, sel) }
+}
+
+unsafe fn sign_accum_sse2(col: &[u64], xt: *const f32, b: usize, c0: usize, sel: &mut [f32]) {
+    let len = sel.len();
+    let sp = sel.as_mut_ptr();
+    for (wi, &word) in col.iter().enumerate() {
+        if word == 0 {
+            continue;
+        }
+        let base = wi * 64;
+        let mut m = word;
+        while m != 0 {
+            let t = m.trailing_zeros() as usize;
+            let xp = xt.add((base + t) * b + c0);
+            let mut c = 0usize;
+            while c + 4 <= len {
+                _mm_storeu_ps(
+                    sp.add(c),
+                    _mm_add_ps(_mm_loadu_ps(sp.add(c)), _mm_loadu_ps(xp.add(c))),
+                );
+                c += 4;
+            }
+            while c < len {
+                *sp.add(c) += *xp.add(c);
+                c += 1;
+            }
+            m &= m - 1;
+        }
+    }
+}
+
+pub(super) fn sse2_sign_dot(col: &[u64], x: &[f32], _total: f32) -> f32 {
+    assert!(col.len() * 64 >= x.len(), "sign_dot: packed column too short");
+    // SAFETY: reads of x stay below x.len(); word reads stay below
+    // col.len() by the assert. SSE2 baseline.
+    unsafe { sign_dot_sse2(col, x.as_ptr(), x.len()) }
+}
+
+unsafe fn sign_dot_sse2(col: &[u64], x: *const f32, k: usize) -> f32 {
+    let lane = _mm_setr_epi32(1, 2, 4, 8);
+    let signbit = _mm_set1_epi32(i32::MIN);
+    let mut acc0 = _mm_setzero_ps();
+    let mut acc1 = _mm_setzero_ps();
+    let mut r = 0usize;
+    while r + 8 <= k {
+        let b0 = _mm_set1_epi32(((*col.get_unchecked(r >> 6) >> (r & 63)) & 0xf) as i32);
+        let b1 =
+            _mm_set1_epi32(((*col.get_unchecked((r + 4) >> 6) >> ((r + 4) & 63)) & 0xf) as i32);
+        // lanes whose weight bit is 0 (weight -1) get their sign flipped
+        let f0 = _mm_castsi128_ps(_mm_andnot_si128(
+            _mm_cmpeq_epi32(_mm_and_si128(b0, lane), lane),
+            signbit,
+        ));
+        let f1 = _mm_castsi128_ps(_mm_andnot_si128(
+            _mm_cmpeq_epi32(_mm_and_si128(b1, lane), lane),
+            signbit,
+        ));
+        acc0 = _mm_add_ps(acc0, _mm_xor_ps(_mm_loadu_ps(x.add(r)), f0));
+        acc1 = _mm_add_ps(acc1, _mm_xor_ps(_mm_loadu_ps(x.add(r + 4)), f1));
+        r += 8;
+    }
+    if r + 4 <= k {
+        let b0 = _mm_set1_epi32(((*col.get_unchecked(r >> 6) >> (r & 63)) & 0xf) as i32);
+        let f0 = _mm_castsi128_ps(_mm_andnot_si128(
+            _mm_cmpeq_epi32(_mm_and_si128(b0, lane), lane),
+            signbit,
+        ));
+        acc0 = _mm_add_ps(acc0, _mm_xor_ps(_mm_loadu_ps(x.add(r)), f0));
+        r += 4;
+    }
+    let mut s = hsum128(_mm_add_ps(acc0, acc1));
+    while r < k {
+        let bit = (*col.get_unchecked(r >> 6) >> (r & 63)) & 1;
+        let v = *x.add(r);
+        s += if bit == 1 { v } else { -v };
+        r += 1;
+    }
+    s
+}
+
+#[inline]
+unsafe fn hsum128(v: __m128) -> f32 {
+    let s = _mm_add_ps(v, _mm_movehl_ps(v, v));
+    let s = _mm_add_ss(s, _mm_shuffle_ps::<1>(s, s));
+    _mm_cvtss_f32(s)
+}
+
+// ---------------------------------------------------------------------
+// AVX2 + FMA (runtime-detected)
+// ---------------------------------------------------------------------
+
+pub(super) fn avx2_axpy4(
+    a: &[f32; 4],
+    b: &[f32],
+    c0: &mut [f32],
+    c1: &mut [f32],
+    c2: &mut [f32],
+    c3: &mut [f32],
+) {
+    let n = b.len().min(c0.len()).min(c1.len()).min(c2.len()).min(c3.len());
+    // SAFETY: offsets < n are within all six slices; this shim is only
+    // reachable through the AVX2 table, handed out after runtime
+    // detection of avx2+fma.
+    unsafe {
+        axpy4_avx2(
+            a,
+            b.as_ptr(),
+            c0.as_mut_ptr(),
+            c1.as_mut_ptr(),
+            c2.as_mut_ptr(),
+            c3.as_mut_ptr(),
+            n,
+        )
+    }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn axpy4_avx2(
+    a: &[f32; 4],
+    b: *const f32,
+    c0: *mut f32,
+    c1: *mut f32,
+    c2: *mut f32,
+    c3: *mut f32,
+    n: usize,
+) {
+    let va0 = _mm256_set1_ps(a[0]);
+    let va1 = _mm256_set1_ps(a[1]);
+    let va2 = _mm256_set1_ps(a[2]);
+    let va3 = _mm256_set1_ps(a[3]);
+    let mut j = 0usize;
+    while j + 8 <= n {
+        let vb = _mm256_loadu_ps(b.add(j));
+        _mm256_storeu_ps(c0.add(j), _mm256_fmadd_ps(va0, vb, _mm256_loadu_ps(c0.add(j))));
+        _mm256_storeu_ps(c1.add(j), _mm256_fmadd_ps(va1, vb, _mm256_loadu_ps(c1.add(j))));
+        _mm256_storeu_ps(c2.add(j), _mm256_fmadd_ps(va2, vb, _mm256_loadu_ps(c2.add(j))));
+        _mm256_storeu_ps(c3.add(j), _mm256_fmadd_ps(va3, vb, _mm256_loadu_ps(c3.add(j))));
+        j += 8;
+    }
+    while j < n {
+        let bv = *b.add(j);
+        *c0.add(j) += a[0] * bv;
+        *c1.add(j) += a[1] * bv;
+        *c2.add(j) += a[2] * bv;
+        *c3.add(j) += a[3] * bv;
+        j += 1;
+    }
+}
+
+pub(super) fn avx2_axpy1(a: f32, b: &[f32], c: &mut [f32]) {
+    let n = b.len().min(c.len());
+    // SAFETY: offsets < n; AVX2 table gating as in avx2_axpy4.
+    unsafe { axpy1_avx2(a, b.as_ptr(), c.as_mut_ptr(), n) }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn axpy1_avx2(a: f32, b: *const f32, c: *mut f32, n: usize) {
+    let va = _mm256_set1_ps(a);
+    let mut j = 0usize;
+    while j + 16 <= n {
+        let v0 = _mm256_fmadd_ps(va, _mm256_loadu_ps(b.add(j)), _mm256_loadu_ps(c.add(j)));
+        _mm256_storeu_ps(c.add(j), v0);
+        let j8 = j + 8;
+        let v1 = _mm256_fmadd_ps(va, _mm256_loadu_ps(b.add(j8)), _mm256_loadu_ps(c.add(j8)));
+        _mm256_storeu_ps(c.add(j8), v1);
+        j += 16;
+    }
+    while j + 8 <= n {
+        let v0 = _mm256_fmadd_ps(va, _mm256_loadu_ps(b.add(j)), _mm256_loadu_ps(c.add(j)));
+        _mm256_storeu_ps(c.add(j), v0);
+        j += 8;
+    }
+    while j < n {
+        *c.add(j) += a * *b.add(j);
+        j += 1;
+    }
+}
+
+pub(super) fn avx2_dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    // SAFETY: reads stay below n; AVX2 table gating as in avx2_axpy4.
+    unsafe { dot_avx2(a.as_ptr(), b.as_ptr(), n) }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot_avx2(a: *const f32, b: *const f32, n: usize) -> f32 {
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut acc2 = _mm256_setzero_ps();
+    let mut acc3 = _mm256_setzero_ps();
+    let mut j = 0usize;
+    while j + 32 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(a.add(j)), _mm256_loadu_ps(b.add(j)), acc0);
+        acc1 = _mm256_fmadd_ps(_mm256_loadu_ps(a.add(j + 8)), _mm256_loadu_ps(b.add(j + 8)), acc1);
+        acc2 =
+            _mm256_fmadd_ps(_mm256_loadu_ps(a.add(j + 16)), _mm256_loadu_ps(b.add(j + 16)), acc2);
+        acc3 =
+            _mm256_fmadd_ps(_mm256_loadu_ps(a.add(j + 24)), _mm256_loadu_ps(b.add(j + 24)), acc3);
+        j += 32;
+    }
+    while j + 8 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(a.add(j)), _mm256_loadu_ps(b.add(j)), acc0);
+        j += 8;
+    }
+    let mut s = hsum256(_mm256_add_ps(_mm256_add_ps(acc0, acc1), _mm256_add_ps(acc2, acc3)));
+    while j < n {
+        s += *a.add(j) * *b.add(j);
+        j += 1;
+    }
+    s
+}
+
+pub(super) fn avx2_add(dst: &mut [f32], src: &[f32]) {
+    let n = dst.len().min(src.len());
+    // SAFETY: offsets < n; AVX2 table gating as in avx2_axpy4.
+    unsafe { add_avx2(dst.as_mut_ptr(), src.as_ptr(), n) }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn add_avx2(dst: *mut f32, src: *const f32, n: usize) {
+    let mut j = 0usize;
+    while j + 8 <= n {
+        let v = _mm256_add_ps(_mm256_loadu_ps(dst.add(j)), _mm256_loadu_ps(src.add(j)));
+        _mm256_storeu_ps(dst.add(j), v);
+        j += 8;
+    }
+    while j < n {
+        *dst.add(j) += *src.add(j);
+        j += 1;
+    }
+}
+
+pub(super) fn avx2_sign_accum(col: &[u64], xt: &[f32], b: usize, c0: usize, sel: &mut [f32]) {
+    if let Some(r) = super::highest_set_row(col) {
+        assert!(r * b + c0 + sel.len() <= xt.len(), "sign_accum: stripe out of bounds");
+    }
+    // SAFETY: the assert bounds every stripe read; sel writes stay below
+    // sel.len(); AVX2 table gating as in avx2_axpy4.
+    unsafe { sign_accum_avx2(col, xt.as_ptr(), b, c0, sel) }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn sign_accum_avx2(col: &[u64], xt: *const f32, b: usize, c0: usize, sel: &mut [f32]) {
+    let len = sel.len();
+    let sp = sel.as_mut_ptr();
+    if len == 64 {
+        // the steady-state chunk: the whole 64-wide accumulator strip
+        // lives in eight ymm registers across every bit of the column.
+        let mut a0 = _mm256_loadu_ps(sp);
+        let mut a1 = _mm256_loadu_ps(sp.add(8));
+        let mut a2 = _mm256_loadu_ps(sp.add(16));
+        let mut a3 = _mm256_loadu_ps(sp.add(24));
+        let mut a4 = _mm256_loadu_ps(sp.add(32));
+        let mut a5 = _mm256_loadu_ps(sp.add(40));
+        let mut a6 = _mm256_loadu_ps(sp.add(48));
+        let mut a7 = _mm256_loadu_ps(sp.add(56));
+        for (wi, &word) in col.iter().enumerate() {
+            if word == 0 {
+                continue;
+            }
+            let base = wi * 64;
+            let mut m = word;
+            while m != 0 {
+                let t = m.trailing_zeros() as usize;
+                let xp = xt.add((base + t) * b + c0);
+                a0 = _mm256_add_ps(a0, _mm256_loadu_ps(xp));
+                a1 = _mm256_add_ps(a1, _mm256_loadu_ps(xp.add(8)));
+                a2 = _mm256_add_ps(a2, _mm256_loadu_ps(xp.add(16)));
+                a3 = _mm256_add_ps(a3, _mm256_loadu_ps(xp.add(24)));
+                a4 = _mm256_add_ps(a4, _mm256_loadu_ps(xp.add(32)));
+                a5 = _mm256_add_ps(a5, _mm256_loadu_ps(xp.add(40)));
+                a6 = _mm256_add_ps(a6, _mm256_loadu_ps(xp.add(48)));
+                a7 = _mm256_add_ps(a7, _mm256_loadu_ps(xp.add(56)));
+                m &= m - 1;
+            }
+        }
+        _mm256_storeu_ps(sp, a0);
+        _mm256_storeu_ps(sp.add(8), a1);
+        _mm256_storeu_ps(sp.add(16), a2);
+        _mm256_storeu_ps(sp.add(24), a3);
+        _mm256_storeu_ps(sp.add(32), a4);
+        _mm256_storeu_ps(sp.add(40), a5);
+        _mm256_storeu_ps(sp.add(48), a6);
+        _mm256_storeu_ps(sp.add(56), a7);
+    } else {
+        // ragged batch tail: per-bit 8-lane adds
+        for (wi, &word) in col.iter().enumerate() {
+            if word == 0 {
+                continue;
+            }
+            let base = wi * 64;
+            let mut m = word;
+            while m != 0 {
+                let t = m.trailing_zeros() as usize;
+                let xp = xt.add((base + t) * b + c0);
+                let mut c = 0usize;
+                while c + 8 <= len {
+                    _mm256_storeu_ps(
+                        sp.add(c),
+                        _mm256_add_ps(_mm256_loadu_ps(sp.add(c)), _mm256_loadu_ps(xp.add(c))),
+                    );
+                    c += 8;
+                }
+                while c < len {
+                    *sp.add(c) += *xp.add(c);
+                    c += 1;
+                }
+                m &= m - 1;
+            }
+        }
+    }
+}
+
+pub(super) fn avx2_sign_dot(col: &[u64], x: &[f32], _total: f32) -> f32 {
+    assert!(col.len() * 64 >= x.len(), "sign_dot: packed column too short");
+    // SAFETY: reads of x stay below x.len(); word reads stay below
+    // col.len() by the assert; AVX2 table gating as in avx2_axpy4.
+    unsafe { sign_dot_avx2(col, x.as_ptr(), x.len()) }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn sign_dot_avx2(col: &[u64], x: *const f32, k: usize) -> f32 {
+    let lane = _mm256_setr_epi32(1, 2, 4, 8, 16, 32, 64, 128);
+    let signbit = _mm256_set1_epi32(i32::MIN);
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut r = 0usize;
+    while r + 16 <= k {
+        let b0 = _mm256_set1_epi32(((*col.get_unchecked(r >> 6) >> (r & 63)) & 0xff) as i32);
+        let b1 = _mm256_set1_epi32(
+            ((*col.get_unchecked((r + 8) >> 6) >> ((r + 8) & 63)) & 0xff) as i32,
+        );
+        // weight bit 0 (-1) flips the lane's sign via XOR with 0x8000_0000
+        let f0 = _mm256_castsi256_ps(_mm256_andnot_si256(
+            _mm256_cmpeq_epi32(_mm256_and_si256(b0, lane), lane),
+            signbit,
+        ));
+        let f1 = _mm256_castsi256_ps(_mm256_andnot_si256(
+            _mm256_cmpeq_epi32(_mm256_and_si256(b1, lane), lane),
+            signbit,
+        ));
+        acc0 = _mm256_add_ps(acc0, _mm256_xor_ps(_mm256_loadu_ps(x.add(r)), f0));
+        acc1 = _mm256_add_ps(acc1, _mm256_xor_ps(_mm256_loadu_ps(x.add(r + 8)), f1));
+        r += 16;
+    }
+    if r + 8 <= k {
+        let b0 = _mm256_set1_epi32(((*col.get_unchecked(r >> 6) >> (r & 63)) & 0xff) as i32);
+        let f0 = _mm256_castsi256_ps(_mm256_andnot_si256(
+            _mm256_cmpeq_epi32(_mm256_and_si256(b0, lane), lane),
+            signbit,
+        ));
+        acc0 = _mm256_add_ps(acc0, _mm256_xor_ps(_mm256_loadu_ps(x.add(r)), f0));
+        r += 8;
+    }
+    let mut s = hsum256(_mm256_add_ps(acc0, acc1));
+    while r < k {
+        let bit = (*col.get_unchecked(r >> 6) >> (r & 63)) & 1;
+        let v = *x.add(r);
+        s += if bit == 1 { v } else { -v };
+        r += 1;
+    }
+    s
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum256(v: __m256) -> f32 {
+    let lo = _mm256_castps256_ps128(v);
+    let hi = _mm256_extractf128_ps::<1>(v);
+    let s = _mm_add_ps(lo, hi);
+    let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+    let s = _mm_add_ss(s, _mm_shuffle_ps::<1>(s, s));
+    _mm_cvtss_f32(s)
+}

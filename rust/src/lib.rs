@@ -14,8 +14,9 @@
 //!   pure-Rust reference backend (and, behind the `pjrt` cargo feature,
 //!   the PJRT runtime executing the AOT artifacts), the [`kernel`]
 //!   hot-path layer (blocked multithreaded f32 GEMM + the packed sign-GEMM
-//!   training path over the [`util::pool`] fork-join pool), the experiment
-//!   driver reproducing every table/figure, a bit-packed
+//!   training path over the [`util::pool`] fork-join pool, with
+//!   runtime-dispatched AVX2/SSE2 microkernels under [`kernel::simd`]),
+//!   the experiment driver reproducing every table/figure, a bit-packed
 //!   multiplication-free inference engine, and the hardware cost model
 //!   behind the paper's efficiency claims.
 //!

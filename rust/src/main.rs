@@ -42,6 +42,8 @@ usage: bcrun <info|train|hw|export|infer> [flags]
   common:  --backend reference|pjrt (default reference)
            --artifacts DIR (default artifacts, pjrt only) --data-dir DIR
            env BCRUN_THREADS=N caps the kernel thread pool (default: all cores)
+           env BCRUN_SIMD=auto|avx2|sse2|scalar pins the kernel ISA
+             (default auto: best of AVX2+FMA > SSE2 > scalar the host runs)
   train:   --model NAME --dataset mnist|cifar10|svhn --mode none|det|stoch
            --opt sgd|nesterov|adam --epochs N --lr-start F --lr-end F
            --dropout F --no-lr-scale --seed N --n-train N --n-test N
@@ -53,9 +55,11 @@ usage: bcrun <info|train|hw|export|infer> [flags]
   infer:   --packed FILE.bcpack --dataset D [--n-test N] (mult-free engine)";
 
 fn run() -> Result<()> {
-    // Fail fast on an unparseable BCRUN_THREADS: the pool would otherwise
+    // Fail fast on an unparseable BCRUN_THREADS or BCRUN_SIMD (typo, or
+    // an ISA this host cannot run): the pool/dispatcher would otherwise
     // panic deep inside the first GEMM of the first step.
     binaryconnect::util::pool::n_threads_from_env().map_err(|e| anyhow!(e))?;
+    binaryconnect::kernel::simd::resolve_env().map_err(|e| anyhow!(e))?;
     let args = Args::parse().map_err(|e| anyhow!(e))?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {

@@ -29,7 +29,12 @@
 //! [`Workspace`], so a warmed-up `train_step` performs **zero heap
 //! allocations** (pinned by a counting-allocator test below). Kernels
 //! parallelize over the `util::pool` fork-join pool; results are
-//! identical for any `BCRUN_THREADS`.
+//! identical for any `BCRUN_THREADS`. Beneath that, every inner loop
+//! rides the runtime-dispatched SIMD microkernels
+//! ([`crate::kernel::simd`], `BCRUN_SIMD` to pin a rung) with no
+//! call-site changes here: the packed batched kernels are bit-exact
+//! across rungs, and the FMA-reordered f32 GEMMs stay inside the same
+//! 1e-4 envelope the fast-vs-baseline property tests already pin.
 //!
 //! `set_fast(false)` selects the seed-era dense path (f32 binarize copy +
 //! naive single-threaded GEMMs + per-step allocations), kept as the

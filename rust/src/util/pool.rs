@@ -214,14 +214,22 @@ pub fn parse_threads(var: Option<&str>) -> Result<usize, String> {
     }
 }
 
+/// Read one `BCRUN_*` setting from the environment: `Ok(None)` when
+/// unset, a named error (instead of a silent default) when the value is
+/// not unicode. Shared by the `BCRUN_THREADS` parse here and the
+/// `BCRUN_SIMD` parse in `kernel::simd` so both fail the same way.
+pub fn env_setting(name: &str) -> Result<Option<String>, String> {
+    match std::env::var(name) {
+        Ok(v) => Ok(Some(v)),
+        Err(std::env::VarError::NotPresent) => Ok(None),
+        Err(e) => Err(format!("{name} is not valid unicode: {e}")),
+    }
+}
+
 /// Parse the `BCRUN_THREADS` override from the environment. Checked early
 /// by `bcrun` so typos fail loudly instead of silently using a default.
 pub fn n_threads_from_env() -> Result<usize, String> {
-    match std::env::var("BCRUN_THREADS") {
-        Ok(v) => parse_threads(Some(&v)),
-        Err(std::env::VarError::NotPresent) => parse_threads(None),
-        Err(e) => Err(format!("BCRUN_THREADS is not valid unicode: {e}")),
-    }
+    parse_threads(env_setting("BCRUN_THREADS")?.as_deref())
 }
 
 static GLOBAL: OnceLock<Pool> = OnceLock::new();

@@ -52,7 +52,9 @@ impl LatencyStats {
             return 0.0;
         }
         let mut s = self.samples.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: a NaN sample (e.g. from a poisoned clock delta)
+        // sorts deterministically instead of panicking the whole report.
+        s.sort_by(f64::total_cmp);
         let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
         s[idx.min(s.len() - 1)]
     }
@@ -83,6 +85,19 @@ mod tests {
         assert_eq!(s.percentile(100.0), 5.0);
         assert_eq!(s.min(), 1.0);
         assert_eq!(s.max(), 5.0);
+    }
+
+    #[test]
+    fn percentile_survives_nan_samples() {
+        // regression: sort_by(partial_cmp().unwrap()) panicked on NaN
+        let mut s = LatencyStats::default();
+        for v in [2.0, f64::NAN, 1.0, 3.0] {
+            s.record(v);
+        }
+        // NaN sorts deterministically (total order); the finite
+        // percentiles stay meaningful
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(33.0), 2.0);
     }
 
     #[test]

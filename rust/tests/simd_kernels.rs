@@ -1,0 +1,301 @@
+//! SIMD rungs ≡ scalar twins, property-tested across every ISA the host
+//! can run (the scalar arm is pinned end-to-end by the CI lane that sets
+//! `BCRUN_SIMD=scalar` for the whole suite).
+//!
+//! Contracts (see `kernel/simd` module docs):
+//! * f32 GEMM trio: every rung agrees with the scalar kernels within a
+//!   1e-5-scale bound (FMA/wide accumulators reorder the f32 sums, so the
+//!   bound scales with the L1 mass of each output element).
+//! * batched packed sign-GEMM (forward + STE transpose-apply): **bit
+//!   exact** across rungs — SIMD lanes are batch columns, so per-column
+//!   reduction order is identical by construction.
+//! * batch-1 packed forward (`sign_dot`): the XOR sign-flip kernel agrees
+//!   with the scalar selected-sum within the 1e-5-scale bound.
+//!
+//! Shapes are biased onto the lane/word boundaries (multiples of 8 and 64
+//! ± 1), batch 1, and ±0.0 inputs — exactly where tail handling breaks.
+
+use binaryconnect::binary::packed::BitMatrix;
+use binaryconnect::kernel;
+use binaryconnect::kernel::simd::{self, Isa, ALL_ISAS};
+use binaryconnect::prop::check;
+use binaryconnect::util::Rng;
+
+/// Every rung this host can actually execute (always includes scalar).
+fn arms() -> Vec<Isa> {
+    ALL_ISAS.into_iter().filter(|i| i.supported()).collect()
+}
+
+/// A dimension biased onto SIMD lane / bit-word edges.
+fn edge_dim(r: &mut Rng, word: usize, max: usize) -> usize {
+    match r.below(4) {
+        0 => word * (1 + r.below(3)),
+        1 => (word * (1 + r.below(3))).saturating_sub(1).max(1),
+        2 => word * (1 + r.below(3)) + 1,
+        _ => 1 + r.below(max),
+    }
+}
+
+/// Values with zeros (both signs) mixed in, the packed/zero-skip edges.
+fn signed_vals(r: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len)
+        .map(|_| match r.below(8) {
+            0 => 0.0f32,
+            1 => -0.0f32,
+            _ => r.normal(),
+        })
+        .collect()
+}
+
+/// |got - want| <= 1e-5 * (1 + l1) per element, l1 the L1 mass of the
+/// element's products (the numerically meaningful reordering bound).
+fn close_l1(name: &str, got: &[f32], want: &[f32], l1: &[f32]) -> Result<(), String> {
+    for (i, ((&g, &w), &m)) in got.iter().zip(want).zip(l1).enumerate() {
+        if (g - w).abs() > 1e-5 * (1.0 + m.abs()) {
+            return Err(format!("{name}[{i}]: {g} vs {w} (l1 {m})"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn every_env_arm_is_reachable_and_resolves() {
+    let arms = arms();
+    assert!(arms.contains(&Isa::Scalar));
+    #[cfg(target_arch = "x86_64")]
+    assert!(arms.contains(&Isa::Sse2), "SSE2 is baseline on x86_64");
+    // whatever BCRUN_SIMD says for this test process, it resolves to a
+    // rung this host can run, and that is what the dispatcher selected
+    let resolved = simd::resolve_env().expect("BCRUN_SIMD must be valid in the test env");
+    assert!(resolved.supported());
+    assert_eq!(simd::active(), resolved);
+    assert!(arms.contains(&simd::active()));
+}
+
+#[test]
+fn prop_gemm_trio_simd_matches_scalar_within_1e5() {
+    check(
+        "gemm trio: SIMD == scalar (1e-5 scale)",
+        |r| {
+            let m = 1 + r.below(12); // includes batch 1
+            let k = edge_dim(r, 8, 150);
+            let n = edge_dim(r, 8, 120);
+            let a = signed_vals(r, m * k);
+            let b = signed_vals(r, k * n);
+            (m, k, n, a, b)
+        },
+        |(m, k, n, a, b)| {
+            let (m, k, n) = (*m, *k, *n);
+            let absa: Vec<f32> = a.iter().map(|v| v.abs()).collect();
+            let absb: Vec<f32> = b.iter().map(|v| v.abs()).collect();
+            // C = A·B
+            let mut want = vec![0f32; m * n];
+            kernel::gemm_with(Isa::Scalar, a, b, m, k, n, &mut want);
+            let mut l1 = vec![0f32; m * n];
+            kernel::gemm_with(Isa::Scalar, &absa, &absb, m, k, n, &mut l1);
+            for &isa in arms().iter().filter(|i| **i != Isa::Scalar) {
+                let mut got = vec![0f32; m * n];
+                kernel::gemm_with(isa, a, b, m, k, n, &mut got);
+                close_l1(&format!("gemm/{}", isa.name()), &got, &want, &l1)?;
+            }
+            // C = A^T·B (B reinterpreted as m x n)
+            let b2 = &b[..(m * n).min(b.len())];
+            if b2.len() == m * n {
+                let absb2: Vec<f32> = b2.iter().map(|v| v.abs()).collect();
+                let mut want = vec![0f32; k * n];
+                kernel::gemm_at_b_with(Isa::Scalar, a, b2, m, k, n, &mut want);
+                let mut l1 = vec![0f32; k * n];
+                kernel::gemm_at_b_with(Isa::Scalar, &absa, &absb2, m, k, n, &mut l1);
+                for &isa in arms().iter().filter(|i| **i != Isa::Scalar) {
+                    let mut got = vec![0f32; k * n];
+                    kernel::gemm_at_b_with(isa, a, b2, m, k, n, &mut got);
+                    close_l1(&format!("at_b/{}", isa.name()), &got, &want, &l1)?;
+                }
+            }
+            // C = A·B^T (A reinterpreted as m x n via a2, B as k x n)
+            let a2: Vec<f32> = (0..m * n).map(|i| a[i % a.len()]).collect();
+            let absa2: Vec<f32> = a2.iter().map(|v| v.abs()).collect();
+            let mut want = vec![0f32; m * k];
+            kernel::gemm_a_bt_with(Isa::Scalar, &a2, b, m, n, k, &mut want);
+            let mut l1 = vec![0f32; m * k];
+            kernel::gemm_a_bt_with(Isa::Scalar, &absa2, &absb, m, n, k, &mut l1);
+            for &isa in arms().iter().filter(|i| **i != Isa::Scalar) {
+                let mut got = vec![0f32; m * k];
+                kernel::gemm_a_bt_with(isa, &a2, b, m, n, k, &mut got);
+                close_l1(&format!("a_bt/{}", isa.name()), &got, &want, &l1)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_batched_sign_gemm_bit_exact_across_arms() {
+    check(
+        "packed forward: SIMD bit-exact vs scalar",
+        |r| {
+            // b straddles the per-rung batch chunks (64 on avx2, 128 on
+            // scalar/sse2) and the 8-lane groups; k straddles the words.
+            let b = 2 + r.below(140);
+            let k = edge_dim(r, 64, 200);
+            let n = 1 + r.below(16);
+            let w = signed_vals(r, k * n);
+            let x = signed_vals(r, b * k);
+            (b, k, n, w, x)
+        },
+        |(b, k, n, w, x)| {
+            let (b, k, n) = (*b, *k, *n);
+            let bm = BitMatrix::pack(w, k, n);
+            let scale = 0.37f32;
+            let mut xt = vec![0f32; k * b];
+            let mut totals = vec![0f32; b];
+            let mut want = vec![0f32; b * n];
+            bm.matmul_scaled_into_isa(Isa::Scalar, x, b, scale, &mut want, &mut xt, &mut totals);
+            for &isa in arms().iter().filter(|i| **i != Isa::Scalar) {
+                let mut got = vec![0f32; b * n];
+                bm.matmul_scaled_into_isa(isa, x, b, scale, &mut got, &mut xt, &mut totals);
+                let name = isa.name();
+                for (i, (g, wv)) in got.iter().zip(&want).enumerate() {
+                    if g.to_bits() != wv.to_bits() {
+                        return Err(format!("{name} not bit-exact at {i}: {g:?} vs {wv:?}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_tmatmul_bit_exact_across_arms() {
+    check(
+        "packed STE backward: SIMD bit-exact vs scalar",
+        |r| {
+            let b = 1 + r.below(70);
+            let k = edge_dim(r, 64, 200);
+            let n = 1 + r.below(16);
+            let w = signed_vals(r, k * n);
+            let dz = signed_vals(r, b * n);
+            (b, k, n, w, dz)
+        },
+        |(b, k, n, w, dz)| {
+            let (b, k, n) = (*b, *k, *n);
+            let bm = BitMatrix::pack(w, k, n);
+            let scale = 0.53f32;
+            let mut dzt = vec![0f32; n * b];
+            let mut acc = vec![0f32; k * b];
+            let mut totals = vec![0f32; b];
+            let mut want = vec![0f32; b * k];
+            bm.tmatmul_scaled_into_isa(
+                Isa::Scalar,
+                dz,
+                b,
+                scale,
+                &mut want,
+                &mut dzt,
+                &mut acc,
+                &mut totals,
+            );
+            for &isa in arms().iter().filter(|i| **i != Isa::Scalar) {
+                let mut got = vec![0f32; b * k];
+                bm.tmatmul_scaled_into_isa(
+                    isa,
+                    dz,
+                    b,
+                    scale,
+                    &mut got,
+                    &mut dzt,
+                    &mut acc,
+                    &mut totals,
+                );
+                let name = isa.name();
+                for (i, (g, wv)) in got.iter().zip(&want).enumerate() {
+                    if g.to_bits() != wv.to_bits() {
+                        return Err(format!("{name} not bit-exact at {i}: {g:?} vs {wv:?}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_batch1_sign_dot_matches_scalar_within_1e5() {
+    check(
+        "packed batch-1 forward: SIMD == scalar (1e-5 scale)",
+        |r| {
+            let k = edge_dim(r, 64, 300);
+            let n = 1 + r.below(12);
+            // bias some columns fully positive so the scalar u64::MAX
+            // fast path is exercised against the XOR kernel
+            let all_pos = r.below(3) == 0;
+            let w: Vec<f32> = (0..k * n)
+                .map(|_| if all_pos { r.normal().abs() } else { r.normal() })
+                .collect();
+            let x = signed_vals(r, k);
+            (k, n, w, x)
+        },
+        |(k, n, w, x)| {
+            let (k, n) = (*k, *n);
+            let bm = BitMatrix::pack(w, k, n);
+            let scale = 0.7f32;
+            let mut xt = vec![0f32; k];
+            let mut totals = vec![0f32; 1];
+            let mut want = vec![0f32; n];
+            bm.matmul_scaled_into_isa(Isa::Scalar, x, 1, scale, &mut want, &mut xt, &mut totals);
+            let l1: f32 = x.iter().map(|v| v.abs()).sum();
+            for &isa in arms().iter().filter(|i| **i != Isa::Scalar) {
+                let mut got = vec![0f32; n];
+                bm.matmul_scaled_into_isa(isa, x, 1, scale, &mut got, &mut xt, &mut totals);
+                let name = isa.name();
+                for (j, (g, wv)) in got.iter().zip(&want).enumerate() {
+                    if (g - wv).abs() > 1e-5 * (1.0 + scale * l1) {
+                        return Err(format!("{name} col {j}: {g} vs {wv} (l1 {l1})"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fixed_edge_shapes_stay_bit_exact() {
+    // deterministic spot checks on the exact word/lane/chunk boundaries
+    // (k = 63/64/65 bit-words; b on the 64- and 128-wide chunk edges and
+    // 8-lane tails) — belt and braces on top of the biased property gens
+    let mut rng = Rng::new(0xED6E);
+    for &(b, k) in &[
+        (2usize, 1usize),
+        (7, 63),
+        (8, 64),
+        (9, 65),
+        (63, 64),
+        (64, 64),
+        (65, 129),
+        (100, 70),
+        (127, 65),
+        (128, 64),
+        (129, 70),
+    ] {
+        let n = 5;
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let x: Vec<f32> = (0..b * k).map(|_| rng.normal()).collect();
+        let bm = BitMatrix::pack(&w, k, n);
+        let mut xt = vec![0f32; k * b];
+        let mut totals = vec![0f32; b];
+        let mut want = vec![0f32; b * n];
+        bm.matmul_scaled_into_isa(Isa::Scalar, &x, b, 1.0, &mut want, &mut xt, &mut totals);
+        for &isa in arms().iter().filter(|i| **i != Isa::Scalar) {
+            let mut got = vec![0f32; b * n];
+            bm.matmul_scaled_into_isa(isa, &x, b, 1.0, &mut got, &mut xt, &mut totals);
+            assert_eq!(
+                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{} b={b} k={k}",
+                isa.name()
+            );
+        }
+    }
+}
