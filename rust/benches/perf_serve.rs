@@ -1,0 +1,196 @@
+//! Serving-layer bench: solo vs coalesced throughput and the latency
+//! distribution as a function of the batching window, end to end through
+//! real sockets (server + closed-loop load generator in one process).
+//!
+//! Series (JSON names):
+//!   * `serve_solo_c1`   — max_batch 1, one connection: the true batch-1
+//!     round-trip latency floor.
+//!   * `serve_solo_c16`  — max_batch 1 at concurrency 16: what the
+//!     server does under load *without* coalescing (every row pays a
+//!     full batch-1 forward; the queue serializes them).
+//!   * `serve_batch64_w{0,200,1000}us_c16` — dynamic micro-batching at
+//!     concurrency 16 with increasing windows: throughput rides the
+//!     lane-batched packed kernel, latency buys it with the window.
+//!
+//! Derived metrics: `serve_rps_<series>`, `serve_mean_batch_<series>`,
+//! and the headline `serve_coalesce_speedup_c16` =
+//! rps(batch64_w200us_c16) / rps(solo_c16).
+//! Acceptance (ISSUE 5): coalesced >= 3x solo at concurrency >= 16 on
+//! the auto ISA.
+//!
+//! Run: cargo bench --bench perf_serve -- [--requests N] [--concurrency N]
+//!      [--json BENCH_serve.json]
+
+use std::time::Duration;
+
+use binaryconnect::bench_harness::{fmt_time, BenchResult, JsonReport, Table};
+use binaryconnect::binary::packed::PackedMlp;
+use binaryconnect::kernel::simd;
+use binaryconnect::serve::{self, loadgen, ServeConfig};
+use binaryconnect::util::error::{Error, Result};
+use binaryconnect::util::{pool, Args, Rng};
+
+/// The paper's MNIST-scale MLP shape (784 -> 3x1024 -> 10) with random
+/// signs/affines — serving cost depends on shape, not trained values.
+fn bench_mlp() -> PackedMlp {
+    let mut rng = Rng::new(4242);
+    let dims = [784usize, 1024, 1024, 1024, 10];
+    let mut weights = vec![];
+    let mut bns = vec![];
+    for (w, pair) in dims.windows(2).enumerate() {
+        let (k, n) = (pair[0], pair[1]);
+        weights.push(((0..k * n).map(|_| rng.normal()).collect::<Vec<f32>>(), k, n));
+        if w < 3 {
+            bns.push(Some((
+                vec![1.0f32; n],
+                vec![0.0f32; n],
+                (0..n).map(|_| 0.05 * rng.normal()).collect::<Vec<f32>>(),
+                vec![1.0f32; n],
+            )));
+        } else {
+            bns.push(None);
+        }
+    }
+    PackedMlp::build(weights, bns, Some(vec![0.0; 10]))
+}
+
+struct SeriesResult {
+    name: String,
+    rps: f64,
+    mean_batch: f64,
+    lat: binaryconnect::util::LatencyStats,
+    requests: usize,
+}
+
+fn run_series(
+    name: &str,
+    mlp: PackedMlp,
+    max_batch: usize,
+    max_wait: Duration,
+    concurrency: usize,
+    requests: usize,
+) -> Result<SeriesResult> {
+    // workers = concurrency + 2: headroom so every loadgen connection is
+    // served concurrently even with an extra probe/monitor connection —
+    // otherwise one starved connection would pollute the latency tail
+    let mut server = serve::start(
+        mlp,
+        ServeConfig {
+            max_batch,
+            max_wait,
+            workers: (concurrency + 2).clamp(3, 64),
+            conn_backlog: 2 * concurrency.max(1),
+            queue_cap: 4096,
+            ..Default::default()
+        },
+    )?;
+    let rep = loadgen::run(&loadgen::LoadgenOpts {
+        host: server.addr().to_string(),
+        concurrency,
+        requests,
+        seed: 7,
+    })?;
+    server.stop();
+    if rep.failed_status > 0 || rep.errors > 0 {
+        return Err(Error::msg(format!(
+            "{name}: {} non-2xx, {} transport errors",
+            rep.failed_status, rep.errors
+        )));
+    }
+    Ok(SeriesResult {
+        name: name.to_string(),
+        rps: rep.throughput_rps(),
+        mean_batch: rep.server_mean_batch,
+        lat: rep.latency,
+        requests: rep.ok,
+    })
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse().map_err(Error::msg)?;
+    args.check_known(&["requests", "concurrency", "json"]).map_err(Error::msg)?;
+    let requests = args.usize("requests", 2000);
+    let concurrency = args.usize("concurrency", 16);
+    let mut report = JsonReport::new();
+    println!(
+        "threads: {} | simd: {} (detected {}) | {} requests per series, concurrency {}",
+        pool::global().n_threads,
+        simd::active().name(),
+        simd::detect().name(),
+        requests,
+        concurrency
+    );
+    report.metric("loadgen_concurrency", concurrency as f64);
+
+    let window = |us: u64| Duration::from_micros(us);
+    let series: Vec<(String, usize, Duration, usize)> = vec![
+        ("serve_solo_c1".into(), 1, window(0), 1),
+        ("serve_solo_c16".into(), 1, window(0), concurrency),
+        (format!("serve_batch64_w0us_c{concurrency}"), 64, window(0), concurrency),
+        (format!("serve_batch64_w200us_c{concurrency}"), 64, window(200), concurrency),
+        (format!("serve_batch64_w1000us_c{concurrency}"), 64, window(1000), concurrency),
+    ];
+
+    let mut table = Table::new(&[
+        "series",
+        "req/s",
+        "mean batch",
+        "p50",
+        "p95",
+        "p99",
+        "max",
+    ]);
+    let mut solo_c16_rps = 0.0;
+    let mut coalesced_rps = 0.0;
+    for (name, max_batch, wait, conc) in &series {
+        let r = run_series(name, bench_mlp(), *max_batch, *wait, *conc, requests)?;
+        table.row(&[
+            r.name.clone(),
+            format!("{:.0}", r.rps),
+            format!("{:.2}", r.mean_batch),
+            fmt_time(r.lat.percentile(50.0)),
+            fmt_time(r.lat.percentile(95.0)),
+            fmt_time(r.lat.percentile(99.0)),
+            fmt_time(r.lat.max()),
+        ]);
+        // latency distribution as a BenchResult row (mean/p50/p99/min)
+        let bres = BenchResult {
+            name: r.name.clone(),
+            iters: r.requests,
+            mean_s: r.lat.mean(),
+            p50_s: r.lat.percentile(50.0),
+            p99_s: r.lat.percentile(99.0),
+            min_s: r.lat.min(),
+        };
+        report.add(&bres, &format!("784x3x1024x10 c={conc} w={}us", wait.as_micros()));
+        report.metric(&format!("serve_rps_{}", r.name), r.rps);
+        report.metric(&format!("serve_mean_batch_{}", r.name), r.mean_batch);
+        if r.name == "serve_solo_c16" {
+            solo_c16_rps = r.rps;
+        }
+        if r.name == format!("serve_batch64_w200us_c{concurrency}") {
+            coalesced_rps = r.rps;
+        }
+    }
+    table.print();
+
+    if solo_c16_rps > 0.0 {
+        let speedup = coalesced_rps / solo_c16_rps;
+        report.metric("serve_coalesce_speedup_c16", speedup);
+        println!(
+            "\ncoalesce speedup (batch64/w200us vs solo, c={concurrency}): {speedup:.2}x \
+             (acceptance: >= 3x at concurrency >= 16 on the auto ISA)"
+        );
+    }
+    println!(
+        "(closed-loop load; solo series forward one row per request through the same \
+         lane-batched kernel the coalesced series uses, so responses are bit-identical \
+         across series — only throughput/latency differ)"
+    );
+
+    if let Some(path) = args.opt_str("json") {
+        report.save("perf_serve", std::path::Path::new(&path))?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}

@@ -70,6 +70,18 @@ pub fn pack_mlp(info: &ModelInfo, state: &TrainState) -> Result<PackedMlp> {
 
 const MAGIC: &[u8; 8] = b"BCPACK01";
 
+/// Sanity caps for deserialization: `.bcpack` is now the serving
+/// deployment artifact, so `load_packed` must reject corrupt headers
+/// (e.g. a flipped byte turning a layer count into billions) with an
+/// error *before* attempting the implied multi-gigabyte allocation.
+const MAX_LAYERS: usize = 256;
+const MAX_DIM: usize = 1 << 22;
+/// Cap on one layer's packed-words allocation: k and n can each be
+/// individually plausible while their product implies terabytes, so the
+/// byte size is bounded too (1 GiB of packed words ≈ 8.6e9 weights —
+/// far beyond anything this engine serves).
+const MAX_LAYER_WORD_BYTES: usize = 1 << 30;
+
 /// Serialize: MAGIC, n_layers, then per layer k,n,relu + scale/shift f32s
 /// + packed words.
 pub fn save_packed(mlp: &PackedMlp, path: &Path) -> Result<()> {
@@ -104,12 +116,39 @@ pub fn load_packed(path: &Path) -> Result<PackedMlp> {
     let mut b4 = [0u8; 4];
     f.read_exact(&mut b4)?;
     let n_layers = u32::from_le_bytes(b4) as usize;
-    let mut layers = vec![];
-    for _ in 0..n_layers {
+    if n_layers == 0 || n_layers > MAX_LAYERS {
+        bail!("{}: implausible layer count {n_layers} (cap {MAX_LAYERS})", path.display());
+    }
+    let mut layers: Vec<PackedLayer> = vec![];
+    for li in 0..n_layers {
         f.read_exact(&mut b4)?;
         let k = u32::from_le_bytes(b4) as usize;
         f.read_exact(&mut b4)?;
         let n = u32::from_le_bytes(b4) as usize;
+        if k == 0 || n == 0 || k > MAX_DIM || n > MAX_DIM {
+            bail!("{}: implausible shape {k}x{n} for layer {li}", path.display());
+        }
+        let wpc = k.div_ceil(64);
+        let word_bytes = wpc
+            .checked_mul(n)
+            .and_then(|w| w.checked_mul(8))
+            .filter(|&bytes| bytes <= MAX_LAYER_WORD_BYTES);
+        let Some(word_bytes) = word_bytes else {
+            bail!(
+                "{}: implausible packed size {k}x{n} for layer {li} \
+                 (exceeds {MAX_LAYER_WORD_BYTES} bytes)",
+                path.display()
+            );
+        };
+        if let Some(prev) = layers.last() {
+            if prev.bits.n != k {
+                bail!(
+                    "{}: layer {li} input dim {k} does not chain with previous width {}",
+                    path.display(),
+                    prev.bits.n
+                );
+            }
+        }
         let mut b1 = [0u8; 1];
         f.read_exact(&mut b1)?;
         let relu = b1[0] != 0;
@@ -120,14 +159,17 @@ pub fn load_packed(path: &Path) -> Result<PackedMlp> {
         };
         let scale = read_f32s(n)?;
         let shift = read_f32s(n)?;
-        let wpc = k.div_ceil(64);
-        let mut words = vec![0u8; wpc * n * 8];
+        let mut words = vec![0u8; word_bytes];
         f.read_exact(&mut words)?;
         let words: Vec<u64> = words
             .chunks_exact(8)
             .map(|c| u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
             .collect();
         layers.push(PackedLayer { bits: BitMatrix::from_words(k, n, words), scale, shift, relu });
+    }
+    let mut b1 = [0u8; 1];
+    if f.read(&mut b1)? != 0 {
+        bail!("{}: trailing bytes after the last layer", path.display());
     }
     let in_dim = layers.first().context("empty file")?.bits.k;
     let classes = layers.last().unwrap().bits.n;
@@ -181,6 +223,129 @@ mod tests {
         let path = std::env::temp_dir().join(format!("bc_badmagic_{}.bin", std::process::id()));
         std::fs::write(&path, b"NOTPACKED").unwrap();
         assert!(load_packed(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        // the serving deployment artifact: every word, scale, shift and
+        // relu flag must survive the disk round trip exactly
+        let mlp = toy_packed();
+        let path = std::env::temp_dir().join(format!("bc_bitexact_{}.bin", std::process::id()));
+        save_packed(&mlp, &path).unwrap();
+        let loaded = load_packed(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(loaded.in_dim, mlp.in_dim);
+        assert_eq!(loaded.classes, mlp.classes);
+        assert_eq!(loaded.layers.len(), mlp.layers.len());
+        for (a, b) in loaded.layers.iter().zip(&mlp.layers) {
+            assert_eq!(a.relu, b.relu);
+            assert_eq!((a.bits.k, a.bits.n), (b.bits.k, b.bits.n));
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+            assert_eq!(bits(&a.scale), bits(&b.scale), "scale bits");
+            assert_eq!(bits(&a.shift), bits(&b.shift), "shift bits");
+            for j in 0..a.bits.n {
+                assert_eq!(a.bits.col(j), b.bits.col(j), "packed words of column {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn every_truncation_errors_instead_of_panicking() {
+        let mlp = toy_packed();
+        let path = std::env::temp_dir().join(format!("bc_trunc_{}.bin", std::process::id()));
+        save_packed(&mlp, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(load_packed(&path).is_ok(), "untruncated file must load");
+        for cut in 0..bytes.len() {
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            assert!(load_packed(&path).is_err(), "truncation at byte {cut} must error");
+        }
+        // trailing junk is corruption too, not silently ignored
+        let mut padded = bytes.clone();
+        padded.extend_from_slice(b"junk");
+        std::fs::write(&path, &padded).unwrap();
+        assert!(load_packed(&path).is_err(), "trailing bytes must error");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_headers_error_instead_of_panicking_or_allocating_wildly() {
+        let mlp = toy_packed();
+        let path = std::env::temp_dir().join(format!("bc_corrupt_{}.bin", std::process::id()));
+        save_packed(&mlp, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // flip each header-region byte to 0xFF: must never panic (Ok is
+        // acceptable only where the flip is semantically benign)
+        for at in 0..bytes.len().min(64) {
+            let mut mutated = bytes.clone();
+            mutated[at] ^= 0xFF;
+            std::fs::write(&path, &mutated).unwrap();
+            let _ = load_packed(&path);
+        }
+        // a header claiming ~4 billion units must be rejected up front
+        // (not answered with a multi-gigabyte allocation attempt)
+        let mut huge = Vec::new();
+        huge.extend_from_slice(b"BCPACK01");
+        huge.extend_from_slice(&1u32.to_le_bytes());
+        huge.extend_from_slice(&u32::MAX.to_le_bytes());
+        huge.extend_from_slice(&u32::MAX.to_le_bytes());
+        huge.push(0);
+        std::fs::write(&path, &huge).unwrap();
+        let err = load_packed(&path).unwrap_err().to_string();
+        assert!(err.contains("implausible"), "{err}");
+        // dims individually under MAX_DIM whose product implies terabytes
+        // must be rejected by the packed-size cap before any body read
+        let mut wide = Vec::new();
+        wide.extend_from_slice(b"BCPACK01");
+        wide.extend_from_slice(&1u32.to_le_bytes());
+        wide.extend_from_slice(&(1u32 << 22).to_le_bytes());
+        wide.extend_from_slice(&(1u32 << 22).to_le_bytes());
+        wide.push(0);
+        std::fs::write(&path, &wide).unwrap();
+        let err = load_packed(&path).unwrap_err().to_string();
+        assert!(err.contains("implausible packed size"), "{err}");
+        // zero layers is invalid too
+        let mut zero = Vec::new();
+        zero.extend_from_slice(b"BCPACK01");
+        zero.extend_from_slice(&0u32.to_le_bytes());
+        std::fs::write(&path, &zero).unwrap();
+        assert!(load_packed(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn mismatched_layer_chain_is_rejected() {
+        // hand-craft a 2-layer file whose dims do not chain (layer0 is
+        // 4x8, layer1 claims k=5): a corrupt serving artifact must not
+        // load into a net that would panic at forward time
+        let path = std::env::temp_dir().join(format!("bc_chain_{}.bin", std::process::id()));
+        let mut b = Vec::new();
+        b.extend_from_slice(b"BCPACK01");
+        b.extend_from_slice(&2u32.to_le_bytes());
+        // layer 0: k=4, n=8, relu, 8 scales + 8 shifts, 1 word per col
+        b.extend_from_slice(&4u32.to_le_bytes());
+        b.extend_from_slice(&8u32.to_le_bytes());
+        b.push(1);
+        for _ in 0..16 {
+            b.extend_from_slice(&1.0f32.to_le_bytes());
+        }
+        for _ in 0..8 {
+            b.extend_from_slice(&0u64.to_le_bytes());
+        }
+        // layer 1: k=5 (should be 8), n=2
+        b.extend_from_slice(&5u32.to_le_bytes());
+        b.extend_from_slice(&2u32.to_le_bytes());
+        b.push(0);
+        for _ in 0..4 {
+            b.extend_from_slice(&1.0f32.to_le_bytes());
+        }
+        for _ in 0..2 {
+            b.extend_from_slice(&0u64.to_le_bytes());
+        }
+        std::fs::write(&path, &b).unwrap();
+        let err = load_packed(&path).unwrap_err().to_string();
+        assert!(err.contains("chain"), "{err}");
         let _ = std::fs::remove_file(&path);
     }
 }

@@ -23,4 +23,4 @@ pub mod export;
 pub mod packed;
 
 pub use export::{load_packed, pack_mlp, save_packed};
-pub use packed::{BitMatrix, PackedLayer, PackedMlp};
+pub use packed::{argmax, BitMatrix, PackedLayer, PackedMlp, PackedWorkspace};

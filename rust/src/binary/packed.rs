@@ -174,6 +174,33 @@ impl BitMatrix {
         self.matmul_scaled_kern(simd::kernels_for(isa), x, b, scale, y, xt, totals);
     }
 
+    /// [`BitMatrix::matmul_scaled_into`] pinned to the *lane-batched*
+    /// kernel even when `b == 1` (where `matmul_scaled_into` would take
+    /// the faster single-row sign-flip path instead).
+    ///
+    /// In the lane-batched kernel every output element accumulates its
+    /// column in packed-bit order, independently of the batch size, the
+    /// chunk width and the ISA rung (SIMD lanes are batch columns). A
+    /// given input row therefore produces **bit-identical** outputs
+    /// whether it is computed alone or inside any coalesced batch — the
+    /// serving layer's solo ≡ coalesced exactness contract. Scratch
+    /// requirements match `matmul_scaled_into` (`xt` >= k*b, `totals`
+    /// >= b).
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul_scaled_into_batched(
+        &self,
+        x: &[f32],
+        b: usize,
+        scale: f32,
+        y: &mut [f32],
+        xt: &mut [f32],
+        totals: &mut [f32],
+    ) {
+        assert_eq!(x.len(), b * self.k);
+        assert_eq!(y.len(), b * self.n);
+        self.matmul_batched_scaled(simd::kernels(), x, b, scale, y, xt, totals);
+    }
+
     #[allow(clippy::too_many_arguments)]
     fn matmul_scaled_kern(
         &self,
@@ -427,6 +454,27 @@ pub struct PackedLayer {
 impl PackedLayer {
     pub fn forward(&self, x: &[f32], b: usize, y: &mut [f32]) {
         self.bits.matmul(x, b, y);
+        self.affine(b, y);
+    }
+
+    /// [`PackedLayer::forward`] through the lane-batched kernel for every
+    /// batch size (see [`BitMatrix::matmul_scaled_into_batched`]) with
+    /// caller scratch — allocation-free, and each row's output is
+    /// bit-identical whether served solo or inside a coalesced batch.
+    pub fn forward_batched_into(
+        &self,
+        x: &[f32],
+        b: usize,
+        y: &mut [f32],
+        xt: &mut [f32],
+        totals: &mut [f32],
+    ) {
+        self.bits.matmul_scaled_into_batched(x, b, 1.0, y, xt, totals);
+        self.affine(b, y);
+    }
+
+    /// Folded BN affine + ReLU applied in place over the matmul output.
+    fn affine(&self, b: usize, y: &mut [f32]) {
         let n = self.bits.n;
         assert_eq!(self.scale.len(), n, "scale length must match layer width");
         assert_eq!(self.shift.len(), n, "shift length must match layer width");
@@ -448,6 +496,37 @@ pub struct PackedMlp {
     pub layers: Vec<PackedLayer>,
     pub in_dim: usize,
     pub classes: usize,
+}
+
+/// Reusable scratch for [`PackedMlp::forward_into`]: ping-pong activation
+/// buffers plus the transpose/totals scratch of the batched sign-GEMM,
+/// sized once for a maximum batch. A warmed workspace makes every
+/// subsequent forward allocation-free (counting-allocator tested) — the
+/// contract the serving batcher and `test_error` hot loops rely on.
+pub struct PackedWorkspace {
+    max_batch: usize,
+    ping: Vec<f32>,
+    pong: Vec<f32>,
+    xt: Vec<f32>,
+    totals: Vec<f32>,
+}
+
+impl PackedWorkspace {
+    /// Batch capacity this workspace was sized for.
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+}
+
+/// Index of the row maximum via `total_cmp` (last max wins, like the
+/// `partial_cmp` it replaces, but deterministic and panic-free on NaN —
+/// the serving layer feeds this with network-supplied inputs).
+pub fn argmax(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
 }
 
 pub const BN_EPS: f32 = 1e-4;
@@ -503,6 +582,10 @@ impl PackedMlp {
     }
 
     /// Forward a batch, returning logits (b x classes).
+    ///
+    /// Back-compat wrapper that allocates per call (and takes the
+    /// single-row kernel at b == 1); the serving/eval hot paths use
+    /// [`PackedMlp::forward_into`] with a reused [`PackedWorkspace`].
     pub fn forward(&self, x: &[f32], b: usize) -> Vec<f32> {
         assert_eq!(x.len(), b * self.in_dim);
         let mut cur = x.to_vec();
@@ -514,32 +597,88 @@ impl PackedMlp {
         cur
     }
 
+    /// Widest activation row the net produces (input included) — the
+    /// per-row workspace buffer size.
+    pub fn max_width(&self) -> usize {
+        self.layers.iter().map(|l| l.bits.n).fold(self.in_dim, usize::max)
+    }
+
+    /// Build a [`PackedWorkspace`] able to forward batches up to
+    /// `max_batch` rows with zero per-call allocations.
+    pub fn workspace(&self, max_batch: usize) -> PackedWorkspace {
+        assert!(max_batch >= 1, "workspace batch capacity must be >= 1");
+        let w = self.max_width();
+        PackedWorkspace {
+            max_batch,
+            ping: vec![0f32; max_batch * w],
+            pong: vec![0f32; max_batch * w],
+            xt: vec![0f32; max_batch * w],
+            totals: vec![0f32; max_batch],
+        }
+    }
+
+    /// Forward a batch into workspace-owned buffers, returning the logits
+    /// slice (b x classes). Allocation-free, and — because every layer
+    /// goes through [`BitMatrix::matmul_scaled_into_batched`] — each
+    /// row's logits are **bit-identical** for any batch size the row is
+    /// computed in: the serving layer's solo ≡ coalesced contract.
+    pub fn forward_into<'ws>(
+        &self,
+        x: &[f32],
+        b: usize,
+        ws: &'ws mut PackedWorkspace,
+    ) -> &'ws [f32] {
+        assert_eq!(x.len(), b * self.in_dim);
+        assert!(
+            b <= ws.max_batch,
+            "batch {b} exceeds the workspace capacity {}",
+            ws.max_batch
+        );
+        ws.ping[..x.len()].copy_from_slice(x);
+        let mut in_ping = true;
+        for layer in &self.layers {
+            let (k, n) = (layer.bits.k, layer.bits.n);
+            let (src, dst) = if in_ping {
+                (&ws.ping, &mut ws.pong)
+            } else {
+                (&ws.pong, &mut ws.ping)
+            };
+            layer.forward_batched_into(
+                &src[..b * k],
+                b,
+                &mut dst[..b * n],
+                &mut ws.xt,
+                &mut ws.totals,
+            );
+            in_ping = !in_ping;
+        }
+        let out = if in_ping { &ws.ping } else { &ws.pong };
+        &out[..b * self.classes]
+    }
+
     /// argmax classification.
     pub fn classify(&self, x: &[f32], b: usize) -> Vec<usize> {
         let logits = self.forward(x, b);
         (0..b)
-            .map(|bi| {
-                let row = &logits[bi * self.classes..(bi + 1) * self.classes];
-                row.iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .unwrap()
-                    .0
-            })
+            .map(|bi| argmax(&logits[bi * self.classes..(bi + 1) * self.classes]))
             .collect()
     }
 
-    /// Test error over a dataset (batched).
+    /// Test error over a dataset (batched; one reused workspace, so the
+    /// whole evaluation allocates only once).
     pub fn test_error(&self, ds: &Dataset, batch: usize) -> f64 {
+        let batch = batch.max(1);
+        let mut ws = self.workspace(batch);
         let mut wrong = 0usize;
         let mut i = 0;
         while i < ds.len() {
             let hi = (i + batch).min(ds.len());
             let b = hi - i;
             let x = &ds.x[i * ds.dim..hi * ds.dim];
-            let preds = self.classify(x, b);
-            for (p, &l) in preds.iter().zip(&ds.labels[i..hi]) {
-                if *p != l as usize {
+            let logits = self.forward_into(x, b, &mut ws);
+            for (bi, &l) in ds.labels[i..hi].iter().enumerate() {
+                let row = &logits[bi * self.classes..(bi + 1) * self.classes];
+                if argmax(row) != l as usize {
                     wrong += 1;
                 }
             }
@@ -786,6 +925,109 @@ mod tests {
         };
         let mut y = vec![0f32; 2];
         layer.forward(&[1.0], 1, &mut y);
+    }
+
+    /// 3-layer net with non-trivial affines covering word-edge shapes
+    /// (k = 70 crosses a 64-bit word boundary).
+    fn toy_mlp(seed: u64) -> PackedMlp {
+        let w1 = rand_mat(12, 70, seed);
+        let w2 = rand_mat(70, 33, seed + 1);
+        let w3 = rand_mat(33, 4, seed + 2);
+        let mut rng = Rng::new(seed + 3);
+        type Bn = Option<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)>;
+        let bn = |n: usize, r: &mut Rng| -> Bn {
+            Some((
+                (0..n).map(|_| 1.0 + 0.1 * r.normal()).collect(),
+                (0..n).map(|_| 0.1 * r.normal()).collect(),
+                (0..n).map(|_| 0.2 * r.normal()).collect(),
+                (0..n).map(|_| (1.0 + 0.1 * r.normal()).abs()).collect(),
+            ))
+        };
+        PackedMlp::build(
+            vec![(w1, 12, 70), (w2, 70, 33), (w3, 33, 4)],
+            vec![bn(70, &mut rng), bn(33, &mut rng), None],
+            Some(vec![0.05, -0.05, 0.0, 0.02]),
+        )
+    }
+
+    #[test]
+    fn forward_into_matches_forward_on_batched_shapes() {
+        // same kernels, same order for b > 1: bit-identical
+        let mlp = toy_mlp(80);
+        let x = rand_mat(6, mlp.in_dim, 81);
+        let mut ws = mlp.workspace(6);
+        let got = mlp.forward_into(&x, 6, &mut ws).to_vec();
+        let want = mlp.forward(&x, 6);
+        assert_eq!(got, want, "forward_into must be bit-identical to forward for b > 1");
+    }
+
+    #[test]
+    fn forward_into_rows_bit_identical_across_batch_sizes() {
+        // the serving exactness contract: a row's logits do not depend on
+        // which coalesced batch it was computed in — including batch 1
+        let mlp = toy_mlp(90);
+        let b = 8;
+        let x = rand_mat(b, mlp.in_dim, 91);
+        let mut ws = mlp.workspace(b);
+        let full = mlp.forward_into(&x, b, &mut ws).to_vec();
+        // solo, one row at a time
+        for bi in 0..b {
+            let row = &x[bi * mlp.in_dim..(bi + 1) * mlp.in_dim];
+            let solo = mlp.forward_into(row, 1, &mut ws).to_vec();
+            assert_eq!(
+                solo,
+                full[bi * mlp.classes..(bi + 1) * mlp.classes].to_vec(),
+                "row {bi}: solo != coalesced"
+            );
+        }
+        // ragged split 3 + 5
+        let cut = 3 * mlp.in_dim;
+        let head = mlp.forward_into(&x[..cut], 3, &mut ws).to_vec();
+        let tail = mlp.forward_into(&x[cut..], 5, &mut ws).to_vec();
+        let mut joined = head;
+        joined.extend(tail);
+        assert_eq!(joined, full, "3+5 split != coalesced batch of 8");
+    }
+
+    #[test]
+    fn forward_into_batch1_close_to_single_row_kernel() {
+        // the b == 1 fast path (sign_dot) re-associates; the lane-batched
+        // route must agree within the usual f32 bound
+        let mlp = toy_mlp(95);
+        let x = rand_mat(1, mlp.in_dim, 96);
+        let mut ws = mlp.workspace(1);
+        let batched = mlp.forward_into(&x, 1, &mut ws).to_vec();
+        let single = mlp.forward(&x, 1);
+        for (a, r) in batched.iter().zip(&single) {
+            assert!((a - r).abs() < 1e-4 * (1.0 + r.abs()), "{a} vs {r}");
+        }
+    }
+
+    #[test]
+    fn forward_into_steady_state_is_allocation_free() {
+        let mlp = toy_mlp(100);
+        let b = 16;
+        let mut ws = mlp.workspace(b);
+        let x = rand_mat(b, mlp.in_dim, 101);
+        // warm: first call faults pages and initializes pool/dispatch
+        let _ = mlp.forward_into(&x, b, &mut ws);
+        let before = crate::test_alloc::thread_allocs();
+        for _ in 0..3 {
+            let out = mlp.forward_into(&x, b, &mut ws);
+            std::hint::black_box(out);
+        }
+        let after = crate::test_alloc::thread_allocs();
+        assert_eq!(after, before, "forward_into allocated in steady state");
+    }
+
+    #[test]
+    fn argmax_is_deterministic_and_nan_safe() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[2.0, 2.0]), 1, "last max wins on ties");
+        // NaN inputs must not panic (network-fed logits); result is the
+        // total_cmp maximum, which orders NaN above every finite value
+        assert_eq!(argmax(&[1.0, f32::NAN, 3.0]), 1);
+        assert_eq!(argmax(&[]), 0);
     }
 
     #[test]

@@ -17,7 +17,9 @@
 //!   training path over the [`util::pool`] fork-join pool, with
 //!   runtime-dispatched AVX2/SSE2 microkernels under [`kernel::simd`]),
 //!   the experiment driver reproducing every table/figure, a bit-packed
-//!   multiplication-free inference engine, and the hardware cost model
+//!   multiplication-free inference engine, the [`serve`] online layer
+//!   (HTTP server with dynamic micro-batching over the packed engine,
+//!   plus a closed-loop load generator), and the hardware cost model
 //!   behind the paper's efficiency claims.
 //!
 //! The default build is fully self-contained: no Python, no artifacts, no
@@ -37,6 +39,7 @@ pub mod pipeline;
 pub mod preprocess;
 pub mod prop;
 pub mod runtime;
+pub mod serve;
 pub mod stats;
 pub mod util;
 

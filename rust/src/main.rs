@@ -6,6 +6,8 @@
 //!   hw                           print the hardware cost-model table
 //!   export  --out <path>         train, then pack det-BC weights to disk
 //!   infer   --packed <path>      run the packed engine on a test set
+//!   serve   --packed <path>      online HTTP inference, micro-batched
+//!   loadgen --url <http://...>   closed-loop load test against `serve`
 //!
 //! The backend defaults to the pure-Rust reference executor; pass
 //! `--backend pjrt` (with the `pjrt` cargo feature built in) to run the
@@ -23,7 +25,7 @@ use binaryconnect::data::{Corpus, SplitData};
 use binaryconnect::hw;
 use binaryconnect::runtime::{reference, Executor, Manifest, Mode, Opt, ReferenceExecutor};
 use binaryconnect::stats::{feature_tiles, write_pgm, Csv, Histogram};
-use binaryconnect::util::error::Result;
+use binaryconnect::util::error::{Context as _, Result};
 use binaryconnect::util::Args;
 use binaryconnect::{anyhow, bail, ensure};
 
@@ -38,7 +40,7 @@ fn main() -> ExitCode {
 }
 
 const USAGE: &str = "\
-usage: bcrun <info|train|hw|export|infer> [flags]
+usage: bcrun <info|train|hw|export|infer|serve|loadgen> [flags]
   common:  --backend reference|pjrt (default reference)
            --artifacts DIR (default artifacts, pjrt only) --data-dir DIR
            env BCRUN_THREADS=N caps the kernel thread pool (default: all cores)
@@ -52,7 +54,18 @@ usage: bcrun <info|train|hw|export|infer> [flags]
            --eval-mode none|det|stoch
   hw:      --model NAME --batch N
   export:  train flags + --out FILE.bcpack   (train, then pack det weights)
-  infer:   --packed FILE.bcpack --dataset D [--n-test N] (mult-free engine)";
+  infer:   --packed FILE.bcpack --dataset D [--n-test N] (mult-free engine)
+  serve:   --packed FILE.bcpack --addr HOST (default 127.0.0.1)
+           --port N (default 7878; 0 = ephemeral) --port-file PATH
+           --max-batch N (default 64) --max-wait-us N (default 200)
+           --queue-cap N (default 1024) --workers N (default: cores)
+           --quiet    endpoints: POST /predict {\"x\":[...]} -> pred+logits,
+           GET /healthz, GET /stats, POST /shutdown; SIGTERM/ctrl-c and
+           /shutdown both drain in-flight batches before exit
+  loadgen: --url http://HOST:PORT (default http://127.0.0.1:7878)
+           --concurrency N (default 16) --requests N (default 1000)
+           --seed N   closed-loop: exits non-zero on any non-2xx/transport
+           failure (the CI smoke gate)";
 
 fn run() -> Result<()> {
     // Fail fast on an unparseable BCRUN_THREADS or BCRUN_SIMD (typo, or
@@ -68,6 +81,8 @@ fn run() -> Result<()> {
         "hw" => cmd_hw(&args),
         "export" => cmd_export(&args),
         "infer" => cmd_infer(&args),
+        "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
         _ => {
             println!("{USAGE}");
             Ok(())
@@ -317,6 +332,104 @@ fn cmd_infer(args: &Args) -> Result<()> {
         err,
         data.test.len() as f64 / dt,
         packed.weight_memory_bytes(),
+    );
+    Ok(())
+}
+
+/// Serve a .bcpack model over HTTP with dynamic micro-batching (paper
+/// Sec. 2.6 inference, made an online workload — see DESIGN.md "Serving
+/// layer").
+fn cmd_serve(args: &Args) -> Result<()> {
+    use binaryconnect::binary::load_packed;
+    use binaryconnect::serve;
+    use std::time::Duration;
+
+    let path = args.str("packed", "model.bcpack");
+    let packed = load_packed(std::path::Path::new(&path))?;
+    let port = args.usize("port", 7878);
+    ensure!(port <= u16::MAX as usize, "--port {port} is out of range");
+    let default_workers =
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).clamp(2, 64);
+    let cfg = serve::ServeConfig {
+        addr: args.str("addr", "127.0.0.1"),
+        port: port as u16,
+        max_batch: args.usize("max-batch", 64),
+        max_wait: Duration::from_micros(args.u64("max-wait-us", 200)),
+        queue_cap: args.usize("queue-cap", 1024),
+        workers: args.usize("workers", default_workers),
+        quiet: args.bool("quiet", false),
+        ..Default::default()
+    };
+    let quiet = cfg.quiet;
+    let summary = format!(
+        "model {} ({} -> {} classes, {} layers, {} packed weight bytes)",
+        path,
+        packed.in_dim,
+        packed.classes,
+        packed.layers.len(),
+        packed.weight_memory_bytes()
+    );
+    serve::signal::install();
+    let mut server = serve::start(packed, cfg)?;
+    println!("bcrun serve: listening on http://{}", server.addr());
+    if !quiet {
+        eprintln!("bcrun serve: {summary}");
+    }
+    if let Some(pf) = args.opt_str("port-file") {
+        // written after bind so a watcher can poll for the ephemeral port
+        std::fs::write(&pf, server.addr().port().to_string())
+            .with_context(|| format!("write {pf}"))?;
+    }
+    while !server.is_shutdown() && !serve::signal::triggered() {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    if !quiet {
+        eprintln!("bcrun serve: shutdown requested; draining in-flight batches");
+    }
+    server.stop();
+    let snap = server.metrics().snapshot(0);
+    println!(
+        "bcrun serve: done — {} requests, {} predictions in {} batches (mean batch {:.2}), p50 {:.0} us, p99 {:.0} us",
+        snap.get("requests").and_then(|j| j.as_usize()).unwrap_or(0),
+        snap.get("predictions").and_then(|j| j.as_usize()).unwrap_or(0),
+        snap.get("batches").and_then(|j| j.as_usize()).unwrap_or(0),
+        snap.get("mean_batch_rows").and_then(|j| j.as_f64()).unwrap_or(0.0),
+        snap.get("latency_p50_us").and_then(|j| j.as_f64()).unwrap_or(0.0),
+        snap.get("latency_p99_us").and_then(|j| j.as_f64()).unwrap_or(0.0),
+    );
+    Ok(())
+}
+
+/// Closed-loop load test against a running `bcrun serve`.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    use binaryconnect::serve::loadgen;
+
+    let url = args.str("url", "http://127.0.0.1:7878");
+    let opts = loadgen::LoadgenOpts {
+        host: loadgen::host_of(&url)?,
+        concurrency: args.usize("concurrency", 16),
+        requests: args.usize("requests", 1000),
+        seed: args.u64("seed", 1),
+    };
+    let rep = loadgen::run(&opts)?;
+    println!(
+        "loadgen: {} requests ({} ok, {} non-2xx, {} transport errors) in {:.2}s from {} connections",
+        rep.sent, rep.ok, rep.failed_status, rep.errors, rep.elapsed_s, opts.concurrency
+    );
+    println!(
+        "  throughput {:.0} req/s | latency p50 {:.0} us, p95 {:.0} us, p99 {:.0} us, max {:.0} us | server mean batch {:.2}",
+        rep.throughput_rps(),
+        rep.latency.percentile(50.0) * 1e6,
+        rep.latency.percentile(95.0) * 1e6,
+        rep.latency.percentile(99.0) * 1e6,
+        rep.latency.max() * 1e6,
+        rep.server_mean_batch,
+    );
+    ensure!(
+        rep.failed_status == 0 && rep.errors == 0,
+        "load test saw {} non-2xx responses and {} transport errors",
+        rep.failed_status,
+        rep.errors
     );
     Ok(())
 }

@@ -1,0 +1,363 @@
+//! Dynamic micro-batching: coalesce concurrent single-row requests into
+//! one lane-batched `PackedMlp` forward.
+//!
+//! Why: the packed sign-GEMM amortizes its bit-decode over batch columns
+//! (SIMD lanes *are* batch columns — `kernel/simd`), so 16 rows in one
+//! forward cost far less than 16 solo forwards. An online server sees
+//! single rows; this queue turns concurrency into batch width.
+//!
+//! Contract:
+//! * **Window.** The batcher sleeps until a first row arrives, then
+//!   collects up to `max_batch` rows or until `max_wait` elapses,
+//!   whichever is first. `max_wait == 0` disables coalescing-by-waiting
+//!   (whatever is already queued still rides one forward).
+//! * **Exactness.** Every forward goes through
+//!   [`PackedMlp::forward_into`], which always takes the lane-batched
+//!   kernel: a row's logits are bit-identical whether it was served solo
+//!   or inside any coalesced batch (tested here and end-to-end over
+//!   HTTP in `tests/integration_serve.rs`).
+//! * **Backpressure.** The queue is bounded (`queue_cap` rows);
+//!   [`BatchQueue::submit`] fails instead of blocking when full, and the
+//!   HTTP layer maps that to 503 + Retry-After.
+//! * **Drain.** [`Batcher::stop`] processes every queued row before the
+//!   thread exits — a request that was accepted is always answered.
+//! * **Allocation.** The slab, workspace and job vector are reused; the
+//!   per-batch forward is allocation-free (`PackedWorkspace` contract).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::SyncSender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::binary::packed::{argmax, PackedMlp};
+
+use super::metrics::Metrics;
+
+/// One queued row: the input and the channel its reply goes back on.
+pub struct Job {
+    /// One input row, `in_dim` long (validated by the submitter).
+    pub x: Vec<f32>,
+    pub reply: SyncSender<Reply>,
+}
+
+/// The per-row result of a batched forward.
+#[derive(Clone, Debug)]
+pub struct Reply {
+    pub logits: Vec<f32>,
+    pub pred: usize,
+    /// How many rows shared the forward (1 = served solo).
+    pub batch_rows: usize,
+}
+
+/// Batching knobs (`bcrun serve --max-batch --max-wait-us --queue-cap`).
+#[derive(Clone, Debug)]
+pub struct BatchConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub queue_cap: usize,
+}
+
+struct Shared {
+    q: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    cap: usize,
+}
+
+/// Cloneable submit handle onto the bounded row queue.
+#[derive(Clone)]
+pub struct BatchQueue {
+    shared: Arc<Shared>,
+}
+
+impl BatchQueue {
+    pub fn bounded(cap: usize) -> BatchQueue {
+        BatchQueue {
+            shared: Arc::new(Shared {
+                q: Mutex::new(VecDeque::with_capacity(cap.min(4096))),
+                cv: Condvar::new(),
+                shutdown: AtomicBool::new(false),
+                cap: cap.max(1),
+            }),
+        }
+    }
+
+    /// Enqueue one row. Fails (returning the job, no blocking) when the
+    /// queue is at capacity or the batcher is shutting down — the
+    /// caller's 503.
+    pub fn submit(&self, job: Job) -> Result<(), Job> {
+        if self.shared.shutdown.load(Ordering::Acquire) {
+            return Err(job);
+        }
+        let mut q = self.shared.q.lock().unwrap();
+        if q.len() >= self.shared.cap {
+            return Err(job);
+        }
+        q.push_back(job);
+        drop(q);
+        self.shared.cv.notify_one();
+        Ok(())
+    }
+
+    /// Rows currently queued (sampled; for `/stats`).
+    pub fn depth(&self) -> usize {
+        self.shared.q.lock().unwrap().len()
+    }
+}
+
+/// The batching thread plus its queue handle.
+pub struct Batcher {
+    pub queue: BatchQueue,
+    join: Option<JoinHandle<()>>,
+}
+
+impl Batcher {
+    /// Spawn the batching thread over an existing queue (tests pre-seed
+    /// the queue before spawning to pin coalescing deterministically).
+    pub fn spawn(
+        mlp: Arc<PackedMlp>,
+        queue: BatchQueue,
+        cfg: BatchConfig,
+        metrics: Arc<Metrics>,
+    ) -> Batcher {
+        let shared = Arc::clone(&queue.shared);
+        let join = std::thread::Builder::new()
+            .name("bc-batcher".into())
+            .spawn(move || run_loop(&mlp, &shared, &cfg, &metrics))
+            .expect("spawn batcher thread");
+        Batcher { queue, join: Some(join) }
+    }
+
+    /// Start with a fresh bounded queue.
+    pub fn start(mlp: Arc<PackedMlp>, cfg: BatchConfig, metrics: Arc<Metrics>) -> Batcher {
+        let queue = BatchQueue::bounded(cfg.queue_cap);
+        Batcher::spawn(mlp, queue, cfg, metrics)
+    }
+
+    /// Graceful stop: refuse new rows, drain everything queued (each row
+    /// still gets its reply), join the thread. Idempotent.
+    pub fn stop(&mut self) {
+        self.queue.shared.shutdown.store(true, Ordering::Release);
+        self.queue.shared.cv.notify_all();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn run_loop(mlp: &PackedMlp, shared: &Shared, cfg: &BatchConfig, metrics: &Metrics) {
+    let max_batch = cfg.max_batch.max(1);
+    let mut ws = mlp.workspace(max_batch);
+    let mut slab = vec![0f32; max_batch * mlp.in_dim];
+    let mut batch: Vec<Job> = Vec::with_capacity(max_batch);
+    loop {
+        {
+            let mut q = shared.q.lock().unwrap();
+            // sleep until the first row (or shutdown with an empty queue:
+            // every accepted row has been answered — done)
+            loop {
+                if !q.is_empty() {
+                    break;
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                q = shared.cv.wait(q).unwrap();
+            }
+            // batching window: collect more rows up to max_batch or until
+            // max_wait from *noticing* the first row; shutdown short-
+            // circuits the wait so drain is prompt
+            if q.len() < max_batch
+                && !cfg.max_wait.is_zero()
+                && !shared.shutdown.load(Ordering::Acquire)
+            {
+                let deadline = Instant::now() + cfg.max_wait;
+                while q.len() < max_batch && !shared.shutdown.load(Ordering::Acquire) {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    let (guard, _) = shared.cv.wait_timeout(q, deadline - now).unwrap();
+                    q = guard;
+                }
+            }
+            let take = q.len().min(max_batch);
+            batch.extend(q.drain(..take));
+        }
+        // defense in depth: the HTTP layer validates row shape, but a
+        // malformed job must cost its own request a 500 (dropped reply
+        // channel), never the batcher thread
+        batch.retain(|job| job.x.len() == mlp.in_dim);
+        let b = batch.len();
+        if b == 0 {
+            continue;
+        }
+        for (i, job) in batch.iter().enumerate() {
+            slab[i * mlp.in_dim..(i + 1) * mlp.in_dim].copy_from_slice(&job.x);
+        }
+        let logits = mlp.forward_into(&slab[..b * mlp.in_dim], b, &mut ws);
+        metrics.record_batch(b);
+        for (i, job) in batch.drain(..).enumerate() {
+            let row = &logits[i * mlp.classes..(i + 1) * mlp.classes];
+            let _ = job.reply.send(Reply {
+                logits: row.to_vec(),
+                pred: argmax(row),
+                batch_rows: b,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use std::sync::mpsc::sync_channel;
+
+    fn toy_mlp() -> Arc<PackedMlp> {
+        let mut rng = Rng::new(7);
+        let mut mat = |k: usize, n: usize| -> (Vec<f32>, usize, usize) {
+            ((0..k * n).map(|_| rng.normal()).collect(), k, n)
+        };
+        let (w1, w2) = (mat(10, 66), mat(66, 5));
+        Arc::new(PackedMlp::build(
+            vec![w1, w2],
+            vec![
+                Some((vec![1.0; 66], vec![0.0; 66], vec![0.1; 66], vec![1.0; 66])),
+                None,
+            ],
+            Some(vec![0.01, -0.01, 0.0, 0.02, 0.03]),
+        ))
+    }
+
+    fn job(x: Vec<f32>) -> (Job, std::sync::mpsc::Receiver<Reply>) {
+        let (tx, rx) = sync_channel(1);
+        (Job { x, reply: tx }, rx)
+    }
+
+    fn rows(mlp: &PackedMlp, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..mlp.in_dim).map(|_| rng.normal()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn preseeded_queue_coalesces_into_one_batch_bit_equal_to_solo() {
+        let mlp = toy_mlp();
+        let xs = rows(&mlp, 8, 21);
+        // solo references through the same lane-batched path
+        let mut ws = mlp.workspace(1);
+        let solo: Vec<Vec<f32>> =
+            xs.iter().map(|x| mlp.forward_into(x, 1, &mut ws).to_vec()).collect();
+        // enqueue everything BEFORE the batcher thread exists: the first
+        // drain deterministically takes all 8 rows as one batch
+        let queue = BatchQueue::bounded(64);
+        let rxs: Vec<_> = xs
+            .iter()
+            .map(|x| {
+                let (j, rx) = job(x.clone());
+                queue.submit(j).map_err(|_| ()).unwrap();
+                rx
+            })
+            .collect();
+        let metrics = Arc::new(Metrics::new());
+        let cfg = BatchConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(50),
+            queue_cap: 64,
+        };
+        let mut batcher = Batcher::spawn(Arc::clone(&mlp), queue, cfg, Arc::clone(&metrics));
+        for (i, rx) in rxs.iter().enumerate() {
+            let reply = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(reply.batch_rows, 8, "row {i} was not coalesced");
+            assert_eq!(reply.logits, solo[i], "row {i}: coalesced != solo bits");
+            assert_eq!(reply.pred, argmax(&solo[i]));
+        }
+        batcher.stop();
+        assert_eq!(metrics.batches.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.rows.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn max_batch_splits_a_large_backlog() {
+        let mlp = toy_mlp();
+        let xs = rows(&mlp, 10, 22);
+        let queue = BatchQueue::bounded(64);
+        let rxs: Vec<_> = xs
+            .iter()
+            .map(|x| {
+                let (j, rx) = job(x.clone());
+                queue.submit(j).map_err(|_| ()).unwrap();
+                rx
+            })
+            .collect();
+        let cfg = BatchConfig {
+            max_batch: 4,
+            max_wait: Duration::ZERO,
+            queue_cap: 64,
+        };
+        let metrics = Arc::new(Metrics::new());
+        let mut batcher = Batcher::spawn(Arc::clone(&mlp), queue, cfg, Arc::clone(&metrics));
+        let sizes: Vec<usize> = rxs
+            .iter()
+            .map(|rx| rx.recv_timeout(Duration::from_secs(5)).unwrap().batch_rows)
+            .collect();
+        batcher.stop();
+        assert_eq!(sizes, vec![4, 4, 4, 4, 4, 4, 4, 4, 2, 2], "drain order batches");
+        assert_eq!(metrics.batches.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn bounded_queue_rejects_when_full() {
+        let queue = BatchQueue::bounded(2);
+        let (j1, _r1) = job(vec![0.0; 4]);
+        let (j2, _r2) = job(vec![0.0; 4]);
+        let (j3, _r3) = job(vec![0.0; 4]);
+        assert!(queue.submit(j1).is_ok());
+        assert!(queue.submit(j2).is_ok());
+        assert!(queue.submit(j3).is_err(), "cap 2 must reject the third row");
+        assert_eq!(queue.depth(), 2);
+    }
+
+    #[test]
+    fn stop_drains_every_accepted_row() {
+        let mlp = toy_mlp();
+        let xs = rows(&mlp, 10, 23);
+        let queue = BatchQueue::bounded(64);
+        let rxs: Vec<_> = xs
+            .iter()
+            .map(|x| {
+                let (j, rx) = job(x.clone());
+                queue.submit(j).map_err(|_| ()).unwrap();
+                rx
+            })
+            .collect();
+        // a long window would stall the first batch for a second — stop()
+        // must short-circuit it and still answer all 10 rows
+        let cfg = BatchConfig {
+            max_batch: 4,
+            max_wait: Duration::from_secs(1),
+            queue_cap: 64,
+        };
+        let metrics = Arc::new(Metrics::new());
+        let t0 = Instant::now();
+        let mut batcher = Batcher::spawn(Arc::clone(&mlp), queue.clone(), cfg, metrics);
+        batcher.stop();
+        for rx in &rxs {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        assert!(t0.elapsed() < Duration::from_secs(4), "drain did not short-circuit");
+        // post-shutdown submissions are refused
+        let (j, _rx) = job(xs[0].clone());
+        assert!(queue.submit(j).is_err());
+    }
+}

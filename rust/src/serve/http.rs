@@ -1,0 +1,410 @@
+//! Minimal HTTP/1.1 on `std::net` — just enough protocol for the serving
+//! layer: request parsing with hard caps (line length, header count, body
+//! size, per-request deadline), keep-alive connections, and response
+//! writing. No external crates; the JSON bodies go through `util::json`.
+//!
+//! The read path is built for the worker-thread model in `serve::mod`:
+//! sockets carry a short read timeout, and a timeout that fires while *no*
+//! request has started is reported as [`ReadOutcome::Idle`] so the worker
+//! can poll its shutdown flag between requests — that poll is what makes
+//! graceful drain possible without dropping an in-flight request.
+
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Longest accepted request/header line (bytes, CRLF included).
+pub const MAX_HEADER_LINE: usize = 8 * 1024;
+/// Most headers accepted per request.
+pub const MAX_HEADERS: usize = 64;
+
+/// One parsed request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// Path with any `?query` stripped.
+    pub path: String,
+    pub body: Vec<u8>,
+    /// What the peer asked for (HTTP/1.1 default keep-alive, 1.0 close).
+    pub keep_alive: bool,
+}
+
+/// Outcome of trying to read one request off a kept-alive connection.
+pub enum ReadOutcome {
+    /// A complete request.
+    Request(Request),
+    /// Peer closed the connection between requests.
+    Closed,
+    /// The socket read timeout fired before any byte of a new request —
+    /// the caller polls its shutdown flag and retries.
+    Idle,
+    /// Malformed, oversized or timed-out input; respond with `.1` (a JSON
+    /// error body) at status `.0` and close the connection.
+    Bad(u16, String),
+}
+
+enum LineEnd {
+    Line,
+    Eof,
+    Timeout,
+}
+
+/// Append bytes up to and including `\n`. Returns `Timeout` on a socket
+/// timeout once `deadline` (when given) has passed — or immediately when
+/// no deadline is set, so the caller can decide whether the connection is
+/// idle or a request stalled mid-line.
+fn read_line(
+    r: &mut BufReader<TcpStream>,
+    buf: &mut Vec<u8>,
+    deadline: Option<Instant>,
+) -> Result<LineEnd, String> {
+    loop {
+        if buf.len() > MAX_HEADER_LINE {
+            return Err("header line too long".into());
+        }
+        // fill_buf + bounded copy (not read_until, which would buffer a
+        // delimiter-free flood without limit before any cap check ran)
+        let (advance, done) = match r.fill_buf() {
+            Ok([]) => return Ok(LineEnd::Eof),
+            Ok(available) => {
+                let limit = (MAX_HEADER_LINE + 1 - buf.len()).min(available.len());
+                match available[..limit].iter().position(|&c| c == b'\n') {
+                    Some(p) => {
+                        buf.extend_from_slice(&available[..=p]);
+                        (p + 1, true)
+                    }
+                    None => {
+                        buf.extend_from_slice(&available[..limit]);
+                        (limit, false)
+                    }
+                }
+            }
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                match deadline {
+                    None => return Ok(LineEnd::Timeout),
+                    Some(d) if Instant::now() >= d => return Ok(LineEnd::Timeout),
+                    Some(_) => continue,
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(format!("read error: {e}")),
+        };
+        r.consume(advance);
+        if done {
+            return Ok(LineEnd::Line);
+        }
+    }
+}
+
+/// Fill `buf` completely or fail by `deadline`.
+fn read_full(
+    r: &mut BufReader<TcpStream>,
+    buf: &mut [u8],
+    deadline: Instant,
+) -> Result<(), String> {
+    let mut off = 0;
+    while off < buf.len() {
+        match r.read(&mut buf[off..]) {
+            Ok(0) => return Err("connection closed mid-body".into()),
+            Ok(n) => off += n,
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if Instant::now() >= deadline {
+                    return Err("body read timed out".into());
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(format!("read error: {e}")),
+        }
+    }
+    Ok(())
+}
+
+fn bad(status: u16, msg: impl std::fmt::Display) -> ReadOutcome {
+    ReadOutcome::Bad(status, error_body(&msg.to_string()))
+}
+
+/// Read one request. `budget` bounds the wall time from the first byte of
+/// the request line to the last body byte; `max_body` bounds the declared
+/// Content-Length (413 beyond it).
+pub fn read_request(
+    r: &mut BufReader<TcpStream>,
+    max_body: usize,
+    budget: Duration,
+) -> ReadOutcome {
+    // --- request line; a timeout before any byte means the connection
+    //     is merely idle ---
+    let mut line = Vec::with_capacity(256);
+    let mut deadline: Option<Instant> = None;
+    loop {
+        match read_line(r, &mut line, deadline) {
+            Ok(LineEnd::Line) => break,
+            Ok(LineEnd::Eof) => {
+                return if line.is_empty() {
+                    ReadOutcome::Closed
+                } else {
+                    bad(400, "truncated request line")
+                };
+            }
+            Ok(LineEnd::Timeout) => {
+                if line.is_empty() {
+                    return ReadOutcome::Idle;
+                }
+                match deadline {
+                    // the request has started: give it the full budget
+                    None => deadline = Some(Instant::now() + budget),
+                    Some(_) => return bad(408, "request line timed out"),
+                }
+            }
+            Err(e) => return bad(400, e),
+        }
+    }
+    let deadline = deadline.unwrap_or_else(|| Instant::now() + budget);
+
+    let first = match std::str::from_utf8(&line) {
+        Ok(s) => s.trim_end(),
+        Err(_) => return bad(400, "request line is not UTF-8"),
+    };
+    let mut parts = first.split_whitespace();
+    let (method, target, version) =
+        match (parts.next(), parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(t), Some(v), None) => (m.to_string(), t, v),
+            _ => return bad(400, "malformed request line"),
+        };
+    if !version.starts_with("HTTP/1.") {
+        return bad(400, "unsupported HTTP version");
+    }
+    let mut keep_alive = version == "HTTP/1.1";
+    let path = target.split('?').next().unwrap_or("").to_string();
+
+    // --- headers ---
+    let mut content_len = 0usize;
+    let mut n_headers = 0usize;
+    loop {
+        line.clear();
+        match read_line(r, &mut line, Some(deadline)) {
+            Ok(LineEnd::Line) => {}
+            Ok(LineEnd::Eof) => return bad(400, "truncated headers"),
+            Ok(LineEnd::Timeout) => return bad(408, "header read timed out"),
+            Err(e) => return bad(400, e),
+        }
+        let text = match std::str::from_utf8(&line) {
+            Ok(s) => s.trim_end(),
+            Err(_) => return bad(400, "header is not UTF-8"),
+        };
+        if text.is_empty() {
+            break;
+        }
+        n_headers += 1;
+        if n_headers > MAX_HEADERS {
+            return bad(400, "too many headers");
+        }
+        let (name, value) = match text.split_once(':') {
+            Some((n, v)) => (n.trim().to_ascii_lowercase(), v.trim()),
+            None => return bad(400, "malformed header"),
+        };
+        match name.as_str() {
+            "content-length" => match value.parse::<usize>() {
+                Ok(n) if n <= max_body => content_len = n,
+                Ok(n) => return bad(413, format!("body of {n} bytes exceeds cap {max_body}")),
+                Err(_) => return bad(400, "bad content-length"),
+            },
+            "connection" => {
+                if value.eq_ignore_ascii_case("close") {
+                    keep_alive = false;
+                } else if value.eq_ignore_ascii_case("keep-alive") {
+                    keep_alive = true;
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // --- body ---
+    let mut body = vec![0u8; content_len];
+    if content_len > 0 {
+        if let Err(e) = read_full(r, &mut body, deadline) {
+            return bad(408, e);
+        }
+    }
+    ReadOutcome::Request(Request { method, path, body, keep_alive })
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// `{"error": msg}` with the message JSON-escaped.
+pub fn error_body(msg: &str) -> String {
+    crate::util::Json::Obj(
+        [("error".to_string(), crate::util::Json::Str(msg.to_string()))]
+            .into_iter()
+            .collect(),
+    )
+    .to_string()
+}
+
+/// Write one JSON response. `keep_alive` picks the `Connection` header;
+/// 503 responses additionally carry `Retry-After: 1` (the backpressure
+/// contract: overload is transient, retry after the queue drains).
+pub fn write_response(
+    w: &mut TcpStream,
+    status: u16,
+    body: &str,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {}\r\ncontent-type: application/json\r\n\
+         content-length: {}\r\nconnection: {}\r\n",
+        reason(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" }
+    );
+    if status == 503 {
+        head.push_str("retry-after: 1\r\n");
+    }
+    head.push_str("\r\n");
+    w.write_all(head.as_bytes())?;
+    w.write_all(body.as_bytes())?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// Run the parser against raw bytes pushed through a real socket pair
+    /// (the parser type is BufReader<TcpStream>, so tests use one too).
+    fn parse_raw(raw: &[u8]) -> ReadOutcome {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let raw = raw.to_vec();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(&raw).unwrap();
+            // keep the socket open briefly so EOF is not racing the parse
+            std::thread::sleep(Duration::from_millis(50));
+        });
+        let (stream, _) = listener.accept().unwrap();
+        stream.set_read_timeout(Some(Duration::from_millis(20))).unwrap();
+        let mut r = BufReader::new(stream);
+        let out = read_request(&mut r, 1024, Duration::from_millis(200));
+        writer.join().unwrap();
+        out
+    }
+
+    #[test]
+    fn parses_a_post_with_body() {
+        let out = parse_raw(
+            b"POST /predict HTTP/1.1\r\ncontent-length: 9\r\n\
+              x-extra: 1\r\n\r\n{\"x\":[1]}",
+        );
+        match out {
+            ReadOutcome::Request(req) => {
+                assert_eq!(req.method, "POST");
+                assert_eq!(req.path, "/predict");
+                assert_eq!(req.body, b"{\"x\":[1]}");
+                assert!(req.keep_alive);
+            }
+            _ => panic!("expected a request"),
+        }
+    }
+
+    #[test]
+    fn query_string_is_stripped_and_close_honored() {
+        let out = parse_raw(b"GET /stats?pretty=1 HTTP/1.1\r\nConnection: close\r\n\r\n");
+        match out {
+            ReadOutcome::Request(req) => {
+                assert_eq!(req.path, "/stats");
+                assert!(!req.keep_alive);
+            }
+            _ => panic!("expected a request"),
+        }
+    }
+
+    #[test]
+    fn oversized_body_is_rejected_with_413() {
+        let out = parse_raw(b"POST /predict HTTP/1.1\r\ncontent-length: 99999\r\n\r\n");
+        match out {
+            ReadOutcome::Bad(status, body) => {
+                assert_eq!(status, 413);
+                assert!(body.contains("exceeds"), "{body}");
+            }
+            _ => panic!("expected Bad"),
+        }
+    }
+
+    #[test]
+    fn garbage_request_line_is_a_400_not_a_panic() {
+        for raw in [
+            b"\x00\xff\xfe\r\n\r\n".as_slice(),
+            b"GET\r\n\r\n",
+            b"GET / HTTP/1.1 extra words\r\n\r\n",
+            b"GET / SMTP/1.0\r\n\r\n",
+            b"POST / HTTP/1.1\r\ncontent-length: minus-one\r\n\r\n",
+            b"POST / HTTP/1.1\r\nno-colon-here\r\n\r\n",
+        ] {
+            match parse_raw(raw) {
+                ReadOutcome::Bad(400, _) => {}
+                ReadOutcome::Bad(s, b) => panic!("expected 400, got {s}: {b}"),
+                _ => panic!("expected Bad for {:?}", String::from_utf8_lossy(raw)),
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_request_line_is_bounded_and_rejected() {
+        // a delimiter-free flood must be refused after MAX_HEADER_LINE
+        // buffered bytes, not accumulated without bound
+        let mut raw = vec![b'A'; 3 * MAX_HEADER_LINE];
+        raw.extend_from_slice(b"\r\n\r\n");
+        match parse_raw(&raw) {
+            ReadOutcome::Bad(400, body) => assert!(body.contains("too long"), "{body}"),
+            _ => panic!("expected Bad(400)"),
+        }
+    }
+
+    #[test]
+    fn idle_connection_reports_idle_then_eof_reports_closed() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (stream, _) = listener.accept().unwrap();
+        stream.set_read_timeout(Some(Duration::from_millis(10))).unwrap();
+        let mut r = BufReader::new(stream);
+        assert!(matches!(
+            read_request(&mut r, 1024, Duration::from_millis(100)),
+            ReadOutcome::Idle
+        ));
+        drop(client);
+        assert!(matches!(
+            read_request(&mut r, 1024, Duration::from_millis(100)),
+            ReadOutcome::Closed
+        ));
+    }
+
+    #[test]
+    fn truncated_body_times_out_cleanly() {
+        // declares 50 bytes, sends 3, stalls: must be a 408, not a hang
+        let out = parse_raw(b"POST / HTTP/1.1\r\ncontent-length: 50\r\n\r\nabc");
+        match out {
+            ReadOutcome::Bad(status, _) => assert_eq!(status, 408),
+            _ => panic!("expected Bad(408)"),
+        }
+    }
+
+    #[test]
+    fn error_body_escapes() {
+        let b = error_body("bad \"x\"\nvalue");
+        assert!(crate::util::Json::parse(&b).is_ok(), "{b}");
+    }
+}

@@ -1,0 +1,345 @@
+//! Closed-loop multi-threaded load generator for the serving layer, plus
+//! the tiny HTTP/1.1 client it (and the integration tests) drive the
+//! server with.
+//!
+//! Closed loop: each of `concurrency` workers keeps exactly one request
+//! in flight on one persistent connection — offered load adapts to the
+//! server instead of overrunning it, so the measured throughput is the
+//! *sustainable* rate and latency percentiles are honest (no coordinated
+//! omission from a blocked open-loop schedule).
+
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use crate::util::error::{Context, Result};
+use crate::util::{Json, LatencyStats, Rng, Timer};
+use crate::{anyhow, bail, ensure};
+
+/// A persistent keep-alive connection speaking just enough HTTP/1.1 for
+/// the serving endpoints.
+pub struct HttpClient {
+    reader: BufReader<TcpStream>,
+    line: Vec<u8>,
+}
+
+impl HttpClient {
+    pub fn connect(host: &str) -> Result<HttpClient> {
+        let stream = TcpStream::connect(host).with_context(|| format!("connect {host}"))?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        stream.set_write_timeout(Some(Duration::from_secs(30)))?;
+        Ok(HttpClient { reader: BufReader::new(stream), line: Vec::with_capacity(256) })
+    }
+
+    /// One request/response round trip. Returns (status, body).
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> Result<(u16, String)> {
+        let body = body.unwrap_or("");
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nhost: bcrun\r\ncontent-length: {}\r\n\r\n",
+            body.len()
+        );
+        let stream = self.reader.get_mut();
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(body.as_bytes())?;
+        stream.flush()?;
+
+        let status_line = self.read_line().context("read status line")?;
+        let mut parts = status_line.split_whitespace();
+        let status: u16 = match (parts.next(), parts.next()) {
+            (Some(v), Some(code)) if v.starts_with("HTTP/1.") => {
+                code.parse().map_err(|_| anyhow!("bad status code in '{status_line}'"))?
+            }
+            _ => bail!("malformed status line '{status_line}'"),
+        };
+        let mut content_len = 0usize;
+        loop {
+            let header = self.read_line().context("read header")?;
+            if header.is_empty() {
+                break;
+            }
+            if let Some((name, value)) = header.split_once(':') {
+                if name.trim().eq_ignore_ascii_case("content-length") {
+                    content_len = value
+                        .trim()
+                        .parse()
+                        .map_err(|_| anyhow!("bad content-length '{value}'"))?;
+                }
+            }
+        }
+        ensure!(content_len <= (64 << 20), "response body implausibly large");
+        let mut buf = vec![0u8; content_len];
+        self.read_exact_all(&mut buf)?;
+        Ok((status, String::from_utf8_lossy(&buf).into_owned()))
+    }
+
+    fn read_line(&mut self) -> Result<String> {
+        self.line.clear();
+        loop {
+            match self.reader.read_until(b'\n', &mut self.line) {
+                Ok(0) => bail!("server closed the connection"),
+                Ok(_) if self.line.last() == Some(&b'\n') => {
+                    let s = String::from_utf8_lossy(&self.line);
+                    return Ok(s.trim_end().to_string());
+                }
+                Ok(_) => {}
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => bail!("read error: {e}"),
+            }
+        }
+    }
+
+    fn read_exact_all(&mut self, buf: &mut [u8]) -> Result<()> {
+        let mut off = 0;
+        while off < buf.len() {
+            match self.reader.read(&mut buf[off..]) {
+                Ok(0) => bail!("server closed mid-body"),
+                Ok(n) => off += n,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => bail!("read error: {e}"),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Strip the scheme from `http://host:port[/...]` (or accept a bare
+/// `host:port`) — the connectable authority.
+pub fn host_of(url: &str) -> Result<String> {
+    let rest = if let Some(r) = url.strip_prefix("http://") {
+        r
+    } else if url.starts_with("https://") {
+        bail!("https is not supported by the zero-dependency client");
+    } else {
+        url
+    };
+    let host = rest.split('/').next().unwrap_or("");
+    ensure!(
+        host.contains(':'),
+        "'{url}': expected host:port (e.g. http://127.0.0.1:7878)"
+    );
+    Ok(host.to_string())
+}
+
+/// Serialize one `/predict` body into a reused buffer.
+pub fn predict_body(out: &mut String, row: &[f32]) {
+    use std::fmt::Write as _;
+    out.clear();
+    out.push_str("{\"x\":[");
+    for (i, v) in row.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{v}");
+    }
+    out.push_str("]}");
+}
+
+#[derive(Clone, Debug)]
+pub struct LoadgenOpts {
+    /// `host:port` (see [`host_of`]).
+    pub host: String,
+    pub concurrency: usize,
+    pub requests: usize,
+    pub seed: u64,
+}
+
+/// Aggregated closed-loop run result.
+pub struct LoadReport {
+    pub sent: usize,
+    pub ok: usize,
+    /// Responses with a non-2xx status.
+    pub failed_status: usize,
+    /// Transport-level failures (connect/read/write).
+    pub errors: usize,
+    pub elapsed_s: f64,
+    pub latency: LatencyStats,
+    /// Sampled from the server's final `/stats` (0 when unavailable).
+    pub server_mean_batch: f64,
+}
+
+impl LoadReport {
+    pub fn throughput_rps(&self) -> f64 {
+        if self.elapsed_s <= 0.0 {
+            return 0.0;
+        }
+        self.ok as f64 / self.elapsed_s
+    }
+}
+
+/// Run a closed-loop load test: probe `/healthz` for the input width,
+/// then hammer `/predict` from `concurrency` persistent connections
+/// until `requests` responses have been collected.
+pub fn run(opts: &LoadgenOpts) -> Result<LoadReport> {
+    ensure!(opts.concurrency >= 1, "--concurrency must be >= 1");
+    ensure!(opts.requests >= 1, "--requests must be >= 1");
+    // probe: learn the model's input width (and that the server is up);
+    // the probe connection is dropped before the run so it does not
+    // occupy one of the server's connection workers during measurement
+    let in_dim = {
+        let mut probe = HttpClient::connect(&opts.host)?;
+        let (status, health) = probe.request("GET", "/healthz", None)?;
+        ensure!(status == 200, "healthz returned {status}: {health}");
+        let health = Json::parse(&health).map_err(|e| anyhow!("healthz body: {e}"))?;
+        health
+            .get("in_dim")
+            .and_then(Json::as_usize)
+            .context("healthz body missing in_dim")?
+    };
+
+    let remaining = Arc::new(AtomicUsize::new(opts.requests));
+    let barrier = Arc::new(Barrier::new(opts.concurrency));
+    let mut joins = Vec::with_capacity(opts.concurrency);
+    let t_all = Timer::start();
+    for t in 0..opts.concurrency {
+        let host = opts.host.clone();
+        let remaining = Arc::clone(&remaining);
+        let barrier = Arc::clone(&barrier);
+        let tseed = opts.seed ^ (t as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        joins.push(std::thread::spawn(move || {
+            worker(&host, in_dim, tseed, &remaining, &barrier)
+        }));
+    }
+    let mut report = LoadReport {
+        sent: 0,
+        ok: 0,
+        failed_status: 0,
+        errors: 0,
+        elapsed_s: 0.0,
+        latency: LatencyStats::default(),
+        server_mean_batch: 0.0,
+    };
+    for j in joins {
+        let w = j.join().map_err(|_| anyhow!("loadgen worker panicked"))?;
+        report.sent += w.sent;
+        report.ok += w.ok;
+        report.failed_status += w.failed_status;
+        report.errors += w.errors;
+        report.latency.merge(&w.latency);
+    }
+    report.elapsed_s = t_all.elapsed_s();
+    // fresh connection after the run: every worker connection is closed,
+    // so this samples the server's final accounting
+    if let Ok(mut probe) = HttpClient::connect(&opts.host) {
+        if let Ok((200, stats)) = probe.request("GET", "/stats", None) {
+            if let Ok(j) = Json::parse(&stats) {
+                report.server_mean_batch =
+                    j.get("mean_batch_rows").and_then(Json::as_f64).unwrap_or(0.0);
+            }
+        }
+    }
+    Ok(report)
+}
+
+struct WorkerReport {
+    sent: usize,
+    ok: usize,
+    failed_status: usize,
+    errors: usize,
+    latency: LatencyStats,
+}
+
+fn worker(
+    host: &str,
+    in_dim: usize,
+    seed: u64,
+    remaining: &AtomicUsize,
+    barrier: &Barrier,
+) -> WorkerReport {
+    let mut rep = WorkerReport {
+        sent: 0,
+        ok: 0,
+        failed_status: 0,
+        errors: 0,
+        latency: LatencyStats::default(),
+    };
+    let mut rng = Rng::new(seed);
+    let mut row: Vec<f32> = (0..in_dim).map(|_| rng.normal()).collect();
+    let mut body = String::with_capacity(16 + in_dim * 10);
+    let mut client = HttpClient::connect(host).ok();
+    barrier.wait();
+    let mut consecutive_errors = 0usize;
+    while remaining
+        .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| v.checked_sub(1))
+        .is_ok()
+    {
+        rep.sent += 1;
+        // vary one feature per request — cheap, defeats trivial caching
+        if in_dim > 0 {
+            row[rep.sent % in_dim] = rng.normal();
+        }
+        predict_body(&mut body, &row);
+        if client.is_none() {
+            match HttpClient::connect(host) {
+                Ok(c2) => client = Some(c2),
+                Err(_) => {
+                    rep.errors += 1;
+                    consecutive_errors += 1;
+                    if consecutive_errors > 10 {
+                        return rep; // server is gone; stop burning tickets
+                    }
+                    continue;
+                }
+            }
+        }
+        let c = client.as_mut().unwrap();
+        let t = Timer::start();
+        match c.request("POST", "/predict", Some(&body)) {
+            Ok((200, _)) => {
+                rep.ok += 1;
+                rep.latency.record(t.elapsed_s());
+                consecutive_errors = 0;
+            }
+            Ok((_, _)) => {
+                rep.failed_status += 1;
+                rep.latency.record(t.elapsed_s());
+                consecutive_errors = 0;
+            }
+            Err(_) => {
+                rep.errors += 1;
+                consecutive_errors += 1;
+                client = None; // reconnect on the next ticket
+                if consecutive_errors > 10 {
+                    return rep;
+                }
+            }
+        }
+    }
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_of_parses_urls() {
+        assert_eq!(host_of("http://127.0.0.1:7878").unwrap(), "127.0.0.1:7878");
+        assert_eq!(host_of("http://10.0.0.2:80/predict").unwrap(), "10.0.0.2:80");
+        assert_eq!(host_of("localhost:9000").unwrap(), "localhost:9000");
+        assert!(host_of("https://secure:443").is_err());
+        assert!(host_of("http://no-port").is_err());
+    }
+
+    #[test]
+    fn predict_body_round_trips_through_json_exactly() {
+        let row = vec![1.5f32, -0.25, 0.1, 3.0, f32::MIN_POSITIVE];
+        let mut body = String::new();
+        predict_body(&mut body, &row);
+        let j = Json::parse(&body).unwrap();
+        let xs = j.get("x").unwrap().as_arr().unwrap();
+        assert_eq!(xs.len(), row.len());
+        for (v, &want) in xs.iter().zip(&row) {
+            // shortest-repr f32 display, parsed as f64, cast back: exact
+            let got = v.as_f64().unwrap() as f32;
+            assert_eq!(got.to_bits(), want.to_bits());
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! Serving metrics: lock-free counters plus a bounded latency ring,
+//! surfaced as the `/stats` endpoint's JSON snapshot.
+//!
+//! Latency percentiles ride the existing [`LatencyStats`] accumulator
+//! (`util::timer`); the ring keeps the last [`RING_CAP`] samples so a
+//! long-lived server reports *recent* p50/p95/p99 in O(1) memory instead
+//! of growing a sample vector forever.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::{Json, LatencyStats};
+
+/// Latency samples retained for percentile reporting.
+pub const RING_CAP: usize = 4096;
+
+struct Ring {
+    buf: Vec<f64>,
+    next: usize,
+    filled: usize,
+}
+
+/// Shared serving counters. All counters are monotonic totals since
+/// server start; `Relaxed` ordering is enough because readers only want
+/// an eventually-consistent snapshot.
+pub struct Metrics {
+    /// Every parsed HTTP request, any route or status.
+    pub requests: AtomicU64,
+    /// 200s from `/predict`.
+    pub predictions: AtomicU64,
+    /// 400/408/413 responses.
+    pub bad_requests: AtomicU64,
+    /// 404 responses.
+    pub not_found: AtomicU64,
+    /// 503 responses (batch queue full or accept backlog full).
+    pub overloads: AtomicU64,
+    /// Batched forwards executed.
+    pub batches: AtomicU64,
+    /// Rows served across all batches.
+    pub rows: AtomicU64,
+    /// Largest batch coalesced so far.
+    pub max_batch_rows: AtomicU64,
+    lat: Mutex<Ring>,
+}
+
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            requests: AtomicU64::new(0),
+            predictions: AtomicU64::new(0),
+            bad_requests: AtomicU64::new(0),
+            not_found: AtomicU64::new(0),
+            overloads: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            rows: AtomicU64::new(0),
+            max_batch_rows: AtomicU64::new(0),
+            lat: Mutex::new(Ring { buf: vec![0.0; RING_CAP], next: 0, filled: 0 }),
+        }
+    }
+
+    #[inline]
+    pub fn bump(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one end-to-end `/predict` latency (seconds).
+    pub fn record_latency(&self, seconds: f64) {
+        let mut ring = self.lat.lock().unwrap();
+        let at = ring.next;
+        ring.buf[at] = seconds;
+        ring.next = (at + 1) % RING_CAP;
+        ring.filled = (ring.filled + 1).min(RING_CAP);
+    }
+
+    /// Record one executed batch of `rows` rows.
+    pub fn record_batch(&self, rows: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.rows.fetch_add(rows as u64, Ordering::Relaxed);
+        self.max_batch_rows.fetch_max(rows as u64, Ordering::Relaxed);
+    }
+
+    /// The retained latency samples as a [`LatencyStats`] (copy; the ring
+    /// keeps accumulating concurrently).
+    pub fn latency(&self) -> LatencyStats {
+        let mut stats = LatencyStats::default();
+        let ring = self.lat.lock().unwrap();
+        for &s in &ring.buf[..ring.filled] {
+            stats.record(s);
+        }
+        stats
+    }
+
+    /// The `/stats` JSON object. `queue_depth` is sampled by the caller
+    /// (the metrics struct does not own the batch queue).
+    pub fn snapshot(&self, queue_depth: usize) -> Json {
+        let lat = self.latency();
+        let batches = self.batches.load(Ordering::Relaxed);
+        let rows = self.rows.load(Ordering::Relaxed);
+        let mut m = BTreeMap::new();
+        let mut num = |k: &str, v: f64| {
+            m.insert(k.to_string(), Json::Num(v));
+        };
+        num("requests", self.requests.load(Ordering::Relaxed) as f64);
+        num("predictions", self.predictions.load(Ordering::Relaxed) as f64);
+        num("bad_requests", self.bad_requests.load(Ordering::Relaxed) as f64);
+        num("not_found", self.not_found.load(Ordering::Relaxed) as f64);
+        num("overloads_503", self.overloads.load(Ordering::Relaxed) as f64);
+        num("batches", batches as f64);
+        num("rows", rows as f64);
+        num("max_batch_rows", self.max_batch_rows.load(Ordering::Relaxed) as f64);
+        num("mean_batch_rows", if batches == 0 { 0.0 } else { rows as f64 / batches as f64 });
+        num("queue_depth", queue_depth as f64);
+        num("latency_samples", lat.count() as f64);
+        num("latency_mean_us", lat.mean() * 1e6);
+        num("latency_p50_us", lat.percentile(50.0) * 1e6);
+        num("latency_p95_us", lat.percentile(95.0) * 1e6);
+        num("latency_p99_us", lat.percentile(99.0) * 1e6);
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_batches_accumulate() {
+        let m = Metrics::new();
+        Metrics::bump(&m.requests);
+        Metrics::bump(&m.requests);
+        m.record_batch(3);
+        m.record_batch(5);
+        m.record_batch(1);
+        let snap = m.snapshot(7);
+        assert_eq!(snap.get("requests").unwrap().as_usize(), Some(2));
+        assert_eq!(snap.get("batches").unwrap().as_usize(), Some(3));
+        assert_eq!(snap.get("rows").unwrap().as_usize(), Some(9));
+        assert_eq!(snap.get("max_batch_rows").unwrap().as_usize(), Some(5));
+        assert_eq!(snap.get("queue_depth").unwrap().as_usize(), Some(7));
+        assert!((snap.get("mean_batch_rows").unwrap().as_f64().unwrap() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_ring_keeps_the_most_recent_window() {
+        let m = Metrics::new();
+        // overfill the ring: the slow early samples must be evicted
+        for _ in 0..RING_CAP {
+            m.record_latency(1.0);
+        }
+        for _ in 0..RING_CAP {
+            m.record_latency(0.001);
+        }
+        let lat = m.latency();
+        assert_eq!(lat.count(), RING_CAP);
+        assert!(lat.percentile(99.0) < 0.01, "old samples leaked into the window");
+        // snapshot serializes without panicking and stays valid JSON
+        let snap = m.snapshot(0).to_string();
+        assert!(crate::util::Json::parse(&snap).is_ok(), "{snap}");
+    }
+
+    #[test]
+    fn default_equals_new_and_always_records() {
+        // no silent "ring-less" mode: Default and new are the same thing
+        let m = Metrics::default();
+        m.record_latency(0.5);
+        assert_eq!(m.latency().count(), 1);
+    }
+}

@@ -1,0 +1,547 @@
+//! `serve/` — online inference over the packed sign-GEMM engine.
+//!
+//! Turns a `.bcpack` model (the deterministic-BC test-time network,
+//! paper Sec. 2.6) into an HTTP service using only `std`:
+//!
+//! * [`http`] — minimal HTTP/1.1 parsing/writing with hard input caps;
+//! * [`batcher`] — the dynamic micro-batching queue that coalesces
+//!   concurrent single-row requests into one lane-batched forward (the
+//!   whole point: serve throughput rides the batched SIMD path, and a
+//!   row's logits are bit-identical solo or coalesced);
+//! * [`metrics`] — counters + bounded latency ring behind `/stats`;
+//! * [`loadgen`] — the closed-loop load generator (`bcrun loadgen`).
+//!
+//! ## Threading model
+//!
+//! One nonblocking **acceptor** (the `Server` thread) hands connections
+//! to a bounded channel; `workers` **connection threads** each run one
+//! keep-alive connection at a time (read request → route → respond);
+//! one **batcher** thread owns the model workspace and executes the
+//! coalesced forwards. Backpressure exists at both hops: a full
+//! connection backlog answers 503 at accept, a full row queue answers
+//! 503 from `/predict`.
+//!
+//! ## Endpoints
+//!
+//! | route | semantics |
+//! |---|---|
+//! | `POST /predict` | `{"x":[...in_dim floats...]}` → `{"pred":c,"batch":b,"logits":[...]}` |
+//! | `GET /healthz`  | model + config facts, `{"ok":true,...}` |
+//! | `GET /stats`    | counters and latency percentiles (see `metrics`) |
+//! | `POST /shutdown`| begin graceful drain (also: SIGTERM / ctrl-c) |
+//!
+//! ## Shutdown
+//!
+//! `Server::stop` (triggered by signal, `/shutdown`, or drop) stops
+//! accepting, lets every in-flight request finish, drains the batch
+//! queue (accepted rows are always answered), then joins all threads.
+
+pub mod batcher;
+pub mod http;
+pub mod loadgen;
+pub mod metrics;
+
+use std::collections::BTreeMap;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::binary::PackedMlp;
+use crate::ensure;
+use crate::util::error::{Context as _, Result};
+use crate::util::{Json, Timer};
+
+use batcher::{BatchConfig, Batcher, Job};
+use http::{ReadOutcome, Request};
+use metrics::Metrics;
+
+/// Serving knobs (`bcrun serve` flags map 1:1).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind host (default loopback; expose deliberately).
+    pub addr: String,
+    /// TCP port; 0 binds an ephemeral port (see [`Server::addr`]).
+    pub port: u16,
+    /// Most rows coalesced into one forward.
+    pub max_batch: usize,
+    /// Batching window: how long the batcher waits for more rows after
+    /// noticing the first one. Zero = no waiting.
+    pub max_wait: Duration,
+    /// Bound on queued rows; beyond it `/predict` answers 503.
+    pub queue_cap: usize,
+    /// Connection worker threads.
+    pub workers: usize,
+    /// Accept-to-worker handoff backlog; beyond it accept answers 503.
+    pub conn_backlog: usize,
+    /// Largest accepted request body (bytes).
+    pub max_body: usize,
+    /// Wall-time budget for reading one request.
+    pub request_timeout: Duration,
+    /// Close a keep-alive connection after this much request-free idle
+    /// time. Each worker thread serves one connection at a time, so
+    /// `workers` bounds the *concurrently-served* persistent
+    /// connections — reaping idle sockets is what keeps silent clients
+    /// from pinning workers forever.
+    pub idle_timeout: Duration,
+    /// Suppress the per-lifecycle eprintln lines.
+    pub quiet: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1".into(),
+            port: 0,
+            max_batch: 64,
+            max_wait: Duration::from_micros(200),
+            queue_cap: 1024,
+            workers: 8,
+            conn_backlog: 128,
+            max_body: 1 << 20,
+            request_timeout: Duration::from_secs(10),
+            idle_timeout: Duration::from_secs(30),
+            quiet: true,
+        }
+    }
+}
+
+/// Shared request-handling context.
+struct Ctx {
+    mlp: Arc<PackedMlp>,
+    queue: batcher::BatchQueue,
+    metrics: Arc<Metrics>,
+    shutdown: Arc<AtomicBool>,
+    max_body: usize,
+    request_timeout: Duration,
+    idle_timeout: Duration,
+    /// Prebuilt `/healthz` body (model + config facts are static).
+    health_body: String,
+}
+
+/// A running server. Dropping it (or calling [`Server::stop`]) performs
+/// the graceful drain described in the module docs.
+pub struct Server {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    metrics: Arc<Metrics>,
+    accept_join: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// The actually-bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// True once shutdown has been requested (signal, `/shutdown`, or
+    /// [`Server::stop`]).
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::Acquire)
+    }
+
+    /// Request + wait for the graceful drain. Idempotent.
+    pub fn stop(&mut self) {
+        self.shutdown.store(true, Ordering::Release);
+        if let Some(j) = self.accept_join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Bind, spawn the batcher + worker + acceptor threads, return a handle.
+pub fn start(mlp: PackedMlp, cfg: ServeConfig) -> Result<Server> {
+    ensure!(cfg.max_batch >= 1, "max_batch must be >= 1");
+    ensure!(cfg.workers >= 1, "workers must be >= 1");
+    ensure!(cfg.queue_cap >= 1, "queue_cap must be >= 1");
+    ensure!(!mlp.layers.is_empty(), "cannot serve an empty model");
+    // note: queue_cap < max_batch is allowed — batches are then bounded
+    // by the queue, which is exactly what the overload tests exploit
+    let listener = TcpListener::bind((cfg.addr.as_str(), cfg.port))
+        .with_context(|| format!("bind {}:{}", cfg.addr, cfg.port))?;
+    let addr = listener.local_addr()?;
+    listener
+        .set_nonblocking(true)
+        .context("set_nonblocking on the listener")?;
+
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let metrics = Arc::new(Metrics::new());
+    let mlp = Arc::new(mlp);
+    let batch_cfg = BatchConfig {
+        max_batch: cfg.max_batch,
+        max_wait: cfg.max_wait,
+        queue_cap: cfg.queue_cap,
+    };
+    let batcher = Batcher::start(Arc::clone(&mlp), batch_cfg, Arc::clone(&metrics));
+    let health_body = health_json(&mlp, &cfg).to_string();
+    let ctx = Arc::new(Ctx {
+        mlp,
+        queue: batcher.queue.clone(),
+        metrics: Arc::clone(&metrics),
+        shutdown: Arc::clone(&shutdown),
+        max_body: cfg.max_body,
+        request_timeout: cfg.request_timeout,
+        idle_timeout: cfg.idle_timeout,
+        health_body,
+    });
+
+    let (conn_tx, conn_rx) = sync_channel::<TcpStream>(cfg.conn_backlog.max(1));
+    let conn_rx = Arc::new(Mutex::new(conn_rx));
+    let mut worker_joins = Vec::with_capacity(cfg.workers);
+    for i in 0..cfg.workers {
+        let rx = Arc::clone(&conn_rx);
+        let ctx = Arc::clone(&ctx);
+        let j = std::thread::Builder::new()
+            .name(format!("bc-conn-{i}"))
+            .spawn(move || conn_worker(&rx, &ctx))
+            .context("spawn connection worker")?;
+        worker_joins.push(j);
+    }
+
+    let accept_shutdown = Arc::clone(&shutdown);
+    let accept_metrics = Arc::clone(&metrics);
+    let quiet = cfg.quiet;
+    let accept_join = std::thread::Builder::new()
+        .name("bc-accept".into())
+        .spawn(move || {
+            acceptor(&listener, conn_tx, &accept_shutdown, &accept_metrics);
+            // conn_tx is dropped by acceptor(): workers drain queued
+            // connections, finish in-flight requests, then exit
+            for j in worker_joins {
+                let _ = j.join();
+            }
+            // only now is it safe to drain + stop the batcher: no worker
+            // is left holding an unanswered row
+            let mut batcher = batcher;
+            batcher.stop();
+            if !quiet {
+                eprintln!("serve: drained and stopped");
+            }
+        })
+        .context("spawn acceptor")?;
+
+    Ok(Server { addr, shutdown, metrics, accept_join: Some(accept_join) })
+}
+
+fn health_json(mlp: &PackedMlp, cfg: &ServeConfig) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("ok".to_string(), Json::Bool(true));
+    m.insert("in_dim".to_string(), Json::Num(mlp.in_dim as f64));
+    m.insert("classes".to_string(), Json::Num(mlp.classes as f64));
+    m.insert("layers".to_string(), Json::Num(mlp.layers.len() as f64));
+    m.insert(
+        "weight_bytes".to_string(),
+        Json::Num(mlp.weight_memory_bytes() as f64),
+    );
+    m.insert("max_batch".to_string(), Json::Num(cfg.max_batch as f64));
+    m.insert(
+        "max_wait_us".to_string(),
+        Json::Num(cfg.max_wait.as_micros() as f64),
+    );
+    m.insert("queue_cap".to_string(), Json::Num(cfg.queue_cap as f64));
+    m.insert("workers".to_string(), Json::Num(cfg.workers as f64));
+    Json::Obj(m)
+}
+
+fn acceptor(
+    listener: &TcpListener,
+    conn_tx: std::sync::mpsc::SyncSender<TcpStream>,
+    shutdown: &AtomicBool,
+    metrics: &Metrics,
+) {
+    while !shutdown.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _peer)) => match conn_tx.try_send(stream) {
+                Ok(()) => {}
+                Err(TrySendError::Full(stream)) => {
+                    // every worker busy and the backlog full: shed load
+                    // here instead of queueing unbounded connections
+                    Metrics::bump(&metrics.overloads);
+                    let mut s = stream;
+                    let _ = s.set_nonblocking(false);
+                    let _ = http::write_response(
+                        &mut s,
+                        503,
+                        &http::error_body("overloaded: connection backlog full"),
+                        false,
+                    );
+                }
+                Err(TrySendError::Disconnected(_)) => break,
+            },
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(2)),
+        }
+    }
+    // dropping conn_tx wakes the workers out of recv()
+}
+
+fn conn_worker(rx: &Mutex<Receiver<TcpStream>>, ctx: &Ctx) {
+    loop {
+        // holding the lock only while waiting for the *next* connection;
+        // handling happens with the lock released
+        let stream = match rx.lock().unwrap().recv() {
+            Ok(s) => s,
+            Err(_) => return, // acceptor gone and backlog drained
+        };
+        handle_connection(stream, ctx);
+    }
+}
+
+fn handle_connection(stream: TcpStream, ctx: &Ctx) {
+    // accepted sockets may inherit the listener's nonblocking mode on
+    // some platforms — normalize, then use a short read timeout so idle
+    // keep-alive connections poll the shutdown flag
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
+    let mut reader = BufReader::new(stream);
+    let mut last_request = std::time::Instant::now();
+    loop {
+        match http::read_request(&mut reader, ctx.max_body, ctx.request_timeout) {
+            ReadOutcome::Idle => {
+                if ctx.shutdown.load(Ordering::Acquire) {
+                    return; // graceful: nothing in flight on this socket
+                }
+                // reap silent keep-alive sockets: each worker serves one
+                // connection at a time, so a client that connects and
+                // goes quiet would otherwise pin a worker forever and
+                // starve the backlog
+                if last_request.elapsed() >= ctx.idle_timeout {
+                    return;
+                }
+            }
+            ReadOutcome::Closed => return,
+            ReadOutcome::Bad(status, body) => {
+                Metrics::bump(&ctx.metrics.requests);
+                Metrics::bump(&ctx.metrics.bad_requests);
+                let _ = http::write_response(reader.get_mut(), status, &body, false);
+                return;
+            }
+            ReadOutcome::Request(req) => {
+                last_request = std::time::Instant::now();
+                let keep = req.keep_alive && !ctx.shutdown.load(Ordering::Acquire);
+                let (status, body) = route(ctx, &req);
+                if http::write_response(reader.get_mut(), status, &body, keep).is_err() {
+                    return;
+                }
+                if !keep {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+fn route(ctx: &Ctx, req: &Request) -> (u16, String) {
+    Metrics::bump(&ctx.metrics.requests);
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/predict") => predict(ctx, &req.body),
+        ("GET", "/healthz") => (200, ctx.health_body.clone()),
+        ("GET", "/stats") => (200, ctx.metrics.snapshot(ctx.queue.depth()).to_string()),
+        ("POST", "/shutdown") => {
+            ctx.shutdown.store(true, Ordering::Release);
+            let mut m = BTreeMap::new();
+            m.insert("ok".to_string(), Json::Bool(true));
+            m.insert("draining".to_string(), Json::Bool(true));
+            (200, Json::Obj(m).to_string())
+        }
+        _ => {
+            Metrics::bump(&ctx.metrics.not_found);
+            (
+                404,
+                http::error_body(&format!("no route {} {}", req.method, req.path)),
+            )
+        }
+    }
+}
+
+fn predict(ctx: &Ctx, body: &[u8]) -> (u16, String) {
+    let t = Timer::start();
+    let parsed = match parse_predict(ctx, body) {
+        Ok(x) => x,
+        Err(msg) => {
+            Metrics::bump(&ctx.metrics.bad_requests);
+            return (400, http::error_body(&msg));
+        }
+    };
+    let (reply_tx, reply_rx) = sync_channel(1);
+    if ctx.queue.submit(Job { x: parsed, reply: reply_tx }).is_err() {
+        Metrics::bump(&ctx.metrics.overloads);
+        return (503, http::error_body("overloaded: batch queue full"));
+    }
+    match reply_rx.recv_timeout(Duration::from_secs(30)) {
+        Ok(reply) => {
+            Metrics::bump(&ctx.metrics.predictions);
+            ctx.metrics.record_latency(t.elapsed_s());
+            let mut m = BTreeMap::new();
+            m.insert("pred".to_string(), Json::Num(reply.pred as f64));
+            m.insert("batch".to_string(), Json::Num(reply.batch_rows as f64));
+            m.insert(
+                "logits".to_string(),
+                Json::Arr(reply.logits.iter().map(|&v| Json::Num(v as f64)).collect()),
+            );
+            (200, Json::Obj(m).to_string())
+        }
+        Err(_) => (500, http::error_body("batcher unavailable")),
+    }
+}
+
+/// Validate a `/predict` body into one input row. Every failure is a
+/// client error (400) with an actionable message; the parser itself is
+/// depth/size-capped (`Json::parse_untrusted`) because these bytes come
+/// off the network.
+fn parse_predict(ctx: &Ctx, body: &[u8]) -> Result<Vec<f32>, String> {
+    let text =
+        std::str::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
+    let json = Json::parse_untrusted(text, ctx.max_body)?;
+    let xs = json
+        .get("x")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "body must be {\"x\": [..numbers..]}".to_string())?;
+    if xs.len() != ctx.mlp.in_dim {
+        return Err(format!(
+            "'x' must have {} features, got {}",
+            ctx.mlp.in_dim,
+            xs.len()
+        ));
+    }
+    let mut x = Vec::with_capacity(xs.len());
+    for (i, v) in xs.iter().enumerate() {
+        match v.as_f64() {
+            Some(f) if f.is_finite() => x.push(f as f32),
+            _ => return Err(format!("'x'[{i}] is not a finite number")),
+        }
+    }
+    Ok(x)
+}
+
+/// Process-wide shutdown signal latch for `bcrun serve` (SIGINT/SIGTERM
+/// on unix; a no-op installer elsewhere — `/shutdown` still works).
+pub mod signal {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static TRIGGERED: AtomicBool = AtomicBool::new(false);
+
+    pub fn triggered() -> bool {
+        TRIGGERED.load(Ordering::Acquire)
+    }
+
+    /// Test hook / manual trigger.
+    pub fn trigger() {
+        TRIGGERED.store(true, Ordering::Release);
+    }
+
+    /// Install handlers for SIGINT (2) and SIGTERM (15) that set the
+    /// latch. Uses the C `signal` symbol already linked through std —
+    /// the handler only stores to an atomic, which is async-signal-safe.
+    #[cfg(unix)]
+    pub fn install() {
+        extern "C" fn handler(_sig: i32) {
+            TRIGGERED.store(true, Ordering::Release);
+        }
+        extern "C" {
+            fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+        }
+        // SAFETY: registering an async-signal-safe handler (one relaxed
+        // atomic store, no allocation, no locks).
+        unsafe {
+            signal(2, handler);
+            signal(15, handler);
+        }
+    }
+
+    #[cfg(not(unix))]
+    pub fn install() {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn toy_mlp() -> PackedMlp {
+        let mut rng = Rng::new(40);
+        let w1: Vec<f32> = (0..6 * 70).map(|_| rng.normal()).collect();
+        let w2: Vec<f32> = (0..70 * 3).map(|_| rng.normal()).collect();
+        PackedMlp::build(
+            vec![(w1, 6, 70), (w2, 70, 3)],
+            vec![
+                Some((vec![1.0; 70], vec![0.0; 70], vec![0.1; 70], vec![1.0; 70])),
+                None,
+            ],
+            Some(vec![0.1, -0.1, 0.0]),
+        )
+    }
+
+    fn test_ctx(cfg: &ServeConfig) -> Ctx {
+        let mlp = Arc::new(toy_mlp());
+        let health_body = health_json(&mlp, cfg).to_string();
+        Ctx {
+            mlp,
+            queue: batcher::BatchQueue::bounded(cfg.queue_cap),
+            metrics: Arc::new(Metrics::new()),
+            shutdown: Arc::new(AtomicBool::new(false)),
+            max_body: cfg.max_body,
+            request_timeout: cfg.request_timeout,
+            idle_timeout: cfg.idle_timeout,
+            health_body,
+        }
+    }
+
+    #[test]
+    fn parse_predict_validates_shape_and_values() {
+        let cfg = ServeConfig::default();
+        let ctx = test_ctx(&cfg);
+        let ok = parse_predict(&ctx, br#"{"x":[1,2,3,4,5,6]}"#).unwrap();
+        assert_eq!(ok.len(), 6);
+        for bad in [
+            &b"not json"[..],
+            br#"{"y":[1]}"#,
+            br#"{"x":[1,2,3]}"#,
+            br#"{"x":[1,2,3,4,5,"s"]}"#,
+            br#"{"x":[1,2,3,4,5,1e999]}"#,
+            b"\xff\xfe",
+        ] {
+            assert!(parse_predict(&ctx, bad).is_err(), "{:?}", String::from_utf8_lossy(bad));
+        }
+    }
+
+    #[test]
+    fn health_json_reports_model_facts() {
+        let cfg = ServeConfig { max_batch: 32, ..Default::default() };
+        let ctx = test_ctx(&cfg);
+        let j = Json::parse(&ctx.health_body).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("in_dim").unwrap().as_usize(), Some(6));
+        assert_eq!(j.get("classes").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("max_batch").unwrap().as_usize(), Some(32));
+    }
+
+    #[test]
+    fn start_rejects_bad_configs() {
+        assert!(start(toy_mlp(), ServeConfig { max_batch: 0, ..Default::default() }).is_err());
+        assert!(start(toy_mlp(), ServeConfig { workers: 0, ..Default::default() }).is_err());
+        assert!(start(toy_mlp(), ServeConfig { queue_cap: 0, ..Default::default() }).is_err());
+    }
+}

@@ -1,9 +1,21 @@
 //! Minimal JSON substrate: parser + writer.
 //!
-//! Only what the repo needs — parsing `artifacts/manifest.json` and writing
-//! experiment records — implemented from scratch because no serde is
-//! available in the offline registry. Strict enough for machine-generated
-//! JSON; not a general-purpose validator.
+//! Only what the repo needs — parsing `artifacts/manifest.json`, writing
+//! experiment records, and (since the serving layer) decoding request
+//! bodies — implemented from scratch because no serde is available in
+//! the offline registry.
+//!
+//! Because `bcrun serve` feeds this parser bytes straight off the
+//! network, it is hardened against untrusted input:
+//!
+//! * nesting is capped at [`MAX_DEPTH`] (the recursive-descent parser
+//!   would otherwise stack-overflow on `[[[[...`);
+//! * numbers that overflow f64 (`1e999`) are parse errors, so a parsed
+//!   tree never holds non-finite values (and the writer emits `null`
+//!   for any non-finite number constructed programmatically, keeping
+//!   output valid JSON);
+//! * [`Json::parse_untrusted`] additionally caps the input size;
+//! * a mutilation property test pins "errors, never panics".
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -18,9 +30,14 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
+/// Deepest accepted array/object nesting — recursion is bounded by this,
+/// so adversarial `[[[[...` input errors out instead of overflowing the
+/// stack.
+pub const MAX_DEPTH: usize = 128;
+
 impl Json {
     pub fn parse(s: &str) -> Result<Json, String> {
-        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        let mut p = Parser { b: s.as_bytes(), i: 0, depth: 0 };
         p.ws();
         let v = p.value()?;
         p.ws();
@@ -28,6 +45,15 @@ impl Json {
             return Err(format!("trailing bytes at offset {}", p.i));
         }
         Ok(v)
+    }
+
+    /// [`Json::parse`] with an input-size cap in front — the entry point
+    /// for network-supplied bytes (the depth cap applies to every parse).
+    pub fn parse_untrusted(s: &str, max_bytes: usize) -> Result<Json, String> {
+        if s.len() > max_bytes {
+            return Err(format!("input of {} bytes exceeds cap {max_bytes}", s.len()));
+        }
+        Json::parse(s)
     }
 
     pub fn get(&self, key: &str) -> Option<&Json> {
@@ -95,7 +121,12 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Infinity literal; emit null so the
+                    // output always reparses (the parser never produces
+                    // non-finite numbers itself)
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{}", n);
@@ -149,6 +180,8 @@ fn write_escaped(out: &mut String, s: &str) {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    /// Current array/object nesting (bounded by [`MAX_DEPTH`]).
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -206,7 +239,11 @@ impl<'a> Parser<'a> {
             self.i += 1;
         }
         let s = std::str::from_utf8(&self.b[start..self.i]).map_err(|e| e.to_string())?;
-        s.parse::<f64>().map(Json::Num).map_err(|e| format!("bad number '{s}': {e}"))
+        let v: f64 = s.parse().map_err(|e| format!("bad number '{s}': {e}"))?;
+        if !v.is_finite() {
+            return Err(format!("number '{s}' overflows f64"));
+        }
+        Ok(Json::Num(v))
     }
 
     fn string(&mut self) -> Result<String, String> {
@@ -256,12 +293,22 @@ impl<'a> Parser<'a> {
         }
     }
 
+    fn enter(&mut self) -> Result<(), String> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(format!("nesting deeper than {MAX_DEPTH} at offset {}", self.i));
+        }
+        Ok(())
+    }
+
     fn array(&mut self) -> Result<Json, String> {
         self.expect(b'[')?;
+        self.enter()?;
         let mut v = vec![];
         self.ws();
         if self.peek() == Some(b']') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(v));
         }
         loop {
@@ -272,6 +319,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b']') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(v));
                 }
                 _ => return Err(format!("expected ',' or ']' at offset {}", self.i)),
@@ -281,10 +329,12 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Json, String> {
         self.expect(b'{')?;
+        self.enter()?;
         let mut m = BTreeMap::new();
         self.ws();
         if self.peek() == Some(b'}') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(m));
         }
         loop {
@@ -300,6 +350,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b'}') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(m));
                 }
                 _ => return Err(format!("expected ',' or '}}' at offset {}", self.i)),
@@ -350,6 +401,91 @@ mod tests {
     #[test]
     fn unicode_escape() {
         assert_eq!(Json::parse("\"\\u0041\"").unwrap(), Json::Str("A".into()));
+    }
+
+    #[test]
+    fn depth_is_capped_but_reasonable_nesting_parses() {
+        // 100 deep: fine
+        let ok = format!("{}1{}", "[".repeat(100), "]".repeat(100));
+        assert!(Json::parse(&ok).is_ok());
+        // 100k deep: must be a clean error, not a stack overflow
+        let deep_arr = "[".repeat(100_000);
+        let err = Json::parse(&deep_arr).unwrap_err();
+        assert!(err.contains("nesting"), "{err}");
+        let deep_obj = "{\"a\":".repeat(100_000);
+        let err = Json::parse(&deep_obj).unwrap_err();
+        assert!(err.contains("nesting"), "{err}");
+    }
+
+    #[test]
+    fn untrusted_parse_caps_input_size() {
+        assert!(Json::parse_untrusted("[1,2,3]", 1024).is_ok());
+        let err = Json::parse_untrusted("[1,2,3]", 3).unwrap_err();
+        assert!(err.contains("exceeds cap"), "{err}");
+    }
+
+    #[test]
+    fn overflowing_numbers_are_errors_and_nonfinite_writes_null() {
+        // the parser never produces non-finite numbers...
+        assert!(Json::parse("1e999").unwrap_err().contains("overflows"));
+        assert!(Json::parse("-1e999").is_err());
+        // ...and programmatic non-finite numbers serialize as null, so
+        // writer output always reparses
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let s = Json::Arr(vec![Json::Num(v)]).to_string();
+            assert_eq!(s, "[null]");
+            assert!(Json::parse(&s).is_ok());
+        }
+    }
+
+    #[test]
+    fn parse_never_panics_on_mutilated_input_and_roundtrips_when_ok() {
+        // fuzz-style: truncate / flip / insert bytes over valid docs (the
+        // server feeds this parser raw network bytes). The property: the
+        // parser returns, and anything it accepts reserializes to
+        // something it accepts again, equal to the first parse.
+        use crate::prop;
+        let bases: [&str; 5] = [
+            r#"{"x":[1.5,-2,3e4],"s":"a\nb\u0041c","n":null,"t":[true,false]}"#,
+            r#"[[[[1],2],"\u12zq"],{},{"k":{"v":[-0.0,1e-3]}}]"#,
+            r#"{"a":{"b":[1,2,{"c":"d e f"}],"q":"\\\"\t"}}"#,
+            "-1.25e-3",
+            r#""lone string with \u0000 and tail""#,
+        ];
+        let interesting: &[u8] = b"\"\\{}[]:,0123456789eE+-.utrfn celsn\x00\x1f\x7f\xff";
+        prop::check(
+            "json parse is total on mutilated input",
+            |rng| {
+                let mut bytes = bases[rng.below(bases.len())].as_bytes().to_vec();
+                for _ in 0..1 + rng.below(8) {
+                    if bytes.is_empty() {
+                        break;
+                    }
+                    match rng.below(3) {
+                        0 => bytes.truncate(rng.below(bytes.len() + 1)),
+                        1 => {
+                            let at = rng.below(bytes.len());
+                            bytes[at] = interesting[rng.below(interesting.len())];
+                        }
+                        _ => {
+                            let at = rng.below(bytes.len() + 1);
+                            bytes.insert(at, interesting[rng.below(interesting.len())]);
+                        }
+                    }
+                }
+                String::from_utf8_lossy(&bytes).into_owned()
+            },
+            |s| {
+                if let Ok(v) = Json::parse(s) {
+                    let again = Json::parse(&v.to_string())
+                        .map_err(|e| format!("reserialized form failed to parse: {e}"))?;
+                    if again != v {
+                        return Err("reserialize/reparse changed the value".into());
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

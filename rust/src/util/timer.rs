@@ -59,6 +59,12 @@ impl LatencyStats {
         s[idx.min(s.len() - 1)]
     }
 
+    /// Fold another accumulator's samples into this one (the load
+    /// generator merges per-thread recorders into one report).
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.samples.extend_from_slice(&other.samples);
+    }
+
     pub fn min(&self) -> f64 {
         self.samples.iter().copied().fold(f64::INFINITY, f64::min)
     }
@@ -98,6 +104,19 @@ mod tests {
         // percentiles stay meaningful
         assert_eq!(s.percentile(0.0), 1.0);
         assert_eq!(s.percentile(33.0), 2.0);
+    }
+
+    #[test]
+    fn merge_combines_sample_sets() {
+        let mut a = LatencyStats::default();
+        let mut b = LatencyStats::default();
+        a.record(1.0);
+        b.record(3.0);
+        b.record(2.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.percentile(100.0), 3.0);
+        assert_eq!(a.min(), 1.0);
     }
 
     #[test]

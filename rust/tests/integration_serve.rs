@@ -1,0 +1,278 @@
+//! Integration: the serving layer end to end, over real sockets.
+//!
+//! The headline property (ISSUE 5 acceptance): a request served solo and
+//! the same request served inside a coalesced batch return bit-identical
+//! predictions *through the HTTP layer* — JSON encode/decode included.
+//! This holds because every batched forward takes the lane-batched packed
+//! kernel (order per output element is batch-size invariant) and because
+//! f32 -> shortest-repr decimal -> f64 -> f32 is lossless.
+
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use binaryconnect::binary::packed::PackedMlp;
+use binaryconnect::serve::loadgen::{predict_body, HttpClient};
+use binaryconnect::serve::{self, ServeConfig};
+use binaryconnect::util::{Json, Rng};
+
+fn toy_mlp(seed: u64) -> PackedMlp {
+    let mut rng = Rng::new(seed);
+    let mut mat = |k: usize, n: usize| -> (Vec<f32>, usize, usize) {
+        ((0..k * n).map(|_| rng.normal()).collect(), k, n)
+    };
+    let (w1, w2, w3) = (mat(12, 70), mat(70, 33), mat(33, 4));
+    let mut bn = |n: usize| -> Option<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+        Some((
+            (0..n).map(|_| 1.0 + 0.05 * rng.normal()).collect(),
+            (0..n).map(|_| 0.05 * rng.normal()).collect(),
+            (0..n).map(|_| 0.1 * rng.normal()).collect(),
+            (0..n).map(|_| (1.0 + 0.1 * rng.normal()).abs()).collect(),
+        ))
+    };
+    let (bn1, bn2) = (bn(70), bn(33));
+    PackedMlp::build(
+        vec![w1, w2, w3],
+        vec![bn1, bn2, None],
+        Some(vec![0.02, -0.02, 0.0, 0.01]),
+    )
+}
+
+fn rows(n: usize, dim: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| (0..dim).map(|_| rng.normal()).collect()).collect()
+}
+
+fn predict(client: &mut HttpClient, row: &[f32]) -> (u16, String) {
+    let mut body = String::new();
+    predict_body(&mut body, row);
+    client.request("POST", "/predict", Some(&body)).unwrap()
+}
+
+/// Parse a 200 /predict body into (pred, logit bit patterns).
+fn decode(body: &str) -> (usize, Vec<u64>) {
+    let j = Json::parse(body).unwrap();
+    let pred = j.get("pred").unwrap().as_usize().unwrap();
+    let logits: Vec<u64> = j
+        .get("logits")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap().to_bits())
+        .collect();
+    (pred, logits)
+}
+
+#[test]
+fn solo_and_coalesced_predictions_are_bit_identical_over_http() {
+    let n = 24;
+    let xs = rows(n, 12, 500);
+
+    // pass 1: a server that cannot coalesce (max_batch 1), sequential
+    let mut server = serve::start(
+        toy_mlp(77),
+        ServeConfig { max_batch: 1, max_wait: Duration::ZERO, ..Default::default() },
+    )
+    .unwrap();
+    let host = server.addr().to_string();
+    let mut client = HttpClient::connect(&host).unwrap();
+    let solo: Vec<(usize, Vec<u64>)> = xs
+        .iter()
+        .map(|x| {
+            let (status, body) = predict(&mut client, x);
+            assert_eq!(status, 200, "{body}");
+            decode(&body)
+        })
+        .collect();
+    drop(client);
+    server.stop();
+
+    // pass 2: a coalescing server hit by n concurrent clients
+    let mut server = serve::start(
+        toy_mlp(77),
+        ServeConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(20),
+            workers: n,
+            conn_backlog: 2 * n,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let host = server.addr().to_string();
+    let barrier = Arc::new(Barrier::new(n));
+    let joins: Vec<_> = xs
+        .iter()
+        .map(|x| {
+            let host = host.clone();
+            let x = x.clone();
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let mut client = HttpClient::connect(&host).unwrap();
+                barrier.wait();
+                let (status, body) = predict(&mut client, &x);
+                assert_eq!(status, 200, "{body}");
+                let j = Json::parse(&body).unwrap();
+                let batch = j.get("batch").unwrap().as_usize().unwrap();
+                (decode(&body), batch)
+            })
+        })
+        .collect();
+    let mut coalesced = Vec::with_capacity(n);
+    let mut batch_sizes = Vec::with_capacity(n);
+    for j in joins {
+        let (d, b) = j.join().unwrap();
+        coalesced.push(d);
+        batch_sizes.push(b);
+    }
+    let snap = server.metrics().snapshot(0);
+    server.stop();
+
+    for (i, (s, c)) in solo.iter().zip(&coalesced).enumerate() {
+        assert_eq!(s, c, "row {i}: solo and coalesced responses differ at the bit level");
+    }
+    // all rows were served, in strictly fewer forwards than rows would
+    // take uncoalesced is not guaranteed by timing — but every reply
+    // reports a plausible batch size and the server accounted every row
+    assert!(batch_sizes.iter().all(|&b| (1..=32).contains(&b)));
+    assert_eq!(snap.get("rows").unwrap().as_usize(), Some(n));
+    assert_eq!(snap.get("predictions").unwrap().as_usize(), Some(n));
+}
+
+#[test]
+fn healthz_stats_errors_and_shutdown_endpoint() {
+    let mut server = serve::start(
+        toy_mlp(88),
+        ServeConfig { max_batch: 8, max_wait: Duration::from_micros(100), ..Default::default() },
+    )
+    .unwrap();
+    let host = server.addr().to_string();
+    let mut client = HttpClient::connect(&host).unwrap();
+
+    // healthz reports the model facts
+    let (status, body) = client.request("GET", "/healthz", None).unwrap();
+    assert_eq!(status, 200);
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(j.get("in_dim").unwrap().as_usize(), Some(12));
+    assert_eq!(j.get("classes").unwrap().as_usize(), Some(4));
+
+    // a good prediction
+    let x = rows(1, 12, 600).remove(0);
+    let (status, body) = predict(&mut client, &x);
+    assert_eq!(status, 200, "{body}");
+    let (pred, logits) = decode(&body);
+    assert!(pred < 4);
+    assert_eq!(logits.len(), 4);
+
+    // client errors: wrong shape, bad json, bad route, bad method
+    let (status, _) = client
+        .request("POST", "/predict", Some(r#"{"x":[1,2,3]}"#))
+        .unwrap();
+    assert_eq!(status, 400);
+    let (status, _) = client.request("POST", "/predict", Some("not json")).unwrap();
+    assert_eq!(status, 400);
+    let (status, _) = client.request("GET", "/nope", None).unwrap();
+    assert_eq!(status, 404);
+    let (status, _) = client.request("GET", "/predict", None).unwrap();
+    assert_eq!(status, 404);
+
+    // stats reflect the traffic so far
+    let (status, body) = client.request("GET", "/stats", None).unwrap();
+    assert_eq!(status, 200);
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("predictions").unwrap().as_usize(), Some(1));
+    assert_eq!(j.get("bad_requests").unwrap().as_usize(), Some(2));
+    assert_eq!(j.get("not_found").unwrap().as_usize(), Some(2));
+    assert!(j.get("latency_p99_us").unwrap().as_f64().unwrap() >= 0.0);
+
+    // graceful shutdown over HTTP: the server acknowledges, drains and
+    // stop() returns; afterwards new connections are refused eventually
+    let (status, body) = client.request("POST", "/shutdown", None).unwrap();
+    assert_eq!(status, 200, "{body}");
+    assert!(server.is_shutdown());
+    server.stop();
+    // the listener is gone: a fresh connect + request must fail
+    let refused = match HttpClient::connect(&host) {
+        Err(_) => true,
+        Ok(mut c) => c.request("GET", "/healthz", None).is_err(),
+    };
+    assert!(refused, "server still answering after drained shutdown");
+}
+
+#[test]
+fn overload_answers_503_and_recovers() {
+    // queue_cap 2 with a long batching window (max_batch 8 keeps the
+    // batcher waiting for more rows): two rows park in the queue, the
+    // third submit must be shed with 503
+    let mut server = serve::start(
+        toy_mlp(99),
+        ServeConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(400),
+            queue_cap: 2,
+            workers: 4,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let host = server.addr().to_string();
+    let xs = rows(3, 12, 700);
+
+    // park two requests inside the batching window
+    let blocked: Vec<_> = xs[..2]
+        .iter()
+        .map(|x| {
+            let host = host.clone();
+            let x = x.clone();
+            std::thread::spawn(move || {
+                let mut c = HttpClient::connect(&host).unwrap();
+                predict(&mut c, &x).0
+            })
+        })
+        .collect();
+    // wait until both rows are parked in the queue (observable via
+    // /stats) before overflowing it; on a pathologically slow run they
+    // may already have been answered, which degrades the assertion to
+    // "200 or 503, never a hang or another 5xx"
+    let mut c = HttpClient::connect(&host).unwrap();
+    for _ in 0..200 {
+        let (_, body) = c.request("GET", "/stats", None).unwrap();
+        let j = Json::parse(&body).unwrap();
+        let depth = j.get("queue_depth").unwrap().as_usize().unwrap();
+        let preds = j.get("predictions").unwrap().as_usize().unwrap();
+        if depth >= 2 || preds >= 2 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let (status, body) = predict(&mut c, &xs[2]);
+    assert!(
+        status == 503 || status == 200,
+        "expected shed (503) or served (200), got {status}: {body}"
+    );
+    for j in blocked {
+        assert_eq!(j.join().unwrap(), 200);
+    }
+    // after the window clears, the same request succeeds: overload is
+    // transient by contract
+    let (status, _) = predict(&mut c, &xs[2]);
+    assert_eq!(status, 200);
+    server.stop();
+}
+
+#[test]
+fn many_sequential_requests_on_one_connection_reuse_it() {
+    // keep-alive: 50 round trips over a single connection
+    let mut server = serve::start(toy_mlp(111), ServeConfig::default()).unwrap();
+    let host = server.addr().to_string();
+    let mut client = HttpClient::connect(&host).unwrap();
+    let xs = rows(50, 12, 800);
+    for x in &xs {
+        let (status, _) = predict(&mut client, x);
+        assert_eq!(status, 200);
+    }
+    let snap = server.metrics().snapshot(0);
+    server.stop();
+    assert_eq!(snap.get("predictions").unwrap().as_usize(), Some(50));
+}
