@@ -11,6 +11,11 @@
 //!     (`gemm_avx2`, `packed_avx2`, `train_fast_avx2`, ... series), with
 //!     `*_speedup_vs_scalar` metrics — the dispatch layer's win isolated
 //!     from blocking/threading
+//!   * the panel-vs-strip ladder: the PR-6 pack-once register-tiled
+//!     kernels (`gemm_panel_{isa}`, `packed_panel_{isa}` series) against
+//!     the retained strip baselines, with `panel_speedup_vs_strip`
+//!     metrics on the mlp1024 train GEMM shape and the packed b=100
+//!     batch shape
 //!
 //! Run: cargo bench --bench perf_gemm [-- --iters N] [--json BENCH_perf.json]
 //!
@@ -286,6 +291,72 @@ fn main() -> Result<()> {
     t3.print();
     println!("(gemm series is single-threaded to isolate the ISA; packed/train ride the pool.");
     println!(" acceptance: gemm_avx2 >= 2x scalar, packed SIMD >= 1.5x scalar)");
+
+    // ---------- panel vs strip: the PR-6 microkernel ladder ----------
+    // Same shapes the dispatch ladder tracks: the mlp1024 train forward
+    // GEMM (100 x 1024 x 1024, single-threaded to isolate the kernel)
+    // and the packed batch-100 forward. Strip = the pre-panel 4-row
+    // kernels, kept exactly for this baseline.
+    println!("\npanel vs strip kernels (pack-once register tiles vs 4-row strips, 1T):");
+    let mut t4 = Table::new(&[
+        "isa",
+        "gemm strip",
+        "gemm panel",
+        "panel x",
+        "packed strip",
+        "packed panel",
+        "panel x",
+    ]);
+    for &isa in ALL_ISAS.iter().rev() {
+        if !isa.supported() {
+            continue;
+        }
+        simd::set_active(isa).map_err(Error::msg)?;
+        let name = isa.name();
+        let gshape = format!("{k}x{n} b={m} 1T");
+        let pshape = format!("{k}x{n} b={b100}");
+        let rgs = bench(&format!("gemm_strip_{name}"), 2, iters, || {
+            kernel::gemm_strip(&a, &bmat, m, k, n, &mut c);
+            std::hint::black_box(&c);
+        });
+        let rgp = bench(&format!("gemm_panel_{name}"), 2, iters, || {
+            kernel::gemm_serial(&a, &bmat, m, k, n, &mut c);
+            std::hint::black_box(&c);
+        });
+        let rps = bench(&format!("packed_strip_{name}"), 2, iters, || {
+            bm.matmul_scaled_into_strip(&x, b100, 1.0, &mut y, &mut xt, &mut totals);
+            std::hint::black_box(&y);
+        });
+        let rpp = bench(&format!("packed_panel_{name}"), 2, iters, || {
+            bm.matmul_scaled_into(&x, b100, 1.0, &mut y, &mut xt, &mut totals);
+            std::hint::black_box(&y);
+        });
+        report.add(&rgs, &gshape);
+        report.add(&rgp, &gshape);
+        report.add(&rps, &pshape);
+        report.add(&rpp, &pshape);
+        let gx = rgs.mean_s / rgp.mean_s;
+        let px = rps.mean_s / rpp.mean_s;
+        report.metric(&format!("gemm_panel_speedup_vs_strip_{name}"), gx);
+        report.metric(&format!("packed_panel_speedup_vs_strip_{name}"), px);
+        if isa == selected {
+            // the headline acceptance metric rides the dispatched rung
+            report.metric("panel_speedup_vs_strip", gx);
+            report.metric("packed_panel_speedup_vs_strip", px);
+        }
+        t4.row(&[
+            name.to_string(),
+            fmt_time(rgs.mean_s),
+            fmt_time(rgp.mean_s),
+            format!("{gx:.2}x"),
+            fmt_time(rps.mean_s),
+            fmt_time(rpp.mean_s),
+            format!("{px:.2}x"),
+        ]);
+    }
+    simd::set_active(selected).map_err(Error::msg)?;
+    t4.print();
+    println!("(acceptance: panel >= 1.0x strip everywhere, >= 1.2x on the avx2 gemm)");
 
     if let Some(path) = args.opt_str("json") {
         report.save("perf_gemm", std::path::Path::new(&path))?;

@@ -15,16 +15,32 @@
 //! SIMD lanes map one-to-one onto batch columns (each decoded weight bit
 //! adds a contiguous activation stripe 8-at-a-time on AVX2, with the
 //! steady-state 64-column chunk held in registers), so every rung is
-//! **bit-exact** with the scalar path. The batch-1 forward instead lets
-//! each 64-bit sign word drive sign-flips of eight activation lanes at a
-//! time (XOR with a mask expanded from the bits) — same math, different
-//! association, property-tested against scalar within a 1e-5-scale bound.
-//! The `*_isa` variants pin an explicit rung for tests and benches.
+//! **bit-exact** with the scalar path. The batched forward is
+//! *panelized* like the f32 GEMM trio: [`COL_PANEL`] output columns
+//! share each [`PK_WORDS`]-word sweep of the packed bits, reusing the
+//! hot window of per-bit activation stripes across the panel — a pure
+//! re-tiling that leaves every per-element add order (and therefore
+//! every bit of output) unchanged; the pre-panel loop survives as
+//! [`BitMatrix::matmul_scaled_into_strip`], the `panel_speedup_vs_strip`
+//! baseline. The batch-1 forward instead lets each 64-bit sign word
+//! drive sign-flips of eight activation lanes at a time (XOR with a mask
+//! expanded from the bits) — same math, different association,
+//! property-tested against scalar within a 1e-5-scale bound. The `*_isa`
+//! variants pin an explicit rung for tests and benches.
 
 use crate::data::Dataset;
 use crate::kernel::simd::{self, Isa, Kernels};
 use crate::util::pool::{global as pool_global, par_rows, SendPtr};
 use crate::util::Rng;
+
+/// Output columns processed together by the panelized batched forward:
+/// one word-block of the packed weights is decoded against all columns
+/// of the panel while its activation stripes are cache-hot.
+const COL_PANEL: usize = 8;
+/// Packed words (64 input rows each) per panel sweep step. Amortizes the
+/// per-call accumulator-strip load/store (eight ymm registers on AVX2)
+/// over 256 input rows while keeping the live stripe window L1/L2-sized.
+const PK_WORDS: usize = 4;
 
 /// Sign bits of a (k x n) weight matrix, packed along k, one bit-column
 /// per output unit: bit=1 means weight +1, bit=0 means -1.
@@ -257,6 +273,42 @@ impl BitMatrix {
         });
     }
 
+    /// Shared prologue of the batched kernels: transpose x to k-major
+    /// (k x b) stripes — one pass, reused by every column — and compute
+    /// the per-row totals (the "- sum_k x_k" term), still
+    /// multiplication-free.
+    fn batched_prologue<'s>(
+        &self,
+        x: &[f32],
+        b: usize,
+        xt: &'s mut [f32],
+        totals: &'s mut [f32],
+    ) -> (&'s [f32], &'s [f32]) {
+        let k = self.k;
+        assert!(xt.len() >= k * b, "xt scratch too small");
+        assert!(totals.len() >= b, "totals scratch too small");
+        let xt = &mut xt[..k * b];
+        for (bi, xrow) in x.chunks_exact(k).enumerate() {
+            for (ki, &v) in xrow.iter().enumerate() {
+                xt[ki * b + bi] = v;
+            }
+        }
+        let totals = &mut totals[..b];
+        for (t, xrow) in totals.iter_mut().zip(x.chunks_exact(k)) {
+            *t = xrow.iter().sum();
+        }
+        (xt, totals)
+    }
+
+    /// The panelized batched forward: [`COL_PANEL`] output columns share
+    /// each [`PK_WORDS`]-word sweep of the packed bits, so the activation
+    /// stripes of those 256 input rows are read once per panel while hot
+    /// instead of once per column. Bit-exact with the pre-panel strip
+    /// kernel on every ISA: `sign_accum` *accumulates* into the carried
+    /// strip and word blocks ascend, so each output element sees the
+    /// identical per-lane add sequence — which also preserves the serving
+    /// layer's solo ≡ coalesced contract (per-column order never depends
+    /// on b, the chunk split, or the panel).
     #[allow(clippy::too_many_arguments)]
     fn matmul_batched_scaled(
         &self,
@@ -268,36 +320,103 @@ impl BitMatrix {
         xt: &mut [f32],
         totals: &mut [f32],
     ) {
-        let k = self.k;
         let n = self.n;
         let wpc = self.words_per_col;
-        assert!(xt.len() >= k * b, "xt scratch too small");
-        assert!(totals.len() >= b, "totals scratch too small");
-        // transpose x to k-major (k x b): one pass, reused by every column
-        let xt = &mut xt[..k * b];
-        for (bi, xrow) in x.chunks_exact(k).enumerate() {
-            for (ki, &v) in xrow.iter().enumerate() {
-                xt[ki * b + bi] = v;
-            }
-        }
-        // per-row totals (the "- sum_k x_k" term), still multiplication-free
-        let totals = &mut totals[..b];
-        for (t, xrow) in totals.iter_mut().zip(x.chunks_exact(k)) {
-            *t = xrow.iter().sum();
-        }
-        let xt: &[f32] = xt;
-        let totals: &[f32] = totals;
+        let (xt, totals) = self.batched_prologue(x, b, xt, totals);
         let words = &self.words;
         let yp = SendPtr(y.as_mut_ptr());
-        // per-ISA batch chunk: 64 keeps the whole strip in eight ymm
-        // registers on AVX2; scalar/SSE2 use 128 to halve the per-column
-        // bit-decode passes. Chunking cannot change results — SIMD lanes
-        // are batch columns, so every rung accumulates each column in the
-        // same order: bit-exact across ISAs and chunk widths.
+        // per-ISA batch chunk: 64 keeps a whole strip in eight ymm
+        // registers on AVX2; scalar/SSE2/NEON use 128 to halve the
+        // per-column bit-decode passes. Chunking cannot change results —
+        // SIMD lanes are batch columns, so every rung accumulates each
+        // column in the same order: bit-exact across ISAs, chunk widths
+        // and panel splits.
         let chunk = kern.sel_chunk.clamp(1, simd::SEL_CHUNK_MAX);
         par_rows(n, self.col_grain(b), &|jlo, jhi| {
-            // selected-sum stripes, batch chunked so `sel` lives on the
-            // stack (keeps the training step allocation-free)
+            // one selected-sum strip per panel column, on the stack
+            // (keeps the training step allocation-free)
+            let mut sel = [0f32; COL_PANEL * simd::SEL_CHUNK_MAX];
+            let mut jp = jlo;
+            while jp < jhi {
+                let jpe = (jp + COL_PANEL).min(jhi);
+                let cols = jpe - jp;
+                let mut c0 = 0usize;
+                while c0 < b {
+                    let ce = (c0 + chunk).min(b);
+                    let cw = ce - c0;
+                    let strips = &mut sel[..cols * cw];
+                    strips.fill(0.0);
+                    let mut w0 = 0usize;
+                    while w0 < wpc {
+                        let w1 = (w0 + PK_WORDS).min(wpc);
+                        for (pi, strip) in strips.chunks_exact_mut(cw).enumerate() {
+                            let j = jp + pi;
+                            let col = &words[j * wpc + w0..j * wpc + w1];
+                            // the sub-column's bits address xt rows
+                            // relative to w0*64, so offset the stripe base
+                            (kern.sign_accum)(col, &xt[w0 * 64 * b..], b, c0, strip);
+                        }
+                        w0 = w1;
+                    }
+                    for (pi, strip) in strips.chunks_exact(cw).enumerate() {
+                        let j = jp + pi;
+                        for (bi, &s) in (c0..ce).zip(strip.iter()) {
+                            // SAFETY: element (bi, j) is written by exactly
+                            // one thread (columns are partitioned).
+                            unsafe { yp.write(bi * n + j, scale * (2.0 * s - totals[bi])) };
+                        }
+                    }
+                    c0 = ce;
+                }
+                jp = jpe;
+            }
+        });
+    }
+
+    /// [`BitMatrix::matmul_scaled_into`] through the pre-panel kernels
+    /// (one full-column bit sweep per column-chunk). Perf baseline for
+    /// `perf_gemm`'s `packed_panel_*` series; bit-exact with the panel
+    /// path for b > 1 and identical to `matmul_scaled_into` at b == 1.
+    pub fn matmul_scaled_into_strip(
+        &self,
+        x: &[f32],
+        b: usize,
+        scale: f32,
+        y: &mut [f32],
+        xt: &mut [f32],
+        totals: &mut [f32],
+    ) {
+        assert_eq!(x.len(), b * self.k);
+        assert_eq!(y.len(), b * self.n);
+        let kern = simd::kernels();
+        if b == 1 {
+            self.matmul_single_scaled(kern, x, scale, y);
+        } else {
+            self.matmul_batched_strip(kern, x, b, scale, y, xt, totals);
+        }
+    }
+
+    /// The pre-panel batched loop, preserved verbatim as the
+    /// `panel_speedup_vs_strip` baseline and a bit-exactness oracle for
+    /// the panel path.
+    #[allow(clippy::too_many_arguments)]
+    fn matmul_batched_strip(
+        &self,
+        kern: &'static Kernels,
+        x: &[f32],
+        b: usize,
+        scale: f32,
+        y: &mut [f32],
+        xt: &mut [f32],
+        totals: &mut [f32],
+    ) {
+        let n = self.n;
+        let wpc = self.words_per_col;
+        let (xt, totals) = self.batched_prologue(x, b, xt, totals);
+        let words = &self.words;
+        let yp = SendPtr(y.as_mut_ptr());
+        let chunk = kern.sel_chunk.clamp(1, simd::SEL_CHUNK_MAX);
+        par_rows(n, self.col_grain(b), &|jlo, jhi| {
             let mut sel = [0f32; simd::SEL_CHUNK_MAX];
             for j in jlo..jhi {
                 let col = &words[j * wpc..(j + 1) * wpc];
@@ -395,6 +514,12 @@ impl BitMatrix {
             let g = if k * n * b < (1 << 16) { k } else { k.div_ceil(t * 2) };
             g.div_ceil(64).max(1) * 64
         };
+        // word-block tile: keep the acc sub-block being scattered into
+        // ~L1-sized (64/b words ≈ 16 KiB of acc rows) while streaming all
+        // n columns over it. For each acc row the adds still arrive in
+        // j-ascending order (a row's word lives in exactly one block), so
+        // the tiling never changes a single bit.
+        let twb = (64 / b.max(1)).max(1);
         par_rows(k, grain, &|ilo, ihi| {
             // SAFETY: disjoint input-row ranges of acc; 64-aligned blocks
             // mean each bit-word belongs to exactly one range (bits at or
@@ -403,24 +528,29 @@ impl BitMatrix {
             arows.fill(0.0);
             let w0 = ilo / 64;
             let w1 = ihi.div_ceil(64);
-            for j in 0..n {
-                let col = &words[j * wpc..(j + 1) * wpc];
-                let stripe = &dzt[j * b..(j + 1) * b];
-                for wi in w0..w1 {
-                    let mut m = col[wi];
-                    if m == 0 {
-                        continue;
-                    }
-                    let base = wi * 64;
-                    while m != 0 {
-                        let t = m.trailing_zeros() as usize;
-                        let i = base + t;
-                        let arow = &mut arows[(i - ilo) * b..(i - ilo + 1) * b];
-                        // lanes are batch columns: bit-exact on every ISA
-                        (kern.add)(arow, stripe);
-                        m &= m - 1;
+            let mut wb = w0;
+            while wb < w1 {
+                let wbe = (wb + twb).min(w1);
+                for j in 0..n {
+                    let col = &words[j * wpc..(j + 1) * wpc];
+                    let stripe = &dzt[j * b..(j + 1) * b];
+                    for wi in wb..wbe {
+                        let mut m = col[wi];
+                        if m == 0 {
+                            continue;
+                        }
+                        let base = wi * 64;
+                        while m != 0 {
+                            let t = m.trailing_zeros() as usize;
+                            let i = base + t;
+                            let arow = &mut arows[(i - ilo) * b..(i - ilo + 1) * b];
+                            // lanes are batch columns: bit-exact on every ISA
+                            (kern.add)(arow, stripe);
+                            m &= m - 1;
+                        }
                     }
                 }
+                wb = wbe;
             }
         });
         // dx[t, i] = scale * (2 * acc[i, t] - totals[t])
@@ -805,6 +935,33 @@ mod tests {
                 let want = if rng2.uniform() < p { 1.0 } else { -1.0 };
                 assert_eq!(bm.sign(row, col), want, "at ({row},{col})");
             }
+        }
+    }
+
+    #[test]
+    fn panel_forward_bit_exact_vs_strip() {
+        // the panelized batched forward is a pure re-tiling of the strip
+        // loop: identical per-element add order, so identical bits —
+        // across ragged column counts (panel edges), word-boundary k, and
+        // batch sizes straddling the sel_chunk width
+        for (b, k, n, seed) in [
+            (2usize, 70, 7, 300u64), // n < COL_PANEL: one ragged panel
+            (5, 64, 8, 301),         // exact word and panel boundaries
+            (64, 130, 19, 302),      // two panels + ragged tail
+            (129, 257, 33, 303),     // b > sel_chunk on every ISA
+        ] {
+            let w = rand_mat(k, n, seed);
+            let x = rand_mat(b, k, seed + 10);
+            let bm = BitMatrix::pack(&w, k, n);
+            let mut xt = vec![0f32; k * b];
+            let mut totals = vec![0f32; b];
+            let mut y_panel = vec![0f32; b * n];
+            bm.matmul_scaled_into_batched(&x, b, 0.7, &mut y_panel, &mut xt, &mut totals);
+            let mut y_strip = vec![0f32; b * n];
+            bm.matmul_scaled_into_strip(&x, b, 0.7, &mut y_strip, &mut xt, &mut totals);
+            let pb: Vec<u32> = y_panel.iter().map(|v| v.to_bits()).collect();
+            let sb: Vec<u32> = y_strip.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(pb, sb, "panel vs strip must be bit-identical (b={b} k={k} n={n})");
         }
     }
 

@@ -1,45 +1,282 @@
-//! Blocked f32 GEMM kernels (C = A·B, A^T·B, A·B^T).
+//! Panel-packed f32 GEMM (C = A·B, A^T·B, A·B^T).
 //!
-//! Layout is row-major throughout. The blocked kernels tile k and n so the
-//! streamed B panel stays cache-resident across output rows, process four
-//! output rows per pass to amortize that panel traffic, and keep the
-//! seed's zero-skip (activations are ~half zeros after ReLU/dropout, so
-//! skipping a zero A value skips a whole vector row update). Parallelism
-//! is over disjoint output-row blocks via `util::pool::par_rows`; a row is
-//! never split across threads and its (k-tile, n-tile) reduction order is
-//! fixed, so results are identical for any thread count.
+//! Layout is row-major throughout. All three transposition variants are
+//! one algorithm now: pack the (possibly strided) LHS into mr-row panels
+//! and the RHS into nr-column panels ([`super::pack`]), then run a
+//! k-blocked loop nest that calls the active ISA's register-tiled
+//! `mr x nr` panel microkernel ([`super::simd::PanelFn`]) over contiguous
+//! packed memory. A transposed operand is just a different stride pair
+//! handed to the packer, so ragged edges (m, n not multiples of mr/nr)
+//! are handled in exactly one place: packing zero-pads the last panel,
+//! the microkernel always computes a full tile, and the driver merges
+//! partial tiles through a stack scratch.
 //!
-//! The innermost loops (the 4-row axpy strip, the single-row axpy, the
-//! A·B^T dot) go through the runtime-dispatched microkernel table in
-//! [`super::simd`]: AVX2+FMA or SSE2 on x86_64, the original scalar loops
-//! everywhere else (and under `BCRUN_SIMD=scalar`). Pooled and serial
-//! variants fetch the same table, so their bit-for-bit equality survives
-//! dispatch; the `*_with` variants pin an explicit ISA for tests and the
-//! `perf_gemm` dispatch-ladder series.
+//! Parallelism is over disjoint mr-row output panels via
+//! `util::pool::par_rows` (packing itself is parallelized over panel
+//! ranges the same way). For any one output element the k-blocks arrive
+//! in ascending order and each block is a single fixed-order microkernel
+//! call, so results are bit-identical for any thread count — pooled,
+//! serial, and `*_with`-pinned variants agree exactly, as before.
+//!
+//! The pre-panel 4-row strip kernels survive as the `*_strip` serial
+//! entry points: they are the perf baseline `perf_gemm`'s
+//! `panel_speedup_vs_strip` series measures against, and a second oracle
+//! for the property tests. The seed's `*_naive` loops remain the
+//! correctness oracle.
+//!
+//! Packing needs workspace: the train/eval hot paths pass a
+//! [`PanelBuf`] owned by the step workspace (presized at build, so the
+//! warmed-up step stays allocation-free); every other caller falls back
+//! to a thread-local buffer that reaches steady state after first use.
 
-use super::simd::{self, Isa, Kernels};
+use std::cell::RefCell;
+
+use super::pack::{self, PanelBuf};
+use super::simd::{self, Isa, Kernels, MR_MAX, NR_MAX};
 use crate::util::pool::{global, par_rows, SendPtr};
 
-/// k-tile: the B panel rows kept hot while sweeping output rows.
+/// k-block for the panel driver: one block's LHS/RHS panel slices stay
+/// L2-resident while the microkernel sweeps tiles; blocks beyond the
+/// first accumulate into C (`acc = true`).
+const KC: usize = 256;
+/// k-tile of the strip baselines: the B panel rows kept hot while
+/// sweeping output rows.
 const KB: usize = 256;
-/// n-tile: the B panel width; KB*NB*4 = 256 KiB stays L2-resident.
+/// n-tile of the strip baselines; KB*NB*4 = 256 KiB stays L2-resident.
 const NB: usize = 256;
-/// i-tile for the outer-product A^T·B kernel's C block.
+/// i-tile for the strip outer-product A^T·B kernel's C block.
 const IB: usize = 64;
 /// Below this many multiply-adds, dispatch overhead beats the pool.
 const PAR_MIN_WORK: usize = 1 << 16;
 
-fn row_grain(rows: usize) -> usize {
+/// Work grain in *panels* (each panel is mr C rows).
+fn panel_grain(panels: usize) -> usize {
     let t = global().n_threads;
-    rows.div_ceil(t * 4).max(4)
+    panels.div_ceil(t * 4).max(1)
+}
+
+thread_local! {
+    /// Fallback packing storage for callers that do not carry a
+    /// workspace (preprocessing, serving, tests). Grow-only, so any
+    /// steady-state caller stops allocating after its first call.
+    static TLS_PANELS: RefCell<PanelBuf> = RefCell::new(PanelBuf::new());
+}
+
+// ---------------------------------------------------------------------------
+// Panel driver (shared by all three orientations)
+// ---------------------------------------------------------------------------
+
+/// Run the microkernel over row panels `plo..phi` of the packed
+/// operands. `c` holds exactly C rows `plo*mr .. min(phi*mr, m)` at row
+/// stride `n`. Fixed (kc, q, p) order with kc outermost: every element
+/// accumulates its k-blocks in ascending order no matter how panels were
+/// split across threads.
+#[allow(clippy::too_many_arguments)]
+fn panel_rows(
+    kern: &Kernels,
+    pa: &[f32],
+    pb: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    plo: usize,
+    phi: usize,
+    c: &mut [f32],
+) {
+    let (mr, nr) = (kern.mr, kern.nr);
+    let np = n.div_ceil(nr);
+    let mut scratch = [0f32; MR_MAX * NR_MAX];
+    let mut kc0 = 0usize;
+    while kc0 < k {
+        let kce = (kc0 + KC).min(k);
+        let kl = kce - kc0;
+        let accf = kc0 > 0;
+        for q in 0..np {
+            let j0 = q * nr;
+            let jl = nr.min(n - j0);
+            let pbb = &pb[(q * k + kc0) * nr..(q * k + kce) * nr];
+            for p in plo..phi {
+                let i0 = p * mr;
+                let il = mr.min(m - i0);
+                let pab = &pa[(p * k + kc0) * mr..(p * k + kce) * mr];
+                let coff = (i0 - plo * mr) * n;
+                if il == mr && jl == nr {
+                    (kern.panel)(kl, pab, pbb, &mut c[coff + j0..], n, accf);
+                } else {
+                    // partial tile: full-tile compute into scratch (the
+                    // packer zero-padded the panel), merge the valid
+                    // il x jl sub-rectangle
+                    (kern.panel)(kl, pab, pbb, &mut scratch, nr, false);
+                    for r in 0..il {
+                        let crow = &mut c[coff + r * n + j0..coff + r * n + j0 + jl];
+                        let srow = &scratch[r * nr..r * nr + jl];
+                        if accf {
+                            for (cv, &sv) in crow.iter_mut().zip(srow) {
+                                *cv += sv;
+                            }
+                        } else {
+                            crow.copy_from_slice(srow);
+                        }
+                    }
+                }
+            }
+        }
+        kc0 = kce;
+    }
+}
+
+/// The shared panel GEMM: C[m x n] = L[m x k] @ R[k x n], where L's
+/// element (i, kk) is `a[i*ars + kk*acs]` and R's element (kk, j) is
+/// `b[kk*brs + j*bcs]` — each orientation wrapper supplies the stride
+/// pair that expresses its transposition. Packs both operands once into
+/// `buf`, then sweeps the k-blocked tile nest.
+#[allow(clippy::too_many_arguments)]
+fn panel_gemm(
+    kern: &'static Kernels,
+    a: &[f32],
+    ars: usize,
+    acs: usize,
+    b: &[f32],
+    brs: usize,
+    bcs: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [f32],
+    buf: &mut PanelBuf,
+    pooled: bool,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        c.fill(0.0);
+        return;
+    }
+    let (mr, nr) = (kern.mr, kern.nr);
+    let mp = m.div_ceil(mr);
+    let np = n.div_ceil(nr);
+    let la = mp * k * mr;
+    let lb = np * k * nr;
+    buf.ensure(la, lb);
+    let (pa, pb) = buf.views(la, lb);
+    let pooled = pooled && m * k * n >= PAR_MIN_WORK;
+    if !pooled {
+        pack::pack_lhs(a, ars, acs, m, k, mr, 0, mp, pa);
+        pack::pack_rhs(b, brs, bcs, k, n, nr, 0, np, pb);
+        panel_rows(kern, pa, pb, m, k, n, 0, mp, c);
+        return;
+    }
+    {
+        // parallel pack: disjoint panel ranges write disjoint buffer
+        // ranges, and each byte's value is position-determined, so the
+        // packed images are identical to a serial pack.
+        let pap = SendPtr(pa.as_mut_ptr());
+        par_rows(mp, panel_grain(mp), &|plo, phi| {
+            // SAFETY: par_rows hands out disjoint panel ranges.
+            let dst = unsafe { pap.slice(plo * k * mr, (phi - plo) * k * mr) };
+            pack::pack_lhs(a, ars, acs, m, k, mr, plo, phi, dst);
+        });
+        let pbp = SendPtr(pb.as_mut_ptr());
+        par_rows(np, panel_grain(np), &|qlo, qhi| {
+            // SAFETY: disjoint panel ranges.
+            let dst = unsafe { pbp.slice(qlo * k * nr, (qhi - qlo) * k * nr) };
+            pack::pack_rhs(b, brs, bcs, k, n, nr, qlo, qhi, dst);
+        });
+    }
+    let (pa, pb) = (&*pa, &*pb);
+    let cp = SendPtr(c.as_mut_ptr());
+    par_rows(mp, panel_grain(mp), &|plo, phi| {
+        let i0 = plo * mr;
+        let ie = (phi * mr).min(m);
+        // SAFETY: disjoint C row ranges (panels never straddle a split).
+        let rows = unsafe { cp.slice(i0 * n, (ie - i0) * n) };
+        panel_rows(kern, pa, pb, m, k, n, plo, phi, rows);
+    });
 }
 
 // ---------------------------------------------------------------------------
 // C[m x n] = A[m x k] @ B[k x n]
 // ---------------------------------------------------------------------------
 
-/// Compute rows `lo..hi` of C = A·B into `c` (which holds exactly those
-/// rows). Fixed (kb, jb) tile order per row -> thread-count independent.
+fn gemm_asserts(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &[f32]) {
+    assert_eq!(a.len(), m * k, "gemm: A length");
+    assert_eq!(b.len(), k * n, "gemm: B length");
+    assert_eq!(c.len(), m * n, "gemm: C length");
+}
+
+/// C = A·B, panel-packed + parallel (the default forward kernel).
+pub fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    gemm_asserts(a, b, m, k, n, c);
+    let kern = simd::kernels();
+    TLS_PANELS.with(|buf| {
+        panel_gemm(kern, a, k, 1, b, n, 1, m, k, n, c, &mut buf.borrow_mut(), true)
+    });
+}
+
+/// C = A·B into caller-owned packing storage (the workspace hot path:
+/// with `buf` presized via [`PanelBuf::reserve_gemm`], this allocates
+/// nothing). Same bits as [`gemm`].
+pub fn gemm_into(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [f32],
+    buf: &mut PanelBuf,
+) {
+    gemm_asserts(a, b, m, k, n, c);
+    panel_gemm(simd::kernels(), a, k, 1, b, n, 1, m, k, n, c, buf, true);
+}
+
+/// C = A·B, single-threaded; bit-for-bit equal to [`gemm`].
+pub fn gemm_serial(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    gemm_asserts(a, b, m, k, n, c);
+    let kern = simd::kernels();
+    TLS_PANELS.with(|buf| {
+        panel_gemm(kern, a, k, 1, b, n, 1, m, k, n, c, &mut buf.borrow_mut(), false)
+    });
+}
+
+/// C = A·B with an explicit ISA rung, single-threaded. Test/bench hook:
+/// lets callers compare rungs without touching the global dispatch.
+pub fn gemm_with(isa: Isa, a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    gemm_asserts(a, b, m, k, n, c);
+    let kern = simd::kernels_for(isa);
+    TLS_PANELS.with(|buf| {
+        panel_gemm(kern, a, k, 1, b, n, 1, m, k, n, c, &mut buf.borrow_mut(), false)
+    });
+}
+
+/// C = A·B through the pre-panel 4-row strip kernels, single-threaded.
+/// Perf baseline for `panel_speedup_vs_strip` and a second oracle for
+/// the property suite.
+pub fn gemm_strip(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    gemm_asserts(a, b, m, k, n, c);
+    gemm_rows(simd::kernels(), a, b, k, n, 0, m, c);
+}
+
+/// The seed's ikj loop (one row of B streamed per A value, zero-skip):
+/// correctness oracle.
+pub fn gemm_naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    gemm_asserts(a, b, m, k, n, c);
+    for (arow, crow) in a.chunks_exact(k).zip(c.chunks_exact_mut(n)) {
+        crow.fill(0.0);
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// Strip kernel: compute rows `lo..hi` of C = A·B into `c` (which holds
+/// exactly those rows). Fixed (kb, jb) tile order per row.
 #[allow(clippy::too_many_arguments)]
 fn gemm_rows(
     kern: &Kernels,
@@ -83,9 +320,7 @@ fn gemm_rows(
                 }
                 r += 4;
             }
-            // tail rows, one at a time (axpy1 ≡ one axpy4 row per ISA, so
-            // a row computes the same bits whether it fell in a strip or
-            // in the tail of a different pooled split)
+            // tail rows, one at a time
             while r < rows {
                 let i = lo + r;
                 let crow = &mut c[r * n + jb..r * n + je];
@@ -105,54 +340,74 @@ fn gemm_rows(
     }
 }
 
-/// C = A·B, blocked + parallel (the default forward kernel).
-pub fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
-    assert_eq!(a.len(), m * k, "gemm: A length");
-    assert_eq!(b.len(), k * n, "gemm: B length");
-    assert_eq!(c.len(), m * n, "gemm: C length");
+// ---------------------------------------------------------------------------
+// C[k x n] = A^T @ B   (A is m x k, B is m x n) — the dW = X^T·dZ kernel
+// ---------------------------------------------------------------------------
+
+fn at_b_asserts(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &[f32]) {
+    assert_eq!(a.len(), m * k, "gemm_at_b: A length");
+    assert_eq!(b.len(), m * n, "gemm_at_b: B length");
+    assert_eq!(c.len(), k * n, "gemm_at_b: C length");
+}
+
+/// C = A^T·B, panel-packed + parallel. The packer reads A column-major
+/// (stride pair (1, k)) — no explicit transpose is ever materialized.
+pub fn gemm_at_b(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    at_b_asserts(a, b, m, k, n, c);
     let kern = simd::kernels();
-    if m * k * n < PAR_MIN_WORK {
-        gemm_rows(kern, a, b, k, n, 0, m, c);
-        return;
-    }
-    let cp = SendPtr(c.as_mut_ptr());
-    par_rows(m, row_grain(m), &|lo, hi| {
-        // SAFETY: par_rows hands out disjoint row ranges of C.
-        let rows = unsafe { cp.slice(lo * n, (hi - lo) * n) };
-        gemm_rows(kern, a, b, k, n, lo, hi, rows);
+    TLS_PANELS.with(|buf| {
+        panel_gemm(kern, a, 1, k, b, n, 1, k, m, n, c, &mut buf.borrow_mut(), true)
     });
 }
 
-/// C = A·B, blocked, single-threaded; bit-for-bit equal to [`gemm`].
-pub fn gemm_serial(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(b.len(), k * n);
-    assert_eq!(c.len(), m * n);
-    gemm_rows(simd::kernels(), a, b, k, n, 0, m, c);
+/// C = A^T·B into caller-owned packing storage (workspace hot path).
+pub fn gemm_at_b_into(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [f32],
+    buf: &mut PanelBuf,
+) {
+    at_b_asserts(a, b, m, k, n, c);
+    panel_gemm(simd::kernels(), a, 1, k, b, n, 1, k, m, n, c, buf, true);
 }
 
-/// C = A·B with an explicit ISA rung, single-threaded. Test/bench hook:
-/// lets callers compare rungs without touching the global dispatch.
-pub fn gemm_with(isa: Isa, a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(b.len(), k * n);
-    assert_eq!(c.len(), m * n);
-    gemm_rows(simd::kernels_for(isa), a, b, k, n, 0, m, c);
+/// C = A^T·B, single-threaded; bit-for-bit equal to [`gemm_at_b`].
+pub fn gemm_at_b_serial(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    at_b_asserts(a, b, m, k, n, c);
+    let kern = simd::kernels();
+    TLS_PANELS.with(|buf| {
+        panel_gemm(kern, a, 1, k, b, n, 1, k, m, n, c, &mut buf.borrow_mut(), false)
+    });
 }
 
-/// The seed's ikj loop (one row of B streamed per A value, zero-skip):
-/// correctness oracle and "current main" perf baseline.
-pub fn gemm_naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(b.len(), k * n);
-    assert_eq!(c.len(), m * n);
-    for (arow, crow) in a.chunks_exact(k).zip(c.chunks_exact_mut(n)) {
-        crow.fill(0.0);
-        for (p, &av) in arow.iter().enumerate() {
+/// C = A^T·B with an explicit ISA rung, single-threaded (test/bench hook).
+pub fn gemm_at_b_with(isa: Isa, a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    at_b_asserts(a, b, m, k, n, c);
+    let kern = simd::kernels_for(isa);
+    TLS_PANELS.with(|buf| {
+        panel_gemm(kern, a, 1, k, b, n, 1, k, m, n, c, &mut buf.borrow_mut(), false)
+    });
+}
+
+/// C = A^T·B through the pre-panel strip kernels, single-threaded.
+pub fn gemm_at_b_strip(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    at_b_asserts(a, b, m, k, n, c);
+    at_b_rows(simd::kernels(), a, b, m, k, n, 0, k, c);
+}
+
+/// The seed's A^T·B loop (per-sample outer products, zero-skip).
+pub fn gemm_at_b_naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    at_b_asserts(a, b, m, k, n, c);
+    c.fill(0.0);
+    for (arow, brow) in a.chunks_exact(k).zip(b.chunks_exact(n)) {
+        for (i, &av) in arow.iter().enumerate() {
             if av == 0.0 {
                 continue;
             }
-            let brow = &b[p * n..(p + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
             for (cv, &bv) in crow.iter_mut().zip(brow) {
                 *cv += av * bv;
             }
@@ -160,13 +415,8 @@ pub fn gemm_naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f
     }
 }
 
-// ---------------------------------------------------------------------------
-// C[k x n] = A^T @ B   (A is m x k, B is m x n) — the dW = X^T·dZ kernel
-// ---------------------------------------------------------------------------
-
-/// Compute C rows `ilo..ihi` (features of A) into `c`. Outer-product form
-/// preserves the zero-skip on A (post-ReLU activations): a zero
-/// activation skips an entire row update of width NB.
+/// Strip kernel: compute C rows `ilo..ihi` (features of A) into `c`.
+/// Outer-product form preserves the zero-skip on A.
 #[allow(clippy::too_many_arguments)]
 fn at_b_rows(
     kern: &Kernels,
@@ -205,66 +455,81 @@ fn at_b_rows(
     }
 }
 
-/// C = A^T·B, blocked + parallel over C-row (feature) blocks.
-pub fn gemm_at_b(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
-    assert_eq!(a.len(), m * k, "gemm_at_b: A length");
-    assert_eq!(b.len(), m * n, "gemm_at_b: B length");
-    assert_eq!(c.len(), k * n, "gemm_at_b: C length");
-    let kern = simd::kernels();
-    if m * k * n < PAR_MIN_WORK {
-        at_b_rows(kern, a, b, m, k, n, 0, k, c);
-        return;
-    }
-    let cp = SendPtr(c.as_mut_ptr());
-    par_rows(k, row_grain(k), &|ilo, ihi| {
-        // SAFETY: disjoint C row ranges.
-        let rows = unsafe { cp.slice(ilo * n, (ihi - ilo) * n) };
-        at_b_rows(kern, a, b, m, k, n, ilo, ihi, rows);
-    });
-}
-
-/// C = A^T·B, blocked, single-threaded; bit-for-bit equal to [`gemm_at_b`].
-pub fn gemm_at_b_serial(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(b.len(), m * n);
-    assert_eq!(c.len(), k * n);
-    at_b_rows(simd::kernels(), a, b, m, k, n, 0, k, c);
-}
-
-/// C = A^T·B with an explicit ISA rung, single-threaded (test/bench hook).
-pub fn gemm_at_b_with(isa: Isa, a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(b.len(), m * n);
-    assert_eq!(c.len(), k * n);
-    at_b_rows(simd::kernels_for(isa), a, b, m, k, n, 0, k, c);
-}
-
-/// The seed's A^T·B loop (per-sample outer products, zero-skip).
-pub fn gemm_at_b_naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(b.len(), m * n);
-    assert_eq!(c.len(), k * n);
-    c.fill(0.0);
-    for (arow, brow) in a.chunks_exact(k).zip(b.chunks_exact(n)) {
-        for (i, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let crow = &mut c[i * n..(i + 1) * n];
-            for (cv, &bv) in crow.iter_mut().zip(brow) {
-                *cv += av * bv;
-            }
-        }
-    }
-}
-
 // ---------------------------------------------------------------------------
 // C[m x k] = A @ B^T   (A is m x n, B is k x n) — the dX = dZ·W^T kernel
 // ---------------------------------------------------------------------------
 
-/// Compute C rows `lo..hi` (batch rows) into `c`; n is tiled so the B rows
-/// being dotted stay cache-resident. The dot microkernel has a fixed
-/// per-ISA reduction order, so every call site agrees bit-for-bit.
+fn a_bt_asserts(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, c: &[f32]) {
+    assert_eq!(a.len(), m * n, "gemm_a_bt: A length");
+    assert_eq!(b.len(), k * n, "gemm_a_bt: B length");
+    assert_eq!(c.len(), m * k, "gemm_a_bt: C length");
+}
+
+/// C = A·B^T, panel-packed + parallel. The packer reads B column-major
+/// (stride pair (1, n)) to realize the transpose.
+pub fn gemm_a_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, c: &mut [f32]) {
+    a_bt_asserts(a, b, m, n, k, c);
+    let kern = simd::kernels();
+    TLS_PANELS.with(|buf| {
+        panel_gemm(kern, a, n, 1, b, 1, n, m, n, k, c, &mut buf.borrow_mut(), true)
+    });
+}
+
+/// C = A·B^T into caller-owned packing storage (workspace hot path).
+pub fn gemm_a_bt_into(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    c: &mut [f32],
+    buf: &mut PanelBuf,
+) {
+    a_bt_asserts(a, b, m, n, k, c);
+    panel_gemm(simd::kernels(), a, n, 1, b, 1, n, m, n, k, c, buf, true);
+}
+
+/// C = A·B^T, single-threaded; bit-for-bit equal to [`gemm_a_bt`].
+pub fn gemm_a_bt_serial(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, c: &mut [f32]) {
+    a_bt_asserts(a, b, m, n, k, c);
+    let kern = simd::kernels();
+    TLS_PANELS.with(|buf| {
+        panel_gemm(kern, a, n, 1, b, 1, n, m, n, k, c, &mut buf.borrow_mut(), false)
+    });
+}
+
+/// C = A·B^T with an explicit ISA rung, single-threaded (test/bench hook).
+pub fn gemm_a_bt_with(isa: Isa, a: &[f32], b: &[f32], m: usize, n: usize, k: usize, c: &mut [f32]) {
+    a_bt_asserts(a, b, m, n, k, c);
+    let kern = simd::kernels_for(isa);
+    TLS_PANELS.with(|buf| {
+        panel_gemm(kern, a, n, 1, b, 1, n, m, n, k, c, &mut buf.borrow_mut(), false)
+    });
+}
+
+/// C = A·B^T through the pre-panel strip kernels, single-threaded.
+pub fn gemm_a_bt_strip(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, c: &mut [f32]) {
+    a_bt_asserts(a, b, m, n, k, c);
+    a_bt_rows(simd::kernels(), a, b, n, k, 0, m, c);
+}
+
+/// The seed's A·B^T loop (single-accumulator row dots).
+pub fn gemm_a_bt_naive(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, c: &mut [f32]) {
+    a_bt_asserts(a, b, m, n, k, c);
+    for (arow, crow) in a.chunks_exact(n).zip(c.chunks_exact_mut(k)) {
+        for (i, cv) in crow.iter_mut().enumerate() {
+            let brow = &b[i * n..(i + 1) * n];
+            let mut acc = 0f32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            *cv = acc;
+        }
+    }
+}
+
+/// Strip kernel: compute C rows `lo..hi` (batch rows) into `c`; n is
+/// tiled so the B rows being dotted stay cache-resident.
 #[allow(clippy::too_many_arguments)]
 fn a_bt_rows(
     kern: &Kernels,
@@ -276,6 +541,7 @@ fn a_bt_rows(
     hi: usize,
     c: &mut [f32],
 ) {
+    debug_assert_eq!(c.len(), (hi - lo) * k);
     c.fill(0.0);
     let mut nb = 0;
     while nb < n {
@@ -289,57 +555,6 @@ fn a_bt_rows(
             }
         }
         nb = ne;
-    }
-}
-
-/// C = A·B^T, blocked + parallel over C-row (batch) blocks.
-pub fn gemm_a_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, c: &mut [f32]) {
-    assert_eq!(a.len(), m * n, "gemm_a_bt: A length");
-    assert_eq!(b.len(), k * n, "gemm_a_bt: B length");
-    assert_eq!(c.len(), m * k, "gemm_a_bt: C length");
-    let kern = simd::kernels();
-    if m * k * n < PAR_MIN_WORK {
-        a_bt_rows(kern, a, b, n, k, 0, m, c);
-        return;
-    }
-    let cp = SendPtr(c.as_mut_ptr());
-    par_rows(m, row_grain(m), &|lo, hi| {
-        // SAFETY: disjoint C row ranges.
-        let rows = unsafe { cp.slice(lo * k, (hi - lo) * k) };
-        a_bt_rows(kern, a, b, n, k, lo, hi, rows);
-    });
-}
-
-/// C = A·B^T, blocked, single-threaded; bit-for-bit equal to [`gemm_a_bt`].
-pub fn gemm_a_bt_serial(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, c: &mut [f32]) {
-    assert_eq!(a.len(), m * n);
-    assert_eq!(b.len(), k * n);
-    assert_eq!(c.len(), m * k);
-    a_bt_rows(simd::kernels(), a, b, n, k, 0, m, c);
-}
-
-/// C = A·B^T with an explicit ISA rung, single-threaded (test/bench hook).
-pub fn gemm_a_bt_with(isa: Isa, a: &[f32], b: &[f32], m: usize, n: usize, k: usize, c: &mut [f32]) {
-    assert_eq!(a.len(), m * n);
-    assert_eq!(b.len(), k * n);
-    assert_eq!(c.len(), m * k);
-    a_bt_rows(simd::kernels_for(isa), a, b, n, k, 0, m, c);
-}
-
-/// The seed's A·B^T loop (single-accumulator row dots).
-pub fn gemm_a_bt_naive(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, c: &mut [f32]) {
-    assert_eq!(a.len(), m * n);
-    assert_eq!(b.len(), k * n);
-    assert_eq!(c.len(), m * k);
-    for (arow, crow) in a.chunks_exact(n).zip(c.chunks_exact_mut(k)) {
-        for (i, cv) in crow.iter_mut().enumerate() {
-            let brow = &b[i * n..(i + 1) * n];
-            let mut acc = 0f32;
-            for (&av, &bv) in arow.iter().zip(brow) {
-                acc += av * bv;
-            }
-            *cv = acc;
-        }
     }
 }
 
@@ -364,7 +579,7 @@ mod tests {
 
     #[test]
     fn blocked_gemm_matches_naive_across_shapes() {
-        // shapes straddling the KB/NB tile edges and non-multiples of 4
+        // shapes straddling the KC tile edges and non-multiples of mr/nr
         for (m, k, n, seed) in
             [(1, 1, 1, 1u64), (3, 5, 7, 2), (7, 257, 300, 3), (100, 256, 256, 4), (13, 300, 9, 5)]
         {
@@ -378,6 +593,9 @@ mod tests {
             let mut st = vec![0f32; m * n];
             gemm_serial(&a, &b, m, k, n, &mut st);
             assert_eq!(st, got, "pooled vs serial must be bit-identical");
+            let mut sp = vec![0f32; m * n];
+            gemm_strip(&a, &b, m, k, n, &mut sp);
+            close(&sp, &want, 1e-4);
         }
     }
 
@@ -394,6 +612,9 @@ mod tests {
             let mut st = vec![0f32; k * n];
             gemm_at_b_serial(&a, &b, m, k, n, &mut st);
             assert_eq!(st, got);
+            let mut sp = vec![0f32; k * n];
+            gemm_at_b_strip(&a, &b, m, k, n, &mut sp);
+            close(&sp, &want, 1e-4);
         }
     }
 
@@ -410,6 +631,9 @@ mod tests {
             let mut st = vec![0f32; m * k];
             gemm_a_bt_serial(&a, &b, m, n, k, &mut st);
             assert_eq!(st, got);
+            let mut sp = vec![0f32; m * k];
+            gemm_a_bt_strip(&a, &b, m, n, k, &mut sp);
+            close(&sp, &want, 1e-4);
         }
     }
 
@@ -428,6 +652,10 @@ mod tests {
         let mut c3 = vec![99.0f32];
         gemm_a_bt(&a, &b, 1, 2, 1, &mut c3); // A 1x2, B 1x2 -> C 1x1
         assert_eq!(c3, vec![11.0]);
+        // k == 0: an empty reduction must still clear C
+        let mut c4 = vec![99.0f32; 6];
+        gemm(&[], &[], 2, 0, 3, &mut c4);
+        assert_eq!(c4, vec![0.0; 6]);
     }
 
     #[test]
@@ -455,6 +683,34 @@ mod tests {
         gemm_a_bt_serial(&a2, &b3, m, n, k, &mut s);
         let mut w = vec![0f32; m * k];
         gemm_a_bt_with(isa, &a2, &b3, m, n, k, &mut w);
+        assert_eq!(s, w);
+    }
+
+    #[test]
+    fn into_variants_match_and_reuse_buffers() {
+        let (m, k, n) = (37, 129, 66);
+        let a = rand(m * k, 41, 0.3);
+        let b = rand(k * n, 42, 0.0);
+        let mut buf = PanelBuf::new();
+        let mut via_into = vec![0f32; m * n];
+        gemm_into(&a, &b, m, k, n, &mut via_into, &mut buf);
+        let mut via_tls = vec![0f32; m * n];
+        gemm(&a, &b, m, k, n, &mut via_tls);
+        assert_eq!(via_into, via_tls, "gemm_into must equal gemm bit-for-bit");
+        // reuse the same (now stale-contented) buffer for the other
+        // orientations — packing must fully overwrite what it needs
+        let b2 = rand(m * n, 43, 0.0);
+        let mut s = vec![0f32; k * n];
+        gemm_at_b(&a, &b2, m, k, n, &mut s);
+        let mut w = vec![0f32; k * n];
+        gemm_at_b_into(&a, &b2, m, k, n, &mut w, &mut buf);
+        assert_eq!(s, w);
+        let a2 = rand(m * n, 44, 0.0);
+        let b3 = rand(k * n, 45, 0.0);
+        let mut s = vec![0f32; m * k];
+        gemm_a_bt(&a2, &b3, m, n, k, &mut s);
+        let mut w = vec![0f32; m * k];
+        gemm_a_bt_into(&a2, &b3, m, n, k, &mut w, &mut buf);
         assert_eq!(s, w);
     }
 }

@@ -1,36 +1,49 @@
 //! The crate's hot-path kernel layer.
 //!
 //! One home for every dense f32 GEMM the training loop, the preprocessing
-//! pipeline and the packed engine touch (previously duplicated between
-//! `preprocess::linalg` and `binary::packed::dense_f32`). Three variants
-//! per operation:
+//! pipeline and the packed engine touch. The layer is panel-packed
+//! (tract/BLIS lineage): [`pack`] repacks both operands into the active
+//! microkernel's mr-row / nr-column panel layout, and one loop nest
+//! ([`gemm`]'s driver) runs the register-tiled panel kernel from the
+//! [`simd`] dispatch table over contiguous packed memory. All three
+//! transposition variants (`A·B`, `Aᵀ·B`, `A·Bᵀ`) are stride pairs into
+//! the same packer, so ragged edges are handled once, by zero padding.
 //!
-//! * `gemm*`          — register-blocked, cache-tiled, parallelized over
-//!   output-row blocks on the [`util::pool`](crate::util::pool) thread
-//!   pool. The default everywhere.
-//! * `gemm*_serial`   — the same blocked kernel on one thread. Per output
-//!   row the two are **bit-for-bit identical** (rows never split across
-//!   threads and the reduction order per row is fixed), which the
-//!   `prop_invariants` suite pins down.
-//! * `gemm*_naive`    — the seed's allocation-era loops, kept as the
-//!   correctness oracle and as the honest "current main" baseline the
-//!   `perf_gemm` bench measures speedups against.
+//! Entry-point families per operation:
+//!
+//! * `gemm*`          — panel-packed, parallelized over output-row panels
+//!   on the [`util::pool`](crate::util::pool) thread pool, packing into a
+//!   thread-local buffer. The default everywhere.
+//! * `gemm*_into`     — same kernel, packing into a caller-owned
+//!   [`PanelBuf`]; the train-step workspace presizes one so the warmed-up
+//!   step allocates nothing.
+//! * `gemm*_serial`   — one thread, **bit-for-bit identical** to the
+//!   pooled variant (per output element the k-blocks and the microkernel
+//!   reduction order are fixed, independent of the thread split), which
+//!   the `prop_invariants` suite pins down.
+//! * `gemm*_with`     — explicit ISA rung, for tests and the `perf_gemm`
+//!   dispatch ladder (no process-global mutation).
+//! * `gemm*_strip`    — the pre-panel 4-row strip kernels, serial: the
+//!   baseline of `perf_gemm`'s `panel_speedup_vs_strip` series and a
+//!   second oracle.
+//! * `gemm*_naive`    — the seed's loops, the correctness oracle.
 //!
 //! All kernels write into caller-provided `&mut [f32]` buffers so the
 //! training loop can run allocation-free out of its per-executor
 //! workspace (`runtime/reference.rs`); the bit-packed sign kernels live
 //! with their data layout in `binary/packed.rs`.
 //!
-//! Beneath the blocked/pooled structure, the innermost loops dispatch
-//! through the [`simd`] microkernel table — AVX2+FMA or SSE2 on x86_64
-//! (runtime-detected, `BCRUN_SIMD`-overridable), scalar elsewhere. The
-//! `gemm*_with` variants pin an explicit ISA rung for tests and the
-//! `perf_gemm` dispatch ladder.
+//! The [`simd`] table carries AVX2+FMA or SSE2 microkernels on x86_64,
+//! NEON on aarch64 (runtime-detected, `BCRUN_SIMD`-overridable), scalar
+//! everywhere else.
 
 mod gemm;
+pub mod pack;
 pub mod simd;
 
 pub use gemm::{
-    gemm, gemm_a_bt, gemm_a_bt_naive, gemm_a_bt_serial, gemm_a_bt_with, gemm_at_b,
-    gemm_at_b_naive, gemm_at_b_serial, gemm_at_b_with, gemm_naive, gemm_serial, gemm_with,
+    gemm, gemm_a_bt, gemm_a_bt_into, gemm_a_bt_naive, gemm_a_bt_serial, gemm_a_bt_strip,
+    gemm_a_bt_with, gemm_at_b, gemm_at_b_into, gemm_at_b_naive, gemm_at_b_serial, gemm_at_b_strip,
+    gemm_at_b_with, gemm_into, gemm_naive, gemm_serial, gemm_strip, gemm_with,
 };
+pub use pack::PanelBuf;

@@ -1,0 +1,290 @@
+//! Operand panel packing for the f32 GEMM trio (tract/BLIS lineage).
+//!
+//! The panel kernels in `kernel/gemm.rs` never touch A or B directly:
+//! both operands are first repacked into the microkernel's native layout,
+//! so the innermost loop streams two contiguous buffers regardless of the
+//! transposition variant, and every ragged edge is handled *here*, once,
+//! by zero padding.
+//!
+//! ## Layout
+//!
+//! * **LHS** (`pack_lhs`): A is cut into `mr`-row panels. Panel `p` holds
+//!   rows `p*mr .. p*mr+mr`, stored k-major with the `mr` rows
+//!   interleaved: `pa[(p*k + kk)*mr + r] = A[p*mr + r, kk]`. One k-step of
+//!   the microkernel therefore loads `mr` consecutive floats.
+//! * **RHS** (`pack_rhs`): B is cut into `nr`-column panels, also k-major:
+//!   `pb[(q*k + kk)*nr + j] = B[kk, q*nr + j]`. One k-step loads `nr`
+//!   consecutive floats.
+//!
+//! Because both layouts are k-major *within* a panel, any k-block
+//! `kc0..kc1` of a panel is itself contiguous — the cache-blocked loop
+//! nest slices packed panels, it never re-packs.
+//!
+//! Rows beyond `m` (and columns beyond `n`) in the last panel are filled
+//! with `0.0`, so the microkernel always computes a full `mr x nr` tile;
+//! the driver merges only the valid sub-rectangle back into C.
+//!
+//! Sources are described by `(row stride, col stride)` pairs, which is how
+//! all three GEMM orientations (`A·B`, `Aᵀ·B`, `A·Bᵀ`) share these two
+//! packers: a transposed operand just swaps its strides.
+//!
+//! Buffers are caller-owned ([`PanelBuf`]), grow-only, and reused — the
+//! training step packs into workspace storage sized once at build time, so
+//! the warmed-up step stays allocation-free.
+
+use super::simd::{MR_MAX, NR_MAX};
+
+/// Packed length of an `m x k` LHS for `mr`-row panels.
+pub fn lhs_len(m: usize, k: usize, mr: usize) -> usize {
+    m.div_ceil(mr) * k * mr
+}
+
+/// Packed length of a `k x n` RHS for `nr`-column panels.
+pub fn rhs_len(k: usize, n: usize, nr: usize) -> usize {
+    n.div_ceil(nr) * k * nr
+}
+
+/// Caller-owned, reusable packing storage for one GEMM at a time (an LHS
+/// area and an RHS area). Grow-only: `reserve_gemm` at build time makes
+/// every later [`ensure`](PanelBuf::ensure) a no-op, which is what keeps
+/// the train-step's counting-allocator test at zero.
+#[derive(Default)]
+pub struct PanelBuf {
+    pa: Vec<f32>,
+    pb: Vec<f32>,
+}
+
+impl PanelBuf {
+    pub fn new() -> PanelBuf {
+        PanelBuf::default()
+    }
+
+    /// Grow (never shrink) the two areas to at least the given lengths.
+    pub fn ensure(&mut self, pa_len: usize, pb_len: usize) {
+        if self.pa.len() < pa_len {
+            self.pa.resize(pa_len, 0.0);
+        }
+        if self.pb.len() < pb_len {
+            self.pb.resize(pb_len, 0.0);
+        }
+    }
+
+    /// Presize for a logical `C[m x n] = L[m x k] @ R[k x n]` product under
+    /// the widest microkernel geometry any ISA uses (`MR_MAX` x `NR_MAX`),
+    /// so the actual rung's `ensure` can only ask for less.
+    pub fn reserve_gemm(&mut self, m: usize, k: usize, n: usize) {
+        self.ensure(lhs_len(m, k, MR_MAX), rhs_len(k, n, NR_MAX));
+    }
+
+    /// The two packing areas, sized exactly, borrowed simultaneously.
+    pub(super) fn views(&mut self, pa_len: usize, pb_len: usize) -> (&mut [f32], &mut [f32]) {
+        (&mut self.pa[..pa_len], &mut self.pb[..pb_len])
+    }
+}
+
+/// Pack LHS panels `plo..phi` of the logical `m x k` matrix whose element
+/// `(i, kk)` lives at `src[i*rs + kk*cs]`. `dst` holds exactly those
+/// panels (`(phi-plo)*k*mr` floats); rows past `m` are zero-filled.
+#[allow(clippy::too_many_arguments)]
+pub fn pack_lhs(
+    src: &[f32],
+    rs: usize,
+    cs: usize,
+    m: usize,
+    k: usize,
+    mr: usize,
+    plo: usize,
+    phi: usize,
+    dst: &mut [f32],
+) {
+    assert_eq!(dst.len(), (phi - plo) * k * mr, "pack_lhs: dst length");
+    for (dp, panel) in dst.chunks_exact_mut(k * mr).enumerate() {
+        let i0 = (plo + dp) * mr;
+        let il = mr.min(m - i0.min(m));
+        for (kk, d) in panel.chunks_exact_mut(mr).enumerate() {
+            if cs == 1 && il == mr {
+                // contiguous source rows in k (the Aᵀ·B orientation packs
+                // k-contiguous *columns* of A, i.e. rs == 1 below instead)
+                for (r, dv) in d.iter_mut().enumerate() {
+                    *dv = src[(i0 + r) * rs + kk];
+                }
+            } else if rs == 1 && il == mr {
+                d.copy_from_slice(&src[i0 + kk * cs..i0 + kk * cs + mr]);
+            } else {
+                for (r, dv) in d.iter_mut().enumerate() {
+                    *dv = if r < il { src[(i0 + r) * rs + kk * cs] } else { 0.0 };
+                }
+            }
+        }
+    }
+}
+
+/// Pack RHS panels `qlo..qhi` of the logical `k x n` matrix whose element
+/// `(kk, j)` lives at `src[kk*rs + j*cs]`. `dst` holds exactly those
+/// panels (`(qhi-qlo)*k*nr` floats); columns past `n` are zero-filled.
+#[allow(clippy::too_many_arguments)]
+pub fn pack_rhs(
+    src: &[f32],
+    rs: usize,
+    cs: usize,
+    k: usize,
+    n: usize,
+    nr: usize,
+    qlo: usize,
+    qhi: usize,
+    dst: &mut [f32],
+) {
+    assert_eq!(dst.len(), (qhi - qlo) * k * nr, "pack_rhs: dst length");
+    for (dq, panel) in dst.chunks_exact_mut(k * nr).enumerate() {
+        let j0 = (qlo + dq) * nr;
+        let jl = nr.min(n - j0.min(n));
+        for (kk, d) in panel.chunks_exact_mut(nr).enumerate() {
+            if cs == 1 && jl == nr {
+                d.copy_from_slice(&src[kk * rs + j0..kk * rs + j0 + nr]);
+            } else {
+                for (j, dv) in d.iter_mut().enumerate() {
+                    *dv = if j < jl { src[kk * rs + (j0 + j) * cs] } else { 0.0 };
+                }
+            }
+        }
+    }
+}
+
+/// Inverse of [`pack_lhs`] over all panels: reconstruct the logical
+/// row-major `m x k` matrix. Test support for the roundtrip property
+/// suite; padding lanes are dropped.
+pub fn unpack_lhs(pa: &[f32], m: usize, k: usize, mr: usize) -> Vec<f32> {
+    assert!(pa.len() >= lhs_len(m, k, mr), "unpack_lhs: packed buffer too short");
+    let mut out = vec![0f32; m * k];
+    for p in 0..m.div_ceil(mr) {
+        let i0 = p * mr;
+        for kk in 0..k {
+            let d = &pa[(p * k + kk) * mr..(p * k + kk + 1) * mr];
+            for (r, &v) in d.iter().enumerate().take(m - i0.min(m)).take(mr) {
+                out[(i0 + r) * k + kk] = v;
+            }
+        }
+    }
+    out
+}
+
+/// Inverse of [`pack_rhs`] over all panels: reconstruct the logical
+/// row-major `k x n` matrix. Test support; padding lanes are dropped.
+pub fn unpack_rhs(pb: &[f32], k: usize, n: usize, nr: usize) -> Vec<f32> {
+    assert!(pb.len() >= rhs_len(k, n, nr), "unpack_rhs: packed buffer too short");
+    let mut out = vec![0f32; k * n];
+    for q in 0..n.div_ceil(nr) {
+        let j0 = q * nr;
+        for kk in 0..k {
+            let d = &pb[(q * k + kk) * nr..(q * k + kk + 1) * nr];
+            for (j, &v) in d.iter().enumerate().take(n - j0.min(n)).take(nr) {
+                out[kk * n + j0 + j] = v;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand(len: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..len).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn lhs_roundtrip_and_padding() {
+        for (m, k, mr) in [(1, 1, 4), (4, 5, 4), (5, 3, 4), (13, 7, 4), (8, 6, 4)] {
+            let a = rand(m * k, 7 + m as u64);
+            let mut pa = vec![f32::NAN; lhs_len(m, k, mr)];
+            pack_lhs(&a, k, 1, m, k, mr, 0, m.div_ceil(mr), &mut pa);
+            assert_eq!(unpack_lhs(&pa, m, k, mr), a, "m={m} k={k}");
+            // padding rows in the last panel are exactly zero
+            let last = m.div_ceil(mr) - 1;
+            for kk in 0..k {
+                let d = &pa[(last * k + kk) * mr..(last * k + kk + 1) * mr];
+                for (r, &v) in d.iter().enumerate() {
+                    if last * mr + r >= m {
+                        assert_eq!(v, 0.0, "pad row not zero at panel {last} kk={kk} r={r}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rhs_roundtrip_and_padding() {
+        for (k, n, nr) in [(1, 1, 8), (3, 8, 8), (5, 9, 8), (7, 33, 16), (6, 16, 16)] {
+            let b = rand(k * n, 31 + n as u64);
+            let mut pb = vec![f32::NAN; rhs_len(k, n, nr)];
+            pack_rhs(&b, n, 1, k, n, nr, 0, n.div_ceil(nr), &mut pb);
+            assert_eq!(unpack_rhs(&pb, k, n, nr), b, "k={k} n={n}");
+            let last = n.div_ceil(nr) - 1;
+            for kk in 0..k {
+                let d = &pb[(last * k + kk) * nr..(last * k + kk + 1) * nr];
+                for (j, &v) in d.iter().enumerate() {
+                    if last * nr + j >= n {
+                        assert_eq!(v, 0.0, "pad col not zero at panel {last} kk={kk} j={j}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn strided_packs_match_explicit_transpose() {
+        let (m, k) = (6, 5);
+        let a = rand(m * k, 99);
+        // Aᵀ as an LHS: logical k x m matrix with rs=1, cs=k
+        let mut at = vec![0f32; k * m];
+        for i in 0..m {
+            for kk in 0..k {
+                at[kk * m + i] = a[i * k + kk];
+            }
+        }
+        let mr = 4;
+        let mut via_stride = vec![0f32; lhs_len(k, m, mr)];
+        pack_lhs(&a, 1, k, k, m, mr, 0, k.div_ceil(mr), &mut via_stride);
+        let mut via_dense = vec![0f32; lhs_len(k, m, mr)];
+        pack_lhs(&at, m, 1, k, m, mr, 0, k.div_ceil(mr), &mut via_dense);
+        assert_eq!(via_stride, via_dense);
+        // Bᵀ as an RHS: logical k x m matrix of b (m x k) with rs=1, cs=k
+        let nr = 8;
+        let mut rvia_stride = vec![0f32; rhs_len(k, m, nr)];
+        pack_rhs(&a, 1, k, k, m, nr, 0, m.div_ceil(nr), &mut rvia_stride);
+        let mut rvia_dense = vec![0f32; rhs_len(k, m, nr)];
+        pack_rhs(&at, m, 1, k, m, nr, 0, m.div_ceil(nr), &mut rvia_dense);
+        assert_eq!(rvia_stride, rvia_dense);
+    }
+
+    #[test]
+    fn panel_ranges_compose() {
+        // packing panels [0,2) and [2,np) separately equals one pass
+        let (m, k, mr) = (11, 9, 4);
+        let a = rand(m * k, 5);
+        let np = m.div_ceil(mr);
+        let mut whole = vec![0f32; lhs_len(m, k, mr)];
+        pack_lhs(&a, k, 1, m, k, mr, 0, np, &mut whole);
+        let mut parts = vec![0f32; lhs_len(m, k, mr)];
+        let (lo, hi) = parts.split_at_mut(2 * k * mr);
+        pack_lhs(&a, k, 1, m, k, mr, 0, 2, lo);
+        pack_lhs(&a, k, 1, m, k, mr, 2, np, hi);
+        assert_eq!(whole, parts);
+    }
+
+    #[test]
+    fn panel_buf_is_grow_only() {
+        let mut buf = PanelBuf::new();
+        buf.reserve_gemm(100, 1024, 1024);
+        let (pa, pb) = buf.views(lhs_len(100, 1024, 4), rhs_len(1024, 1024, 16));
+        let (la, lb) = (pa.len(), pb.len());
+        buf.reserve_gemm(10, 10, 10); // smaller: must not shrink
+        buf.ensure(la, lb); // equal: must not move
+        let (pa2, pb2) = buf.views(la, lb);
+        assert_eq!(pa2.len(), la);
+        assert_eq!(pb2.len(), lb);
+    }
+}

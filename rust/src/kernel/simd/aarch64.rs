@@ -1,0 +1,281 @@
+//! aarch64 NEON microkernels. NEON (Advanced SIMD) is architecturally
+//! guaranteed on aarch64, so — like SSE2 on x86_64 — no runtime feature
+//! detection is needed; the table is reachable whenever this file
+//! compiles in.
+//!
+//! Same shim contract as `x86.rs`: each `pub(super)` shim is a *safe*
+//! `fn` matching the [`super::Kernels`] table signature, derives its
+//! element counts from the slices it was handed, then calls the `unsafe`
+//! raw-pointer inner kernel.
+//!
+//! Exactness (pinned by `tests/simd_kernels.rs` on an aarch64 host and by
+//! the cross-target CI check lane elsewhere):
+//! * `neon_add` / `neon_sign_accum` are bit-exact with scalar —
+//!   independent lanes, identical per-lane add order.
+//! * `neon_axpy1` and row `r` of `neon_axpy4` use the same
+//!   vector-vs-tail boundary, keeping pooled and serial GEMMs equal.
+//! * `neon_dot` / `neon_sign_dot` / `neon_panel` have fixed per-call
+//!   reduction orders (deterministic), equal to scalar within the
+//!   1e-5-scale association bound.
+
+use std::arch::aarch64::*;
+
+pub(super) fn neon_axpy4(
+    a: &[f32; 4],
+    b: &[f32],
+    c0: &mut [f32],
+    c1: &mut [f32],
+    c2: &mut [f32],
+    c3: &mut [f32],
+) {
+    let n = b.len().min(c0.len()).min(c1.len()).min(c2.len()).min(c3.len());
+    // SAFETY: NEON is baseline on aarch64; every offset below is < n,
+    // which is within all six slices by the min above.
+    unsafe {
+        axpy4_neon(
+            a,
+            b.as_ptr(),
+            c0.as_mut_ptr(),
+            c1.as_mut_ptr(),
+            c2.as_mut_ptr(),
+            c3.as_mut_ptr(),
+            n,
+        )
+    }
+}
+
+unsafe fn axpy4_neon(
+    a: &[f32; 4],
+    b: *const f32,
+    c0: *mut f32,
+    c1: *mut f32,
+    c2: *mut f32,
+    c3: *mut f32,
+    n: usize,
+) {
+    let mut j = 0usize;
+    while j + 4 <= n {
+        let vb = vld1q_f32(b.add(j));
+        vst1q_f32(c0.add(j), vfmaq_n_f32(vld1q_f32(c0.add(j)), vb, a[0]));
+        vst1q_f32(c1.add(j), vfmaq_n_f32(vld1q_f32(c1.add(j)), vb, a[1]));
+        vst1q_f32(c2.add(j), vfmaq_n_f32(vld1q_f32(c2.add(j)), vb, a[2]));
+        vst1q_f32(c3.add(j), vfmaq_n_f32(vld1q_f32(c3.add(j)), vb, a[3]));
+        j += 4;
+    }
+    while j < n {
+        let bv = *b.add(j);
+        *c0.add(j) += a[0] * bv;
+        *c1.add(j) += a[1] * bv;
+        *c2.add(j) += a[2] * bv;
+        *c3.add(j) += a[3] * bv;
+        j += 1;
+    }
+}
+
+pub(super) fn neon_axpy1(a: f32, b: &[f32], c: &mut [f32]) {
+    let n = b.len().min(c.len());
+    // SAFETY: NEON baseline; offsets < n are in bounds of both slices.
+    unsafe { axpy1_neon(a, b.as_ptr(), c.as_mut_ptr(), n) }
+}
+
+unsafe fn axpy1_neon(a: f32, b: *const f32, c: *mut f32, n: usize) {
+    let mut j = 0usize;
+    while j + 8 <= n {
+        let v0 = vfmaq_n_f32(vld1q_f32(c.add(j)), vld1q_f32(b.add(j)), a);
+        vst1q_f32(c.add(j), v0);
+        let v1 = vfmaq_n_f32(vld1q_f32(c.add(j + 4)), vld1q_f32(b.add(j + 4)), a);
+        vst1q_f32(c.add(j + 4), v1);
+        j += 8;
+    }
+    while j + 4 <= n {
+        let v0 = vfmaq_n_f32(vld1q_f32(c.add(j)), vld1q_f32(b.add(j)), a);
+        vst1q_f32(c.add(j), v0);
+        j += 4;
+    }
+    while j < n {
+        *c.add(j) += a * *b.add(j);
+        j += 1;
+    }
+}
+
+pub(super) fn neon_dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    // SAFETY: NEON baseline; reads stay below n.
+    unsafe { dot_neon(a.as_ptr(), b.as_ptr(), n) }
+}
+
+unsafe fn dot_neon(a: *const f32, b: *const f32, n: usize) -> f32 {
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    let mut acc2 = vdupq_n_f32(0.0);
+    let mut acc3 = vdupq_n_f32(0.0);
+    let mut j = 0usize;
+    while j + 16 <= n {
+        acc0 = vfmaq_f32(acc0, vld1q_f32(a.add(j)), vld1q_f32(b.add(j)));
+        acc1 = vfmaq_f32(acc1, vld1q_f32(a.add(j + 4)), vld1q_f32(b.add(j + 4)));
+        acc2 = vfmaq_f32(acc2, vld1q_f32(a.add(j + 8)), vld1q_f32(b.add(j + 8)));
+        acc3 = vfmaq_f32(acc3, vld1q_f32(a.add(j + 12)), vld1q_f32(b.add(j + 12)));
+        j += 16;
+    }
+    while j + 4 <= n {
+        acc0 = vfmaq_f32(acc0, vld1q_f32(a.add(j)), vld1q_f32(b.add(j)));
+        j += 4;
+    }
+    let mut s = vaddvq_f32(vaddq_f32(vaddq_f32(acc0, acc1), vaddq_f32(acc2, acc3)));
+    while j < n {
+        s += *a.add(j) * *b.add(j);
+        j += 1;
+    }
+    s
+}
+
+pub(super) fn neon_add(dst: &mut [f32], src: &[f32]) {
+    let n = dst.len().min(src.len());
+    // SAFETY: NEON baseline; offsets < n are within both slices.
+    unsafe { add_neon(dst.as_mut_ptr(), src.as_ptr(), n) }
+}
+
+unsafe fn add_neon(dst: *mut f32, src: *const f32, n: usize) {
+    let mut j = 0usize;
+    while j + 4 <= n {
+        vst1q_f32(dst.add(j), vaddq_f32(vld1q_f32(dst.add(j)), vld1q_f32(src.add(j))));
+        j += 4;
+    }
+    while j < n {
+        *dst.add(j) += *src.add(j);
+        j += 1;
+    }
+}
+
+pub(super) fn neon_sign_accum(col: &[u64], xt: &[f32], b: usize, c0: usize, sel: &mut [f32]) {
+    if let Some(r) = super::highest_set_row(col) {
+        assert!(r * b + c0 + sel.len() <= xt.len(), "sign_accum: stripe out of bounds");
+    }
+    // SAFETY: the assert above bounds every stripe the inner kernel
+    // reads (bits only reach rows <= highest_set_row); sel writes stay
+    // below sel.len(). NEON baseline.
+    unsafe { sign_accum_neon(col, xt.as_ptr(), b, c0, sel) }
+}
+
+unsafe fn sign_accum_neon(col: &[u64], xt: *const f32, b: usize, c0: usize, sel: &mut [f32]) {
+    let len = sel.len();
+    let sp = sel.as_mut_ptr();
+    for (wi, &word) in col.iter().enumerate() {
+        if word == 0 {
+            continue;
+        }
+        let base = wi * 64;
+        let mut m = word;
+        while m != 0 {
+            let t = m.trailing_zeros() as usize;
+            let xp = xt.add((base + t) * b + c0);
+            let mut c = 0usize;
+            while c + 4 <= len {
+                vst1q_f32(sp.add(c), vaddq_f32(vld1q_f32(sp.add(c)), vld1q_f32(xp.add(c))));
+                c += 4;
+            }
+            while c < len {
+                *sp.add(c) += *xp.add(c);
+                c += 1;
+            }
+            m &= m - 1;
+        }
+    }
+}
+
+pub(super) fn neon_sign_dot(col: &[u64], x: &[f32], _total: f32) -> f32 {
+    assert!(col.len() * 64 >= x.len(), "sign_dot: packed column too short");
+    // SAFETY: reads of x stay below x.len(); word reads stay below
+    // col.len() by the assert. NEON baseline.
+    unsafe { sign_dot_neon(col, x.as_ptr(), x.len()) }
+}
+
+unsafe fn sign_dot_neon(col: &[u64], x: *const f32, k: usize) -> f32 {
+    // lane j of a 4-wide block tests weight bit j of the broadcast
+    // nibble; bit 0 (weight -1) flips the lane's sign via XOR with
+    // 0x8000_0000 — the same bit trick as the x86 rungs.
+    let lane: uint32x4_t = vld1q_u32([1u32, 2, 4, 8].as_ptr());
+    let signbit = vdupq_n_u32(0x8000_0000);
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    let mut r = 0usize;
+    while r + 8 <= k {
+        let b0 = vdupq_n_u32(((*col.get_unchecked(r >> 6) >> (r & 63)) & 0xf) as u32);
+        let b1 = vdupq_n_u32(((*col.get_unchecked((r + 4) >> 6) >> ((r + 4) & 63)) & 0xf) as u32);
+        let f0 = vbicq_u32(signbit, vceqq_u32(vandq_u32(b0, lane), lane));
+        let f1 = vbicq_u32(signbit, vceqq_u32(vandq_u32(b1, lane), lane));
+        let v0 = veorq_u32(vreinterpretq_u32_f32(vld1q_f32(x.add(r))), f0);
+        let v1 = veorq_u32(vreinterpretq_u32_f32(vld1q_f32(x.add(r + 4))), f1);
+        acc0 = vaddq_f32(acc0, vreinterpretq_f32_u32(v0));
+        acc1 = vaddq_f32(acc1, vreinterpretq_f32_u32(v1));
+        r += 8;
+    }
+    if r + 4 <= k {
+        let b0 = vdupq_n_u32(((*col.get_unchecked(r >> 6) >> (r & 63)) & 0xf) as u32);
+        let f0 = vbicq_u32(signbit, vceqq_u32(vandq_u32(b0, lane), lane));
+        let v0 = veorq_u32(vreinterpretq_u32_f32(vld1q_f32(x.add(r))), f0);
+        acc0 = vaddq_f32(acc0, vreinterpretq_f32_u32(v0));
+        r += 4;
+    }
+    let mut s = vaddvq_f32(vaddq_f32(acc0, acc1));
+    while r < k {
+        let bit = (*col.get_unchecked(r >> 6) >> (r & 63)) & 1;
+        let v = *x.add(r);
+        s += if bit == 1 { v } else { -v };
+        r += 1;
+    }
+    s
+}
+
+pub(super) fn neon_panel(k: usize, pa: &[f32], pb: &[f32], c: &mut [f32], ldc: usize, acc: bool) {
+    const MR: usize = 4;
+    const NR: usize = 8;
+    assert!(pa.len() >= k * MR, "neon_panel: packed LHS too short");
+    assert!(pb.len() >= k * NR, "neon_panel: packed RHS too short");
+    assert!(ldc >= NR && c.len() >= (MR - 1) * ldc + NR, "neon_panel: C tile out of range");
+    // SAFETY: NEON baseline; the asserts bound every pa/pb read at
+    // k*MR / k*NR and every C access at row r's [r*ldc, r*ldc+NR).
+    unsafe { panel_neon(k, pa.as_ptr(), pb.as_ptr(), c.as_mut_ptr(), ldc, acc) }
+}
+
+unsafe fn panel_neon(k: usize, pa: *const f32, pb: *const f32, c: *mut f32, ldc: usize, acc: bool) {
+    // 4x8 tile in eight q-register accumulators: acc{r}{h} covers row r,
+    // columns h*4 .. h*4+4; vfmaq_n_f32 broadcasts the packed A value.
+    let mut a00 = vdupq_n_f32(0.0);
+    let mut a01 = vdupq_n_f32(0.0);
+    let mut a10 = vdupq_n_f32(0.0);
+    let mut a11 = vdupq_n_f32(0.0);
+    let mut a20 = vdupq_n_f32(0.0);
+    let mut a21 = vdupq_n_f32(0.0);
+    let mut a30 = vdupq_n_f32(0.0);
+    let mut a31 = vdupq_n_f32(0.0);
+    for kk in 0..k {
+        let ap = pa.add(kk * 4);
+        let bp = pb.add(kk * 8);
+        let b0 = vld1q_f32(bp);
+        let b1 = vld1q_f32(bp.add(4));
+        let v0 = *ap;
+        a00 = vfmaq_n_f32(a00, b0, v0);
+        a01 = vfmaq_n_f32(a01, b1, v0);
+        let v1 = *ap.add(1);
+        a10 = vfmaq_n_f32(a10, b0, v1);
+        a11 = vfmaq_n_f32(a11, b1, v1);
+        let v2 = *ap.add(2);
+        a20 = vfmaq_n_f32(a20, b0, v2);
+        a21 = vfmaq_n_f32(a21, b1, v2);
+        let v3 = *ap.add(3);
+        a30 = vfmaq_n_f32(a30, b0, v3);
+        a31 = vfmaq_n_f32(a31, b1, v3);
+    }
+    let rows = [[a00, a01], [a10, a11], [a20, a21], [a30, a31]];
+    for (r, half) in rows.iter().enumerate() {
+        let cp = c.add(r * ldc);
+        if acc {
+            vst1q_f32(cp, vaddq_f32(vld1q_f32(cp), half[0]));
+            vst1q_f32(cp.add(4), vaddq_f32(vld1q_f32(cp.add(4)), half[1]));
+        } else {
+            vst1q_f32(cp, half[0]);
+            vst1q_f32(cp.add(4), half[1]);
+        }
+    }
+}

@@ -1,36 +1,42 @@
 //! Runtime-dispatched SIMD microkernels for the hot inner loops.
 //!
-//! The blocked GEMM trio (`kernel/gemm.rs`) and the packed sign-GEMM
-//! (`binary/packed.rs`) keep their tiling, threading and zero-skip
+//! The panel GEMM trio (`kernel/gemm.rs`) and the packed sign-GEMM
+//! (`binary/packed.rs`) keep their tiling, threading and exactness
 //! structure, but their innermost loops go through a [`Kernels`] table of
 //! function pointers selected once per process:
 //!
-//! * **avx2** — 8-lane AVX2 + FMA microkernels, plus the bit-trick single
-//!   sign-dot (each 64-bit weight word drives sign-flips of activation
-//!   lanes via XOR with a mask expanded from the bits).
+//! * **avx2** — 8-lane AVX2 + FMA microkernels (a 4x16 register-tiled
+//!   panel kernel holding C in eight ymm registers), plus the bit-trick
+//!   single sign-dot (each 64-bit weight word drives sign-flips of
+//!   activation lanes via XOR with a mask expanded from the bits).
 //! * **sse2** — 4-lane baseline-x86_64 microkernels (always available on
 //!   `x86_64`; the rung the dispatcher lands on when AVX2 is absent).
-//! * **scalar** — portable Rust, byte-for-byte the kernels that shipped
-//!   before this layer existed. The correctness oracle for everything
-//!   above, and the only rung on non-x86 targets.
+//!   Its panel kernel is 4x8 over eight xmm accumulators.
+//! * **neon** — 4-lane aarch64 NEON microkernels (baseline on every
+//!   aarch64 target, so detection always lands here on ARM). 4x8 panel
+//!   kernel over eight q-register accumulators.
+//! * **scalar** — portable Rust, byte-for-byte the strip kernels that
+//!   shipped before this layer existed plus a portable 4x8 panel kernel.
+//!   The correctness oracle for everything above, and the only rung on
+//!   targets that are neither x86_64 nor aarch64.
 //!
-//! Selection happens on first use: `BCRUN_SIMD={auto,avx2,sse2,scalar}`
-//! when set (validated like `BCRUN_THREADS` — a typo or an ISA the host
-//! cannot run fails loudly, and `bcrun` checks it up front), else the best
-//! rung `is_x86_feature_detected!` reports. [`set_active`] re-points the
-//! table at runtime — the hook `perf_gemm`'s dispatch-ladder series use;
-//! tests instead go through the side-door [`kernels_for`] so they never
-//! mutate process-global state.
+//! Selection happens on first use:
+//! `BCRUN_SIMD={auto,avx2,sse2,neon,scalar}` when set (validated like
+//! `BCRUN_THREADS` — a typo or an ISA the host cannot run fails loudly,
+//! and `bcrun` checks it up front), else the best rung feature detection
+//! reports. [`set_active`] re-points the table at runtime — the hook
+//! `perf_gemm`'s dispatch-ladder series use; tests instead go through the
+//! side-door [`kernels_for`] so they never mutate process-global state.
 //!
 //! ## Safety boundary
 //!
 //! Every `unsafe` block of the SIMD layer lives in this directory
-//! (`x86.rs` for the ISA-specific intrinsics). The table entries are safe
-//! `fn`s: each shim validates slice lengths itself (so its `unsafe`
-//! contract never depends on a distant caller) and an AVX2 shim is only
-//! reachable through a table that runtime detection approved, so the
-//! `#[target_feature]` call inside it cannot fault. See DESIGN.md
-//! ("SIMD dispatch") for how to add an ISA.
+//! (`x86.rs` / `aarch64.rs` for the ISA-specific intrinsics). The table
+//! entries are safe `fn`s: each shim validates slice lengths itself (so
+//! its `unsafe` contract never depends on a distant caller) and an AVX2
+//! shim is only reachable through a table that runtime detection
+//! approved, so the `#[target_feature]` call inside it cannot fault. See
+//! DESIGN.md ("SIMD dispatch") for how to add an ISA.
 //!
 //! ## Exactness contract (pinned by `tests/simd_kernels.rs`)
 //!
@@ -48,6 +54,9 @@ use crate::util::pool::env_setting;
 #[cfg(target_arch = "x86_64")]
 mod x86;
 
+#[cfg(target_arch = "aarch64")]
+mod aarch64;
+
 /// The instruction-set rungs the dispatcher can select.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum Isa {
@@ -57,6 +66,8 @@ pub enum Isa {
     Sse2,
     /// 8-lane AVX2 + FMA (runtime-detected).
     Avx2,
+    /// 4-lane NEON (baseline on every `aarch64` target).
+    Neon,
 }
 
 impl Isa {
@@ -66,6 +77,7 @@ impl Isa {
             Isa::Scalar => "scalar",
             Isa::Sse2 => "sse2",
             Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
         }
     }
 
@@ -75,12 +87,15 @@ impl Isa {
             Isa::Scalar => true,
             Isa::Sse2 => cfg!(target_arch = "x86_64"),
             Isa::Avx2 => detect() == Isa::Avx2,
+            Isa::Neon => cfg!(target_arch = "aarch64"),
         }
     }
 }
 
 /// Every rung, best first (iterate + filter by [`Isa::supported`]).
-pub const ALL_ISAS: [Isa; 3] = [Isa::Avx2, Isa::Sse2, Isa::Scalar];
+/// Avx2/Sse2 and Neon are mutually exclusive per target, so "best first"
+/// is well-defined within any one host's supported subset.
+pub const ALL_ISAS: [Isa; 4] = [Isa::Avx2, Isa::Sse2, Isa::Neon, Isa::Scalar];
 
 /// `c_r[j] += a[r] * b[j]` for four output rows sharing one B panel.
 pub type Axpy4Fn = fn(&[f32; 4], &[f32], &mut [f32], &mut [f32], &mut [f32], &mut [f32]);
@@ -97,6 +112,22 @@ pub type SignAccumFn = fn(&[u64], &[f32], usize, usize, &mut [f32]);
 /// is `Σ_i x[i]` (the scalar rung computes `2 * selected - total`, the
 /// SIMD rungs sign-flip lanes directly and ignore it).
 pub type SignDotFn = fn(&[u64], &[f32], f32) -> f32;
+/// Register-tiled panel microkernel: `panel(k, pa, pb, c, ldc, acc)`
+/// computes the full `mr x nr` product of an `mr`-row LHS panel (`pa`,
+/// k-major, `mr` interleaved floats per k-step) against an `nr`-column
+/// RHS panel (`pb`, k-major, `nr` floats per k-step) in local register
+/// accumulators, then **stores** into C rows of stride `ldc` when
+/// `acc == false` or **adds** into them when `acc == true` (the k-blocked
+/// driver passes `acc = kc0 > 0`). C must hold `(mr-1)*ldc + nr` floats.
+/// The per-lane accumulation order over k is fixed per ISA, so a given
+/// (panel, k-block) always produces identical bits.
+pub type PanelFn = fn(usize, &[f32], &[f32], &mut [f32], usize, bool);
+
+/// Upper bound on [`Kernels::mr`] across every table (the edge-tile
+/// scratch and ISA-independent packing reservations are sized to these).
+pub const MR_MAX: usize = 4;
+/// Upper bound on [`Kernels::nr`] across every table.
+pub const NR_MAX: usize = 16;
 
 /// Upper bound on [`Kernels::sel_chunk`]: the packed engine's stack
 /// accumulator strip is sized to this.
@@ -113,9 +144,16 @@ pub struct Kernels {
     pub add: AddFn,
     pub sign_accum: SignAccumFn,
     pub sign_dot: SignDotFn,
+    /// The register-tiled f32 panel kernel ([`PanelFn`]) and its tile
+    /// geometry: `mr` LHS rows by `nr` RHS columns per call. `pack_lhs` /
+    /// `pack_rhs` lay panels out to exactly this geometry, so the kernel
+    /// streams two contiguous buffers.
+    pub panel: PanelFn,
+    pub mr: usize,
+    pub nr: usize,
     /// Batch-column chunk width for the packed batched kernels (<=
     /// [`SEL_CHUNK_MAX`]). AVX2 uses 64 so the whole chunk lives in
-    /// eight ymm registers; scalar/SSE2 gain nothing from register
+    /// eight ymm registers; scalar/SSE2/NEON gain nothing from register
     /// residency and use 128 to halve the per-column bit-decode passes.
     /// Chunking never changes results (lanes are independent columns).
     pub sel_chunk: usize,
@@ -129,6 +167,9 @@ static SCALAR: Kernels = Kernels {
     add: scalar::add,
     sign_accum: scalar::sign_accum,
     sign_dot: scalar::sign_dot,
+    panel: scalar::panel4x8,
+    mr: 4,
+    nr: 8,
     sel_chunk: 128,
 };
 
@@ -141,6 +182,9 @@ static SSE2: Kernels = Kernels {
     add: x86::sse2_add,
     sign_accum: x86::sse2_sign_accum,
     sign_dot: x86::sse2_sign_dot,
+    panel: x86::sse2_panel,
+    mr: 4,
+    nr: 8,
     sel_chunk: 128,
 };
 
@@ -153,7 +197,25 @@ static AVX2: Kernels = Kernels {
     add: x86::avx2_add,
     sign_accum: x86::avx2_sign_accum,
     sign_dot: x86::avx2_sign_dot,
+    panel: x86::avx2_panel,
+    mr: 4,
+    nr: 16,
     sel_chunk: 64,
+};
+
+#[cfg(target_arch = "aarch64")]
+static NEON: Kernels = Kernels {
+    isa: Isa::Neon,
+    axpy4: aarch64::neon_axpy4,
+    axpy1: aarch64::neon_axpy1,
+    dot: aarch64::neon_dot,
+    add: aarch64::neon_add,
+    sign_accum: aarch64::neon_sign_accum,
+    sign_dot: aarch64::neon_sign_dot,
+    panel: aarch64::neon_panel,
+    mr: 4,
+    nr: 8,
+    sel_chunk: 128,
 };
 
 /// Best rung this host can run (`is_x86_feature_detected!` on x86_64,
@@ -171,7 +233,13 @@ fn detect_impl() -> Isa {
     }
 }
 
-#[cfg(not(target_arch = "x86_64"))]
+#[cfg(target_arch = "aarch64")]
+fn detect_impl() -> Isa {
+    // NEON is architecturally guaranteed on aarch64.
+    Isa::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
 fn detect_impl() -> Isa {
     Isa::Scalar
 }
@@ -195,7 +263,9 @@ pub fn kernels_for(isa: Isa) -> &'static Kernels {
         Isa::Sse2 => &SSE2,
         #[cfg(target_arch = "x86_64")]
         Isa::Avx2 => &AVX2,
-        #[cfg(not(target_arch = "x86_64"))]
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => &NEON,
+        #[allow(unreachable_patterns)]
         _ => unreachable!("unsupported ISA passed the support check"),
     }
 }
@@ -207,6 +277,7 @@ fn isa_code(isa: Isa) -> u8 {
         Isa::Scalar => 1,
         Isa::Sse2 => 2,
         Isa::Avx2 => 3,
+        Isa::Neon => 4,
     }
 }
 
@@ -215,6 +286,7 @@ fn isa_from_code(code: u8) -> Isa {
         1 => Isa::Scalar,
         2 => Isa::Sse2,
         3 => Isa::Avx2,
+        4 => Isa::Neon,
         _ => unreachable!("invalid ISA code {code}"),
     }
 }
@@ -270,8 +342,9 @@ pub fn parse_simd(var: Option<&str>) -> Result<Option<Isa>, String> {
             "auto" => Ok(None),
             "avx2" => Ok(Some(Isa::Avx2)),
             "sse2" => Ok(Some(Isa::Sse2)),
+            "neon" => Ok(Some(Isa::Neon)),
             "scalar" => Ok(Some(Isa::Scalar)),
-            _ => Err(format!("BCRUN_SIMD must be one of auto|avx2|sse2|scalar, got '{raw}'")),
+            _ => Err(format!("BCRUN_SIMD must be one of auto|avx2|sse2|neon|scalar, got '{raw}'")),
         },
     }
 }
@@ -302,7 +375,7 @@ pub fn resolve_env() -> Result<Isa, String> {
 /// Highest row index with a set bit in a packed column, if any. Used by
 /// the SIMD shims to validate their stripe reads up front (O(words), paid
 /// once per column-chunk call).
-#[cfg(target_arch = "x86_64")]
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
 pub(crate) fn highest_set_row(col: &[u64]) -> Option<usize> {
     for (wi, &word) in col.iter().enumerate().rev() {
         if word != 0 {
@@ -391,6 +464,37 @@ mod scalar {
         }
     }
 
+    /// Portable 4x8 panel microkernel (see [`super::PanelFn`]): the
+    /// whole C tile lives in a local array the optimizer keeps in
+    /// registers; one pass over k, then a single store/add sweep.
+    pub(super) fn panel4x8(k: usize, pa: &[f32], pb: &[f32], c: &mut [f32], ldc: usize, acc: bool) {
+        const MR: usize = 4;
+        const NR: usize = 8;
+        assert!(pa.len() >= k * MR, "panel4x8: packed LHS too short");
+        assert!(pb.len() >= k * NR, "panel4x8: packed RHS too short");
+        assert!(ldc >= NR && c.len() >= (MR - 1) * ldc + NR, "panel4x8: C tile out of range");
+        let mut t = [[0f32; NR]; MR];
+        for kk in 0..k {
+            let av = &pa[kk * MR..kk * MR + MR];
+            let bv = &pb[kk * NR..kk * NR + NR];
+            for (tr, &ar) in t.iter_mut().zip(av) {
+                for (tv, &bj) in tr.iter_mut().zip(bv) {
+                    *tv += ar * bj;
+                }
+            }
+        }
+        for (r, tr) in t.iter().enumerate() {
+            let crow = &mut c[r * ldc..r * ldc + NR];
+            if acc {
+                for (cv, &tv) in crow.iter_mut().zip(tr) {
+                    *cv += tv;
+                }
+            } else {
+                crow.copy_from_slice(tr);
+            }
+        }
+    }
+
     pub(super) fn sign_dot(col: &[u64], x: &[f32], total: f32) -> f32 {
         let k = x.len();
         let mut sel = 0f32;
@@ -434,14 +538,31 @@ mod tests {
         assert_eq!(parse_simd(Some("auto")), Ok(None));
         assert_eq!(parse_simd(Some(" AVX2 ")), Ok(Some(Isa::Avx2)));
         assert_eq!(parse_simd(Some("sse2")), Ok(Some(Isa::Sse2)));
+        assert_eq!(parse_simd(Some("neon")), Ok(Some(Isa::Neon)));
+        assert_eq!(parse_simd(Some(" NEON ")), Ok(Some(Isa::Neon)));
         assert_eq!(parse_simd(Some("scalar")), Ok(Some(Isa::Scalar)));
-        for bad in ["", "avx512", "yes", "1"] {
+        for bad in ["", "avx512", "sve", "yes", "1"] {
             let err = parse_simd(Some(bad)).unwrap_err();
             // the quoted form is non-vacuous even for the empty string
             assert!(
-                err.contains("auto|avx2|sse2|scalar") && err.contains(&format!("'{bad}'")),
+                err.contains("auto|avx2|sse2|neon|scalar") && err.contains(&format!("'{bad}'")),
                 "unhelpful error for {bad:?}: {err}"
             );
+        }
+    }
+
+    #[test]
+    fn neon_is_gated_on_aarch64() {
+        assert_eq!(Isa::Neon.supported(), cfg!(target_arch = "aarch64"));
+        if !Isa::Neon.supported() {
+            // requesting the rung anywhere must fail fast, same as an
+            // unsupported avx2 request: both the bench hook and the
+            // BCRUN_SIMD resolution path refuse it with a named error.
+            let err = set_active(Isa::Neon).unwrap_err();
+            assert!(err.contains("neon"), "error should name the rung: {err}");
+        } else {
+            assert_eq!(kernels_for(Isa::Neon).isa, Isa::Neon);
+            assert_eq!(detect(), Isa::Neon);
         }
     }
 
@@ -460,6 +581,44 @@ mod tests {
     fn sse2_is_baseline_on_x86_64() {
         assert!(Isa::Sse2.supported());
         assert_eq!(kernels_for(Isa::Sse2).isa, Isa::Sse2);
+    }
+
+    #[test]
+    fn panel_microkernel_matches_reference_on_every_arm() {
+        // ragged k values, both store (acc=false) and accumulate
+        // (acc=true), wide-ldc C to catch stride bugs
+        for &k in &[0usize, 1, 3, 8, 17, 64, 65] {
+            for isa in ALL_ISAS.iter().filter(|i| i.supported()) {
+                let kern = kernels_for(*isa);
+                let (mr, nr) = (kern.mr, kern.nr);
+                assert!(mr <= MR_MAX && nr <= NR_MAX, "{isa:?} geometry exceeds maxima");
+                let pa = rand(k * mr, 1000 + k as u64);
+                let pb = rand(k * nr, 2000 + k as u64);
+                let ldc = nr + 3;
+                let init = rand(mr * ldc, 3000 + k as u64);
+                for acc in [false, true] {
+                    let mut c = init.clone();
+                    (kern.panel)(k, &pa, &pb, &mut c, ldc, acc);
+                    for r in 0..mr {
+                        for j in 0..nr {
+                            let mut want: f64 = if acc { init[r * ldc + j] as f64 } else { 0.0 };
+                            for kk in 0..k {
+                                want += pa[kk * mr + r] as f64 * pb[kk * nr + j] as f64;
+                            }
+                            let got = c[r * ldc + j] as f64;
+                            assert!(
+                                (got - want).abs() < 1e-4 * (1.0 + want.abs()),
+                                "{isa:?} panel k={k} acc={acc} [{r},{j}]: {got} vs {want}"
+                            );
+                        }
+                        // lanes past nr are untouched
+                        for j in nr..ldc {
+                            assert_eq!(c[r * ldc + j], init[r * ldc + j], "{isa:?} clobbered ldc gap");
+                        }
+                    }
+                }
+            }
+        }
     }
 
     #[test]

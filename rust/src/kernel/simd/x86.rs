@@ -1,6 +1,7 @@
 //! x86_64 microkernels: SSE2 (baseline, always runnable) and AVX2 + FMA
-//! (runtime-detected). This file is the crate's only home of SIMD
-//! intrinsics; everything `unsafe` is cordoned here behind safe shims.
+//! (runtime-detected). SIMD intrinsics live only in this file and its
+//! aarch64 sibling; everything `unsafe` is cordoned here behind safe
+//! shims.
 //!
 //! Shim contract: each `pub(super)` shim is a *safe* `fn` matching the
 //! [`super::Kernels`] table signature. It derives the element count from
@@ -189,6 +190,59 @@ unsafe fn sign_accum_sse2(col: &[u64], xt: *const f32, b: usize, c0: usize, sel:
                 c += 1;
             }
             m &= m - 1;
+        }
+    }
+}
+
+pub(super) fn sse2_panel(k: usize, pa: &[f32], pb: &[f32], c: &mut [f32], ldc: usize, acc: bool) {
+    const MR: usize = 4;
+    const NR: usize = 8;
+    assert!(pa.len() >= k * MR, "sse2_panel: packed LHS too short");
+    assert!(pb.len() >= k * NR, "sse2_panel: packed RHS too short");
+    assert!(ldc >= NR && c.len() >= (MR - 1) * ldc + NR, "sse2_panel: C tile out of range");
+    // SAFETY: SSE2 baseline; the asserts bound every pa/pb read at
+    // k*MR / k*NR and every C access at row r's [r*ldc, r*ldc+NR).
+    unsafe { panel_sse2(k, pa.as_ptr(), pb.as_ptr(), c.as_mut_ptr(), ldc, acc) }
+}
+
+unsafe fn panel_sse2(k: usize, pa: *const f32, pb: *const f32, c: *mut f32, ldc: usize, acc: bool) {
+    // 4x8 tile in eight xmm accumulators: acc{r}{h} covers row r,
+    // columns h*4 .. h*4+4.
+    let mut a00 = _mm_setzero_ps();
+    let mut a01 = _mm_setzero_ps();
+    let mut a10 = _mm_setzero_ps();
+    let mut a11 = _mm_setzero_ps();
+    let mut a20 = _mm_setzero_ps();
+    let mut a21 = _mm_setzero_ps();
+    let mut a30 = _mm_setzero_ps();
+    let mut a31 = _mm_setzero_ps();
+    for kk in 0..k {
+        let ap = pa.add(kk * 4);
+        let bp = pb.add(kk * 8);
+        let b0 = _mm_loadu_ps(bp);
+        let b1 = _mm_loadu_ps(bp.add(4));
+        let v0 = _mm_set1_ps(*ap);
+        a00 = _mm_add_ps(a00, _mm_mul_ps(v0, b0));
+        a01 = _mm_add_ps(a01, _mm_mul_ps(v0, b1));
+        let v1 = _mm_set1_ps(*ap.add(1));
+        a10 = _mm_add_ps(a10, _mm_mul_ps(v1, b0));
+        a11 = _mm_add_ps(a11, _mm_mul_ps(v1, b1));
+        let v2 = _mm_set1_ps(*ap.add(2));
+        a20 = _mm_add_ps(a20, _mm_mul_ps(v2, b0));
+        a21 = _mm_add_ps(a21, _mm_mul_ps(v2, b1));
+        let v3 = _mm_set1_ps(*ap.add(3));
+        a30 = _mm_add_ps(a30, _mm_mul_ps(v3, b0));
+        a31 = _mm_add_ps(a31, _mm_mul_ps(v3, b1));
+    }
+    let rows = [[a00, a01], [a10, a11], [a20, a21], [a30, a31]];
+    for (r, half) in rows.iter().enumerate() {
+        let cp = c.add(r * ldc);
+        if acc {
+            _mm_storeu_ps(cp, _mm_add_ps(_mm_loadu_ps(cp), half[0]));
+            _mm_storeu_ps(cp.add(4), _mm_add_ps(_mm_loadu_ps(cp.add(4)), half[1]));
+        } else {
+            _mm_storeu_ps(cp, half[0]);
+            _mm_storeu_ps(cp.add(4), half[1]);
         }
     }
 }
@@ -471,6 +525,61 @@ unsafe fn sign_accum_avx2(col: &[u64], xt: *const f32, b: usize, c0: usize, sel:
                 }
                 m &= m - 1;
             }
+        }
+    }
+}
+
+pub(super) fn avx2_panel(k: usize, pa: &[f32], pb: &[f32], c: &mut [f32], ldc: usize, acc: bool) {
+    const MR: usize = 4;
+    const NR: usize = 16;
+    assert!(pa.len() >= k * MR, "avx2_panel: packed LHS too short");
+    assert!(pb.len() >= k * NR, "avx2_panel: packed RHS too short");
+    assert!(ldc >= NR && c.len() >= (MR - 1) * ldc + NR, "avx2_panel: C tile out of range");
+    // SAFETY: the asserts bound every pa/pb read and every C access;
+    // AVX2 table gating as in avx2_axpy4.
+    unsafe { panel_avx2(k, pa.as_ptr(), pb.as_ptr(), c.as_mut_ptr(), ldc, acc) }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn panel_avx2(k: usize, pa: *const f32, pb: *const f32, c: *mut f32, ldc: usize, acc: bool) {
+    // 4x16 tile in eight ymm accumulators: acc{r}{h} covers row r,
+    // columns h*8 .. h*8+8. FMA throughput-bound: two fused ops per
+    // broadcast A value.
+    let mut a00 = _mm256_setzero_ps();
+    let mut a01 = _mm256_setzero_ps();
+    let mut a10 = _mm256_setzero_ps();
+    let mut a11 = _mm256_setzero_ps();
+    let mut a20 = _mm256_setzero_ps();
+    let mut a21 = _mm256_setzero_ps();
+    let mut a30 = _mm256_setzero_ps();
+    let mut a31 = _mm256_setzero_ps();
+    for kk in 0..k {
+        let ap = pa.add(kk * 4);
+        let bp = pb.add(kk * 16);
+        let b0 = _mm256_loadu_ps(bp);
+        let b1 = _mm256_loadu_ps(bp.add(8));
+        let v0 = _mm256_broadcast_ss(&*ap);
+        a00 = _mm256_fmadd_ps(v0, b0, a00);
+        a01 = _mm256_fmadd_ps(v0, b1, a01);
+        let v1 = _mm256_broadcast_ss(&*ap.add(1));
+        a10 = _mm256_fmadd_ps(v1, b0, a10);
+        a11 = _mm256_fmadd_ps(v1, b1, a11);
+        let v2 = _mm256_broadcast_ss(&*ap.add(2));
+        a20 = _mm256_fmadd_ps(v2, b0, a20);
+        a21 = _mm256_fmadd_ps(v2, b1, a21);
+        let v3 = _mm256_broadcast_ss(&*ap.add(3));
+        a30 = _mm256_fmadd_ps(v3, b0, a30);
+        a31 = _mm256_fmadd_ps(v3, b1, a31);
+    }
+    let rows = [[a00, a01], [a10, a11], [a20, a21], [a30, a31]];
+    for (r, half) in rows.iter().enumerate() {
+        let cp = c.add(r * ldc);
+        if acc {
+            _mm256_storeu_ps(cp, _mm256_add_ps(_mm256_loadu_ps(cp), half[0]));
+            _mm256_storeu_ps(cp.add(8), _mm256_add_ps(_mm256_loadu_ps(cp.add(8)), half[1]));
+        } else {
+            _mm256_storeu_ps(cp, half[0]);
+            _mm256_storeu_ps(cp.add(8), half[1]);
         }
     }
 }

@@ -13,9 +13,10 @@
 //!   minibatch pipeline, a backend-pluggable [`runtime::Executor`] with a
 //!   pure-Rust reference backend (and, behind the `pjrt` cargo feature,
 //!   the PJRT runtime executing the AOT artifacts), the [`kernel`]
-//!   hot-path layer (blocked multithreaded f32 GEMM + the packed sign-GEMM
-//!   training path over the [`util::pool`] fork-join pool, with
-//!   runtime-dispatched AVX2/SSE2 microkernels under [`kernel::simd`]),
+//!   hot-path layer (panel-packed multithreaded f32 GEMM + the packed
+//!   sign-GEMM training path over the [`util::pool`] fork-join pool, with
+//!   runtime-dispatched register-tiled microkernels — AVX2/SSE2 on
+//!   x86-64, NEON on aarch64 — under [`kernel::simd`]),
 //!   the experiment driver reproducing every table/figure, a bit-packed
 //!   multiplication-free inference engine, the [`serve`] online layer
 //!   (HTTP server with dynamic micro-batching over the packed engine,

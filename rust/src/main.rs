@@ -44,8 +44,10 @@ usage: bcrun <info|train|hw|export|infer|serve|loadgen> [flags]
   common:  --backend reference|pjrt (default reference)
            --artifacts DIR (default artifacts, pjrt only) --data-dir DIR
            env BCRUN_THREADS=N caps the kernel thread pool (default: all cores)
-           env BCRUN_SIMD=auto|avx2|sse2|scalar pins the kernel ISA
-             (default auto: best of AVX2+FMA > SSE2 > scalar the host runs)
+           env BCRUN_SIMD=auto|avx2|sse2|neon|scalar pins the kernel ISA
+             (default auto: best of AVX2+FMA > SSE2 on x86-64, NEON on
+             aarch64, scalar elsewhere; pinning an ISA the host lacks is
+             a startup error)
   train:   --model NAME --dataset mnist|cifar10|svhn --mode none|det|stoch
            --opt sgd|nesterov|adam --epochs N --lr-start F --lr-end F
            --dropout F --no-lr-scale --seed N --n-train N --n-test N

@@ -7,10 +7,10 @@
 //! eigendecomposition A = V diag(d) V^T. O(n^3), done once per dataset and
 //! cached; n = 3072 for CIFAR-scale ZCA.
 //!
-//! The f32 GEMM trio that used to live here moved to [`crate::kernel`]
-//! (blocked + multithreaded); `matmul_f32`/`matmul_at_b`/`matmul_a_bt`
-//! remain as allocating back-compat wrappers, and the f64 `matmul` rides
-//! the same thread pool.
+//! This module is eigendecomposition only. The f32 GEMM trio lives in
+//! [`crate::kernel`] (panel-packed + multithreaded) and the whitening
+//! pipeline calls it directly; the allocating back-compat wrappers that
+//! used to sit here are gone.
 
 /// Column-major-agnostic square matrix as a flat row-major Vec<f64>.
 #[derive(Clone)]
@@ -190,59 +190,6 @@ pub fn sym_eig(a: &[f64], n: usize) -> Result<SymEig, String> {
     Ok(SymEig { values: d, vectors: z, n })
 }
 
-/// C[m x n] = A[m x k] @ B[k x n], row-major f32. Allocating wrapper over
-/// the blocked, pool-parallel [`kernel::gemm`](crate::kernel::gemm) (the
-/// GEMM trio's one home since the kernel-layer refactor).
-pub fn matmul_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut c = vec![0f32; m * n];
-    crate::kernel::gemm(a, b, m, k, n, &mut c);
-    c
-}
-
-/// C[k x n] = A^T @ B where A is (m x k) and B is (m x n) — the backward
-/// pass's weight-gradient GEMM (dW = X^T dZ); wraps
-/// [`kernel::gemm_at_b`](crate::kernel::gemm_at_b).
-pub fn matmul_at_b(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut c = vec![0f32; k * n];
-    crate::kernel::gemm_at_b(a, b, m, k, n, &mut c);
-    c
-}
-
-/// C[m x k] = A @ B^T where A is (m x n) and B is (k x n) — the backward
-/// pass's activation-gradient GEMM (dX = dZ W^T); wraps
-/// [`kernel::gemm_a_bt`](crate::kernel::gemm_a_bt).
-pub fn matmul_a_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
-    let mut c = vec![0f32; m * k];
-    crate::kernel::gemm_a_bt(a, b, m, n, k, &mut c);
-    c
-}
-
-/// C = A * B for row-major f64 (ZCA whitening); row blocks ride the
-/// fork-join pool, each row keeping the seed's zero-skip ikj order.
-pub fn matmul(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(b.len(), k * n);
-    let mut c = vec![0.0; m * n];
-    let cp = crate::util::pool::SendPtr(c.as_mut_ptr());
-    crate::util::pool::par_rows(m, 8, &|lo, hi| {
-        // SAFETY: par_rows hands out disjoint row ranges of C.
-        let rows = unsafe { cp.slice(lo * n, (hi - lo) * n) };
-        for (r, crow) in rows.chunks_exact_mut(n).enumerate() {
-            let i = lo + r;
-            for (p, &av) in a[i * k..(i + 1) * k].iter().enumerate() {
-                if av == 0.0 {
-                    continue;
-                }
-                let brow = &b[p * n..(p + 1) * n];
-                for (cv, &bv) in crow.iter_mut().zip(brow) {
-                    *cv += av * bv;
-                }
-            }
-        }
-    });
-    c
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -328,54 +275,4 @@ mod tests {
         }
     }
 
-    #[test]
-    fn matmul_small() {
-        let a = vec![1.0, 2.0, 3.0, 4.0]; // 2x2
-        let b = vec![5.0, 6.0, 7.0, 8.0];
-        let c = matmul(&a, &b, 2, 2, 2);
-        assert_eq!(c, vec![19.0, 22.0, 43.0, 50.0]);
-    }
-
-    #[test]
-    fn matmul_f32_matches_f64() {
-        let a = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2x3
-        let b = vec![7.0f32, 8.0, 9.0, 10.0, 11.0, 12.0]; // 3x2
-        let c = matmul_f32(&a, &b, 2, 3, 2);
-        assert_eq!(c, vec![58.0, 64.0, 139.0, 154.0]);
-    }
-
-    #[test]
-    fn transposed_gemms_agree_with_explicit_transpose() {
-        let mut rng = Rng::new(31);
-        let (m, k, n) = (5, 7, 4);
-        let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
-        let b: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
-        let w: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
-
-        // A^T B via explicit transpose of A
-        let mut at = vec![0f32; k * m];
-        for t in 0..m {
-            for i in 0..k {
-                at[i * m + t] = a[t * k + i];
-            }
-        }
-        let want = matmul_f32(&at, &b, k, m, n);
-        let got = matmul_at_b(&a, &b, m, k, n);
-        for (x, y) in got.iter().zip(&want) {
-            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
-        }
-
-        // B W^T via explicit transpose of W
-        let mut wt = vec![0f32; n * k];
-        for i in 0..k {
-            for j in 0..n {
-                wt[j * k + i] = w[i * n + j];
-            }
-        }
-        let want = matmul_f32(&b, &wt, m, n, k);
-        let got = matmul_a_bt(&b, &w, m, n, k);
-        for (x, y) in got.iter().zip(&want) {
-            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
-        }
-    }
 }

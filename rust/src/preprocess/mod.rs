@@ -227,53 +227,40 @@ impl Zca {
     }
 
     /// Whiten a dataset in place: y = s0*(x-m) + U (D * (U^T (x-m))).
+    ///
+    /// Batched through the kernel layer's panel GEMMs in row chunks
+    /// (T = Cen·U, column-scaled by D, then T·Uᵀ back to feature space),
+    /// so the dataset-wide scratch stays bounded at ROWS·(d+r) floats and
+    /// the GEMMs — not a hand-rolled per-row loop — carry the 2·d·r work.
     pub fn apply(&self, ds: &mut Dataset) {
         assert_eq!(ds.dim, self.d);
         let d = self.d;
         let r = self.r;
-        let n = ds.len();
-        let threads = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(4);
-        let rows_per = n.div_ceil(threads).max(1);
-        let u = &self.u;
-        let diag = &self.diag;
-        let mean = &self.mean;
-        let s0 = self.s0;
-        std::thread::scope(|s| {
-            for chunk in ds.x.chunks_mut(rows_per * d) {
-                s.spawn(move || {
-                    let mut cen = vec![0f32; d];
-                    let mut t = vec![0f32; r];
-                    for row in chunk.chunks_mut(d) {
-                        for ((c, &v), m) in cen.iter_mut().zip(row.iter()).zip(mean) {
-                            *c = v - m;
-                        }
-                        // t = D * (U^T cen)
-                        t.iter_mut().for_each(|v| *v = 0.0);
-                        for (k, &ck) in cen.iter().enumerate() {
-                            if ck == 0.0 {
-                                continue;
-                            }
-                            let urow = &u[k * r..(k + 1) * r];
-                            for (tv, &uv) in t.iter_mut().zip(urow) {
-                                *tv += ck * uv;
-                            }
-                        }
-                        for (tv, &dv) in t.iter_mut().zip(diag) {
-                            *tv *= dv;
-                        }
-                        // row = s0 * cen + U t
-                        for (i, out) in row.iter_mut().enumerate() {
-                            let urow = &u[i * r..(i + 1) * r];
-                            let mut acc = s0 * cen[i];
-                            for (&uv, &tv) in urow.iter().zip(t.iter()) {
-                                acc += uv * tv;
-                            }
-                            *out = acc;
-                        }
-                    }
-                });
+        const ROWS: usize = 256;
+        let mut cen = vec![0f32; ROWS * d];
+        let mut t = vec![0f32; ROWS * r];
+        for chunk in ds.x.chunks_mut(ROWS * d) {
+            let rows = chunk.len() / d;
+            let cen = &mut cen[..rows * d];
+            let t = &mut t[..rows * r];
+            for (crow, xrow) in cen.chunks_exact_mut(d).zip(chunk.chunks_exact(d)) {
+                for ((c, &v), &m) in crow.iter_mut().zip(xrow).zip(&self.mean) {
+                    *c = v - m;
+                }
             }
-        });
+            // T[rows x r] = Cen · U
+            crate::kernel::gemm(cen, &self.u, rows, d, r, t);
+            for trow in t.chunks_exact_mut(r) {
+                for (tv, &dv) in trow.iter_mut().zip(&self.diag) {
+                    *tv *= dv;
+                }
+            }
+            // chunk[rows x d] = T · Uᵀ  (r == 0 degenerates to fill(0.0))
+            crate::kernel::gemm_a_bt(t, &self.u, rows, r, d, chunk);
+            for (o, &cv) in chunk.iter_mut().zip(cen.iter()) {
+                *o += self.s0 * cv;
+            }
+        }
     }
 
     /// Cache serialization:

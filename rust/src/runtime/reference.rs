@@ -397,6 +397,9 @@ struct Workspace {
     lossv: Vec<f32>,
     errv: Vec<f32>,
     dlogits: Vec<f32>,
+    /// panel-packing buffers for the f32 GEMM trio (presized for every
+    /// layer orientation, so the warmed-up step never grows them).
+    panels: kernel::PanelBuf,
 }
 
 impl Workspace {
@@ -425,6 +428,15 @@ impl Workspace {
         let max_dim = layers.iter().map(|l| l.k.max(l.n)).max().unwrap_or(1);
         let max_k = layers.iter().map(|l| l.k).max().unwrap_or(1);
         let max_n = layers.iter().map(|l| l.n).max().unwrap_or(1);
+        // presize the GEMM panel buffers for every product the step runs:
+        // forward z = a @ W (b x k x n), grad dW = a^T @ dz (k x b x n),
+        // and backward dX = dz @ W^T (b x n x k), per layer
+        let mut panels = kernel::PanelBuf::new();
+        for l in layers {
+            panels.reserve_gemm(b, l.k, l.n);
+            panels.reserve_gemm(l.k, b, l.n);
+            panels.reserve_gemm(b, l.n, l.k);
+        }
         Workspace {
             acts,
             xhat,
@@ -443,6 +455,7 @@ impl Workspace {
             lossv: vec![0f32; b],
             errv: vec![0f32; b],
             dlogits: vec![0f32; b * info.classes],
+            panels,
         }
     }
 }
@@ -624,7 +637,9 @@ impl ReferenceExecutor {
             let a_in: &[f32] = &alo[li];
             let z: &mut [f32] = &mut ahi[0];
             match mode {
-                Mode::None => kernel::gemm(a_in, &state.params[layer.w], b, k, n, z),
+                Mode::None => {
+                    kernel::gemm_into(a_in, &state.params[layer.w], b, k, n, z, &mut ws.panels)
+                }
                 Mode::Det => {
                     let bits = &mut ws.bits[li];
                     bits.pack_det_into(&state.params[layer.w], k, n);
@@ -787,15 +802,29 @@ impl ReferenceExecutor {
                 ws.grad_used[gi + 1] = true;
             }
             // dW = a_in^T · dZ (dense f32: dZ is real-valued either way)
-            kernel::gemm_at_b(&ws.acts[li], dz, b, k, n, &mut ws.grads[layer.w]);
+            kernel::gemm_at_b_into(
+                &ws.acts[li],
+                dz,
+                b,
+                k,
+                n,
+                &mut ws.grads[layer.w],
+                &mut ws.panels,
+            );
             ws.grad_used[layer.w] = true;
             // dX = dZ · Wb^T for the next layer down
             if li > 0 {
                 let dx: &mut [f32] = &mut dnext[..b * k];
                 match mode {
-                    Mode::None => {
-                        kernel::gemm_a_bt(dz, &state.params[layer.w], b, n, k, dx)
-                    }
+                    Mode::None => kernel::gemm_a_bt_into(
+                        dz,
+                        &state.params[layer.w],
+                        b,
+                        n,
+                        k,
+                        dx,
+                        &mut ws.panels,
+                    ),
                     _ => ws.bits[li].tmatmul_scaled_into(
                         dz,
                         b,
@@ -838,7 +867,9 @@ impl ReferenceExecutor {
             let a_in: &[f32] = &alo[li];
             let z: &mut [f32] = &mut ahi[0];
             match hyper.mode {
-                Mode::None => kernel::gemm(a_in, &state.params[layer.w], b, k, n, z),
+                Mode::None => {
+                    kernel::gemm_into(a_in, &state.params[layer.w], b, k, n, z, &mut ws.panels)
+                }
                 Mode::Det => {
                     let bits = &mut ws.bits[li];
                     bits.pack_det_into(&state.params[layer.w], k, n);

@@ -1,0 +1,337 @@
+//! Panel-packing GEMM property suite (PR 6).
+//!
+//! Contracts pinned here, on top of `tests/simd_kernels.rs`:
+//! * pack/unpack roundtrip: `pack_lhs`/`pack_rhs` followed by their
+//!   unpackers reconstruct the logical matrix exactly, for dense and
+//!   strided (transposed) sources, on ragged panel edges.
+//! * panel GEMM ≡ naive oracle: every supported ISA rung of the trio
+//!   (`A·B`, `Aᵀ·B`, `A·Bᵀ`) agrees with the seed's triple loop within
+//!   the 1e-5 L1-mass reordering bound — ragged shapes, batch 1, and
+//!   ±0.0 inputs included.
+//! * `gemm*_into` (caller-owned [`PanelBuf`]) is bit-identical to the
+//!   thread-local-buffer entry points, and the buffer is reusable across
+//!   orientations and shapes.
+//! * pooled ≡ serial bit-exactness survives the panel refactor.
+//! * the `gemm*_strip` baselines (pre-panel kernels, kept for
+//!   `perf_gemm`'s speedup ladder) still agree with the oracle.
+//! * packed sign-GEMM: the panelized batched forward is **bit-exact**
+//!   against the strip baseline (`matmul_scaled_into_strip`), batch 1
+//!   and chunk-edge batches included.
+
+use binaryconnect::binary::packed::BitMatrix;
+use binaryconnect::kernel::pack::{
+    lhs_len, pack_lhs, pack_rhs, rhs_len, unpack_lhs, unpack_rhs, PanelBuf,
+};
+use binaryconnect::kernel::simd::{Isa, ALL_ISAS};
+use binaryconnect::kernel::{self};
+use binaryconnect::prop::check;
+use binaryconnect::util::Rng;
+
+/// Every rung this host can actually execute (always includes scalar).
+fn arms() -> Vec<Isa> {
+    ALL_ISAS.into_iter().filter(|i| i.supported()).collect()
+}
+
+/// A dimension biased onto microkernel tile edges (multiples of the
+/// widest mr/nr geometry ± 1).
+fn edge_dim(r: &mut Rng, tile: usize, max: usize) -> usize {
+    match r.below(4) {
+        0 => tile * (1 + r.below(3)),
+        1 => (tile * (1 + r.below(3))).saturating_sub(1).max(1),
+        2 => tile * (1 + r.below(3)) + 1,
+        _ => 1 + r.below(max),
+    }
+}
+
+/// Values with zeros (both signs) mixed in — the pack-padding and
+/// sign-bit edges.
+fn signed_vals(r: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len)
+        .map(|_| match r.below(8) {
+            0 => 0.0f32,
+            1 => -0.0f32,
+            _ => r.normal(),
+        })
+        .collect()
+}
+
+/// |got - want| <= 1e-5 * (1 + l1) per element, l1 the L1 mass of the
+/// element's products (the f32 reordering bound).
+fn close_l1(name: &str, got: &[f32], want: &[f32], l1: &[f32]) -> Result<(), String> {
+    for (i, ((&g, &w), &m)) in got.iter().zip(want).zip(l1).enumerate() {
+        if (g - w).abs() > 1e-5 * (1.0 + m.abs()) {
+            return Err(format!("{name}[{i}]: {g} vs {w} (l1 {m})"));
+        }
+    }
+    Ok(())
+}
+
+fn bits_equal(name: &str, got: &[f32], want: &[f32]) -> Result<(), String> {
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        if g.to_bits() != w.to_bits() {
+            return Err(format!("{name} not bit-exact at {i}: {g:?} vs {w:?}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_pack_roundtrip_dense_and_strided() {
+    check(
+        "pack/unpack roundtrip (dense + transposed sources)",
+        |r| {
+            let m = edge_dim(r, 4, 40);
+            let k = 1 + r.below(30);
+            let n = edge_dim(r, 16, 50);
+            let a = signed_vals(r, m * k);
+            let b = signed_vals(r, k * n);
+            (m, k, n, a, b)
+        },
+        |(m, k, n, a, b)| {
+            let (m, k, n) = (*m, *k, *n);
+            for mr in [4usize] {
+                let mut pa = vec![f32::NAN; lhs_len(m, k, mr)];
+                pack_lhs(a, k, 1, m, k, mr, 0, m.div_ceil(mr), &mut pa);
+                if unpack_lhs(&pa, m, k, mr) != *a {
+                    return Err(format!("lhs roundtrip m={m} k={k} mr={mr}"));
+                }
+            }
+            for nr in [8usize, 16] {
+                let mut pb = vec![f32::NAN; rhs_len(k, n, nr)];
+                pack_rhs(b, n, 1, k, n, nr, 0, n.div_ceil(nr), &mut pb);
+                if unpack_rhs(&pb, k, n, nr) != *b {
+                    return Err(format!("rhs roundtrip k={k} n={n} nr={nr}"));
+                }
+            }
+            // strided (Aᵀ as LHS): packing a's columns equals packing the
+            // explicit transpose's rows
+            let mut at = vec![0f32; k * m];
+            for i in 0..m {
+                for kk in 0..k {
+                    at[kk * m + i] = a[i * k + kk];
+                }
+            }
+            let mr = 4;
+            let mut via_stride = vec![f32::NAN; lhs_len(k, m, mr)];
+            pack_lhs(a, 1, k, k, m, mr, 0, k.div_ceil(mr), &mut via_stride);
+            let mut via_dense = vec![f32::NAN; lhs_len(k, m, mr)];
+            pack_lhs(&at, m, 1, k, m, mr, 0, k.div_ceil(mr), &mut via_dense);
+            if via_stride != via_dense {
+                return Err(format!("strided lhs pack m={m} k={k}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_panel_trio_matches_naive_every_arm() {
+    check(
+        "panel GEMM trio == naive oracle on every supported arm",
+        |r| {
+            let m = if r.below(5) == 0 { 1 } else { edge_dim(r, 4, 40) }; // batch 1
+            let k = edge_dim(r, 16, 120);
+            let n = edge_dim(r, 16, 90);
+            let a = signed_vals(r, m * k);
+            let b = signed_vals(r, k * n);
+            let bt = signed_vals(r, m * n); // m x n operand for Aᵀ·B
+            (m, k, n, a, b, bt)
+        },
+        |(m, k, n, a, b, bt)| {
+            let (m, k, n) = (*m, *k, *n);
+            let absa: Vec<f32> = a.iter().map(|v| v.abs()).collect();
+            let absb: Vec<f32> = b.iter().map(|v| v.abs()).collect();
+            let absbt: Vec<f32> = bt.iter().map(|v| v.abs()).collect();
+
+            // C = A·B
+            let mut want = vec![0f32; m * n];
+            kernel::gemm_naive(a, b, m, k, n, &mut want);
+            let mut l1 = vec![0f32; m * n];
+            kernel::gemm_naive(&absa, &absb, m, k, n, &mut l1);
+            for &isa in &arms() {
+                let mut got = vec![f32::NAN; m * n];
+                kernel::gemm_with(isa, a, b, m, k, n, &mut got);
+                close_l1(&format!("gemm/{}", isa.name()), &got, &want, &l1)?;
+            }
+
+            // C = Aᵀ·B: A is m x k, B is m x n, C is k x n
+            let mut want = vec![0f32; k * n];
+            kernel::gemm_at_b_naive(a, bt, m, k, n, &mut want);
+            let mut l1 = vec![0f32; k * n];
+            kernel::gemm_at_b_naive(&absa, &absbt, m, k, n, &mut l1);
+            for &isa in &arms() {
+                let mut got = vec![f32::NAN; k * n];
+                kernel::gemm_at_b_with(isa, a, bt, m, k, n, &mut got);
+                close_l1(&format!("at_b/{}", isa.name()), &got, &want, &l1)?;
+            }
+
+            // C = A·Bᵀ: A is m x n (bt), B is k x n (b), C is m x k
+            let mut want = vec![0f32; m * k];
+            kernel::gemm_a_bt_naive(bt, b, m, n, k, &mut want);
+            let mut l1 = vec![0f32; m * k];
+            kernel::gemm_a_bt_naive(&absbt, &absb, m, n, k, &mut l1);
+            for &isa in &arms() {
+                let mut got = vec![f32::NAN; m * k];
+                kernel::gemm_a_bt_with(isa, bt, b, m, n, k, &mut got);
+                close_l1(&format!("a_bt/{}", isa.name()), &got, &want, &l1)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_into_serial_and_pooled_agree_bit_exact() {
+    check(
+        "gemm == gemm_serial == gemm_into (bit-exact), buffer reused",
+        |r| {
+            let m = edge_dim(r, 4, 50);
+            let k = edge_dim(r, 16, 100);
+            let n = edge_dim(r, 16, 80);
+            let a = signed_vals(r, m * k);
+            let b = signed_vals(r, k * n);
+            let bt = signed_vals(r, m * n);
+            (m, k, n, a, b, bt)
+        },
+        |(m, k, n, a, b, bt)| {
+            let (m, k, n) = (*m, *k, *n);
+            let mut buf = PanelBuf::new();
+
+            let mut pooled = vec![0f32; m * n];
+            kernel::gemm(a, b, m, k, n, &mut pooled);
+            let mut serial = vec![f32::NAN; m * n];
+            kernel::gemm_serial(a, b, m, k, n, &mut serial);
+            bits_equal("gemm_serial", &serial, &pooled)?;
+            let mut into = vec![f32::NAN; m * n];
+            kernel::gemm_into(a, b, m, k, n, &mut into, &mut buf);
+            bits_equal("gemm_into", &into, &pooled)?;
+
+            // same buffer carries the other two orientations and shapes
+            let mut pooled = vec![0f32; k * n];
+            kernel::gemm_at_b(a, bt, m, k, n, &mut pooled);
+            let mut into = vec![f32::NAN; k * n];
+            kernel::gemm_at_b_into(a, bt, m, k, n, &mut into, &mut buf);
+            bits_equal("gemm_at_b_into", &into, &pooled)?;
+
+            let mut pooled = vec![0f32; m * k];
+            kernel::gemm_a_bt(bt, b, m, n, k, &mut pooled);
+            let mut into = vec![f32::NAN; m * k];
+            kernel::gemm_a_bt_into(bt, b, m, n, k, &mut into, &mut buf);
+            bits_equal("gemm_a_bt_into", &into, &pooled)?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_strip_baselines_match_naive() {
+    check(
+        "gemm*_strip (perf baseline) == naive oracle",
+        |r| {
+            let m = 1 + r.below(30);
+            let k = edge_dim(r, 16, 90);
+            let n = edge_dim(r, 16, 70);
+            let a = signed_vals(r, m * k);
+            let b = signed_vals(r, k * n);
+            let bt = signed_vals(r, m * n);
+            (m, k, n, a, b, bt)
+        },
+        |(m, k, n, a, b, bt)| {
+            let (m, k, n) = (*m, *k, *n);
+            let absa: Vec<f32> = a.iter().map(|v| v.abs()).collect();
+            let absb: Vec<f32> = b.iter().map(|v| v.abs()).collect();
+            let absbt: Vec<f32> = bt.iter().map(|v| v.abs()).collect();
+
+            let mut want = vec![0f32; m * n];
+            kernel::gemm_naive(a, b, m, k, n, &mut want);
+            let mut l1 = vec![0f32; m * n];
+            kernel::gemm_naive(&absa, &absb, m, k, n, &mut l1);
+            let mut got = vec![f32::NAN; m * n];
+            kernel::gemm_strip(a, b, m, k, n, &mut got);
+            close_l1("gemm_strip", &got, &want, &l1)?;
+
+            let mut want = vec![0f32; k * n];
+            kernel::gemm_at_b_naive(a, bt, m, k, n, &mut want);
+            let mut l1 = vec![0f32; k * n];
+            kernel::gemm_at_b_naive(&absa, &absbt, m, k, n, &mut l1);
+            let mut got = vec![f32::NAN; k * n];
+            kernel::gemm_at_b_strip(a, bt, m, k, n, &mut got);
+            close_l1("gemm_at_b_strip", &got, &want, &l1)?;
+
+            let mut want = vec![0f32; m * k];
+            kernel::gemm_a_bt_naive(bt, b, m, n, k, &mut want);
+            let mut l1 = vec![0f32; m * k];
+            kernel::gemm_a_bt_naive(&absbt, &absb, m, n, k, &mut l1);
+            let mut got = vec![f32::NAN; m * k];
+            kernel::gemm_a_bt_strip(bt, b, m, n, k, &mut got);
+            close_l1("gemm_a_bt_strip", &got, &want, &l1)?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_packed_panel_forward_bit_exact_vs_strip() {
+    check(
+        "packed panel forward == strip baseline (bit-exact)",
+        |r| {
+            // b straddles the sel-chunk widths (64/128) incl. batch 1;
+            // k straddles the 64-bit words and the 4-word blocks; n
+            // straddles the 8-column panels.
+            let b = match r.below(4) {
+                0 => 1,
+                1 => 64 + r.below(3),
+                2 => 127 + r.below(3),
+                _ => 1 + r.below(140),
+            };
+            let k = match r.below(3) {
+                0 => 64 * (1 + r.below(5)),
+                1 => 256 + r.below(3),
+                _ => 1 + r.below(300),
+            };
+            let n = match r.below(3) {
+                0 => 8 * (1 + r.below(4)),
+                1 => 8 * (1 + r.below(4)) + 1,
+                _ => 1 + r.below(24),
+            };
+            let w = signed_vals(r, k * n);
+            let x = signed_vals(r, b * k);
+            (b, k, n, w, x)
+        },
+        |(b, k, n, w, x)| {
+            let (b, k, n) = (*b, *k, *n);
+            let bm = BitMatrix::pack(w, k, n);
+            let scale = 0.37f32;
+            let mut xt = vec![0f32; k * b];
+            let mut totals = vec![0f32; b];
+            let mut want = vec![f32::NAN; b * n];
+            bm.matmul_scaled_into_strip(x, b, scale, &mut want, &mut xt, &mut totals);
+            let mut got = vec![f32::NAN; b * n];
+            bm.matmul_scaled_into(x, b, scale, &mut got, &mut xt, &mut totals);
+            bits_equal("panel forward", &got, &want)
+        },
+    );
+}
+
+#[test]
+fn degenerate_shapes_overwrite_stale_output() {
+    // k == 0 products must still overwrite C with zeros, through every
+    // entry family (the workspace reuses output buffers across steps)
+    let mut buf = PanelBuf::new();
+    let mut c = vec![f32::NAN; 6];
+    kernel::gemm(&[], &[], 2, 0, 3, &mut c);
+    assert!(c.iter().all(|v| *v == 0.0), "gemm k=0: {c:?}");
+    let mut c = vec![f32::NAN; 6];
+    kernel::gemm_into(&[], &[], 2, 0, 3, &mut c, &mut buf);
+    assert!(c.iter().all(|v| *v == 0.0), "gemm_into k=0: {c:?}");
+    let mut c = vec![f32::NAN; 6];
+    kernel::gemm_at_b(&[], &[], 0, 2, 3, &mut c);
+    assert!(c.iter().all(|v| *v == 0.0), "gemm_at_b m=0: {c:?}");
+    let mut c = vec![f32::NAN; 6];
+    kernel::gemm_a_bt(&[], &[], 2, 0, 3, &mut c);
+    assert!(c.iter().all(|v| *v == 0.0), "gemm_a_bt n=0: {c:?}");
+    // m == 0 / n == 0: no output to write, must not panic
+    let full = [0f32; 12];
+    kernel::gemm(&[], &full, 0, 4, 3, &mut []);
+    kernel::gemm(&full, &[], 3, 4, 0, &mut []);
+}
