@@ -16,6 +16,11 @@
 //!     the retained strip baselines, with `panel_speedup_vs_strip`
 //!     metrics on the mlp1024 train GEMM shape and the packed b=100
 //!     batch shape
+//!   * the BNN ladder (`bnn_*` series): the XNOR-popcount hidden layer
+//!     against the packed-f32 layer on the mlp1024 1024x1024 shape at
+//!     b=64, plus end-to-end `forward_bnn_into` vs `forward_into` on
+//!     784 -> 3x1024 -> 10 — headline `bnn_speedup_vs_packed` rides the
+//!     avx2 rung when the host has it
 //!
 //! Run: cargo bench --bench perf_gemm [-- --iters N] [--json BENCH_perf.json]
 //!
@@ -26,7 +31,9 @@
 //! above from `rust/`).
 
 use binaryconnect::bench_harness::{bench, fmt_time, JsonReport, Table};
-use binaryconnect::binary::packed::BitMatrix;
+use binaryconnect::binary::bnn::{pack_rows_into, words_per_row, xnor_layer_bits};
+use binaryconnect::binary::packed::{BitMatrix, PackedLayer};
+use binaryconnect::binary::PackedMlp;
 use binaryconnect::kernel;
 use binaryconnect::kernel::simd::{self, Isa, ALL_ISAS};
 use binaryconnect::runtime::reference::mlp_info;
@@ -357,6 +364,92 @@ fn main() -> Result<()> {
     simd::set_active(selected).map_err(Error::msg)?;
     t4.print();
     println!("(acceptance: panel >= 1.0x strip everywhere, >= 1.2x on the avx2 gemm)");
+
+    // ---------- BNN ladder: xnor-popcount vs packed-f32 ----------
+    // Layer level: one 1024x1024 hidden layer at b=64 (the mlp1024 shape
+    // the acceptance metric names), packed-f32 lane-batched forward vs
+    // the XNOR bit layer on pre-packed activation bits. End to end:
+    // forward_into vs forward_bnn_into on 784 -> 3x1024 -> 10 (the BNN
+    // pass pays the f32 escape-hatch first layer + the output layer, so
+    // its ratio is lower than the pure hidden-layer win).
+    println!("\nBNN xnor-popcount vs packed-f32 (layer 1024x1024 b=64, fwd 784->3x1024->10):");
+    let mut t5 = Table::new(&[
+        "isa",
+        "f32 layer",
+        "xnor layer",
+        "layer x",
+        "fwd packed",
+        "fwd bnn",
+        "fwd x",
+    ]);
+    let bscale: Vec<f32> = (0..n).map(|_| 1.0 + 0.01 * rng.normal()).collect();
+    let bshift: Vec<f32> = (0..n).map(|_| 0.1 * rng.normal()).collect();
+    let blayer = PackedLayer { bits: bm.clone(), scale: bscale, shift: bshift, relu: true };
+    let wpr = words_per_row(k);
+    let mut abits = vec![0u64; bb * wpr];
+    pack_rows_into(&x[..bb * k], bb, k, &mut abits);
+    let mut obits = vec![0u64; bb * words_per_row(n)];
+    let mut mk_w = |k: usize, n: usize| -> (Vec<f32>, usize, usize) {
+        ((0..k * n).map(|_| rng.normal()).collect(), k, n)
+    };
+    let mk_bn = |n: usize| Some((vec![1.0; n], vec![0.0; n], vec![0.1; n], vec![1.0; n]));
+    let fwd_mlp = PackedMlp::build(
+        vec![mk_w(784, 1024), mk_w(1024, 1024), mk_w(1024, 1024), mk_w(1024, 10)],
+        vec![mk_bn(1024), mk_bn(1024), mk_bn(1024), None],
+        Some(vec![0.0; 10]),
+    );
+    let fwd_x: Vec<f32> = (0..bb * 784).map(|_| rng.normal()).collect();
+    let mut pws = fwd_mlp.workspace(bb);
+    let mut bws = fwd_mlp.bnn_workspace(bb);
+    let headline_isa = if Isa::Avx2.supported() { Isa::Avx2 } else { selected };
+    for &isa in ALL_ISAS.iter().rev() {
+        if !isa.supported() {
+            continue;
+        }
+        simd::set_active(isa).map_err(Error::msg)?;
+        let name = isa.name();
+        let lshape = format!("{k}x{n} b={bb}");
+        let rlf = bench(&format!("bnn_packedf32_layer_{name}"), 2, iters, || {
+            blayer.forward_batched_into(&x[..bb * k], bb, &mut y[..bb * n], &mut xt, &mut totals);
+            std::hint::black_box(&y);
+        });
+        let rlx = bench(&format!("bnn_xnor_layer_{name}"), 2, iters, || {
+            xnor_layer_bits(&blayer, &abits, bb, &mut obits);
+            std::hint::black_box(&obits);
+        });
+        let rfp = bench(&format!("bnn_fwd_packed_{name}"), 2, iters, || {
+            let out = fwd_mlp.forward_into(&fwd_x, bb, &mut pws);
+            std::hint::black_box(out);
+        });
+        let rfb = bench(&format!("bnn_fwd_{name}"), 2, iters, || {
+            let out = fwd_mlp.forward_bnn_into(&fwd_x, bb, &mut bws);
+            std::hint::black_box(out);
+        });
+        report.add(&rlf, &lshape);
+        report.add(&rlx, &lshape);
+        report.add(&rfp, &format!("mlp1024 b={bb}"));
+        report.add(&rfb, &format!("mlp1024 b={bb}"));
+        let lx = rlf.mean_s / rlx.mean_s;
+        let fx = rfp.mean_s / rfb.mean_s;
+        report.metric(&format!("bnn_layer_speedup_vs_packed_{name}"), lx);
+        report.metric(&format!("bnn_forward_speedup_vs_packed_{name}"), fx);
+        if isa == headline_isa {
+            report.metric("bnn_speedup_vs_packed", lx);
+            report.metric("bnn_forward_speedup_vs_packed", fx);
+        }
+        t5.row(&[
+            name.to_string(),
+            fmt_time(rlf.mean_s),
+            fmt_time(rlx.mean_s),
+            format!("{lx:.2}x"),
+            fmt_time(rfp.mean_s),
+            fmt_time(rfb.mean_s),
+            format!("{fx:.2}x"),
+        ]);
+    }
+    simd::set_active(selected).map_err(Error::msg)?;
+    t5.print();
+    println!("(acceptance: bnn_speedup_vs_packed >= 2x on the avx2 rung, 1024x1024 b=64)");
 
     if let Some(path) = args.opt_str("json") {
         report.save("perf_gemm", std::path::Path::new(&path))?;

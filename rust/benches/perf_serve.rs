@@ -11,10 +11,14 @@
 //!   * `serve_batch64_w{0,200,1000}us_c16` — dynamic micro-batching at
 //!     concurrency 16 with increasing windows: throughput rides the
 //!     lane-batched packed kernel, latency buys it with the window.
+//!   * `serve_bnn_batch64_w200us_c16` / `serve_bnn_solo_c16` — the same
+//!     workload through the XNOR-popcount engine (`--bnn`).
 //!
 //! Derived metrics: `serve_rps_<series>`, `serve_mean_batch_<series>`,
-//! and the headline `serve_coalesce_speedup_c16` =
-//! rps(batch64_w200us_c16) / rps(solo_c16).
+//! the headline `serve_coalesce_speedup_c16` =
+//! rps(batch64_w200us_c16) / rps(solo_c16), and
+//! `serve_bnn_speedup_vs_packed` = rps(bnn batch64 w200us) /
+//! rps(packed-f32 batch64 w200us).
 //! Acceptance (ISSUE 5): coalesced >= 3x solo at concurrency >= 16 on
 //! the auto ISA.
 //!
@@ -25,6 +29,7 @@ use std::time::Duration;
 
 use binaryconnect::bench_harness::{fmt_time, BenchResult, JsonReport, Table};
 use binaryconnect::binary::packed::PackedMlp;
+use binaryconnect::binary::ForwardMode;
 use binaryconnect::kernel::simd;
 use binaryconnect::serve::{self, loadgen, ServeConfig};
 use binaryconnect::util::error::{Error, Result};
@@ -62,6 +67,7 @@ struct SeriesResult {
     requests: usize,
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_series(
     name: &str,
     mlp: PackedMlp,
@@ -69,6 +75,7 @@ fn run_series(
     max_wait: Duration,
     concurrency: usize,
     requests: usize,
+    mode: ForwardMode,
 ) -> Result<SeriesResult> {
     // workers = concurrency + 2: headroom so every loadgen connection is
     // served concurrently even with an extra probe/monitor connection —
@@ -81,6 +88,7 @@ fn run_series(
             workers: (concurrency + 2).clamp(3, 64),
             conn_backlog: 2 * concurrency.max(1),
             queue_cap: 4096,
+            mode,
             ..Default::default()
         },
     )?;
@@ -123,12 +131,15 @@ fn main() -> Result<()> {
     report.metric("loadgen_concurrency", concurrency as f64);
 
     let window = |us: u64| Duration::from_micros(us);
-    let series: Vec<(String, usize, Duration, usize)> = vec![
-        ("serve_solo_c1".into(), 1, window(0), 1),
-        ("serve_solo_c16".into(), 1, window(0), concurrency),
-        (format!("serve_batch64_w0us_c{concurrency}"), 64, window(0), concurrency),
-        (format!("serve_batch64_w200us_c{concurrency}"), 64, window(200), concurrency),
-        (format!("serve_batch64_w1000us_c{concurrency}"), 64, window(1000), concurrency),
+    let (f32m, bnn) = (ForwardMode::PackedF32, ForwardMode::Bnn);
+    let series: Vec<(String, usize, Duration, usize, ForwardMode)> = vec![
+        ("serve_solo_c1".into(), 1, window(0), 1, f32m),
+        ("serve_solo_c16".into(), 1, window(0), concurrency, f32m),
+        (format!("serve_batch64_w0us_c{concurrency}"), 64, window(0), concurrency, f32m),
+        (format!("serve_batch64_w200us_c{concurrency}"), 64, window(200), concurrency, f32m),
+        (format!("serve_batch64_w1000us_c{concurrency}"), 64, window(1000), concurrency, f32m),
+        ("serve_bnn_solo_c16".into(), 1, window(0), concurrency, bnn),
+        (format!("serve_bnn_batch64_w200us_c{concurrency}"), 64, window(200), concurrency, bnn),
     ];
 
     let mut table = Table::new(&[
@@ -142,8 +153,9 @@ fn main() -> Result<()> {
     ]);
     let mut solo_c16_rps = 0.0;
     let mut coalesced_rps = 0.0;
-    for (name, max_batch, wait, conc) in &series {
-        let r = run_series(name, bench_mlp(), *max_batch, *wait, *conc, requests)?;
+    let mut bnn_coalesced_rps = 0.0;
+    for (name, max_batch, wait, conc, mode) in &series {
+        let r = run_series(name, bench_mlp(), *max_batch, *wait, *conc, requests, *mode)?;
         table.row(&[
             r.name.clone(),
             format!("{:.0}", r.rps),
@@ -171,6 +183,9 @@ fn main() -> Result<()> {
         if r.name == format!("serve_batch64_w200us_c{concurrency}") {
             coalesced_rps = r.rps;
         }
+        if r.name == format!("serve_bnn_batch64_w200us_c{concurrency}") {
+            bnn_coalesced_rps = r.rps;
+        }
     }
     table.print();
 
@@ -180,6 +195,14 @@ fn main() -> Result<()> {
         println!(
             "\ncoalesce speedup (batch64/w200us vs solo, c={concurrency}): {speedup:.2}x \
              (acceptance: >= 3x at concurrency >= 16 on the auto ISA)"
+        );
+    }
+    if coalesced_rps > 0.0 && bnn_coalesced_rps > 0.0 {
+        let speedup = bnn_coalesced_rps / coalesced_rps;
+        report.metric("serve_bnn_speedup_vs_packed", speedup);
+        println!(
+            "bnn engine speedup (bnn vs packed-f32, batch64/w200us, c={concurrency}): \
+             {speedup:.2}x (end-to-end: HTTP + batching overhead dilute the kernel win)"
         );
     }
     println!(

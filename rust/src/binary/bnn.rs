@@ -1,0 +1,523 @@
+//! XNOR–popcount inference mode: binarized activations over the packed
+//! weights (the "BNN" successor of BinaryConnect — Courbariaux/Hubara et
+//! al. 2016 — as a serving-side engine).
+//!
+//! The packed-f32 forward streams full-precision activations through the
+//! sign-GEMM: every decoded weight bit still moves a stripe of f32
+//! lanes. This module binarizes the activations too, so a whole
+//! 64-element slice of the dot product collapses into one `XOR +
+//! popcount` over `u64` words:
+//!
+//! ```text
+//! dot(a, w) = k - 2 * popcount(bits(a) XOR bits(w))     (a, w ∈ {±1}^k)
+//! ```
+//!
+//! with bit = 1 ⟺ value ≥ 0 — the same sign convention as
+//! [`BitMatrix::pack_det_into`] (so −0.0 packs as +1), and the same
+//! column word layout, so an activation row XORs directly against a
+//! weight column. Both packers zero their padding bits, which makes the
+//! whole-word count exact for any ragged `k`. The per-unit scale/shift
+//! (folded BN or bias) is applied once to the integer dot at the end.
+//!
+//! Layer semantics — deliberately different from packed-f32 mode: the
+//! hidden nonlinearity is `sign(·)` (that *is* the binarization;
+//! `sign∘ReLU` would be the constant +1 and collapse the network), so a
+//! hidden unit emits `bit = (scale*dot + shift >= 0)` and the output
+//! layer emits f32 logits `scale*dot + shift`. A BNN-mode model is
+//! therefore a different function than the same weights in packed-f32
+//! mode; the exactness contracts below are *within* the mode.
+//!
+//! The first layer is an **f32 escape hatch**: real inputs are not ±1,
+//! so layer 0 runs the existing lane-batched sign-GEMM plus its affine
+//! (no ReLU), and only its output signs enter the bit domain.
+//!
+//! ## Exactness
+//!
+//! * Every per-unit dot is an exact integer (`k < 2^24`), and integer
+//!   addition is associative — so `sign_xnor_dot` is **bit-exact across
+//!   every ISA rung** and across any loop order.
+//! * Solo ≡ coalesced: an XNOR layer computes row `bi` from its own bit
+//!   row only, independent of `b`; layer 0 rides
+//!   [`BitMatrix::matmul_scaled_into_batched`], which carries the same
+//!   contract. So a request served alone is bit-identical to the same
+//!   request inside any coalesced batch — pinned end-to-end by
+//!   `tests/bnn_packed.rs` and the serve integration tests.
+//!
+//! Parallelism: output units are partitioned over the pool in
+//! **64-aligned column ranges** (same trick as the transpose-apply), so
+//! every output bit-word has exactly one writer and results are
+//! thread-count independent.
+
+use crate::kernel::simd::{self, Isa, Kernels};
+use crate::util::pool::{global as pool_global, par_rows, SendPtr};
+
+use super::packed::{BitMatrix, PackedLayer, PackedMlp};
+
+/// Which forward engine a `PackedMlp` serves with.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ForwardMode {
+    /// Bit-packed weights, f32 activations (`PackedMlp::forward_into`).
+    PackedF32,
+    /// Bit-packed weights *and* activations
+    /// (`PackedMlp::forward_bnn_into`): XNOR–popcount hidden layers
+    /// behind the first-layer f32 escape hatch.
+    Bnn,
+}
+
+impl ForwardMode {
+    /// The spelling used by `/stats`, the startup log and the bench
+    /// series names.
+    pub fn label(self) -> &'static str {
+        match self {
+            ForwardMode::PackedF32 => "packed-f32",
+            ForwardMode::Bnn => "bnn",
+        }
+    }
+}
+
+/// Packed words per activation row of width `k`: `ceil(k / 64)` — the
+/// same rounding as [`BitMatrix::words_per_col`], so a packed row and a
+/// packed weight column are word-for-word alignable.
+pub fn words_per_row(k: usize) -> usize {
+    k.div_ceil(64)
+}
+
+/// Pack the signs of `b` f32 rows of width `k` (row-major, as produced
+/// by the forward buffers) into bit rows: row `bi` occupies
+/// `out[bi*wpr .. (bi+1)*wpr]`, bit `i` is set ⟺ `x[bi*k + i] >= 0.0`
+/// (so −0.0 packs as +1, matching the weight packer). Padding bits are
+/// cleared — the invariant that keeps whole-word XNOR counts exact.
+pub fn pack_rows_into(x: &[f32], b: usize, k: usize, out: &mut [u64]) {
+    let wpr = words_per_row(k);
+    assert_eq!(x.len(), b * k, "pack_rows_into: input length mismatch");
+    assert!(out.len() >= b * wpr, "pack_rows_into: bit buffer too small");
+    let out = &mut out[..b * wpr];
+    out.fill(0);
+    for (row, orow) in x.chunks_exact(k).zip(out.chunks_exact_mut(wpr)) {
+        for (i, &v) in row.iter().enumerate() {
+            if v >= 0.0 {
+                orow[i / 64] |= 1u64 << (i % 64);
+            }
+        }
+    }
+}
+
+/// 64-aligned output-column grain (single block for small jobs), so each
+/// pool range owns whole output bit-words.
+fn col_grain_64(k: usize, n: usize, b: usize) -> usize {
+    let t = pool_global().n_threads;
+    let g = if k * n * b < (1 << 16) { n } else { n.div_ceil(t * 2) };
+    g.div_ceil(64).max(1) * 64
+}
+
+/// Hidden XNOR layer: bit input (b rows × `words_per_row(k)`) → bit
+/// output (b rows × `words_per_row(n)`), unit `j` of row `bi` set ⟺
+/// `scale[j] * (k - 2*popcount(arow XOR col_j)) + shift[j] >= 0`.
+pub fn xnor_layer_bits(layer: &PackedLayer, abits: &[u64], b: usize, out: &mut [u64]) {
+    xnor_layer_bits_kern(simd::kernels(), layer, abits, b, out)
+}
+
+/// [`xnor_layer_bits`] pinned to an explicit ISA rung (test/bench hook —
+/// no process-global dispatch mutation).
+pub fn xnor_layer_bits_isa(
+    isa: Isa,
+    layer: &PackedLayer,
+    abits: &[u64],
+    b: usize,
+    out: &mut [u64],
+) {
+    xnor_layer_bits_kern(simd::kernels_for(isa), layer, abits, b, out)
+}
+
+fn xnor_layer_bits_kern(
+    kern: &'static Kernels,
+    layer: &PackedLayer,
+    abits: &[u64],
+    b: usize,
+    out: &mut [u64],
+) {
+    let bits = &layer.bits;
+    let (k, n) = (bits.k, bits.n);
+    let wpr = bits.words_per_col();
+    let wpo = words_per_row(n);
+    assert!(abits.len() >= b * wpr, "xnor_layer_bits: input bit buffer too small");
+    assert!(out.len() >= b * wpo, "xnor_layer_bits: output bit buffer too small");
+    assert_eq!(layer.scale.len(), n, "scale length must match layer width");
+    assert_eq!(layer.shift.len(), n, "shift length must match layer width");
+    let kf = k as f32;
+    let scale = &layer.scale[..n];
+    let shift = &layer.shift[..n];
+    let op = SendPtr(out.as_mut_ptr());
+    par_rows(n, col_grain_64(k, n, b), &|jlo, jhi| {
+        // jlo is 64-aligned (the grain is a multiple of 64), so this
+        // range owns output words [jlo/64, ceil(jhi/64)) outright.
+        let w0 = jlo / 64;
+        let w1 = jhi.div_ceil(64);
+        for bi in 0..b {
+            let arow = &abits[bi * wpr..(bi + 1) * wpr];
+            for w in w0..w1 {
+                let mut word = 0u64;
+                let je = ((w + 1) * 64).min(jhi);
+                for j in (w * 64)..je {
+                    let cnt = (kern.sign_xnor_dot)(arow, bits.col(j));
+                    let u = scale[j] * (kf - 2.0 * cnt as f32) + shift[j];
+                    if u >= 0.0 {
+                        word |= 1u64 << (j - w * 64);
+                    }
+                }
+                // SAFETY: 64-aligned column partition — word (bi, w) is
+                // written by exactly one thread, and fully (padding
+                // bits of a ragged final word come out zero).
+                unsafe { op.write(bi * wpo + w, word) };
+            }
+        }
+    });
+}
+
+/// Output XNOR layer: bit input → f32 logits
+/// `y[bi, j] = scale[j] * (k - 2*popcount(arow XOR col_j)) + shift[j]`.
+pub fn xnor_layer_f32(layer: &PackedLayer, abits: &[u64], b: usize, y: &mut [f32]) {
+    xnor_layer_f32_kern(simd::kernels(), layer, abits, b, y)
+}
+
+/// [`xnor_layer_f32`] pinned to an explicit ISA rung.
+pub fn xnor_layer_f32_isa(isa: Isa, layer: &PackedLayer, abits: &[u64], b: usize, y: &mut [f32]) {
+    xnor_layer_f32_kern(simd::kernels_for(isa), layer, abits, b, y)
+}
+
+fn xnor_layer_f32_kern(
+    kern: &'static Kernels,
+    layer: &PackedLayer,
+    abits: &[u64],
+    b: usize,
+    y: &mut [f32],
+) {
+    let bits = &layer.bits;
+    let (k, n) = (bits.k, bits.n);
+    let wpr = bits.words_per_col();
+    assert!(abits.len() >= b * wpr, "xnor_layer_f32: input bit buffer too small");
+    assert_eq!(y.len(), b * n, "xnor_layer_f32: output length mismatch");
+    assert_eq!(layer.scale.len(), n, "scale length must match layer width");
+    assert_eq!(layer.shift.len(), n, "shift length must match layer width");
+    let kf = k as f32;
+    let scale = &layer.scale[..n];
+    let shift = &layer.shift[..n];
+    let yp = SendPtr(y.as_mut_ptr());
+    par_rows(n, col_grain_64(k, n, b), &|jlo, jhi| {
+        for bi in 0..b {
+            let arow = &abits[bi * wpr..(bi + 1) * wpr];
+            for j in jlo..jhi {
+                let cnt = (kern.sign_xnor_dot)(arow, bits.col(j));
+                let u = scale[j] * (kf - 2.0 * cnt as f32) + shift[j];
+                // SAFETY: element (bi, j) is written by exactly one
+                // thread (columns are partitioned).
+                unsafe { yp.write(bi * n + j, u) };
+            }
+        }
+    });
+}
+
+/// Folded affine without ReLU — the escape-hatch layer's epilogue. In
+/// BNN mode the hidden nonlinearity is `sign(·)` (applied by the bit
+/// packer), never ReLU, so only `y*scale + shift` runs here; for a
+/// single-layer net this is exactly the output affine.
+fn affine_presign(layer: &PackedLayer, y: &mut [f32]) {
+    let n = layer.bits.n;
+    assert_eq!(layer.scale.len(), n, "scale length must match layer width");
+    assert_eq!(layer.shift.len(), n, "shift length must match layer width");
+    for row in y.chunks_exact_mut(n) {
+        for ((v, &s), &t) in row.iter_mut().zip(&layer.scale).zip(&layer.shift) {
+            *v = *v * s + t;
+        }
+    }
+}
+
+/// Reusable scratch for [`PackedMlp::forward_bnn_into`]: one f32 buffer
+/// (layer-0 output, then — once those signs are packed — the final
+/// logits), the layer-0 sign-GEMM scratch, and ping-pong *bit* buffers
+/// for the hidden activations (64 rows of sign per word — the ~64×
+/// input-bandwidth cut over [`super::PackedWorkspace`]'s f32 ping-pong).
+/// A warmed workspace makes every subsequent forward allocation-free.
+pub struct BnnWorkspace {
+    max_batch: usize,
+    fbuf: Vec<f32>,
+    xt: Vec<f32>,
+    totals: Vec<f32>,
+    bping: Vec<u64>,
+    bpong: Vec<u64>,
+}
+
+impl BnnWorkspace {
+    /// Batch capacity this workspace was sized for.
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Allocated activation-scratch footprint in bytes (f32 buffers plus
+    /// both bit buffers). The BNN counterpart of
+    /// [`super::PackedWorkspace::memory_bytes`].
+    pub fn memory_bytes(&self) -> usize {
+        (self.fbuf.len() + self.xt.len() + self.totals.len()) * 4
+            + (self.bping.len() + self.bpong.len()) * 8
+    }
+}
+
+impl PackedMlp {
+    /// Widest hidden-activation row in packed words — the ping-pong bit
+    /// buffers' per-row size (0 for a single-layer net, which never
+    /// enters the bit domain).
+    fn max_hidden_words(&self) -> usize {
+        let m = self.layers.len();
+        self.layers[..m - 1].iter().map(|l| words_per_row(l.bits.n)).max().unwrap_or(0)
+    }
+
+    /// Build a [`BnnWorkspace`] able to forward batches up to
+    /// `max_batch` rows with zero per-call allocations.
+    pub fn bnn_workspace(&self, max_batch: usize) -> BnnWorkspace {
+        assert!(max_batch >= 1, "workspace batch capacity must be >= 1");
+        let w = self.max_width();
+        let hw = self.max_hidden_words();
+        BnnWorkspace {
+            max_batch,
+            fbuf: vec![0f32; max_batch * w],
+            xt: vec![0f32; max_batch * self.in_dim],
+            totals: vec![0f32; max_batch],
+            bping: vec![0u64; max_batch * hw],
+            bpong: vec![0u64; max_batch * hw],
+        }
+    }
+
+    /// Allocated activation-scratch bytes a `max_batch`-row workspace
+    /// costs in the given mode, without building one. Matches the
+    /// corresponding workspace's `memory_bytes()` exactly (unit-tested);
+    /// `/stats` and the bench reports quote this per-mode figure.
+    pub fn activation_memory_bytes(&self, max_batch: usize, mode: ForwardMode) -> usize {
+        let w = self.max_width();
+        match mode {
+            ForwardMode::PackedF32 => (3 * w * max_batch + max_batch) * 4,
+            ForwardMode::Bnn => {
+                (w * max_batch + self.in_dim * max_batch + max_batch) * 4
+                    + 2 * self.max_hidden_words() * max_batch * 8
+            }
+        }
+    }
+
+    /// BNN forward: layer 0 through the f32 escape hatch (lane-batched
+    /// sign-GEMM + affine, no ReLU), signs bit-packed, every further
+    /// layer XNOR–popcount; returns the logits slice (b × classes).
+    /// Allocation-free with a warmed workspace, and each row's logits
+    /// are bit-identical for any batch size the row is computed in — the
+    /// serving layer's solo ≡ coalesced contract, same as
+    /// [`PackedMlp::forward_into`].
+    pub fn forward_bnn_into<'ws>(
+        &self,
+        x: &[f32],
+        b: usize,
+        ws: &'ws mut BnnWorkspace,
+    ) -> &'ws [f32] {
+        self.forward_bnn_kern(simd::kernels(), x, b, ws)
+    }
+
+    /// [`PackedMlp::forward_bnn_into`] pinned to an explicit ISA rung
+    /// (test/bench hook — no process-global dispatch mutation).
+    pub fn forward_bnn_into_isa<'ws>(
+        &self,
+        isa: Isa,
+        x: &[f32],
+        b: usize,
+        ws: &'ws mut BnnWorkspace,
+    ) -> &'ws [f32] {
+        self.forward_bnn_kern(simd::kernels_for(isa), x, b, ws)
+    }
+
+    fn forward_bnn_kern<'ws>(
+        &self,
+        kern: &'static Kernels,
+        x: &[f32],
+        b: usize,
+        ws: &'ws mut BnnWorkspace,
+    ) -> &'ws [f32] {
+        assert_eq!(x.len(), b * self.in_dim);
+        assert!(
+            b <= ws.max_batch,
+            "batch {b} exceeds the workspace capacity {}",
+            ws.max_batch
+        );
+        let m = self.layers.len();
+        let l0 = &self.layers[0];
+        let n0 = l0.bits.n;
+        {
+            let y = &mut ws.fbuf[..b * n0];
+            l0.bits.matmul_scaled_into_batched_isa(
+                kern.isa,
+                x,
+                b,
+                1.0,
+                y,
+                &mut ws.xt,
+                &mut ws.totals,
+            );
+            affine_presign(l0, y);
+        }
+        if m == 1 {
+            return &ws.fbuf[..b * self.classes];
+        }
+        pack_rows_into(&ws.fbuf[..b * n0], b, n0, &mut ws.bping);
+        let mut in_ping = true;
+        for (li, layer) in self.layers.iter().enumerate().skip(1) {
+            let (src, dst) = if in_ping {
+                (&ws.bping, &mut ws.bpong)
+            } else {
+                (&ws.bpong, &mut ws.bping)
+            };
+            if li == m - 1 {
+                // fbuf is free again: its layer-0 contents were consumed
+                // by pack_rows_into before the first XNOR layer ran
+                let n = layer.bits.n;
+                xnor_layer_f32_kern(kern, layer, src, b, &mut ws.fbuf[..b * n]);
+            } else {
+                xnor_layer_bits_kern(kern, layer, src, b, dst);
+                in_ping = !in_ping;
+            }
+        }
+        &ws.fbuf[..b * self.classes]
+    }
+}
+
+/// Float reference for one XNOR layer's pre-activation, used by the
+/// property tests: with ±1 operands every partial sum is an exact small
+/// integer, so this is bit-identical to the integer path's
+/// `scale * (k - 2*cnt) + shift` — the oracle that pins the kernels.
+#[doc(hidden)]
+pub fn xnor_reference_preact(layer: &PackedLayer, asigns: &[f32], b: usize, y: &mut [f32]) {
+    let bits = &layer.bits;
+    let (k, n) = (bits.k, bits.n);
+    assert_eq!(asigns.len(), b * k);
+    assert_eq!(y.len(), b * n);
+    for bi in 0..b {
+        let arow = &asigns[bi * k..(bi + 1) * k];
+        for j in 0..n {
+            let mut dot = 0f32;
+            for (i, &a) in arow.iter().enumerate() {
+                dot += a * bits.sign(i, j);
+            }
+            y[bi * n + j] = layer.scale[j] * dot + layer.shift[j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_mat(r: usize, c: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..r * c).map(|_| rng.normal()).collect()
+    }
+
+    /// Word-edge shapes: k = 70 and n = 33 both cross 64-bit boundaries.
+    fn toy(seed: u64) -> PackedMlp {
+        let w1 = rand_mat(12, 70, seed);
+        let w2 = rand_mat(70, 33, seed + 1);
+        let w3 = rand_mat(33, 4, seed + 2);
+        let mut rng = Rng::new(seed + 3);
+        type Bn = Option<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)>;
+        let bn = |n: usize, r: &mut Rng| -> Bn {
+            Some((
+                (0..n).map(|_| 1.0 + 0.1 * r.normal()).collect(),
+                (0..n).map(|_| 0.1 * r.normal()).collect(),
+                (0..n).map(|_| 0.2 * r.normal()).collect(),
+                (0..n).map(|_| (1.0 + 0.1 * r.normal()).abs()).collect(),
+            ))
+        };
+        PackedMlp::build(
+            vec![(w1, 12, 70), (w2, 70, 33), (w3, 33, 4)],
+            vec![bn(70, &mut rng), bn(33, &mut rng), None],
+            Some(vec![0.05, -0.05, 0.0, 0.02]),
+        )
+    }
+
+    #[test]
+    fn pack_rows_sets_signs_and_clears_padding() {
+        // k = 70: the second word of each row carries 6 live bits + 58
+        // padding bits that must stay zero; ±0.0 both pack as +1.
+        let k = 70;
+        let mut x = rand_mat(3, k, 7);
+        x[0] = 0.0;
+        x[1] = -0.0;
+        let mut out = vec![u64::MAX; 3 * words_per_row(k)];
+        pack_rows_into(&x, 3, k, &mut out);
+        for bi in 0..3 {
+            let row = &out[bi * 2..(bi + 1) * 2];
+            for i in 0..k {
+                let bit = (row[i / 64] >> (i % 64)) & 1;
+                let want = u64::from(x[bi * k + i] >= 0.0);
+                assert_eq!(bit, want, "row {bi} bit {i}");
+            }
+            assert_eq!(row[1] >> 6, 0, "row {bi}: padding bits must be zero");
+        }
+        assert_eq!(out[0] & 3, 3, "+0.0 and -0.0 must both pack as +1");
+    }
+
+    #[test]
+    fn forward_bnn_into_steady_state_is_allocation_free() {
+        let mlp = toy(200);
+        let b = 16;
+        let mut ws = mlp.bnn_workspace(b);
+        let x = rand_mat(b, mlp.in_dim, 201);
+        // warm: first call faults pages and initializes pool/dispatch
+        let _ = mlp.forward_bnn_into(&x, b, &mut ws);
+        let before = crate::test_alloc::thread_allocs();
+        for _ in 0..3 {
+            let out = mlp.forward_bnn_into(&x, b, &mut ws);
+            std::hint::black_box(out);
+        }
+        let after = crate::test_alloc::thread_allocs();
+        assert_eq!(after, before, "forward_bnn_into allocated in steady state");
+    }
+
+    #[test]
+    fn activation_memory_bytes_matches_the_workspaces() {
+        let mlp = toy(210);
+        for b in [1usize, 7, 64] {
+            assert_eq!(
+                mlp.activation_memory_bytes(b, ForwardMode::PackedF32),
+                mlp.workspace(b).memory_bytes(),
+                "packed-f32 formula drifted from the workspace (b={b})"
+            );
+            assert_eq!(
+                mlp.activation_memory_bytes(b, ForwardMode::Bnn),
+                mlp.bnn_workspace(b).memory_bytes(),
+                "bnn formula drifted from the workspace (b={b})"
+            );
+        }
+    }
+
+    #[test]
+    fn single_layer_net_is_pure_escape_hatch() {
+        // no hidden layers: bnn mode == the f32 layer + bias, and the
+        // bit buffers are zero-sized
+        let mlp = PackedMlp::build(
+            vec![(rand_mat(6, 3, 220), 6, 3)],
+            vec![None],
+            Some(vec![0.1, 0.0, -0.1]),
+        );
+        let mut ws = mlp.bnn_workspace(4);
+        assert_eq!(ws.bping.len(), 0);
+        let x = rand_mat(4, 6, 221);
+        let got = mlp.forward_bnn_into(&x, 4, &mut ws).to_vec();
+        let mut pws = mlp.workspace(4);
+        let want = mlp.forward_into(&x, 4, &mut pws).to_vec();
+        // the output layer has relu=false, so both modes are the same
+        // function here — and both ride the lane-batched kernel
+        assert_eq!(got, want, "single-layer bnn must equal packed-f32");
+    }
+
+    #[test]
+    fn mode_labels_are_stable() {
+        // serialized into /stats and bench series names — do not rename
+        assert_eq!(ForwardMode::PackedF32.label(), "packed-f32");
+        assert_eq!(ForwardMode::Bnn.label(), "bnn");
+    }
+}

@@ -18,9 +18,19 @@
 //! affine per-unit transform, folded into (scale, shift) applied once per
 //! accumulation — multiplications survive only there, O(units) not
 //! O(units * fan_in).
+//!
+//! The [`bnn`] submodule goes one step further for serving: it binarizes
+//! the *activations* too, turning hidden layers into XNOR–popcount over
+//! packed words (`dot = k - 2*popcount(a XOR w)`) behind a first-layer
+//! f32 escape hatch — `PackedMlp::forward_bnn_into`, selected at the
+//! server by [`ForwardMode`].
 
+pub mod bnn;
 pub mod export;
 pub mod packed;
 
+pub use bnn::{
+    pack_rows_into, words_per_row, xnor_layer_bits, xnor_layer_f32, BnnWorkspace, ForwardMode,
+};
 pub use export::{load_packed, pack_mlp, save_packed};
 pub use packed::{argmax, BitMatrix, PackedLayer, PackedMlp, PackedWorkspace};

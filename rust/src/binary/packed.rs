@@ -136,6 +136,19 @@ impl BitMatrix {
         if (w >> (row % 64)) & 1 == 1 { 1.0 } else { -1.0 }
     }
 
+    /// Packed 64-bit words per column: `ceil(k / 64)`. Bits at row
+    /// indices `>= k` are padding and are always zero (every packer
+    /// clears the buffer first and only sets bits below `k`) — the
+    /// invariant the BNN XNOR kernels rely on to count over whole words.
+    pub fn words_per_col(&self) -> usize {
+        self.words_per_col
+    }
+
+    /// True allocated footprint of the packed matrix — `wpc * n` words,
+    /// i.e. *including* the zero padding bits that round each column up
+    /// to whole 64-bit words (a k=1000 column still occupies 16 words).
+    /// `/stats` and the bench reports quote this number, not the
+    /// theoretical `k*n/8`.
     pub fn memory_bytes(&self) -> usize {
         self.words.len() * 8
     }
@@ -215,6 +228,27 @@ impl BitMatrix {
         assert_eq!(x.len(), b * self.k);
         assert_eq!(y.len(), b * self.n);
         self.matmul_batched_scaled(simd::kernels(), x, b, scale, y, xt, totals);
+    }
+
+    /// [`BitMatrix::matmul_scaled_into_batched`] pinned to an explicit
+    /// ISA rung (test/bench hook — no process-global dispatch mutation).
+    /// The BNN forward's escape-hatch layer routes through this so its
+    /// `_isa` variants pin every kernel in the pass, not just the XNOR
+    /// ones.
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul_scaled_into_batched_isa(
+        &self,
+        isa: Isa,
+        x: &[f32],
+        b: usize,
+        scale: f32,
+        y: &mut [f32],
+        xt: &mut [f32],
+        totals: &mut [f32],
+    ) {
+        assert_eq!(x.len(), b * self.k);
+        assert_eq!(y.len(), b * self.n);
+        self.matmul_batched_scaled(simd::kernels_for(isa), x, b, scale, y, xt, totals);
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -646,6 +680,14 @@ impl PackedWorkspace {
     pub fn max_batch(&self) -> usize {
         self.max_batch
     }
+
+    /// Allocated activation-scratch footprint in bytes (ping + pong +
+    /// transpose + totals buffers). The packed-f32 counterpart of
+    /// [`crate::binary::BnnWorkspace::memory_bytes`]; surfaced per mode
+    /// by `/stats` and the bench reports.
+    pub fn memory_bytes(&self) -> usize {
+        (self.ping.len() + self.pong.len() + self.xt.len() + self.totals.len()) * 4
+    }
 }
 
 /// Index of the row maximum via `total_cmp` (last max wins, like the
@@ -818,7 +860,9 @@ impl PackedMlp {
     }
 
     /// Packed weight memory (the paper's ">= 16x reduction" claim: f32
-    /// weights / this = 32x).
+    /// weights / this = 32x). Sums [`BitMatrix::memory_bytes`], so
+    /// per-column word padding is included — this is the allocated
+    /// footprint, not the theoretical bit count.
     pub fn weight_memory_bytes(&self) -> usize {
         self.layers.iter().map(|l| l.bits.memory_bytes()).sum()
     }

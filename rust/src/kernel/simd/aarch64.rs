@@ -227,6 +227,33 @@ unsafe fn sign_dot_neon(col: &[u64], x: *const f32, k: usize) -> f32 {
     s
 }
 
+pub(super) fn neon_sign_xnor_dot(a: &[u64], b: &[u64]) -> u32 {
+    let n = a.len().min(b.len());
+    // SAFETY: NEON baseline; reads stay below n in both slices.
+    unsafe { sign_xnor_dot_neon(a.as_ptr(), b.as_ptr(), n) }
+}
+
+unsafe fn sign_xnor_dot_neon(a: *const u64, b: *const u64, n: usize) -> u32 {
+    // Per 2-word block: XOR, per-byte popcount (vcnt), widening
+    // horizontal add (16 byte counts ≤ 8 each, so the u16 sum ≤ 128
+    // never overflows). Integer throughout — bit-exact with scalar.
+    let mut s = 0u32;
+    let mut i = 0usize;
+    while i + 2 <= n {
+        let va = vld1q_u64(a.add(i));
+        let vb = vld1q_u64(b.add(i));
+        let x = veorq_u64(va, vb);
+        let cnt = vcntq_u8(vreinterpretq_u8_u64(x));
+        s += vaddlvq_u8(cnt) as u32;
+        i += 2;
+    }
+    while i < n {
+        s += (*a.add(i) ^ *b.add(i)).count_ones();
+        i += 1;
+    }
+    s
+}
+
 pub(super) fn neon_panel(k: usize, pa: &[f32], pb: &[f32], c: &mut [f32], ldc: usize, acc: bool) {
     const MR: usize = 4;
     const NR: usize = 8;

@@ -46,6 +46,10 @@
 //! * `axpy4` / `axpy1` / `dot` (the f32 GEMM trio) and `sign_dot` (the
 //!   batch-1 packed path): same math, different association (FMA and wide
 //!   accumulators) — equal to scalar within a 1e-5-scale bound.
+//! * `sign_xnor_dot` (the BNN inference engine, `binary/bnn.rs`): **bit
+//!   exact** across every ISA by definition — it returns an integer
+//!   popcount of `a XOR b`, and integer addition is associative, so any
+//!   vectorization/accumulation order produces the same number.
 
 use std::sync::atomic::{AtomicU8, Ordering};
 
@@ -112,6 +116,12 @@ pub type SignAccumFn = fn(&[u64], &[f32], usize, usize, &mut [f32]);
 /// is `Σ_i x[i]` (the scalar rung computes `2 * selected - total`, the
 /// SIMD rungs sign-flip lanes directly and ignore it).
 pub type SignDotFn = fn(&[u64], &[f32], f32) -> f32;
+/// `popcount(a XOR b)` summed over `min(a.len, b.len)` packed words — the
+/// BNN inner product core: with activations and weights both sign-packed
+/// (bit = 1 ⟺ value ≥ 0) over `k` elements and zeroed padding bits, the
+/// ±1 dot product is `k - 2 * sign_xnor_dot(a, b)`. Integer result, so
+/// every ISA rung is bit-exact by construction.
+pub type SignXnorDotFn = fn(&[u64], &[u64]) -> u32;
 /// Register-tiled panel microkernel: `panel(k, pa, pb, c, ldc, acc)`
 /// computes the full `mr x nr` product of an `mr`-row LHS panel (`pa`,
 /// k-major, `mr` interleaved floats per k-step) against an `nr`-column
@@ -144,6 +154,9 @@ pub struct Kernels {
     pub add: AddFn,
     pub sign_accum: SignAccumFn,
     pub sign_dot: SignDotFn,
+    /// XOR + popcount over packed sign words ([`SignXnorDotFn`]) — the
+    /// integer inner loop of the BNN inference mode.
+    pub sign_xnor_dot: SignXnorDotFn,
     /// The register-tiled f32 panel kernel ([`PanelFn`]) and its tile
     /// geometry: `mr` LHS rows by `nr` RHS columns per call. `pack_lhs` /
     /// `pack_rhs` lay panels out to exactly this geometry, so the kernel
@@ -167,6 +180,7 @@ static SCALAR: Kernels = Kernels {
     add: scalar::add,
     sign_accum: scalar::sign_accum,
     sign_dot: scalar::sign_dot,
+    sign_xnor_dot: scalar::sign_xnor_dot,
     panel: scalar::panel4x8,
     mr: 4,
     nr: 8,
@@ -182,6 +196,7 @@ static SSE2: Kernels = Kernels {
     add: x86::sse2_add,
     sign_accum: x86::sse2_sign_accum,
     sign_dot: x86::sse2_sign_dot,
+    sign_xnor_dot: x86::sse2_sign_xnor_dot,
     panel: x86::sse2_panel,
     mr: 4,
     nr: 8,
@@ -197,6 +212,7 @@ static AVX2: Kernels = Kernels {
     add: x86::avx2_add,
     sign_accum: x86::avx2_sign_accum,
     sign_dot: x86::avx2_sign_dot,
+    sign_xnor_dot: x86::avx2_sign_xnor_dot,
     panel: x86::avx2_panel,
     mr: 4,
     nr: 16,
@@ -212,6 +228,7 @@ static NEON: Kernels = Kernels {
     add: aarch64::neon_add,
     sign_accum: aarch64::neon_sign_accum,
     sign_dot: aarch64::neon_sign_dot,
+    sign_xnor_dot: aarch64::neon_sign_xnor_dot,
     panel: aarch64::neon_panel,
     mr: 4,
     nr: 8,
@@ -226,7 +243,14 @@ pub fn detect() -> Isa {
 
 #[cfg(target_arch = "x86_64")]
 fn detect_impl() -> Isa {
-    if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+    // POPCNT (for the avx2 sign_xnor_dot tail) predates AVX2 by several
+    // generations, so requiring it never demotes a real AVX2 host — it
+    // only keeps the feature set the rung's kernels compile against
+    // honest.
+    if is_x86_feature_detected!("avx2")
+        && is_x86_feature_detected!("fma")
+        && is_x86_feature_detected!("popcnt")
+    {
         Isa::Avx2
     } else {
         Isa::Sse2
@@ -495,6 +519,14 @@ mod scalar {
         }
     }
 
+    /// Portable XOR–popcount reduction; `u64::count_ones` lowers to a
+    /// single `popcnt`-class instruction where the baseline target has
+    /// one, SWAR otherwise. Integer sum, so associativity is free and
+    /// every other rung must match this bit-for-bit.
+    pub(super) fn sign_xnor_dot(a: &[u64], b: &[u64]) -> u32 {
+        a.iter().zip(b).map(|(&x, &y)| (x ^ y).count_ones()).sum()
+    }
+
     pub(super) fn sign_dot(col: &[u64], x: &[f32], total: f32) -> f32 {
         let k = x.len();
         let mut sel = 0f32;
@@ -617,6 +649,31 @@ mod tests {
                         }
                     }
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn sign_xnor_dot_is_bit_exact_across_arms() {
+        // word counts straddling every vector width in the tables:
+        // sub-block (1..3), exact AVX2 blocks (4, 8), ragged tails
+        // (5, 7, 9, 17), and empty input.
+        let mut rng = Rng::new(42);
+        for &words in &[0usize, 1, 2, 3, 4, 5, 7, 8, 9, 16, 17, 33] {
+            let a: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+            let b: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+            let want: u32 = a.iter().zip(&b).map(|(&x, &y)| (x ^ y).count_ones()).sum();
+            for isa in ALL_ISAS.iter().filter(|i| i.supported()) {
+                let got = (kernels_for(*isa).sign_xnor_dot)(&a, &b);
+                assert_eq!(got, want, "{isa:?} sign_xnor_dot mismatch at {words} words");
+                // all-equal inputs -> zero, all-complement -> every bit
+                let c: Vec<u64> = a.iter().map(|&x| !x).collect();
+                assert_eq!((kernels_for(*isa).sign_xnor_dot)(&a, &a), 0, "{isa:?} self-xor");
+                assert_eq!(
+                    (kernels_for(*isa).sign_xnor_dot)(&a, &c),
+                    64 * words as u32,
+                    "{isa:?} complement"
+                );
             }
         }
     }

@@ -296,6 +296,34 @@ unsafe fn sign_dot_sse2(col: &[u64], x: *const f32, k: usize) -> f32 {
     s
 }
 
+pub(super) fn sse2_sign_xnor_dot(a: &[u64], b: &[u64]) -> u32 {
+    // SSE2 has no vector popcount (PSHUFB arrives with SSSE3, POPCNT
+    // with SSE4.2), so this rung is a 4-word-unrolled scalar loop:
+    // `count_ones` lowers to the baseline-x86_64 SWAR sequence, and the
+    // unroll gives the four chains independent registers. Integer sums
+    // are associative, so it is bit-exact with every other rung.
+    let n = a.len().min(b.len());
+    let (a, b) = (&a[..n], &b[..n]);
+    let mut s0 = 0u32;
+    let mut s1 = 0u32;
+    let mut s2 = 0u32;
+    let mut s3 = 0u32;
+    let mut i = 0usize;
+    while i + 4 <= n {
+        s0 += (a[i] ^ b[i]).count_ones();
+        s1 += (a[i + 1] ^ b[i + 1]).count_ones();
+        s2 += (a[i + 2] ^ b[i + 2]).count_ones();
+        s3 += (a[i + 3] ^ b[i + 3]).count_ones();
+        i += 4;
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    while i < n {
+        s += (a[i] ^ b[i]).count_ones();
+        i += 1;
+    }
+    s
+}
+
 #[inline]
 unsafe fn hsum128(v: __m128) -> f32 {
     let s = _mm_add_ps(v, _mm_movehl_ps(v, v));
@@ -633,6 +661,52 @@ unsafe fn sign_dot_avx2(col: &[u64], x: *const f32, k: usize) -> f32 {
         r += 1;
     }
     s
+}
+
+pub(super) fn avx2_sign_xnor_dot(a: &[u64], b: &[u64]) -> u32 {
+    let n = a.len().min(b.len());
+    // SAFETY: reads stay below n in both slices; this shim is only
+    // reachable through the AVX2 table, which runtime detection hands
+    // out strictly after confirming avx2+fma+popcnt.
+    unsafe { sign_xnor_dot_avx2(a.as_ptr(), b.as_ptr(), n) }
+}
+
+#[target_feature(enable = "avx2,popcnt")]
+unsafe fn sign_xnor_dot_avx2(a: *const u64, b: *const u64, n: usize) -> u32 {
+    // Nibble-LUT popcount: per 4-word block, XOR the operands, split
+    // each byte into nibbles, look both up in a replicated 16-entry
+    // table via vpshufb, and horizontally fold the byte counts into
+    // four u64 lanes with vpsadbw (so the epi8 sums can never
+    // saturate). Exact for any input — every step counts bits, no
+    // arithmetic approximation — so the rung stays bit-identical to
+    // scalar.
+    let lut = _mm256_setr_epi8(
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, //
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+    );
+    let low = _mm256_set1_epi8(0x0f);
+    let zero = _mm256_setzero_si256();
+    let mut acc = _mm256_setzero_si256();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let va = _mm256_loadu_si256(a.add(i) as *const __m256i);
+        let vb = _mm256_loadu_si256(b.add(i) as *const __m256i);
+        let x = _mm256_xor_si256(va, vb);
+        let lo = _mm256_shuffle_epi8(lut, _mm256_and_si256(x, low));
+        let hi = _mm256_shuffle_epi8(lut, _mm256_and_si256(_mm256_srli_epi16::<4>(x), low));
+        let cnt = _mm256_add_epi8(lo, hi);
+        acc = _mm256_add_epi64(acc, _mm256_sad_epu8(cnt, zero));
+        i += 4;
+    }
+    let mut s = (_mm256_extract_epi64::<0>(acc)
+        + _mm256_extract_epi64::<1>(acc)
+        + _mm256_extract_epi64::<2>(acc)
+        + _mm256_extract_epi64::<3>(acc)) as u64;
+    while i < n {
+        s += _popcnt64((*a.add(i) ^ *b.add(i)) as i64) as u64;
+        i += 1;
+    }
+    s as u32
 }
 
 #[inline]

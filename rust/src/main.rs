@@ -61,6 +61,9 @@ usage: bcrun <info|train|hw|export|infer|serve|loadgen> [flags]
            --port N (default 7878; 0 = ephemeral) --port-file PATH
            --max-batch N (default 64) --max-wait-us N (default 200)
            --queue-cap N (default 1024) --workers N (default: cores)
+           --bnn (XNOR-popcount engine: binarized hidden activations,
+             first layer stays f32; different function than packed-f32,
+             same solo == coalesced bit-exactness)
            --quiet    endpoints: POST /predict {\"x\":[...]} -> pred+logits,
            GET /healthz, GET /stats, POST /shutdown; SIGTERM/ctrl-c and
            /shutdown both drain in-flight batches before exit
@@ -342,7 +345,8 @@ fn cmd_infer(args: &Args) -> Result<()> {
 /// Sec. 2.6 inference, made an online workload — see DESIGN.md "Serving
 /// layer").
 fn cmd_serve(args: &Args) -> Result<()> {
-    use binaryconnect::binary::load_packed;
+    use binaryconnect::binary::{load_packed, ForwardMode};
+    use binaryconnect::kernel::simd;
     use binaryconnect::serve;
     use std::time::Duration;
 
@@ -352,6 +356,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     ensure!(port <= u16::MAX as usize, "--port {port} is out of range");
     let default_workers =
         std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).clamp(2, 64);
+    let mode = if args.bool("bnn", false) { ForwardMode::Bnn } else { ForwardMode::PackedF32 };
     let cfg = serve::ServeConfig {
         addr: args.str("addr", "127.0.0.1"),
         port: port as u16,
@@ -360,16 +365,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue_cap: args.usize("queue-cap", 1024),
         workers: args.usize("workers", default_workers),
         quiet: args.bool("quiet", false),
+        mode,
         ..Default::default()
     };
     let quiet = cfg.quiet;
     let summary = format!(
-        "model {} ({} -> {} classes, {} layers, {} packed weight bytes)",
+        "model {} ({} -> {} classes, {} layers, {} packed weight bytes, {} activation bytes) mode={} isa={}",
         path,
         packed.in_dim,
         packed.classes,
         packed.layers.len(),
-        packed.weight_memory_bytes()
+        packed.weight_memory_bytes(),
+        packed.activation_memory_bytes(cfg.max_batch, mode),
+        mode.label(),
+        simd::active().name(),
     );
     serve::signal::install();
     let mut server = serve::start(packed, cfg)?;

@@ -12,10 +12,11 @@
 //!   whichever is first. `max_wait == 0` disables coalescing-by-waiting
 //!   (whatever is already queued still rides one forward).
 //! * **Exactness.** Every forward goes through
-//!   [`PackedMlp::forward_into`], which always takes the lane-batched
-//!   kernel: a row's logits are bit-identical whether it was served solo
-//!   or inside any coalesced batch (tested here and end-to-end over
-//!   HTTP in `tests/integration_serve.rs`).
+//!   [`PackedMlp::forward_into`] — or, in [`ForwardMode::Bnn`],
+//!   [`PackedMlp::forward_bnn_into`] — both of which guarantee that a
+//!   row's logits are bit-identical whether it was served solo or inside
+//!   any coalesced batch (tested here per mode and end-to-end over HTTP
+//!   in `tests/integration_serve.rs`).
 //! * **Backpressure.** The queue is bounded (`queue_cap` rows);
 //!   [`BatchQueue::submit`] fails instead of blocking when full, and the
 //!   HTTP layer maps that to 503 + Retry-After.
@@ -31,7 +32,8 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::binary::packed::{argmax, PackedMlp};
+use crate::binary::packed::{argmax, PackedMlp, PackedWorkspace};
+use crate::binary::{BnnWorkspace, ForwardMode};
 
 use super::metrics::Metrics;
 
@@ -51,12 +53,21 @@ pub struct Reply {
     pub batch_rows: usize,
 }
 
-/// Batching knobs (`bcrun serve --max-batch --max-wait-us --queue-cap`).
+/// Batching knobs (`bcrun serve --max-batch --max-wait-us --queue-cap
+/// --bnn`).
 #[derive(Clone, Debug)]
 pub struct BatchConfig {
     pub max_batch: usize,
     pub max_wait: Duration,
     pub queue_cap: usize,
+    /// Which forward engine the batcher thread owns a workspace for.
+    pub mode: ForwardMode,
+}
+
+/// The batcher thread's workspace, matching its configured mode.
+enum ModeWorkspace {
+    F32(PackedWorkspace),
+    Bnn(BnnWorkspace),
 }
 
 struct Shared {
@@ -155,7 +166,10 @@ impl Drop for Batcher {
 
 fn run_loop(mlp: &PackedMlp, shared: &Shared, cfg: &BatchConfig, metrics: &Metrics) {
     let max_batch = cfg.max_batch.max(1);
-    let mut ws = mlp.workspace(max_batch);
+    let mut ws = match cfg.mode {
+        ForwardMode::PackedF32 => ModeWorkspace::F32(mlp.workspace(max_batch)),
+        ForwardMode::Bnn => ModeWorkspace::Bnn(mlp.bnn_workspace(max_batch)),
+    };
     let mut slab = vec![0f32; max_batch * mlp.in_dim];
     let mut batch: Vec<Job> = Vec::with_capacity(max_batch);
     loop {
@@ -203,7 +217,10 @@ fn run_loop(mlp: &PackedMlp, shared: &Shared, cfg: &BatchConfig, metrics: &Metri
         for (i, job) in batch.iter().enumerate() {
             slab[i * mlp.in_dim..(i + 1) * mlp.in_dim].copy_from_slice(&job.x);
         }
-        let logits = mlp.forward_into(&slab[..b * mlp.in_dim], b, &mut ws);
+        let logits = match &mut ws {
+            ModeWorkspace::F32(ws) => mlp.forward_into(&slab[..b * mlp.in_dim], b, ws),
+            ModeWorkspace::Bnn(ws) => mlp.forward_bnn_into(&slab[..b * mlp.in_dim], b, ws),
+        };
         metrics.record_batch(b);
         for (i, job) in batch.drain(..).enumerate() {
             let row = &logits[i * mlp.classes..(i + 1) * mlp.classes];
@@ -274,6 +291,7 @@ mod tests {
             max_batch: 8,
             max_wait: Duration::from_millis(50),
             queue_cap: 64,
+            mode: ForwardMode::PackedF32,
         };
         let mut batcher = Batcher::spawn(Arc::clone(&mlp), queue, cfg, Arc::clone(&metrics));
         for (i, rx) in rxs.iter().enumerate() {
@@ -285,6 +303,41 @@ mod tests {
         batcher.stop();
         assert_eq!(metrics.batches.load(Ordering::Relaxed), 1);
         assert_eq!(metrics.rows.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn bnn_mode_coalesced_is_bit_equal_to_solo() {
+        // the exactness contract must hold for the XNOR engine too: solo
+        // bnn forwards through the same path the batcher takes
+        let mlp = toy_mlp();
+        let xs = rows(&mlp, 8, 24);
+        let mut ws = mlp.bnn_workspace(1);
+        let solo: Vec<Vec<f32>> =
+            xs.iter().map(|x| mlp.forward_bnn_into(x, 1, &mut ws).to_vec()).collect();
+        let queue = BatchQueue::bounded(64);
+        let rxs: Vec<_> = xs
+            .iter()
+            .map(|x| {
+                let (j, rx) = job(x.clone());
+                queue.submit(j).map_err(|_| ()).unwrap();
+                rx
+            })
+            .collect();
+        let metrics = Arc::new(Metrics::new());
+        let cfg = BatchConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(50),
+            queue_cap: 64,
+            mode: ForwardMode::Bnn,
+        };
+        let mut batcher = Batcher::spawn(Arc::clone(&mlp), queue, cfg, Arc::clone(&metrics));
+        for (i, rx) in rxs.iter().enumerate() {
+            let reply = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(reply.batch_rows, 8, "row {i} was not coalesced");
+            assert_eq!(reply.logits, solo[i], "row {i}: bnn coalesced != solo bits");
+            assert_eq!(reply.pred, argmax(&solo[i]));
+        }
+        batcher.stop();
     }
 
     #[test]
@@ -304,6 +357,7 @@ mod tests {
             max_batch: 4,
             max_wait: Duration::ZERO,
             queue_cap: 64,
+            mode: ForwardMode::PackedF32,
         };
         let metrics = Arc::new(Metrics::new());
         let mut batcher = Batcher::spawn(Arc::clone(&mlp), queue, cfg, Arc::clone(&metrics));
@@ -347,6 +401,7 @@ mod tests {
             max_batch: 4,
             max_wait: Duration::from_secs(1),
             queue_cap: 64,
+            mode: ForwardMode::PackedF32,
         };
         let metrics = Arc::new(Metrics::new());
         let t0 = Instant::now();

@@ -50,8 +50,9 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::binary::PackedMlp;
+use crate::binary::{ForwardMode, PackedMlp};
 use crate::ensure;
+use crate::kernel::simd;
 use crate::util::error::{Context as _, Result};
 use crate::util::{Json, Timer};
 
@@ -89,6 +90,11 @@ pub struct ServeConfig {
     pub idle_timeout: Duration,
     /// Suppress the per-lifecycle eprintln lines.
     pub quiet: bool,
+    /// Forward engine: classic packed-f32, or the XNOR–popcount BNN
+    /// path (`--bnn`). Either way the solo ≡ coalesced bit-exactness
+    /// contract holds; in BNN mode hidden activations are sign bits, so
+    /// the served function differs from packed-f32 by design.
+    pub mode: ForwardMode,
 }
 
 impl Default for ServeConfig {
@@ -105,6 +111,7 @@ impl Default for ServeConfig {
             request_timeout: Duration::from_secs(10),
             idle_timeout: Duration::from_secs(30),
             quiet: true,
+            mode: ForwardMode::PackedF32,
         }
     }
 }
@@ -118,6 +125,10 @@ struct Ctx {
     max_body: usize,
     request_timeout: Duration,
     idle_timeout: Duration,
+    /// Active forward engine, echoed by `/stats`.
+    mode: ForwardMode,
+    /// Workspace footprint for this mode at `max_batch` (static fact).
+    activation_bytes: usize,
     /// Prebuilt `/healthz` body (model + config facts are static).
     health_body: String,
 }
@@ -184,9 +195,11 @@ pub fn start(mlp: PackedMlp, cfg: ServeConfig) -> Result<Server> {
         max_batch: cfg.max_batch,
         max_wait: cfg.max_wait,
         queue_cap: cfg.queue_cap,
+        mode: cfg.mode,
     };
     let batcher = Batcher::start(Arc::clone(&mlp), batch_cfg, Arc::clone(&metrics));
     let health_body = health_json(&mlp, &cfg).to_string();
+    let activation_bytes = mlp.activation_memory_bytes(cfg.max_batch, cfg.mode);
     let ctx = Arc::new(Ctx {
         mlp,
         queue: batcher.queue.clone(),
@@ -195,6 +208,8 @@ pub fn start(mlp: PackedMlp, cfg: ServeConfig) -> Result<Server> {
         max_body: cfg.max_body,
         request_timeout: cfg.request_timeout,
         idle_timeout: cfg.idle_timeout,
+        mode: cfg.mode,
+        activation_bytes,
         health_body,
     });
 
@@ -245,6 +260,15 @@ fn health_json(mlp: &PackedMlp, cfg: &ServeConfig) -> Json {
     m.insert(
         "weight_bytes".to_string(),
         Json::Num(mlp.weight_memory_bytes() as f64),
+    );
+    m.insert(
+        "activation_bytes".to_string(),
+        Json::Num(mlp.activation_memory_bytes(cfg.max_batch, cfg.mode) as f64),
+    );
+    m.insert("mode".to_string(), Json::Str(cfg.mode.label().to_string()));
+    m.insert(
+        "isa_selected".to_string(),
+        Json::Str(simd::active().name().to_string()),
     );
     m.insert("max_batch".to_string(), Json::Num(cfg.max_batch as f64));
     m.insert(
@@ -358,7 +382,27 @@ fn route(ctx: &Ctx, req: &Request) -> (u16, String) {
     match (req.method.as_str(), req.path.as_str()) {
         ("POST", "/predict") => predict(ctx, &req.body),
         ("GET", "/healthz") => (200, ctx.health_body.clone()),
-        ("GET", "/stats") => (200, ctx.metrics.snapshot(ctx.queue.depth()).to_string()),
+        ("GET", "/stats") => {
+            // augment the counters with the engine facts here (rather
+            // than widening Metrics::snapshot, which has many callers)
+            let mut snap = ctx.metrics.snapshot(ctx.queue.depth());
+            if let Json::Obj(m) = &mut snap {
+                m.insert("mode".to_string(), Json::Str(ctx.mode.label().to_string()));
+                m.insert(
+                    "isa_selected".to_string(),
+                    Json::Str(simd::active().name().to_string()),
+                );
+                m.insert(
+                    "weight_bytes".to_string(),
+                    Json::Num(ctx.mlp.weight_memory_bytes() as f64),
+                );
+                m.insert(
+                    "activation_bytes".to_string(),
+                    Json::Num(ctx.activation_bytes as f64),
+                );
+            }
+            (200, snap.to_string())
+        }
         ("POST", "/shutdown") => {
             ctx.shutdown.store(true, Ordering::Release);
             let mut m = BTreeMap::new();
@@ -497,6 +541,7 @@ mod tests {
     fn test_ctx(cfg: &ServeConfig) -> Ctx {
         let mlp = Arc::new(toy_mlp());
         let health_body = health_json(&mlp, cfg).to_string();
+        let activation_bytes = mlp.activation_memory_bytes(cfg.max_batch, cfg.mode);
         Ctx {
             mlp,
             queue: batcher::BatchQueue::bounded(cfg.queue_cap),
@@ -505,6 +550,8 @@ mod tests {
             max_body: cfg.max_body,
             request_timeout: cfg.request_timeout,
             idle_timeout: cfg.idle_timeout,
+            mode: cfg.mode,
+            activation_bytes,
             health_body,
         }
     }
@@ -536,6 +583,29 @@ mod tests {
         assert_eq!(j.get("in_dim").unwrap().as_usize(), Some(6));
         assert_eq!(j.get("classes").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("max_batch").unwrap().as_usize(), Some(32));
+        assert_eq!(j.get("mode").unwrap().as_str(), Some("packed-f32"));
+        assert_eq!(
+            j.get("isa_selected").unwrap().as_str(),
+            Some(simd::active().name())
+        );
+        let act = j.get("activation_bytes").unwrap().as_usize().unwrap();
+        assert_eq!(act, ctx.mlp.activation_memory_bytes(32, ForwardMode::PackedF32));
+    }
+
+    #[test]
+    fn health_json_reports_bnn_mode_facts() {
+        let cfg = ServeConfig {
+            max_batch: 16,
+            mode: ForwardMode::Bnn,
+            ..Default::default()
+        };
+        let ctx = test_ctx(&cfg);
+        let j = Json::parse(&ctx.health_body).unwrap();
+        assert_eq!(j.get("mode").unwrap().as_str(), Some("bnn"));
+        let act = j.get("activation_bytes").unwrap().as_usize().unwrap();
+        assert_eq!(act, ctx.mlp.activation_memory_bytes(16, ForwardMode::Bnn));
+        // bit activations are far smaller than the f32 ping-pong
+        assert!(act < ctx.mlp.activation_memory_bytes(16, ForwardMode::PackedF32));
     }
 
     #[test]

@@ -1,0 +1,267 @@
+//! Property suite for the XNOR–popcount BNN engine (`binary/bnn.rs`).
+//!
+//! The engine's correctness rests on four claims, each pinned here:
+//!
+//! 1. **Integer exactness.** With ±1 activations, the float reference
+//!    (sign-by-sign multiply-accumulate) produces exact small integers
+//!    at every partial sum, so `k - 2*popcount(xor)` must match it
+//!    *bit-for-bit* after the folded affine — not approximately.
+//! 2. **Batch invariance.** A row's output never depends on the batch
+//!    it was computed in (solo ≡ coalesced, the serving contract).
+//! 3. **Ragged shapes.** `k % 64 != 0` and `n % 64 != 0` exercise the
+//!    padding words; padding bits must stay zero and never leak into
+//!    counts or packed outputs.
+//! 4. **ISA equivalence.** Every `sign_xnor_dot` rung returns the same
+//!    integer, so the `_isa`-pinned paths are bit-identical.
+
+use binaryconnect::binary::bnn::{
+    pack_rows_into, words_per_row, xnor_layer_bits, xnor_layer_bits_isa, xnor_layer_f32,
+    xnor_layer_f32_isa, xnor_reference_preact,
+};
+use binaryconnect::binary::packed::{BitMatrix, PackedLayer, PackedMlp};
+use binaryconnect::kernel::simd::{Isa, ALL_ISAS};
+use binaryconnect::util::Rng;
+
+fn rand_mat(r: usize, c: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..r * c).map(|_| rng.normal()).collect()
+}
+
+/// Random ±1 rows — exactly the value domain hidden activations live in.
+fn sign_rows(b: usize, k: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..b * k).map(|_| if rng.normal() >= 0.0 { 1.0f32 } else { -1.0 }).collect()
+}
+
+/// A layer with mixed-sign scales (BN gammas can be negative) and
+/// non-trivial shifts.
+fn mk_layer(k: usize, n: usize, seed: u64, relu: bool) -> PackedLayer {
+    let mut rng = Rng::new(seed);
+    let w = rand_mat(k, n, seed + 1);
+    PackedLayer {
+        bits: BitMatrix::pack(&w, k, n),
+        scale: (0..n).map(|_| 0.4 * rng.normal()).collect(),
+        shift: (0..n).map(|_| 0.2 * rng.normal()).collect(),
+        relu,
+    }
+}
+
+/// Word-edge shapes: k and n both cross (or undershoot) 64-bit words.
+const SHAPES: [(usize, usize); 5] = [(64, 64), (70, 33), (128, 10), (1, 5), (63, 127)];
+
+#[test]
+fn xnor_f32_layer_is_bit_identical_to_float_reference() {
+    for (si, &(k, n)) in SHAPES.iter().enumerate() {
+        for b in [1usize, 4] {
+            let layer = mk_layer(k, n, 1000 + si as u64, false);
+            let a = sign_rows(b, k, 2000 + si as u64);
+            let mut abits = vec![0u64; b * words_per_row(k)];
+            pack_rows_into(&a, b, k, &mut abits);
+            let mut y = vec![0f32; b * n];
+            xnor_layer_f32(&layer, &abits, b, &mut y);
+            let mut yref = vec![0f32; b * n];
+            xnor_reference_preact(&layer, &a, b, &mut yref);
+            let yb: Vec<u32> = y.iter().map(|v| v.to_bits()).collect();
+            let rb: Vec<u32> = yref.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(yb, rb, "xnor vs float reference differ (k={k} n={n} b={b})");
+        }
+    }
+}
+
+#[test]
+fn xnor_bits_layer_matches_reference_signs_and_zeroes_padding() {
+    for (si, &(k, n)) in SHAPES.iter().enumerate() {
+        for b in [1usize, 3] {
+            let layer = mk_layer(k, n, 3000 + si as u64, true);
+            let a = sign_rows(b, k, 4000 + si as u64);
+            let mut abits = vec![0u64; b * words_per_row(k)];
+            pack_rows_into(&a, b, k, &mut abits);
+            let wpo = words_per_row(n);
+            // pre-poison the output buffer: every word must be fully
+            // (re)written, padding bits included
+            let mut obits = vec![u64::MAX; b * wpo];
+            xnor_layer_bits(&layer, &abits, b, &mut obits);
+            let mut yref = vec![0f32; b * n];
+            xnor_reference_preact(&layer, &a, b, &mut yref);
+            for bi in 0..b {
+                for j in 0..n {
+                    let bit = (obits[bi * wpo + j / 64] >> (j % 64)) & 1;
+                    let want = u64::from(yref[bi * n + j] >= 0.0);
+                    assert_eq!(bit, want, "unit ({bi},{j}) sign (k={k} n={n})");
+                }
+                if n % 64 != 0 {
+                    let pad = obits[bi * wpo + wpo - 1] >> (n % 64);
+                    assert_eq!(pad, 0, "padding bits must be zero (row {bi}, n={n})");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pack_rows_treats_negative_zero_as_plus_one() {
+    // sign(0) = +1 per Eq. 1 of the paper; -0.0 >= 0.0 in IEEE, so both
+    // zeros land on the +1 side — same convention as the weight packer.
+    let x = [-0.0f32, 0.0, -1.0, 1.0, f32::MIN_POSITIVE, -f32::MIN_POSITIVE];
+    let mut bits = vec![0u64; 1];
+    pack_rows_into(&x, 1, x.len(), &mut bits);
+    assert_eq!(bits[0], 0b011011, "bits: +0,-0,+1 set; -1 and -eps clear");
+
+    // and a layer fed ±0.0-swapped activations must not notice
+    let (k, n) = (70usize, 33usize);
+    let layer = mk_layer(k, n, 7000, false);
+    let mut a = sign_rows(1, k, 7001);
+    let mut a2 = a.clone();
+    a[0] = 0.0;
+    a2[0] = -0.0;
+    let mut b1 = vec![0u64; words_per_row(k)];
+    let mut b2 = vec![0u64; words_per_row(k)];
+    pack_rows_into(&a, 1, k, &mut b1);
+    pack_rows_into(&a2, 1, k, &mut b2);
+    assert_eq!(b1, b2, "+0.0 and -0.0 must pack identically");
+    let mut y1 = vec![0f32; n];
+    let mut y2 = vec![0f32; n];
+    xnor_layer_f32(&layer, &b1, 1, &mut y1);
+    xnor_layer_f32(&layer, &b2, 1, &mut y2);
+    assert_eq!(y1, y2);
+}
+
+#[test]
+fn every_isa_rung_is_bit_identical() {
+    let (k, n) = (257usize, 66usize); // ragged words on both sides
+    let b = 5;
+    let layer = mk_layer(k, n, 5000, true);
+    let a = sign_rows(b, k, 5001);
+    let mut abits = vec![0u64; b * words_per_row(k)];
+    pack_rows_into(&a, b, k, &mut abits);
+    let wpo = words_per_row(n);
+    let mut bits_ref = vec![0u64; b * wpo];
+    xnor_layer_bits_isa(Isa::Scalar, &layer, &abits, b, &mut bits_ref);
+    let mut y_ref = vec![0f32; b * n];
+    xnor_layer_f32_isa(Isa::Scalar, &layer, &abits, b, &mut y_ref);
+    for &isa in ALL_ISAS {
+        if !isa.supported() {
+            continue;
+        }
+        let mut bits = vec![0u64; b * wpo];
+        xnor_layer_bits_isa(isa, &layer, &abits, b, &mut bits);
+        assert_eq!(bits, bits_ref, "{}: bit layer diverged from scalar", isa.name());
+        let mut y = vec![0f32; b * n];
+        xnor_layer_f32_isa(isa, &layer, &abits, b, &mut y);
+        let yb: Vec<u32> = y.iter().map(|v| v.to_bits()).collect();
+        let rb: Vec<u32> = y_ref.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(yb, rb, "{}: f32 layer diverged from scalar", isa.name());
+    }
+}
+
+/// Word-edge 3-layer net: 12 -> 70 -> 33 -> 4, BN on the hidden layers.
+fn toy_mlp(seed: u64) -> PackedMlp {
+    let w1 = rand_mat(12, 70, seed);
+    let w2 = rand_mat(70, 33, seed + 1);
+    let w3 = rand_mat(33, 4, seed + 2);
+    let mut rng = Rng::new(seed + 3);
+    type Bn = Option<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)>;
+    let bn = |n: usize, r: &mut Rng| -> Bn {
+        Some((
+            (0..n).map(|_| 1.0 + 0.1 * r.normal()).collect(),
+            (0..n).map(|_| 0.1 * r.normal()).collect(),
+            (0..n).map(|_| 0.2 * r.normal()).collect(),
+            (0..n).map(|_| (1.0 + 0.1 * r.normal()).abs()).collect(),
+        ))
+    };
+    PackedMlp::build(
+        vec![(w1, 12, 70), (w2, 70, 33), (w3, 33, 4)],
+        vec![bn(70, &mut rng), bn(33, &mut rng), None],
+        Some(vec![0.05, -0.05, 0.0, 0.02]),
+    )
+}
+
+#[test]
+fn forward_bnn_rows_bit_identical_across_batch_sizes() {
+    // the serving exactness contract, bnn edition: solo == coalesced
+    let mlp = toy_mlp(90);
+    let b = 8;
+    let x = rand_mat(b, mlp.in_dim, 91);
+    let mut ws = mlp.bnn_workspace(b);
+    let full = mlp.forward_bnn_into(&x, b, &mut ws).to_vec();
+    for bi in 0..b {
+        let row = &x[bi * mlp.in_dim..(bi + 1) * mlp.in_dim];
+        let solo = mlp.forward_bnn_into(row, 1, &mut ws).to_vec();
+        assert_eq!(
+            solo,
+            full[bi * mlp.classes..(bi + 1) * mlp.classes].to_vec(),
+            "row {bi}: solo != coalesced in bnn mode"
+        );
+    }
+    // ragged split 3 + 5
+    let cut = 3 * mlp.in_dim;
+    let head = mlp.forward_bnn_into(&x[..cut], 3, &mut ws).to_vec();
+    let tail = mlp.forward_bnn_into(&x[cut..], 5, &mut ws).to_vec();
+    let mut joined = head;
+    joined.extend(tail);
+    assert_eq!(joined, full, "3+5 split != coalesced batch of 8 in bnn mode");
+}
+
+#[test]
+fn forward_bnn_isa_pins_are_bit_identical() {
+    let mlp = toy_mlp(95);
+    let b = 6;
+    let x = rand_mat(b, mlp.in_dim, 96);
+    let mut ws = mlp.bnn_workspace(b);
+    let scalar = mlp.forward_bnn_into_isa(Isa::Scalar, &x, b, &mut ws).to_vec();
+    for &isa in ALL_ISAS {
+        if !isa.supported() {
+            continue;
+        }
+        let got = mlp.forward_bnn_into_isa(isa, &x, b, &mut ws).to_vec();
+        let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+        let sb: Vec<u32> = scalar.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(gb, sb, "{}: bnn forward diverged from scalar", isa.name());
+    }
+}
+
+#[test]
+fn forward_bnn_equals_manual_layer_composition() {
+    // the wired pipeline (escape hatch -> pack -> xnor bits -> xnor f32)
+    // recomposed by hand from the public pieces must give the same bits
+    let mlp = toy_mlp(120);
+    let b = 4;
+    let x = rand_mat(b, mlp.in_dim, 121);
+    let mut ws = mlp.bnn_workspace(b);
+    let got = mlp.forward_bnn_into(&x, b, &mut ws).to_vec();
+
+    let l0 = &mlp.layers[0];
+    let n0 = l0.bits.n;
+    let mut h0 = vec![0f32; b * n0];
+    let mut xt = vec![0f32; b * mlp.in_dim];
+    let mut totals = vec![0f32; b];
+    l0.bits.matmul_scaled_into_batched(&x, b, 1.0, &mut h0, &mut xt, &mut totals);
+    for row in h0.chunks_exact_mut(n0) {
+        for ((v, &s), &t) in row.iter_mut().zip(&l0.scale).zip(&l0.shift) {
+            *v = *v * s + t; // affine only — sign replaces ReLU in bnn mode
+        }
+    }
+    let mut bits = vec![0u64; b * words_per_row(n0)];
+    pack_rows_into(&h0, b, n0, &mut bits);
+    let l1 = &mlp.layers[1];
+    let mut bits2 = vec![0u64; b * words_per_row(l1.bits.n)];
+    xnor_layer_bits(l1, &bits, b, &mut bits2);
+    let l2 = &mlp.layers[2];
+    let mut want = vec![0f32; b * mlp.classes];
+    xnor_layer_f32(l2, &bits2, b, &mut want);
+    assert_eq!(got, want, "forward_bnn_into != manual composition");
+}
+
+#[test]
+fn bnn_logits_are_finite_and_shaped() {
+    // sanity, not exactness: bnn and packed-f32 are different functions
+    // by design (sign vs relu hidden nonlinearity), so there is no
+    // cross-mode equality to pin — only shape and finiteness.
+    let mlp = toy_mlp(130);
+    let b = 16;
+    let x = rand_mat(b, mlp.in_dim, 131);
+    let mut bws = mlp.bnn_workspace(b);
+    let logits = mlp.forward_bnn_into(&x, b, &mut bws);
+    assert_eq!(logits.len(), b * mlp.classes);
+    assert!(logits.iter().all(|v| v.is_finite()), "bnn logits must be finite");
+}

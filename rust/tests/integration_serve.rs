@@ -11,6 +11,7 @@ use std::sync::{Arc, Barrier};
 use std::time::Duration;
 
 use binaryconnect::binary::packed::PackedMlp;
+use binaryconnect::binary::ForwardMode;
 use binaryconnect::serve::loadgen::{predict_body, HttpClient};
 use binaryconnect::serve::{self, ServeConfig};
 use binaryconnect::util::{Json, Rng};
@@ -135,6 +136,88 @@ fn solo_and_coalesced_predictions_are_bit_identical_over_http() {
     // take uncoalesced is not guaranteed by timing — but every reply
     // reports a plausible batch size and the server accounted every row
     assert!(batch_sizes.iter().all(|&b| (1..=32).contains(&b)));
+    assert_eq!(snap.get("rows").unwrap().as_usize(), Some(n));
+    assert_eq!(snap.get("predictions").unwrap().as_usize(), Some(n));
+}
+
+#[test]
+fn bnn_solo_and_coalesced_predictions_are_bit_identical_over_http() {
+    // ISSUE 7 acceptance: the XNOR-popcount engine honors the same
+    // solo == coalesced exactness contract as the packed-f32 path —
+    // integer dots are batch-invariant, the per-unit affine is a fixed
+    // f32 op sequence per row, and the first-layer escape hatch rides
+    // the already-contracted lane-batched kernel.
+    let n = 16;
+    let xs = rows(n, 12, 900);
+
+    // pass 1: bnn server that cannot coalesce, sequential requests
+    let mut server = serve::start(
+        toy_mlp(77),
+        ServeConfig {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+            mode: ForwardMode::Bnn,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let host = server.addr().to_string();
+
+    // mode is visible on the health endpoint before any traffic
+    let mut client = HttpClient::connect(&host).unwrap();
+    let (status, body) = client.request("GET", "/healthz", None).unwrap();
+    assert_eq!(status, 200);
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("mode").unwrap().as_str(), Some("bnn"));
+
+    let solo: Vec<(usize, Vec<u64>)> = xs
+        .iter()
+        .map(|x| {
+            let (status, body) = predict(&mut client, x);
+            assert_eq!(status, 200, "{body}");
+            decode(&body)
+        })
+        .collect();
+    drop(client);
+    server.stop();
+
+    // pass 2: coalescing bnn server hit by n concurrent clients
+    let mut server = serve::start(
+        toy_mlp(77),
+        ServeConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(20),
+            workers: n,
+            conn_backlog: 2 * n,
+            mode: ForwardMode::Bnn,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let host = server.addr().to_string();
+    let barrier = Arc::new(Barrier::new(n));
+    let joins: Vec<_> = xs
+        .iter()
+        .map(|x| {
+            let host = host.clone();
+            let x = x.clone();
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let mut client = HttpClient::connect(&host).unwrap();
+                barrier.wait();
+                let (status, body) = predict(&mut client, &x);
+                assert_eq!(status, 200, "{body}");
+                decode(&body)
+            })
+        })
+        .collect();
+    let coalesced: Vec<(usize, Vec<u64>)> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    let snap = server.metrics().snapshot(0);
+    server.stop();
+
+    for (i, (s, c)) in solo.iter().zip(&coalesced).enumerate() {
+        assert_eq!(s, c, "row {i}: bnn solo and coalesced responses differ at the bit level");
+    }
     assert_eq!(snap.get("rows").unwrap().as_usize(), Some(n));
     assert_eq!(snap.get("predictions").unwrap().as_usize(), Some(n));
 }
