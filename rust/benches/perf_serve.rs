@@ -97,6 +97,7 @@ fn run_series(
         concurrency,
         requests,
         seed: 7,
+        retries: 0, // a perf run must measure the server, not retry politeness
     })?;
     server.stop();
     if rep.failed_status > 0 || rep.errors > 0 {

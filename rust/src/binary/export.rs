@@ -5,10 +5,11 @@
 //! (python/compile/models.py): repeated [W, bn.gamma, bn.beta, bn.rmean,
 //! bn.rvar] blocks, then the output [W, b] pair.
 
-use std::io::{Read, Write};
+use std::io::Read;
 use std::path::Path;
 
 use crate::bail;
+use crate::util::crc32;
 use crate::util::error::{Context, Result};
 
 use crate::runtime::{ModelInfo, TrainState};
@@ -68,7 +69,10 @@ pub fn pack_mlp(info: &ModelInfo, state: &TrainState) -> Result<PackedMlp> {
     Ok(PackedMlp { layers, in_dim, classes })
 }
 
-const MAGIC: &[u8; 8] = b"BCPACK01";
+const MAGIC: &[u8; 8] = b"BCPACK02";
+/// The pre-checksum format. Refusing it with a targeted message beats a
+/// generic "not a BCPACK file" for anyone holding a stale artifact.
+const LEGACY_MAGIC: &[u8; 8] = b"BCPACK01";
 
 /// Sanity caps for deserialization: `.bcpack` is now the serving
 /// deployment artifact, so `load_packed` must reject corrupt headers
@@ -83,36 +87,109 @@ const MAX_DIM: usize = 1 << 22;
 const MAX_LAYER_WORD_BYTES: usize = 1 << 30;
 
 /// Serialize: MAGIC, n_layers, then per layer k,n,relu + scale/shift f32s
-/// + packed words.
+/// + packed words, then a little-endian CRC32 of everything before it.
+///
+/// The write is crash-safe: bytes go to a same-directory temp file which
+/// is fsync'd and atomically renamed over `path`, so a crash (or an
+/// injected panic) mid-export leaves either the old artifact or the new
+/// one — never a torn file. The CRC trailer catches the remaining case
+/// of a torn *medium* (partial page flush, bit rot), which
+/// [`load_packed`] verifies before parsing.
 pub fn save_packed(mlp: &PackedMlp, path: &Path) -> Result<()> {
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    f.write_all(MAGIC)?;
-    f.write_all(&(mlp.layers.len() as u32).to_le_bytes())?;
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&(mlp.layers.len() as u32).to_le_bytes());
     for l in &mlp.layers {
-        f.write_all(&(l.bits.k as u32).to_le_bytes())?;
-        f.write_all(&(l.bits.n as u32).to_le_bytes())?;
-        f.write_all(&[l.relu as u8])?;
+        buf.extend_from_slice(&(l.bits.k as u32).to_le_bytes());
+        buf.extend_from_slice(&(l.bits.n as u32).to_le_bytes());
+        buf.push(l.relu as u8);
         for v in l.scale.iter().chain(&l.shift) {
-            f.write_all(&v.to_le_bytes())?;
+            buf.extend_from_slice(&v.to_le_bytes());
         }
         for j in 0..l.bits.n {
             for w in l.bits.col(j) {
-                f.write_all(&w.to_le_bytes())?;
+                buf.extend_from_slice(&w.to_le_bytes());
             }
+        }
+    }
+    let crc = crc32(&buf);
+    buf.extend_from_slice(&crc.to_le_bytes());
+
+    // temp file in the *same directory* so the rename cannot cross a
+    // filesystem boundary (rename is only atomic within one fs)
+    let dir = path.parent().filter(|d| !d.as_os_str().is_empty());
+    let name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .with_context(|| format!("{}: not a writable file path", path.display()))?;
+    let tmp_name = format!(".{name}.tmp.{}", std::process::id());
+    let tmp = match dir {
+        Some(d) => d.join(&tmp_name),
+        None => Path::new(&tmp_name).to_path_buf(),
+    };
+    let write = (|| -> Result<()> {
+        use std::io::Write;
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&buf)?;
+        f.sync_all()?; // data durable before the rename publishes it
+        Ok(())
+    })();
+    if let Err(e) = write {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e).with_context(|| format!("write {}", tmp.display()));
+    }
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e.into());
+    }
+    // best effort: make the rename itself durable (the artifact is
+    // already consistent either way)
+    #[cfg(unix)]
+    if let Some(d) = dir {
+        if let Ok(dirf) = std::fs::File::open(d) {
+            let _ = dirf.sync_all();
         }
     }
     Ok(())
 }
 
+/// Bound on a whole `.bcpack` file; MAX_LAYERS layers each at the
+/// per-layer word cap would far exceed any real artifact, so 2 GiB is a
+/// generous ceiling that still refuses to slurp an obviously-wrong file.
+const MAX_FILE_BYTES: u64 = 1 << 31;
+
 pub fn load_packed(path: &Path) -> Result<PackedMlp> {
-    let mut f = std::io::BufReader::new(
-        std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
-    );
-    let mut magic = [0u8; 8];
-    f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
+    let meta =
+        std::fs::metadata(path).with_context(|| format!("open {}", path.display()))?;
+    if meta.len() > MAX_FILE_BYTES {
+        bail!("{}: {} bytes exceeds the {MAX_FILE_BYTES} byte cap", path.display(), meta.len());
+    }
+    let bytes =
+        std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+    // magic(8) + n_layers(4) + crc(4) is the smallest well-formed file
+    if bytes.len() < 16 {
+        bail!("{}: {} bytes is too short to be a BCPACK file", path.display(), bytes.len());
+    }
+    if bytes[..8] == LEGACY_MAGIC[..] {
+        bail!(
+            "{}: legacy BCPACK01 artifact (no checksum); re-export it with this build",
+            path.display()
+        );
+    }
+    if bytes[..8] != MAGIC[..] {
         bail!("{}: not a BCPACK file", path.display());
     }
+    let (body, trailer) = bytes.split_at(bytes.len() - 4);
+    let stored = u32::from_le_bytes([trailer[0], trailer[1], trailer[2], trailer[3]]);
+    let computed = crc32(body);
+    if stored != computed {
+        bail!(
+            "{}: checksum mismatch (torn write or corruption): \
+             stored {stored:#010x}, computed {computed:#010x}",
+            path.display()
+        );
+    }
+    let mut f: &[u8] = &body[8..];
     let mut b4 = [0u8; 4];
     f.read_exact(&mut b4)?;
     let n_layers = u32::from_le_bytes(b4) as usize;
@@ -181,6 +258,14 @@ mod tests {
     use super::*;
     use crate::util::Rng;
 
+    /// Append the valid CRC32 trailer to a hand-crafted body so tests can
+    /// reach the header-validation logic *behind* the checksum gate.
+    fn with_crc(mut body: Vec<u8>) -> Vec<u8> {
+        let crc = crc32(&body);
+        body.extend_from_slice(&crc.to_le_bytes());
+        body
+    }
+
     fn toy_packed() -> PackedMlp {
         let mut rng = Rng::new(3);
         let w1: Vec<f32> = (0..20 * 8).map(|_| rng.normal()).collect();
@@ -221,8 +306,78 @@ mod tests {
     #[test]
     fn load_rejects_bad_magic() {
         let path = std::env::temp_dir().join(format!("bc_badmagic_{}.bin", std::process::id()));
-        std::fs::write(&path, b"NOTPACKED").unwrap();
+        std::fs::write(&path, b"NOTPACKED_PADDING").unwrap();
         assert!(load_packed(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn legacy_format_gets_a_targeted_reexport_error() {
+        let path = std::env::temp_dir().join(format!("bc_legacy_{}.bin", std::process::id()));
+        let mut b = Vec::new();
+        b.extend_from_slice(b"BCPACK01");
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&[0u8; 32]);
+        std::fs::write(&path, &b).unwrap();
+        let err = load_packed(&path).unwrap_err().to_string();
+        assert!(err.contains("legacy") && err.contains("re-export"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn save_is_atomic_and_leaves_no_temp_litter() {
+        let mlp = toy_packed();
+        let dir = std::env::temp_dir().join(format!("bc_atomic_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.bcpack");
+        // overwrite an existing artifact: the reader must only ever see
+        // the old or the new file, and no `.tmp` residue may remain
+        save_packed(&mlp, &path).unwrap();
+        save_packed(&mlp, &path).unwrap();
+        assert!(load_packed(&path).is_ok());
+        let leftovers: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "temp litter: {leftovers:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn flipped_crc_trailer_is_detected() {
+        let mlp = toy_packed();
+        let path = std::env::temp_dir().join(format!("bc_flipcrc_{}.bin", std::process::id()));
+        save_packed(&mlp, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_packed(&path).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_write_in_the_body_is_detected_by_the_checksum() {
+        // a torn medium can corrupt bytes *without* changing the length,
+        // which no truncation check can catch — the CRC must
+        let mlp = toy_packed();
+        let path = std::env::temp_dir().join(format!("bc_torn_{}.bin", std::process::id()));
+        save_packed(&mlp, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // zero a 16-byte run in the middle of the packed words
+        let mid = bytes.len() / 2;
+        let mut torn = bytes.clone();
+        for b in &mut torn[mid..(mid + 16).min(bytes.len() - 4)] {
+            *b = 0;
+        }
+        if torn != bytes {
+            std::fs::write(&path, &torn).unwrap();
+            let err = load_packed(&path).unwrap_err().to_string();
+            assert!(err.contains("checksum mismatch"), "{err}");
+        }
         let _ = std::fs::remove_file(&path);
     }
 
@@ -275,41 +430,43 @@ mod tests {
         let path = std::env::temp_dir().join(format!("bc_corrupt_{}.bin", std::process::id()));
         save_packed(&mlp, &path).unwrap();
         let bytes = std::fs::read(&path).unwrap();
-        // flip each header-region byte to 0xFF: must never panic (Ok is
-        // acceptable only where the flip is semantically benign)
+        // flip each header-region byte to 0xFF: now that the file carries
+        // a CRC trailer, *every* flip must be rejected, not just the ones
+        // the header validation happens to notice
         for at in 0..bytes.len().min(64) {
             let mut mutated = bytes.clone();
             mutated[at] ^= 0xFF;
             std::fs::write(&path, &mutated).unwrap();
-            let _ = load_packed(&path);
+            assert!(load_packed(&path).is_err(), "flip at byte {at} must error");
         }
         // a header claiming ~4 billion units must be rejected up front
-        // (not answered with a multi-gigabyte allocation attempt)
+        // (not answered with a multi-gigabyte allocation attempt); a
+        // valid CRC gets these bodies past the checksum gate
         let mut huge = Vec::new();
-        huge.extend_from_slice(b"BCPACK01");
+        huge.extend_from_slice(b"BCPACK02");
         huge.extend_from_slice(&1u32.to_le_bytes());
         huge.extend_from_slice(&u32::MAX.to_le_bytes());
         huge.extend_from_slice(&u32::MAX.to_le_bytes());
         huge.push(0);
-        std::fs::write(&path, &huge).unwrap();
+        std::fs::write(&path, with_crc(huge)).unwrap();
         let err = load_packed(&path).unwrap_err().to_string();
         assert!(err.contains("implausible"), "{err}");
         // dims individually under MAX_DIM whose product implies terabytes
         // must be rejected by the packed-size cap before any body read
         let mut wide = Vec::new();
-        wide.extend_from_slice(b"BCPACK01");
+        wide.extend_from_slice(b"BCPACK02");
         wide.extend_from_slice(&1u32.to_le_bytes());
         wide.extend_from_slice(&(1u32 << 22).to_le_bytes());
         wide.extend_from_slice(&(1u32 << 22).to_le_bytes());
         wide.push(0);
-        std::fs::write(&path, &wide).unwrap();
+        std::fs::write(&path, with_crc(wide)).unwrap();
         let err = load_packed(&path).unwrap_err().to_string();
         assert!(err.contains("implausible packed size"), "{err}");
         // zero layers is invalid too
         let mut zero = Vec::new();
-        zero.extend_from_slice(b"BCPACK01");
+        zero.extend_from_slice(b"BCPACK02");
         zero.extend_from_slice(&0u32.to_le_bytes());
-        std::fs::write(&path, &zero).unwrap();
+        std::fs::write(&path, with_crc(zero)).unwrap();
         assert!(load_packed(&path).is_err());
         let _ = std::fs::remove_file(&path);
     }
@@ -321,7 +478,7 @@ mod tests {
         // load into a net that would panic at forward time
         let path = std::env::temp_dir().join(format!("bc_chain_{}.bin", std::process::id()));
         let mut b = Vec::new();
-        b.extend_from_slice(b"BCPACK01");
+        b.extend_from_slice(b"BCPACK02");
         b.extend_from_slice(&2u32.to_le_bytes());
         // layer 0: k=4, n=8, relu, 8 scales + 8 shifts, 1 word per col
         b.extend_from_slice(&4u32.to_le_bytes());
@@ -343,7 +500,7 @@ mod tests {
         for _ in 0..2 {
             b.extend_from_slice(&0u64.to_le_bytes());
         }
-        std::fs::write(&path, &b).unwrap();
+        std::fs::write(&path, with_crc(b)).unwrap();
         let err = load_packed(&path).unwrap_err().to_string();
         assert!(err.contains("chain"), "{err}");
         let _ = std::fs::remove_file(&path);

@@ -64,13 +64,24 @@ usage: bcrun <info|train|hw|export|infer|serve|loadgen> [flags]
            --bnn (XNOR-popcount engine: binarized hidden activations,
              first layer stays f32; different function than packed-f32,
              same solo == coalesced bit-exactness)
+           --default-deadline-ms N (default 0 = no deadline; per-request
+             X-Deadline-Ms header overrides; expired rows get 504, and
+             admission rejects with 503 when the estimated queue wait
+             already exceeds the deadline)
+           env BCRUN_FAULTS=panic_worker@P,panic_batcher@P,slow_batch=DUR@P
+             [,seed=N] injects deterministic faults for chaos testing
+             (inert when unset; panicked threads are supervised: answered
+             with 500, counted in /stats, respawned)
            --quiet    endpoints: POST /predict {\"x\":[...]} -> pred+logits,
            GET /healthz, GET /stats, POST /shutdown; SIGTERM/ctrl-c and
-           /shutdown both drain in-flight batches before exit
+           /shutdown both drain in-flight batches before exit; a second
+           SIGTERM during the drain force-exits with code 143
   loadgen: --url http://HOST:PORT (default http://127.0.0.1:7878)
            --concurrency N (default 16) --requests N (default 1000)
+           --retries N (default 3; capped exponential backoff + jitter,
+             honors Retry-After on 500/503/504)
            --seed N   closed-loop: exits non-zero on any non-2xx/transport
-           failure (the CI smoke gate)";
+           failure after retries (the CI smoke gate)";
 
 fn run() -> Result<()> {
     // Fail fast on an unparseable BCRUN_THREADS or BCRUN_SIMD (typo, or
@@ -357,6 +368,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let default_workers =
         std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).clamp(2, 64);
     let mode = if args.bool("bnn", false) { ForwardMode::Bnn } else { ForwardMode::PackedF32 };
+    // fail fast on an unparseable BCRUN_FAULTS: a chaos run with a silent
+    // typo in the spec would "pass" by injecting nothing
+    let faults = binaryconnect::util::FaultPlan::from_env()
+        .map_err(|e| anyhow!(e))?
+        .map(std::sync::Arc::new);
+    let deadline_ms = args.u64("default-deadline-ms", 0);
     let cfg = serve::ServeConfig {
         addr: args.str("addr", "127.0.0.1"),
         port: port as u16,
@@ -366,6 +383,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         workers: args.usize("workers", default_workers),
         quiet: args.bool("quiet", false),
         mode,
+        default_deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
+        faults: faults.clone(),
         ..Default::default()
     };
     let quiet = cfg.quiet;
@@ -385,6 +404,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("bcrun serve: listening on http://{}", server.addr());
     if !quiet {
         eprintln!("bcrun serve: {summary}");
+        if let Some(plan) = &faults {
+            eprintln!("bcrun serve: FAULT INJECTION ACTIVE ({})", plan.summary());
+        }
     }
     if let Some(pf) = args.opt_str("port-file") {
         // written after bind so a watcher can poll for the ephemeral port
@@ -408,6 +430,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         snap.get("latency_p50_us").and_then(|j| j.as_f64()).unwrap_or(0.0),
         snap.get("latency_p99_us").and_then(|j| j.as_f64()).unwrap_or(0.0),
     );
+    let restarts = |k: &str| snap.get(k).and_then(|j| j.as_usize()).unwrap_or(0);
+    let (wr, br, ds) =
+        (restarts("worker_restarts"), restarts("batcher_restarts"), restarts("deadline_sheds_504"));
+    if wr + br + ds > 0 {
+        println!(
+            "bcrun serve: supervision — {wr} worker restarts, {br} batcher restarts, {ds} deadline sheds (504)"
+        );
+    }
     Ok(())
 }
 
@@ -421,11 +451,12 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         concurrency: args.usize("concurrency", 16),
         requests: args.usize("requests", 1000),
         seed: args.u64("seed", 1),
+        retries: args.usize("retries", 3),
     };
     let rep = loadgen::run(&opts)?;
     println!(
-        "loadgen: {} requests ({} ok, {} non-2xx, {} transport errors) in {:.2}s from {} connections",
-        rep.sent, rep.ok, rep.failed_status, rep.errors, rep.elapsed_s, opts.concurrency
+        "loadgen: {} requests ({} ok, {} non-2xx, {} transport errors, {} retries) in {:.2}s from {} connections",
+        rep.sent, rep.ok, rep.failed_status, rep.errors, rep.retries, rep.elapsed_s, opts.concurrency
     );
     println!(
         "  throughput {:.0} req/s | latency p50 {:.0} us, p95 {:.0} us, p99 {:.0} us, max {:.0} us | server mean batch {:.2}",

@@ -20,12 +20,23 @@
 //! * **Backpressure.** The queue is bounded (`queue_cap` rows);
 //!   [`BatchQueue::submit`] fails instead of blocking when full, and the
 //!   HTTP layer maps that to 503 + Retry-After.
+//! * **Deadlines.** A job may carry an answer-by [`Instant`]; rows whose
+//!   deadline passed while queued are shed with [`Verdict::Expired`]
+//!   (HTTP 504) *before* the forward — no compute is spent on answers
+//!   nobody is waiting for.
+//! * **Supervision.** The thread body runs `run_loop` under
+//!   `catch_unwind`. A panic (a kernel bug, or `BCRUN_FAULTS` injection)
+//!   fails the held rows with [`Verdict::Aborted`] (HTTP 500), bumps
+//!   `batcher_restarts`, and re-enters `run_loop`, which rebuilds the
+//!   mode workspace from scratch — a half-updated workspace never
+//!   serves another row. Every accepted row gets *some* verdict.
 //! * **Drain.** [`Batcher::stop`] processes every queued row before the
 //!   thread exits — a request that was accepted is always answered.
 //! * **Allocation.** The slab, workspace and job vector are reused; the
 //!   per-batch forward is allocation-free (`PackedWorkspace` contract).
 
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::SyncSender;
 use std::sync::{Arc, Condvar, Mutex};
@@ -34,14 +45,31 @@ use std::time::{Duration, Instant};
 
 use crate::binary::packed::{argmax, PackedMlp, PackedWorkspace};
 use crate::binary::{BnnWorkspace, ForwardMode};
+use crate::util::{lock_ok, FaultPlan, Timer};
 
 use super::metrics::Metrics;
 
-/// One queued row: the input and the channel its reply goes back on.
+/// One queued row: the input, the channel its verdict goes back on, and
+/// an optional answer-by deadline.
 pub struct Job {
     /// One input row, `in_dim` long (validated by the submitter).
     pub x: Vec<f32>,
-    pub reply: SyncSender<Reply>,
+    pub reply: SyncSender<Verdict>,
+    /// Shed with [`Verdict::Expired`] if still queued past this instant.
+    pub deadline: Option<Instant>,
+}
+
+/// What became of one accepted row. The batcher promises exactly one
+/// verdict per job — computed, shed, or failed, never silence.
+#[derive(Clone, Debug)]
+pub enum Verdict {
+    /// Computed logits (HTTP 200).
+    Reply(Reply),
+    /// The row's deadline passed before its batch ran (HTTP 504).
+    Expired,
+    /// The batcher panicked while holding this row, or the row was
+    /// malformed (HTTP 500). The forward never ran; retrying is safe.
+    Aborted,
 }
 
 /// The per-row result of a batched forward.
@@ -62,6 +90,9 @@ pub struct BatchConfig {
     pub queue_cap: usize,
     /// Which forward engine the batcher thread owns a workspace for.
     pub mode: ForwardMode,
+    /// Deterministic fault injection (`BCRUN_FAULTS`); `None` in
+    /// production — the hot loop then pays one branch.
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 /// The batcher thread's workspace, matching its configured mode.
@@ -102,7 +133,7 @@ impl BatchQueue {
         if self.shared.shutdown.load(Ordering::Acquire) {
             return Err(job);
         }
-        let mut q = self.shared.q.lock().unwrap();
+        let mut q = lock_ok(&self.shared.q);
         if q.len() >= self.shared.cap {
             return Err(job);
         }
@@ -114,7 +145,7 @@ impl BatchQueue {
 
     /// Rows currently queued (sampled; for `/stats`).
     pub fn depth(&self) -> usize {
-        self.shared.q.lock().unwrap().len()
+        lock_ok(&self.shared.q).len()
     }
 }
 
@@ -127,6 +158,11 @@ pub struct Batcher {
 impl Batcher {
     /// Spawn the batching thread over an existing queue (tests pre-seed
     /// the queue before spawning to pin coalescing deterministically).
+    ///
+    /// The thread is a supervisor: `run_loop` runs under `catch_unwind`,
+    /// and a panic fails the rows the loop held (`batch` lives out here,
+    /// across unwinds, precisely so they can be answered), counts a
+    /// restart, and re-enters the loop with a freshly built workspace.
     pub fn spawn(
         mlp: Arc<PackedMlp>,
         queue: BatchQueue,
@@ -136,7 +172,23 @@ impl Batcher {
         let shared = Arc::clone(&queue.shared);
         let join = std::thread::Builder::new()
             .name("bc-batcher".into())
-            .spawn(move || run_loop(&mlp, &shared, &cfg, &metrics))
+            .spawn(move || {
+                let mut batch: Vec<Job> = Vec::with_capacity(cfg.max_batch.max(1));
+                loop {
+                    let done = catch_unwind(AssertUnwindSafe(|| {
+                        run_loop(&mlp, &shared, &cfg, &metrics, &mut batch)
+                    }));
+                    match done {
+                        Ok(()) => return, // graceful shutdown
+                        Err(_) => {
+                            Metrics::bump(&metrics.batcher_restarts);
+                            for job in batch.drain(..) {
+                                let _ = job.reply.send(Verdict::Aborted);
+                            }
+                        }
+                    }
+                }
+            })
             .expect("spawn batcher thread");
         Batcher { queue, join: Some(join) }
     }
@@ -148,7 +200,7 @@ impl Batcher {
     }
 
     /// Graceful stop: refuse new rows, drain everything queued (each row
-    /// still gets its reply), join the thread. Idempotent.
+    /// still gets its verdict), join the thread. Idempotent.
     pub fn stop(&mut self) {
         self.queue.shared.shutdown.store(true, Ordering::Release);
         self.queue.shared.cv.notify_all();
@@ -164,17 +216,25 @@ impl Drop for Batcher {
     }
 }
 
-fn run_loop(mlp: &PackedMlp, shared: &Shared, cfg: &BatchConfig, metrics: &Metrics) {
+fn run_loop(
+    mlp: &PackedMlp,
+    shared: &Shared,
+    cfg: &BatchConfig,
+    metrics: &Metrics,
+    batch: &mut Vec<Job>,
+) {
     let max_batch = cfg.max_batch.max(1);
+    // built fresh on every supervised (re)entry: a panic may have left
+    // the previous workspace mid-update, and exactness cannot ride on
+    // half-written scratch state
     let mut ws = match cfg.mode {
         ForwardMode::PackedF32 => ModeWorkspace::F32(mlp.workspace(max_batch)),
         ForwardMode::Bnn => ModeWorkspace::Bnn(mlp.bnn_workspace(max_batch)),
     };
     let mut slab = vec![0f32; max_batch * mlp.in_dim];
-    let mut batch: Vec<Job> = Vec::with_capacity(max_batch);
     loop {
         {
-            let mut q = shared.q.lock().unwrap();
+            let mut q = lock_ok(&shared.q);
             // sleep until the first row (or shutdown with an empty queue:
             // every accepted row has been answered — done)
             loop {
@@ -184,7 +244,10 @@ fn run_loop(mlp: &PackedMlp, shared: &Shared, cfg: &BatchConfig, metrics: &Metri
                 if shared.shutdown.load(Ordering::Acquire) {
                     return;
                 }
-                q = shared.cv.wait(q).unwrap();
+                q = match shared.cv.wait(q) {
+                    Ok(g) => g,
+                    Err(poisoned) => poisoned.into_inner(),
+                };
             }
             // batching window: collect more rows up to max_batch or until
             // max_wait from *noticing* the first row; shutdown short-
@@ -199,36 +262,67 @@ fn run_loop(mlp: &PackedMlp, shared: &Shared, cfg: &BatchConfig, metrics: &Metri
                     if now >= deadline {
                         break;
                     }
-                    let (guard, _) = shared.cv.wait_timeout(q, deadline - now).unwrap();
+                    let (guard, _) = match shared.cv.wait_timeout(q, deadline - now) {
+                        Ok(pair) => pair,
+                        Err(poisoned) => poisoned.into_inner(),
+                    };
                     q = guard;
                 }
             }
             let take = q.len().min(max_batch);
             batch.extend(q.drain(..take));
         }
-        // defense in depth: the HTTP layer validates row shape, but a
-        // malformed job must cost its own request a 500 (dropped reply
-        // channel), never the batcher thread
-        batch.retain(|job| job.x.len() == mlp.in_dim);
+        // pre-forward sweep: shed rows whose deadline already passed (504
+        // — computing them would be dead work the client stopped waiting
+        // for) and abort malformed rows (defense in depth; the HTTP layer
+        // validates shape). Either way the row is answered, never dropped.
+        let now = Instant::now();
+        let mut i = 0;
+        while i < batch.len() {
+            let malformed = batch[i].x.len() != mlp.in_dim;
+            let expired = batch[i].deadline.is_some_and(|d| now >= d);
+            if malformed || expired {
+                let job = batch.swap_remove(i);
+                let verdict = if malformed {
+                    Verdict::Aborted
+                } else {
+                    Metrics::bump(&metrics.deadline_sheds);
+                    Verdict::Expired
+                };
+                let _ = job.reply.send(verdict);
+            } else {
+                i += 1;
+            }
+        }
         let b = batch.len();
         if b == 0 {
             continue;
         }
+        if let Some(faults) = &cfg.faults {
+            // injection sits where a real kernel panic would: rows taken,
+            // forward not yet run — the supervisor must answer them
+            faults.maybe_panic_batcher();
+            if let Some(d) = faults.slow_batch() {
+                std::thread::sleep(d);
+            }
+        }
         for (i, job) in batch.iter().enumerate() {
             slab[i * mlp.in_dim..(i + 1) * mlp.in_dim].copy_from_slice(&job.x);
         }
+        let t = Timer::start();
         let logits = match &mut ws {
             ModeWorkspace::F32(ws) => mlp.forward_into(&slab[..b * mlp.in_dim], b, ws),
             ModeWorkspace::Bnn(ws) => mlp.forward_bnn_into(&slab[..b * mlp.in_dim], b, ws),
         };
+        metrics.record_forward(t.elapsed_s());
         metrics.record_batch(b);
         for (i, job) in batch.drain(..).enumerate() {
             let row = &logits[i * mlp.classes..(i + 1) * mlp.classes];
-            let _ = job.reply.send(Reply {
+            let _ = job.reply.send(Verdict::Reply(Reply {
                 logits: row.to_vec(),
                 pred: argmax(row),
                 batch_rows: b,
-            });
+            }));
         }
     }
 }
@@ -237,7 +331,7 @@ fn run_loop(mlp: &PackedMlp, shared: &Shared, cfg: &BatchConfig, metrics: &Metri
 mod tests {
     use super::*;
     use crate::util::Rng;
-    use std::sync::mpsc::sync_channel;
+    use std::sync::mpsc::{sync_channel, Receiver};
 
     fn toy_mlp() -> Arc<PackedMlp> {
         let mut rng = Rng::new(7);
@@ -255,9 +349,29 @@ mod tests {
         ))
     }
 
-    fn job(x: Vec<f32>) -> (Job, std::sync::mpsc::Receiver<Reply>) {
+    fn job(x: Vec<f32>) -> (Job, Receiver<Verdict>) {
         let (tx, rx) = sync_channel(1);
-        (Job { x, reply: tx }, rx)
+        (Job { x, reply: tx, deadline: None }, rx)
+    }
+
+    fn job_with_deadline(x: Vec<f32>, deadline: Instant) -> (Job, Receiver<Verdict>) {
+        let (tx, rx) = sync_channel(1);
+        (Job { x, reply: tx, deadline: Some(deadline) }, rx)
+    }
+
+    fn recv_verdict(rx: &Receiver<Verdict>) -> Verdict {
+        rx.recv_timeout(Duration::from_secs(5)).expect("job must be answered")
+    }
+
+    fn recv_reply(rx: &Receiver<Verdict>) -> Reply {
+        match recv_verdict(rx) {
+            Verdict::Reply(r) => r,
+            other => panic!("expected a computed reply, got {other:?}"),
+        }
+    }
+
+    fn cfg(max_batch: usize, max_wait: Duration, mode: ForwardMode) -> BatchConfig {
+        BatchConfig { max_batch, max_wait, queue_cap: 64, mode, faults: None }
     }
 
     fn rows(mlp: &PackedMlp, n: usize, seed: u64) -> Vec<Vec<f32>> {
@@ -287,15 +401,10 @@ mod tests {
             })
             .collect();
         let metrics = Arc::new(Metrics::new());
-        let cfg = BatchConfig {
-            max_batch: 8,
-            max_wait: Duration::from_millis(50),
-            queue_cap: 64,
-            mode: ForwardMode::PackedF32,
-        };
+        let cfg = cfg(8, Duration::from_millis(50), ForwardMode::PackedF32);
         let mut batcher = Batcher::spawn(Arc::clone(&mlp), queue, cfg, Arc::clone(&metrics));
         for (i, rx) in rxs.iter().enumerate() {
-            let reply = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            let reply = recv_reply(rx);
             assert_eq!(reply.batch_rows, 8, "row {i} was not coalesced");
             assert_eq!(reply.logits, solo[i], "row {i}: coalesced != solo bits");
             assert_eq!(reply.pred, argmax(&solo[i]));
@@ -324,15 +433,10 @@ mod tests {
             })
             .collect();
         let metrics = Arc::new(Metrics::new());
-        let cfg = BatchConfig {
-            max_batch: 8,
-            max_wait: Duration::from_millis(50),
-            queue_cap: 64,
-            mode: ForwardMode::Bnn,
-        };
+        let cfg = cfg(8, Duration::from_millis(50), ForwardMode::Bnn);
         let mut batcher = Batcher::spawn(Arc::clone(&mlp), queue, cfg, Arc::clone(&metrics));
         for (i, rx) in rxs.iter().enumerate() {
-            let reply = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            let reply = recv_reply(rx);
             assert_eq!(reply.batch_rows, 8, "row {i} was not coalesced");
             assert_eq!(reply.logits, solo[i], "row {i}: bnn coalesced != solo bits");
             assert_eq!(reply.pred, argmax(&solo[i]));
@@ -353,18 +457,10 @@ mod tests {
                 rx
             })
             .collect();
-        let cfg = BatchConfig {
-            max_batch: 4,
-            max_wait: Duration::ZERO,
-            queue_cap: 64,
-            mode: ForwardMode::PackedF32,
-        };
+        let cfg = cfg(4, Duration::ZERO, ForwardMode::PackedF32);
         let metrics = Arc::new(Metrics::new());
         let mut batcher = Batcher::spawn(Arc::clone(&mlp), queue, cfg, Arc::clone(&metrics));
-        let sizes: Vec<usize> = rxs
-            .iter()
-            .map(|rx| rx.recv_timeout(Duration::from_secs(5)).unwrap().batch_rows)
-            .collect();
+        let sizes: Vec<usize> = rxs.iter().map(|rx| recv_reply(rx).batch_rows).collect();
         batcher.stop();
         assert_eq!(sizes, vec![4, 4, 4, 4, 4, 4, 4, 4, 2, 2], "drain order batches");
         assert_eq!(metrics.batches.load(Ordering::Relaxed), 3);
@@ -397,22 +493,165 @@ mod tests {
             .collect();
         // a long window would stall the first batch for a second — stop()
         // must short-circuit it and still answer all 10 rows
-        let cfg = BatchConfig {
-            max_batch: 4,
-            max_wait: Duration::from_secs(1),
-            queue_cap: 64,
-            mode: ForwardMode::PackedF32,
-        };
+        let cfg = cfg(4, Duration::from_secs(1), ForwardMode::PackedF32);
         let metrics = Arc::new(Metrics::new());
         let t0 = Instant::now();
         let mut batcher = Batcher::spawn(Arc::clone(&mlp), queue.clone(), cfg, metrics);
         batcher.stop();
         for rx in &rxs {
-            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            recv_reply(rx);
         }
         assert!(t0.elapsed() < Duration::from_secs(4), "drain did not short-circuit");
         // post-shutdown submissions are refused
         let (j, _rx) = job(xs[0].clone());
         assert!(queue.submit(j).is_err());
+    }
+
+    #[test]
+    fn expired_rows_are_shed_and_live_rows_still_served() {
+        let mlp = toy_mlp();
+        let xs = rows(&mlp, 6, 31);
+        let queue = BatchQueue::bounded(64);
+        let past = Instant::now() - Duration::from_millis(1);
+        let future = Instant::now() + Duration::from_secs(30);
+        // interleave expired and live rows in one pre-seeded batch
+        let mut expired_rxs = Vec::new();
+        let mut live_rxs = Vec::new();
+        for (i, x) in xs.iter().enumerate() {
+            let (j, rx) =
+                job_with_deadline(x.clone(), if i % 2 == 0 { past } else { future });
+            queue.submit(j).map_err(|_| ()).unwrap();
+            if i % 2 == 0 {
+                expired_rxs.push(rx);
+            } else {
+                live_rxs.push(rx);
+            }
+        }
+        let metrics = Arc::new(Metrics::new());
+        let cfg = cfg(6, Duration::from_millis(50), ForwardMode::PackedF32);
+        let mut batcher = Batcher::spawn(Arc::clone(&mlp), queue, cfg, Arc::clone(&metrics));
+        for rx in &expired_rxs {
+            assert!(matches!(recv_verdict(rx), Verdict::Expired));
+        }
+        for rx in &live_rxs {
+            // the 3 survivors ride one forward together
+            assert_eq!(recv_reply(rx).batch_rows, 3);
+        }
+        batcher.stop();
+        assert_eq!(metrics.deadline_sheds.load(Ordering::Relaxed), 3);
+        assert_eq!(metrics.rows.load(Ordering::Relaxed), 3, "no compute spent on shed rows");
+    }
+
+    #[test]
+    fn malformed_rows_are_aborted_not_dropped() {
+        let mlp = toy_mlp();
+        let queue = BatchQueue::bounded(64);
+        let (bad, bad_rx) = job(vec![0.0; 3]); // wrong in_dim
+        let (good, good_rx) = job(rows(&mlp, 1, 33).pop().unwrap());
+        queue.submit(bad).map_err(|_| ()).unwrap();
+        queue.submit(good).map_err(|_| ()).unwrap();
+        let metrics = Arc::new(Metrics::new());
+        let cfg = cfg(4, Duration::from_millis(50), ForwardMode::PackedF32);
+        let mut batcher = Batcher::spawn(Arc::clone(&mlp), queue, cfg, Arc::clone(&metrics));
+        assert!(matches!(recv_verdict(&bad_rx), Verdict::Aborted));
+        assert_eq!(recv_reply(&good_rx).batch_rows, 1);
+        batcher.stop();
+    }
+
+    #[test]
+    fn batcher_panic_aborts_held_rows_then_respawns() {
+        let mlp = toy_mlp();
+        let xs = rows(&mlp, 3, 41);
+        let queue = BatchQueue::bounded(64);
+        let (j0, rx0) = job(xs[0].clone());
+        let (j1, rx1) = job(xs[1].clone());
+        queue.submit(j0).map_err(|_| ()).unwrap();
+        queue.submit(j1).map_err(|_| ()).unwrap();
+        let metrics = Arc::new(Metrics::new());
+        let faults = Arc::new(FaultPlan::parse("panic_batcher@1", 0).unwrap());
+        let cfg = BatchConfig {
+            max_batch: 2,
+            max_wait: Duration::from_millis(20),
+            queue_cap: 64,
+            mode: ForwardMode::PackedF32,
+            faults: Some(Arc::clone(&faults)),
+        };
+        let mut batcher = Batcher::spawn(Arc::clone(&mlp), queue.clone(), cfg, Arc::clone(&metrics));
+        // every batch panics: the held rows must come back Aborted, and
+        // the loop must keep accepting work afterwards
+        assert!(matches!(recv_verdict(&rx0), Verdict::Aborted));
+        assert!(matches!(recv_verdict(&rx1), Verdict::Aborted));
+        let (j2, rx2) = job(xs[2].clone());
+        queue.submit(j2).map_err(|_| ()).unwrap();
+        assert!(matches!(recv_verdict(&rx2), Verdict::Aborted));
+        batcher.stop();
+        let restarts = metrics.batcher_restarts.load(Ordering::Relaxed);
+        assert_eq!(restarts, faults.injected_batcher_panics());
+        assert!(restarts >= 2, "expected one restart per panicking batch, saw {restarts}");
+    }
+
+    #[test]
+    fn every_job_is_answered_under_probabilistic_panics() {
+        // seed-independent invariant: whatever the injected panic pattern,
+        // each accepted row gets exactly one verdict and the restart
+        // counter equals the fired-panic counter
+        let mlp = toy_mlp();
+        let xs = rows(&mlp, 30, 42);
+        let queue = BatchQueue::bounded(64);
+        let rxs: Vec<_> = xs
+            .iter()
+            .map(|x| {
+                let (j, rx) = job(x.clone());
+                queue.submit(j).map_err(|_| ()).unwrap();
+                rx
+            })
+            .collect();
+        let metrics = Arc::new(Metrics::new());
+        let faults = Arc::new(FaultPlan::parse("panic_batcher@0.5", 3).unwrap());
+        let cfg = BatchConfig {
+            max_batch: 1, // one row per batch: 30 independent rolls
+            max_wait: Duration::ZERO,
+            queue_cap: 64,
+            mode: ForwardMode::PackedF32,
+            faults: Some(Arc::clone(&faults)),
+        };
+        let mut batcher = Batcher::spawn(Arc::clone(&mlp), queue, cfg, Arc::clone(&metrics));
+        let mut replies = 0u64;
+        let mut aborted = 0u64;
+        for rx in &rxs {
+            match recv_verdict(rx) {
+                Verdict::Reply(_) => replies += 1,
+                Verdict::Aborted => aborted += 1,
+                Verdict::Expired => panic!("no deadlines were set"),
+            }
+        }
+        batcher.stop();
+        assert_eq!(replies + aborted, 30);
+        assert_eq!(aborted, faults.injected_batcher_panics());
+        assert_eq!(
+            metrics.batcher_restarts.load(Ordering::Relaxed),
+            faults.injected_batcher_panics()
+        );
+    }
+
+    #[test]
+    fn slow_batch_injection_delays_but_still_answers() {
+        let mlp = toy_mlp();
+        let queue = BatchQueue::bounded(8);
+        let (j, rx) = job(rows(&mlp, 1, 43).pop().unwrap());
+        queue.submit(j).map_err(|_| ()).unwrap();
+        let metrics = Arc::new(Metrics::new());
+        let faults = Arc::new(FaultPlan::parse("slow_batch=2ms@1", 0).unwrap());
+        let cfg = BatchConfig {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+            queue_cap: 8,
+            mode: ForwardMode::PackedF32,
+            faults: Some(Arc::clone(&faults)),
+        };
+        let mut batcher = Batcher::spawn(Arc::clone(&mlp), queue, cfg, metrics);
+        assert_eq!(recv_reply(&rx).batch_rows, 1);
+        batcher.stop();
+        assert_eq!(faults.injected_slow_batches(), 1);
     }
 }

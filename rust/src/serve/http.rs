@@ -27,6 +27,9 @@ pub struct Request {
     pub body: Vec<u8>,
     /// What the peer asked for (HTTP/1.1 default keep-alive, 1.0 close).
     pub keep_alive: bool,
+    /// Per-request deadline from `X-Deadline-Ms` (milliseconds from
+    /// arrival); overrides the server's `--default-deadline-ms`.
+    pub deadline_ms: Option<u64>,
 }
 
 /// Outcome of trying to read one request off a kept-alive connection.
@@ -178,6 +181,7 @@ pub fn read_request(
 
     // --- headers ---
     let mut content_len = 0usize;
+    let mut deadline_ms: Option<u64> = None;
     let mut n_headers = 0usize;
     loop {
         line.clear();
@@ -215,6 +219,10 @@ pub fn read_request(
                     keep_alive = true;
                 }
             }
+            "x-deadline-ms" => match value.parse::<u64>() {
+                Ok(ms) => deadline_ms = Some(ms),
+                Err(_) => return bad(400, "bad x-deadline-ms"),
+            },
             _ => {}
         }
     }
@@ -226,7 +234,7 @@ pub fn read_request(
             return bad(408, e);
         }
     }
-    ReadOutcome::Request(Request { method, path, body, keep_alive })
+    ReadOutcome::Request(Request { method, path, body, keep_alive, deadline_ms })
 }
 
 fn reason(status: u16) -> &'static str {
@@ -238,6 +246,7 @@ fn reason(status: u16) -> &'static str {
         413 => "Payload Too Large",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
+        504 => "Gateway Timeout",
         _ => "Unknown",
     }
 }
@@ -253,8 +262,9 @@ pub fn error_body(msg: &str) -> String {
 }
 
 /// Write one JSON response. `keep_alive` picks the `Connection` header;
-/// 503 responses additionally carry `Retry-After: 1` (the backpressure
-/// contract: overload is transient, retry after the queue drains).
+/// 503 and 504 responses additionally carry `Retry-After: 1` (the
+/// shedding contract: overload and deadline sheds are transient — retry
+/// after the queue drains, ideally with a laxer deadline).
 pub fn write_response(
     w: &mut TcpStream,
     status: u16,
@@ -268,7 +278,7 @@ pub fn write_response(
         body.len(),
         if keep_alive { "keep-alive" } else { "close" }
     );
-    if status == 503 {
+    if status == 503 || status == 504 {
         head.push_str("retry-after: 1\r\n");
     }
     head.push_str("\r\n");
@@ -314,8 +324,29 @@ mod tests {
                 assert_eq!(req.path, "/predict");
                 assert_eq!(req.body, b"{\"x\":[1]}");
                 assert!(req.keep_alive);
+                assert_eq!(req.deadline_ms, None);
             }
             _ => panic!("expected a request"),
+        }
+    }
+
+    #[test]
+    fn deadline_header_is_parsed_and_garbage_rejected() {
+        let out = parse_raw(
+            b"POST /predict HTTP/1.1\r\ncontent-length: 0\r\n\
+              X-Deadline-Ms: 250\r\n\r\n",
+        );
+        match out {
+            ReadOutcome::Request(req) => assert_eq!(req.deadline_ms, Some(250)),
+            _ => panic!("expected a request"),
+        }
+        let out = parse_raw(
+            b"POST /predict HTTP/1.1\r\ncontent-length: 0\r\n\
+              x-deadline-ms: soon\r\n\r\n",
+        );
+        match out {
+            ReadOutcome::Bad(400, body) => assert!(body.contains("x-deadline-ms"), "{body}"),
+            _ => panic!("expected Bad(400)"),
         }
     }
 

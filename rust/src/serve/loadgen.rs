@@ -7,6 +7,14 @@
 //! server instead of overrunning it, so the measured throughput is the
 //! *sustainable* rate and latency percentiles are honest (no coordinated
 //! omission from a blocked open-loop schedule).
+//!
+//! Retries: with `retries > 0` a ticket that comes back 500/503/504 (or
+//! dies in transport — a supervised worker panic closes the connection)
+//! is retried with capped exponential backoff plus full jitter, honoring
+//! the server's `Retry-After` hint. This is what keeps the CI gate
+//! meaningful once the server sheds load or runs under `BCRUN_FAULTS`:
+//! shed-and-retry is the *designed* behavior, not a failure — but a row
+//! that exhausts its retries still counts against `failed_status`.
 
 use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::TcpStream;
@@ -23,6 +31,8 @@ use crate::{anyhow, bail, ensure};
 pub struct HttpClient {
     reader: BufReader<TcpStream>,
     line: Vec<u8>,
+    /// `Retry-After` (seconds) from the most recent response, if any.
+    retry_after: Option<u64>,
 }
 
 impl HttpClient {
@@ -31,7 +41,11 @@ impl HttpClient {
         stream.set_nodelay(true)?;
         stream.set_read_timeout(Some(Duration::from_secs(30)))?;
         stream.set_write_timeout(Some(Duration::from_secs(30)))?;
-        Ok(HttpClient { reader: BufReader::new(stream), line: Vec::with_capacity(256) })
+        Ok(HttpClient {
+            reader: BufReader::new(stream),
+            line: Vec::with_capacity(256),
+            retry_after: None,
+        })
     }
 
     /// One request/response round trip. Returns (status, body).
@@ -41,11 +55,29 @@ impl HttpClient {
         path: &str,
         body: Option<&str>,
     ) -> Result<(u16, String)> {
+        self.request_with_headers(method, path, body, &[])
+    }
+
+    /// Like [`HttpClient::request`] with extra request headers (the
+    /// integration tests use this to send `X-Deadline-Ms`).
+    pub fn request_with_headers(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+        extra_headers: &[(&str, String)],
+    ) -> Result<(u16, String)> {
         let body = body.unwrap_or("");
-        let head = format!(
-            "{method} {path} HTTP/1.1\r\nhost: bcrun\r\ncontent-length: {}\r\n\r\n",
+        let mut head = format!(
+            "{method} {path} HTTP/1.1\r\nhost: bcrun\r\ncontent-length: {}\r\n",
             body.len()
         );
+        for (name, value) in extra_headers {
+            use std::fmt::Write as _;
+            let _ = write!(head, "{name}: {value}\r\n");
+        }
+        head.push_str("\r\n");
+        self.retry_after = None;
         let stream = self.reader.get_mut();
         stream.write_all(head.as_bytes())?;
         stream.write_all(body.as_bytes())?;
@@ -71,6 +103,8 @@ impl HttpClient {
                         .trim()
                         .parse()
                         .map_err(|_| anyhow!("bad content-length '{value}'"))?;
+                } else if name.trim().eq_ignore_ascii_case("retry-after") {
+                    self.retry_after = value.trim().parse().ok();
                 }
             }
         }
@@ -78,6 +112,11 @@ impl HttpClient {
         let mut buf = vec![0u8; content_len];
         self.read_exact_all(&mut buf)?;
         Ok((status, String::from_utf8_lossy(&buf).into_owned()))
+    }
+
+    /// `Retry-After` (seconds) from the most recent response, if any.
+    pub fn last_retry_after(&self) -> Option<u64> {
+        self.retry_after
     }
 
     fn read_line(&mut self) -> Result<String> {
@@ -149,16 +188,23 @@ pub struct LoadgenOpts {
     pub concurrency: usize,
     pub requests: usize,
     pub seed: u64,
+    /// Retry budget per ticket for transient failures (500/503/504 and
+    /// transport errors). 0 = every failure is final — the right setting
+    /// for benchmarks, where retries would hide server misbehavior.
+    pub retries: usize,
 }
 
 /// Aggregated closed-loop run result.
 pub struct LoadReport {
     pub sent: usize,
     pub ok: usize,
-    /// Responses with a non-2xx status.
+    /// Responses with a non-2xx status *after* the retry budget.
     pub failed_status: usize,
-    /// Transport-level failures (connect/read/write).
+    /// Transport-level failures (connect/read/write) after retries.
     pub errors: usize,
+    /// Total retry attempts across all tickets (backoff waits included
+    /// in `elapsed_s`, so retried runs honestly report lower rps).
+    pub retries: usize,
     pub elapsed_s: f64,
     pub latency: LatencyStats,
     /// Sampled from the server's final `/stats` (0 when unavailable).
@@ -203,8 +249,9 @@ pub fn run(opts: &LoadgenOpts) -> Result<LoadReport> {
         let remaining = Arc::clone(&remaining);
         let barrier = Arc::clone(&barrier);
         let tseed = opts.seed ^ (t as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let retries = opts.retries;
         joins.push(std::thread::spawn(move || {
-            worker(&host, in_dim, tseed, &remaining, &barrier)
+            worker(&host, in_dim, tseed, retries, &remaining, &barrier)
         }));
     }
     let mut report = LoadReport {
@@ -212,6 +259,7 @@ pub fn run(opts: &LoadgenOpts) -> Result<LoadReport> {
         ok: 0,
         failed_status: 0,
         errors: 0,
+        retries: 0,
         elapsed_s: 0.0,
         latency: LatencyStats::default(),
         server_mean_batch: 0.0,
@@ -222,6 +270,7 @@ pub fn run(opts: &LoadgenOpts) -> Result<LoadReport> {
         report.ok += w.ok;
         report.failed_status += w.failed_status;
         report.errors += w.errors;
+        report.retries += w.retries;
         report.latency.merge(&w.latency);
     }
     report.elapsed_s = t_all.elapsed_s();
@@ -243,13 +292,34 @@ struct WorkerReport {
     ok: usize,
     failed_status: usize,
     errors: usize,
+    retries: usize,
     latency: LatencyStats,
+}
+
+/// Backoff before retry attempt `attempt` (1-based): capped exponential
+/// with full jitter — `uniform(0, min(5ms·2^attempt, 500ms))` — so
+/// concurrent workers that were shed together do not re-arrive together.
+/// A server-provided `Retry-After` (whole seconds) raises the floor,
+/// itself capped at 2s so a pessimistic hint cannot stall a chaos run.
+fn backoff(attempt: usize, retry_after_s: Option<u64>, rng: &mut Rng) -> Duration {
+    const BASE_MS: u64 = 5;
+    const CAP_MS: u64 = 500;
+    const RETRY_AFTER_CAP_MS: u64 = 2_000;
+    let exp_ms = BASE_MS
+        .saturating_mul(1u64 << attempt.min(10) as u32)
+        .min(CAP_MS);
+    let mut wait_ms = (rng.uniform_f64() * exp_ms as f64) as u64;
+    if let Some(ra) = retry_after_s {
+        wait_ms = wait_ms.max(ra.saturating_mul(1_000).min(RETRY_AFTER_CAP_MS));
+    }
+    Duration::from_millis(wait_ms)
 }
 
 fn worker(
     host: &str,
     in_dim: usize,
     seed: u64,
+    retries: usize,
     remaining: &AtomicUsize,
     barrier: &Barrier,
 ) -> WorkerReport {
@@ -258,6 +328,7 @@ fn worker(
         ok: 0,
         failed_status: 0,
         errors: 0,
+        retries: 0,
         latency: LatencyStats::default(),
     };
     let mut rng = Rng::new(seed);
@@ -266,7 +337,7 @@ fn worker(
     let mut client = HttpClient::connect(host).ok();
     barrier.wait();
     let mut consecutive_errors = 0usize;
-    while remaining
+    'tickets: while remaining
         .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| v.checked_sub(1))
         .is_ok()
     {
@@ -276,38 +347,69 @@ fn worker(
             row[rep.sent % in_dim] = rng.normal();
         }
         predict_body(&mut body, &row);
-        if client.is_none() {
-            match HttpClient::connect(host) {
-                Ok(c2) => client = Some(c2),
+        // one ticket = one row, retried (same row) up to `retries` times
+        // on transient outcomes; terminal outcomes advance to the next
+        // ticket
+        let mut attempt = 0usize;
+        loop {
+            let c = match &mut client {
+                Some(c) => c,
+                None => match HttpClient::connect(host) {
+                    Ok(c2) => client.insert(c2),
+                    Err(_) => {
+                        consecutive_errors += 1;
+                        if consecutive_errors > 10 {
+                            break 'tickets; // server is gone; stop burning tickets
+                        }
+                        if attempt < retries {
+                            attempt += 1;
+                            rep.retries += 1;
+                            std::thread::sleep(backoff(attempt, None, &mut rng));
+                            continue;
+                        }
+                        rep.errors += 1;
+                        break;
+                    }
+                },
+            };
+            let t = Timer::start();
+            match c.request("POST", "/predict", Some(&body)) {
+                Ok((200, _)) => {
+                    rep.ok += 1;
+                    rep.latency.record(t.elapsed_s());
+                    consecutive_errors = 0;
+                    break;
+                }
+                // transient: the server shed (503 admission / 504 queued
+                // expiry) or aborted (500, supervised panic) this row —
+                // the designed answer is "come back shortly"
+                Ok((status, _)) if matches!(status, 500 | 503 | 504) && attempt < retries => {
+                    let hint = c.last_retry_after();
+                    consecutive_errors = 0;
+                    attempt += 1;
+                    rep.retries += 1;
+                    std::thread::sleep(backoff(attempt, hint, &mut rng));
+                }
+                Ok((_, _)) => {
+                    rep.failed_status += 1;
+                    rep.latency.record(t.elapsed_s());
+                    consecutive_errors = 0;
+                    break;
+                }
                 Err(_) => {
-                    rep.errors += 1;
+                    client = None; // the connection is dead; reconnect
                     consecutive_errors += 1;
                     if consecutive_errors > 10 {
-                        return rep; // server is gone; stop burning tickets
+                        break 'tickets;
                     }
-                    continue;
-                }
-            }
-        }
-        let c = client.as_mut().unwrap();
-        let t = Timer::start();
-        match c.request("POST", "/predict", Some(&body)) {
-            Ok((200, _)) => {
-                rep.ok += 1;
-                rep.latency.record(t.elapsed_s());
-                consecutive_errors = 0;
-            }
-            Ok((_, _)) => {
-                rep.failed_status += 1;
-                rep.latency.record(t.elapsed_s());
-                consecutive_errors = 0;
-            }
-            Err(_) => {
-                rep.errors += 1;
-                consecutive_errors += 1;
-                client = None; // reconnect on the next ticket
-                if consecutive_errors > 10 {
-                    return rep;
+                    if attempt < retries {
+                        attempt += 1;
+                        rep.retries += 1;
+                        std::thread::sleep(backoff(attempt, None, &mut rng));
+                        continue;
+                    }
+                    rep.errors += 1;
+                    break;
                 }
             }
         }
@@ -326,6 +428,23 @@ mod tests {
         assert_eq!(host_of("localhost:9000").unwrap(), "localhost:9000");
         assert!(host_of("https://secure:443").is_err());
         assert!(host_of("http://no-port").is_err());
+    }
+
+    #[test]
+    fn backoff_is_capped_and_honors_retry_after() {
+        let mut rng = Rng::new(42);
+        // without a server hint: full jitter under the 500ms cap, even for
+        // absurdly deep attempts (the shift is clamped)
+        for attempt in 1..=64 {
+            let d = backoff(attempt, None, &mut rng);
+            assert!(d <= Duration::from_millis(500), "attempt {attempt}: {d:?}");
+        }
+        // Retry-After raises the floor: 1s hint → at least 1s
+        let d = backoff(1, Some(1), &mut rng);
+        assert!(d >= Duration::from_secs(1) && d <= Duration::from_secs(2), "{d:?}");
+        // ...but a hostile/huge hint is capped at 2s
+        let d = backoff(1, Some(600), &mut rng);
+        assert_eq!(d, Duration::from_secs(2));
     }
 
     #[test]

@@ -9,8 +9,9 @@
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::time::Instant;
 
-use crate::util::{Json, LatencyStats};
+use crate::util::{lock_ok, Json, LatencyStats};
 
 /// Latency samples retained for percentile reporting.
 pub const RING_CAP: usize = 4096;
@@ -41,6 +42,18 @@ pub struct Metrics {
     pub rows: AtomicU64,
     /// Largest batch coalesced so far.
     pub max_batch_rows: AtomicU64,
+    /// Worker panics caught and recovered by the supervisor (each one
+    /// answered its in-flight connection with 500).
+    pub worker_restarts: AtomicU64,
+    /// Batcher panics caught; each respawn rebuilds the mode workspace
+    /// and fails the held rows instead of dropping them.
+    pub batcher_restarts: AtomicU64,
+    /// Rows shed with 504 because their deadline passed while queued.
+    pub deadline_sheds: AtomicU64,
+    /// EWMA of batch forward time in microseconds; feeds the admission
+    /// controller's queue-wait estimate.
+    forward_ewma_us: AtomicU64,
+    started: Instant,
     lat: Mutex<Ring>,
 }
 
@@ -61,6 +74,11 @@ impl Metrics {
             batches: AtomicU64::new(0),
             rows: AtomicU64::new(0),
             max_batch_rows: AtomicU64::new(0),
+            worker_restarts: AtomicU64::new(0),
+            batcher_restarts: AtomicU64::new(0),
+            deadline_sheds: AtomicU64::new(0),
+            forward_ewma_us: AtomicU64::new(0),
+            started: Instant::now(),
             lat: Mutex::new(Ring { buf: vec![0.0; RING_CAP], next: 0, filled: 0 }),
         }
     }
@@ -70,9 +88,30 @@ impl Metrics {
         counter.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Seconds since the metrics struct (i.e. the server) was created.
+    pub fn uptime_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Fold one batch forward time (seconds) into the EWMA. The racy
+    /// read-modify-write is deliberate: only the batcher writes, and a
+    /// lost update merely delays the smoothing of an *estimate*.
+    pub fn record_forward(&self, seconds: f64) {
+        let sample = (seconds * 1e6) as u64;
+        let prev = self.forward_ewma_us.load(Ordering::Relaxed);
+        let next = if prev == 0 { sample } else { (prev * 7 + sample) / 8 };
+        self.forward_ewma_us.store(next, Ordering::Relaxed);
+    }
+
+    /// Smoothed batch forward time in microseconds (0 until the first
+    /// batch completes).
+    pub fn forward_ewma_us(&self) -> u64 {
+        self.forward_ewma_us.load(Ordering::Relaxed)
+    }
+
     /// Record one end-to-end `/predict` latency (seconds).
     pub fn record_latency(&self, seconds: f64) {
-        let mut ring = self.lat.lock().unwrap();
+        let mut ring = lock_ok(&self.lat);
         let at = ring.next;
         ring.buf[at] = seconds;
         ring.next = (at + 1) % RING_CAP;
@@ -90,7 +129,7 @@ impl Metrics {
     /// keeps accumulating concurrently).
     pub fn latency(&self) -> LatencyStats {
         let mut stats = LatencyStats::default();
-        let ring = self.lat.lock().unwrap();
+        let ring = lock_ok(&self.lat);
         for &s in &ring.buf[..ring.filled] {
             stats.record(s);
         }
@@ -117,6 +156,11 @@ impl Metrics {
         num("max_batch_rows", self.max_batch_rows.load(Ordering::Relaxed) as f64);
         num("mean_batch_rows", if batches == 0 { 0.0 } else { rows as f64 / batches as f64 });
         num("queue_depth", queue_depth as f64);
+        num("uptime_s", self.uptime_s());
+        num("worker_restarts", self.worker_restarts.load(Ordering::Relaxed) as f64);
+        num("batcher_restarts", self.batcher_restarts.load(Ordering::Relaxed) as f64);
+        num("deadline_sheds_504", self.deadline_sheds.load(Ordering::Relaxed) as f64);
+        num("forward_ewma_us", self.forward_ewma_us() as f64);
         num("latency_samples", lat.count() as f64);
         num("latency_mean_us", lat.mean() * 1e6);
         num("latency_p50_us", lat.percentile(50.0) * 1e6);
@@ -145,6 +189,40 @@ mod tests {
         assert_eq!(snap.get("max_batch_rows").unwrap().as_usize(), Some(5));
         assert_eq!(snap.get("queue_depth").unwrap().as_usize(), Some(7));
         assert!((snap.get("mean_batch_rows").unwrap().as_f64().unwrap() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn supervision_counters_surface_in_the_snapshot() {
+        let m = Metrics::new();
+        let snap = m.snapshot(0);
+        // fresh server: counters exist and read zero
+        assert_eq!(snap.get("worker_restarts").unwrap().as_usize(), Some(0));
+        assert_eq!(snap.get("batcher_restarts").unwrap().as_usize(), Some(0));
+        assert_eq!(snap.get("deadline_sheds_504").unwrap().as_usize(), Some(0));
+        assert!(snap.get("uptime_s").unwrap().as_f64().unwrap() >= 0.0);
+        Metrics::bump(&m.worker_restarts);
+        Metrics::bump(&m.batcher_restarts);
+        Metrics::bump(&m.batcher_restarts);
+        Metrics::bump(&m.deadline_sheds);
+        let snap = m.snapshot(0);
+        assert_eq!(snap.get("worker_restarts").unwrap().as_usize(), Some(1));
+        assert_eq!(snap.get("batcher_restarts").unwrap().as_usize(), Some(2));
+        assert_eq!(snap.get("deadline_sheds_504").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn forward_ewma_smooths_toward_samples() {
+        let m = Metrics::new();
+        assert_eq!(m.forward_ewma_us(), 0);
+        m.record_forward(0.001); // 1000 us: first sample adopted as-is
+        assert_eq!(m.forward_ewma_us(), 1000);
+        for _ in 0..64 {
+            m.record_forward(0.002); // converges toward 2000 us
+        }
+        let ewma = m.forward_ewma_us();
+        assert!((1900..=2000).contains(&ewma), "ewma {ewma}");
+        let snap = m.snapshot(0);
+        assert!(snap.get("forward_ewma_us").unwrap().as_f64().unwrap() >= 1900.0);
     }
 
     #[test]

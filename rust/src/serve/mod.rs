@@ -26,15 +26,30 @@
 //! | route | semantics |
 //! |---|---|
 //! | `POST /predict` | `{"x":[...in_dim floats...]}` → `{"pred":c,"batch":b,"logits":[...]}` |
-//! | `GET /healthz`  | model + config facts, `{"ok":true,...}` |
+//! | `GET /healthz`  | model + config facts plus liveness counters, `{"ok":true,...}` |
 //! | `GET /stats`    | counters and latency percentiles (see `metrics`) |
 //! | `POST /shutdown`| begin graceful drain (also: SIGTERM / ctrl-c) |
+//!
+//! ## Failure model (DESIGN.md, "Failure model & supervision")
+//!
+//! Worker threads and the batcher run under `catch_unwind` supervision:
+//! a panicking worker answers its in-flight connection with 500 and the
+//! thread keeps serving; a panicking batcher fails its held rows (500)
+//! and re-enters its loop with a freshly built workspace. Both paths
+//! count restarts in `/stats`. Requests may carry a deadline
+//! (`--default-deadline-ms` or `X-Deadline-Ms`): admission sheds
+//! infeasible rows with 503, the batcher sheds expired queued rows with
+//! 504. Every accepted request is answered — 200, 400, 500, 503 or 504,
+//! never silence. `BCRUN_FAULTS` (util::faultinject) injects
+//! deterministic panics/stalls to prove all of this under test.
 //!
 //! ## Shutdown
 //!
 //! `Server::stop` (triggered by signal, `/shutdown`, or drop) stops
 //! accepting, lets every in-flight request finish, drains the batch
 //! queue (accepted rows are always answered), then joins all threads.
+//! A second signal during a wedged drain force-exits with code 143
+//! (see [`signal`]).
 
 pub mod batcher;
 pub mod http;
@@ -43,20 +58,21 @@ pub mod metrics;
 
 use std::collections::BTreeMap;
 use std::io::BufReader;
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::binary::{ForwardMode, PackedMlp};
 use crate::ensure;
 use crate::kernel::simd;
 use crate::util::error::{Context as _, Result};
-use crate::util::{Json, Timer};
+use crate::util::{lock_ok, FaultPlan, Json, Timer};
 
-use batcher::{BatchConfig, Batcher, Job};
+use batcher::{BatchConfig, Batcher, Job, Verdict};
 use http::{ReadOutcome, Request};
 use metrics::Metrics;
 
@@ -95,6 +111,14 @@ pub struct ServeConfig {
     /// contract holds; in BNN mode hidden activations are sign bits, so
     /// the served function differs from packed-f32 by design.
     pub mode: ForwardMode,
+    /// Deadline applied to requests that do not send `X-Deadline-Ms`
+    /// (`--default-deadline-ms`; `None` = no deadline). Admission
+    /// answers 503 when the estimated queue wait already exceeds the
+    /// deadline; rows that expire while queued are shed with 504.
+    pub default_deadline: Option<Duration>,
+    /// Deterministic fault-injection plan (`BCRUN_FAULTS`). `None` —
+    /// the default — is production: no injection, no overhead.
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl Default for ServeConfig {
@@ -112,6 +136,8 @@ impl Default for ServeConfig {
             idle_timeout: Duration::from_secs(30),
             quiet: true,
             mode: ForwardMode::PackedF32,
+            default_deadline: None,
+            faults: None,
         }
     }
 }
@@ -129,8 +155,16 @@ struct Ctx {
     mode: ForwardMode,
     /// Workspace footprint for this mode at `max_batch` (static fact).
     activation_bytes: usize,
-    /// Prebuilt `/healthz` body (model + config facts are static).
-    health_body: String,
+    /// Batching knobs, re-used by the admission-control wait estimate.
+    max_batch: usize,
+    max_wait: Duration,
+    /// Deadline for requests without an `X-Deadline-Ms` header.
+    default_deadline: Option<Duration>,
+    /// Fault-injection plan shared with the batcher (`None` = inert).
+    faults: Option<Arc<FaultPlan>>,
+    /// Static part of the `/healthz` body; liveness counters (uptime,
+    /// restarts, sheds) are merged in per request.
+    health_base: Json,
 }
 
 /// A running server. Dropping it (or calling [`Server::stop`]) performs
@@ -196,9 +230,10 @@ pub fn start(mlp: PackedMlp, cfg: ServeConfig) -> Result<Server> {
         max_wait: cfg.max_wait,
         queue_cap: cfg.queue_cap,
         mode: cfg.mode,
+        faults: cfg.faults.clone(),
     };
     let batcher = Batcher::start(Arc::clone(&mlp), batch_cfg, Arc::clone(&metrics));
-    let health_body = health_json(&mlp, &cfg).to_string();
+    let health_base = health_json(&mlp, &cfg);
     let activation_bytes = mlp.activation_memory_bytes(cfg.max_batch, cfg.mode);
     let ctx = Arc::new(Ctx {
         mlp,
@@ -210,7 +245,11 @@ pub fn start(mlp: PackedMlp, cfg: ServeConfig) -> Result<Server> {
         idle_timeout: cfg.idle_timeout,
         mode: cfg.mode,
         activation_bytes,
-        health_body,
+        max_batch: cfg.max_batch,
+        max_wait: cfg.max_wait,
+        default_deadline: cfg.default_deadline,
+        faults: cfg.faults.clone(),
+        health_base,
     });
 
     let (conn_tx, conn_rx) = sync_channel::<TcpStream>(cfg.conn_backlog.max(1));
@@ -277,6 +316,10 @@ fn health_json(mlp: &PackedMlp, cfg: &ServeConfig) -> Json {
     );
     m.insert("queue_cap".to_string(), Json::Num(cfg.queue_cap as f64));
     m.insert("workers".to_string(), Json::Num(cfg.workers as f64));
+    m.insert(
+        "default_deadline_ms".to_string(),
+        Json::Num(cfg.default_deadline.map_or(0.0, |d| d.as_millis() as f64)),
+    );
     Json::Obj(m)
 }
 
@@ -322,12 +365,30 @@ fn acceptor(
 fn conn_worker(rx: &Mutex<Receiver<TcpStream>>, ctx: &Ctx) {
     loop {
         // holding the lock only while waiting for the *next* connection;
-        // handling happens with the lock released
-        let stream = match rx.lock().unwrap().recv() {
+        // handling happens with the lock released (lock_ok: a panic in a
+        // sibling worker must not poison this handoff for everyone)
+        let stream = match lock_ok(rx).recv() {
             Ok(s) => s,
             Err(_) => return, // acceptor gone and backlog drained
         };
-        handle_connection(stream, ctx);
+        // supervision: a panic while serving (a kernel bug, or an
+        // injected fault) costs this connection a 500, never the thread.
+        // The dup'd handle exists so the catch arm can still answer
+        // after `stream` (inside the BufReader) unwound away.
+        let spare = stream.try_clone().ok();
+        let served = catch_unwind(AssertUnwindSafe(|| handle_connection(stream, ctx)));
+        if served.is_err() {
+            Metrics::bump(&ctx.metrics.worker_restarts);
+            if let Some(mut s) = spare {
+                let _ = http::write_response(
+                    &mut s,
+                    500,
+                    &http::error_body("worker panicked; request aborted"),
+                    false,
+                );
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
     }
 }
 
@@ -380,8 +441,31 @@ fn handle_connection(stream: TcpStream, ctx: &Ctx) {
 fn route(ctx: &Ctx, req: &Request) -> (u16, String) {
     Metrics::bump(&ctx.metrics.requests);
     match (req.method.as_str(), req.path.as_str()) {
-        ("POST", "/predict") => predict(ctx, &req.body),
-        ("GET", "/healthz") => (200, ctx.health_body.clone()),
+        ("POST", "/predict") => predict(ctx, req),
+        ("GET", "/healthz") => {
+            // static model/config facts plus the liveness counters a
+            // fleet health-checker actually watches
+            let mut j = ctx.health_base.clone();
+            if let Json::Obj(m) = &mut j {
+                let counter = |c: &std::sync::atomic::AtomicU64| {
+                    Json::Num(c.load(Ordering::Relaxed) as f64)
+                };
+                m.insert("uptime_s".to_string(), Json::Num(ctx.metrics.uptime_s()));
+                m.insert(
+                    "worker_restarts".to_string(),
+                    counter(&ctx.metrics.worker_restarts),
+                );
+                m.insert(
+                    "batcher_restarts".to_string(),
+                    counter(&ctx.metrics.batcher_restarts),
+                );
+                m.insert(
+                    "deadline_sheds_504".to_string(),
+                    counter(&ctx.metrics.deadline_sheds),
+                );
+            }
+            (200, j.to_string())
+        }
         ("GET", "/stats") => {
             // augment the counters with the engine facts here (rather
             // than widening Metrics::snapshot, which has many callers)
@@ -420,22 +504,45 @@ fn route(ctx: &Ctx, req: &Request) -> (u16, String) {
     }
 }
 
-fn predict(ctx: &Ctx, body: &[u8]) -> (u16, String) {
+fn predict(ctx: &Ctx, req: &Request) -> (u16, String) {
     let t = Timer::start();
-    let parsed = match parse_predict(ctx, body) {
+    if let Some(faults) = &ctx.faults {
+        // the worker injection point: a panic here unwinds into the
+        // connection supervisor (conn_worker), which answers 500
+        faults.maybe_panic_worker();
+    }
+    let parsed = match parse_predict(ctx, &req.body) {
         Ok(x) => x,
         Err(msg) => {
             Metrics::bump(&ctx.metrics.bad_requests);
             return (400, http::error_body(&msg));
         }
     };
+    let arrival = Instant::now();
+    let deadline = req
+        .deadline_ms
+        .map(Duration::from_millis)
+        .or(ctx.default_deadline)
+        .map(|d| arrival + d);
+    if let Some(d) = deadline {
+        // admission control: if the work already ahead of this row
+        // implies missing its deadline, shed now (503 + Retry-After)
+        // instead of queueing a row the batcher will only 504 later
+        if arrival + estimated_queue_wait(ctx) > d {
+            Metrics::bump(&ctx.metrics.overloads);
+            return (
+                503,
+                http::error_body("deadline infeasible: estimated queue wait exceeds it"),
+            );
+        }
+    }
     let (reply_tx, reply_rx) = sync_channel(1);
-    if ctx.queue.submit(Job { x: parsed, reply: reply_tx }).is_err() {
+    if ctx.queue.submit(Job { x: parsed, reply: reply_tx, deadline }).is_err() {
         Metrics::bump(&ctx.metrics.overloads);
         return (503, http::error_body("overloaded: batch queue full"));
     }
     match reply_rx.recv_timeout(Duration::from_secs(30)) {
-        Ok(reply) => {
+        Ok(Verdict::Reply(reply)) => {
             Metrics::bump(&ctx.metrics.predictions);
             ctx.metrics.record_latency(t.elapsed_s());
             let mut m = BTreeMap::new();
@@ -447,8 +554,29 @@ fn predict(ctx: &Ctx, body: &[u8]) -> (u16, String) {
             );
             (200, Json::Obj(m).to_string())
         }
-        Err(_) => (500, http::error_body("batcher unavailable")),
+        Ok(Verdict::Expired) => (
+            504,
+            http::error_body("deadline exceeded while queued; row shed before compute"),
+        ),
+        // an aborted row (batcher panicked while holding it) and a dead
+        // reply channel look the same to the client: the forward never
+        // ran, so retrying is safe
+        Ok(Verdict::Aborted) | Err(_) => {
+            (500, http::error_body("batcher aborted this request; retrying is safe"))
+        }
     }
+}
+
+/// Estimate how long a newly-admitted row would wait for its logits:
+/// the batches already ahead of it (queue depth / max_batch, plus its
+/// own batch) each cost one batching window plus the smoothed forward
+/// time. Deliberately cheap and conservative — it gates *admission*,
+/// not correctness (an admitted row that still expires is shed by the
+/// batcher with 504).
+fn estimated_queue_wait(ctx: &Ctx) -> Duration {
+    let batches_ahead = (ctx.queue.depth() / ctx.max_batch.max(1)) as u32 + 1;
+    let per_batch = ctx.max_wait + Duration::from_micros(ctx.metrics.forward_ewma_us());
+    per_batch.checked_mul(batches_ahead).unwrap_or(Duration::MAX)
 }
 
 /// Validate a `/predict` body into one input row. Every failure is a
@@ -482,33 +610,81 @@ fn parse_predict(ctx: &Ctx, body: &[u8]) -> Result<Vec<f32>, String> {
 
 /// Process-wide shutdown signal latch for `bcrun serve` (SIGINT/SIGTERM
 /// on unix; a no-op installer elsewhere — `/shutdown` still works).
+///
+/// State machine: the **first** signal latches "drain requested" — the
+/// serve loop notices and begins the graceful drain. Any **further**
+/// signal while the process is still alive (i.e. the drain is wedged on
+/// a stuck connection or batch) force-exits immediately with the
+/// distinct code [`FORCE_EXIT_CODE`], so an operator's second ctrl-c /
+/// `kill -TERM` always works. The decision lives in the pure
+/// [`action_for`] so the state machine is unit-testable without
+/// delivering real signals.
 pub mod signal {
-    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::atomic::{AtomicU32, Ordering};
 
-    static TRIGGERED: AtomicBool = AtomicBool::new(false);
+    static SIGNAL_COUNT: AtomicU32 = AtomicU32::new(0);
 
+    /// Exit code of a forced (second-signal) shutdown: 128 + SIGTERM,
+    /// the conventional "killed by signal 15" code — distinct from the
+    /// graceful drain's 0.
+    pub const FORCE_EXIT_CODE: i32 = 143;
+
+    /// What a delivered signal should do, given it is the `nth` one
+    /// (1-based) this process has received.
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    pub enum Action {
+        /// Latch the drain flag; the serve loop shuts down gracefully.
+        BeginDrain,
+        /// The drain is already running (and evidently not done):
+        /// force-exit with [`FORCE_EXIT_CODE`].
+        ForceExit,
+    }
+
+    /// The latch state machine, pure and reentrancy-free so it can be
+    /// unit-tested and reasoned about: first signal drains, every later
+    /// one force-exits.
+    pub fn action_for(nth_signal: u32) -> Action {
+        if nth_signal <= 1 {
+            Action::BeginDrain
+        } else {
+            Action::ForceExit
+        }
+    }
+
+    /// True once at least one shutdown signal (or [`trigger`]) arrived.
     pub fn triggered() -> bool {
-        TRIGGERED.load(Ordering::Acquire)
+        SIGNAL_COUNT.load(Ordering::Acquire) > 0
     }
 
-    /// Test hook / manual trigger.
+    /// Test hook / manual trigger. Counts like a delivered signal for
+    /// `triggered()`, but never force-exits (tests must not die).
     pub fn trigger() {
-        TRIGGERED.store(true, Ordering::Release);
+        SIGNAL_COUNT.fetch_add(1, Ordering::AcqRel);
     }
 
-    /// Install handlers for SIGINT (2) and SIGTERM (15) that set the
-    /// latch. Uses the C `signal` symbol already linked through std —
-    /// the handler only stores to an atomic, which is async-signal-safe.
+    /// Install handlers for SIGINT (2) and SIGTERM (15). Uses the C
+    /// `signal` symbol already linked through std. The handler is
+    /// async-signal-safe by construction: one atomic RMW, and on the
+    /// force path a direct `_exit` — **not** `std::process::exit`,
+    /// which runs atexit handlers and may allocate or take locks the
+    /// interrupted thread already holds.
     #[cfg(unix)]
     pub fn install() {
         extern "C" fn handler(_sig: i32) {
-            TRIGGERED.store(true, Ordering::Release);
+            let nth = SIGNAL_COUNT.fetch_add(1, Ordering::AcqRel) + 1;
+            if action_for(nth) == Action::ForceExit {
+                extern "C" {
+                    fn _exit(code: i32) -> !;
+                }
+                // SAFETY: _exit is async-signal-safe (POSIX) and does
+                // not return; the wedged drain is abandoned by design.
+                unsafe { _exit(FORCE_EXIT_CODE) }
+            }
         }
         extern "C" {
             fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
         }
-        // SAFETY: registering an async-signal-safe handler (one relaxed
-        // atomic store, no allocation, no locks).
+        // SAFETY: registering an async-signal-safe handler (see above).
         unsafe {
             signal(2, handler);
             signal(15, handler);
@@ -540,7 +716,7 @@ mod tests {
 
     fn test_ctx(cfg: &ServeConfig) -> Ctx {
         let mlp = Arc::new(toy_mlp());
-        let health_body = health_json(&mlp, cfg).to_string();
+        let health_base = health_json(&mlp, cfg);
         let activation_bytes = mlp.activation_memory_bytes(cfg.max_batch, cfg.mode);
         Ctx {
             mlp,
@@ -552,7 +728,11 @@ mod tests {
             idle_timeout: cfg.idle_timeout,
             mode: cfg.mode,
             activation_bytes,
-            health_body,
+            max_batch: cfg.max_batch,
+            max_wait: cfg.max_wait,
+            default_deadline: cfg.default_deadline,
+            faults: cfg.faults.clone(),
+            health_base,
         }
     }
 
@@ -578,7 +758,7 @@ mod tests {
     fn health_json_reports_model_facts() {
         let cfg = ServeConfig { max_batch: 32, ..Default::default() };
         let ctx = test_ctx(&cfg);
-        let j = Json::parse(&ctx.health_body).unwrap();
+        let j = Json::parse(&ctx.health_base.to_string()).unwrap();
         assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
         assert_eq!(j.get("in_dim").unwrap().as_usize(), Some(6));
         assert_eq!(j.get("classes").unwrap().as_usize(), Some(3));
@@ -600,7 +780,7 @@ mod tests {
             ..Default::default()
         };
         let ctx = test_ctx(&cfg);
-        let j = Json::parse(&ctx.health_body).unwrap();
+        let j = Json::parse(&ctx.health_base.to_string()).unwrap();
         assert_eq!(j.get("mode").unwrap().as_str(), Some("bnn"));
         let act = j.get("activation_bytes").unwrap().as_usize().unwrap();
         assert_eq!(act, ctx.mlp.activation_memory_bytes(16, ForwardMode::Bnn));
@@ -613,5 +793,48 @@ mod tests {
         assert!(start(toy_mlp(), ServeConfig { max_batch: 0, ..Default::default() }).is_err());
         assert!(start(toy_mlp(), ServeConfig { workers: 0, ..Default::default() }).is_err());
         assert!(start(toy_mlp(), ServeConfig { queue_cap: 0, ..Default::default() }).is_err());
+    }
+
+    #[test]
+    fn estimated_wait_scales_with_queue_depth_and_forward_time() {
+        let cfg = ServeConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        };
+        let ctx = test_ctx(&cfg);
+        // empty queue, no forward history: one window
+        assert_eq!(estimated_queue_wait(&ctx), Duration::from_millis(1));
+        ctx.metrics.record_forward(0.002); // 2ms smoothed forward
+        let base = estimated_queue_wait(&ctx);
+        assert_eq!(base, Duration::from_millis(3));
+        // 8 queued rows at max_batch 4 = 2 batches ahead + own batch
+        for _ in 0..8 {
+            let (tx, _rx) = sync_channel(1);
+            ctx.queue
+                .submit(Job { x: vec![0.0; 6], reply: tx, deadline: None })
+                .map_err(|_| ())
+                .unwrap();
+        }
+        assert_eq!(estimated_queue_wait(&ctx), Duration::from_millis(9));
+    }
+
+    #[test]
+    fn signal_latch_state_machine() {
+        use signal::{action_for, Action, FORCE_EXIT_CODE};
+        // first signal: graceful drain; every later one: force exit
+        assert_eq!(action_for(1), Action::BeginDrain);
+        assert_eq!(action_for(2), Action::ForceExit);
+        assert_eq!(action_for(3), Action::ForceExit);
+        assert_eq!(action_for(u32::MAX), Action::ForceExit);
+        // the forced exit code is non-zero and distinct from sysexits
+        assert_eq!(FORCE_EXIT_CODE, 143);
+        // the manual trigger latches `triggered` (and, per its contract,
+        // never force-exits — this test staying alive is the proof)
+        assert!(!signal::triggered());
+        signal::trigger();
+        assert!(signal::triggered());
+        signal::trigger();
+        assert!(signal::triggered());
     }
 }

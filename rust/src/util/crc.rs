@@ -1,0 +1,48 @@
+//! CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320) — the integrity
+//! trailer for `.bcpack` artifacts.
+//!
+//! Bitwise and table-free on purpose: artifact (de)serialization is
+//! I/O-bound, files are small (packed weights), and this keeps the
+//! vendored surface tiny and obviously correct.
+
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = !0u32;
+    for &b in data {
+        crc ^= u32::from(b);
+        for _ in 0..8 {
+            // branch-free: mask is all-ones iff the low bit is set
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_the_ieee_check_vector() {
+        // the canonical CRC-32 check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn empty_input_is_zero() {
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn single_bit_flips_change_the_checksum() {
+        let base = b"BCPACK02 payload bytes".to_vec();
+        let reference = crc32(&base);
+        for i in 0..base.len() {
+            for bit in 0..8 {
+                let mut corrupt = base.clone();
+                corrupt[i] ^= 1 << bit;
+                assert_ne!(crc32(&corrupt), reference, "flip at byte {i} bit {bit}");
+            }
+        }
+    }
+}

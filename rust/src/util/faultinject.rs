@@ -1,0 +1,346 @@
+//! Deterministic fault injection for the serving robustness layer.
+//!
+//! A `FaultPlan` is parsed from the `BCRUN_FAULTS` environment variable
+//! (or built programmatically in tests) and threaded through the serve
+//! worker and batcher threads. Each injection site draws a seeded,
+//! *replayable* decision per trial, so a chaos run can assert exact
+//! accounting: the number of panics the plan reports having fired must
+//! equal the restart counters the supervisor publishes in `/stats`.
+//!
+//! Spec grammar (comma-separated, whitespace-tolerant):
+//!
+//! ```text
+//! panic_worker@0.01,panic_batcher@0.005,slow_batch=5ms@0.05,seed=7
+//! ```
+//!
+//! - `panic_worker@P`  — each `/predict` dispatch panics with probability P
+//! - `panic_batcher@P` — each non-empty batch panics (before the forward)
+//!                       with probability P
+//! - `slow_batch=DUR@P` — each non-empty batch sleeps DUR (`us`/`ms`/`s`
+//!                       suffix) with probability P
+//! - `seed=N`          — seed for the decision stream (default 0)
+//!
+//! When `BCRUN_FAULTS` is unset the plan is absent (`None`) and the hot
+//! paths pay only an `Option` check — production runs carry no injection
+//! overhead and no behavioral change.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::util::SplitMix64;
+
+/// One injection site: a probability plus trial/fired accounting.
+#[derive(Debug)]
+struct FaultSite {
+    prob: f64,
+    trials: AtomicU64,
+    fired: AtomicU64,
+}
+
+impl FaultSite {
+    fn new(prob: f64) -> Self {
+        Self { prob, trials: AtomicU64::new(0), fired: AtomicU64::new(0) }
+    }
+
+    /// Draw this site's next decision. Deterministic in (seed, tag,
+    /// trial index): two plans with the same spec and seed fire on the
+    /// exact same trial numbers, regardless of thread interleaving of
+    /// *other* sites (each site counts its own trials).
+    fn roll(&self, seed: u64, tag: u64) -> bool {
+        let i = self.trials.fetch_add(1, Ordering::Relaxed);
+        let mut h = SplitMix64::new(
+            seed ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ i.wrapping_mul(0xA24B_AED4_963E_E407),
+        );
+        // top 53 bits -> uniform in [0, 1)
+        let u = (h.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        let hit = u < self.prob;
+        if hit {
+            self.fired.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+}
+
+/// A parsed, seeded fault-injection plan. Shared (`Arc`) between the
+/// server threads and the chaos test that audits the counters.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    panic_worker: Option<FaultSite>,
+    panic_batcher: Option<FaultSite>,
+    slow_batch: Option<(Duration, FaultSite)>,
+}
+
+const WORKER_TAG: u64 = 0x5745_524b; // "WERK"
+const BATCHER_TAG: u64 = 0x4241_5443; // "BATC"
+const SLOW_TAG: u64 = 0x534c_4f57; // "SLOW"
+
+impl FaultPlan {
+    /// Parse a spec string. `default_seed` applies unless the spec
+    /// carries its own `seed=N` entry.
+    pub fn parse(spec: &str, default_seed: u64) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan {
+            seed: default_seed,
+            panic_worker: None,
+            panic_batcher: None,
+            slow_batch: None,
+        };
+        for raw in spec.split(',') {
+            let part = raw.trim();
+            if part.is_empty() {
+                continue;
+            }
+            if let Some(v) = part.strip_prefix("seed=") {
+                plan.seed = v
+                    .parse()
+                    .map_err(|_| format!("BCRUN_FAULTS: bad seed {v:?}"))?;
+            } else if let Some(p) = part.strip_prefix("panic_worker@") {
+                plan.panic_worker = Some(FaultSite::new(parse_prob(p)?));
+            } else if let Some(p) = part.strip_prefix("panic_batcher@") {
+                plan.panic_batcher = Some(FaultSite::new(parse_prob(p)?));
+            } else if let Some(rest) = part.strip_prefix("slow_batch=") {
+                let (dur, prob) = rest.split_once('@').ok_or_else(|| {
+                    format!("BCRUN_FAULTS: slow_batch needs DUR@P, got {rest:?}")
+                })?;
+                plan.slow_batch =
+                    Some((parse_duration(dur)?, FaultSite::new(parse_prob(prob)?)));
+            } else {
+                return Err(format!(
+                    "BCRUN_FAULTS: unknown fault {part:?} (grammar: \
+                     panic_worker@P, panic_batcher@P, slow_batch=DUR@P, seed=N)"
+                ));
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Read `BCRUN_FAULTS`; unset or empty means no injection.
+    pub fn from_env() -> Result<Option<FaultPlan>, String> {
+        match std::env::var("BCRUN_FAULTS") {
+            Err(_) => Ok(None),
+            Ok(s) if s.trim().is_empty() => Ok(None),
+            Ok(s) => FaultPlan::parse(&s, 0).map(Some),
+        }
+    }
+
+    /// Worker injection point (the `/predict` dispatch). Panics when the
+    /// seeded decision fires; the supervisor catches it, answers the
+    /// connection with 500, and bumps `worker_restarts`.
+    pub fn maybe_panic_worker(&self) {
+        if self.roll_worker() {
+            panic!("fault injection: panic_worker");
+        }
+    }
+
+    /// Batcher injection point (after a non-empty batch is taken, before
+    /// the forward). The supervisor fails the held rows and respawns the
+    /// loop with a fresh workspace.
+    pub fn maybe_panic_batcher(&self) {
+        if self.roll_batcher() {
+            panic!("fault injection: panic_batcher");
+        }
+    }
+
+    /// Batch-delay injection point: how long this batch should stall, if
+    /// at all. The caller sleeps; this only decides.
+    pub fn slow_batch(&self) -> Option<Duration> {
+        let (dur, site) = self.slow_batch.as_ref()?;
+        site.roll(self.seed, SLOW_TAG).then_some(*dur)
+    }
+
+    // Decision-only entry points (no panic) so tests can replay the
+    // stream without unwinding.
+    #[doc(hidden)]
+    pub fn roll_worker(&self) -> bool {
+        self.panic_worker
+            .as_ref()
+            .is_some_and(|s| s.roll(self.seed, WORKER_TAG))
+    }
+
+    #[doc(hidden)]
+    pub fn roll_batcher(&self) -> bool {
+        self.panic_batcher
+            .as_ref()
+            .is_some_and(|s| s.roll(self.seed, BATCHER_TAG))
+    }
+
+    /// How many worker panics this plan has actually fired.
+    pub fn injected_worker_panics(&self) -> u64 {
+        self.panic_worker.as_ref().map_or(0, |s| s.fired.load(Ordering::Relaxed))
+    }
+
+    /// How many batcher panics this plan has actually fired.
+    pub fn injected_batcher_panics(&self) -> u64 {
+        self.panic_batcher.as_ref().map_or(0, |s| s.fired.load(Ordering::Relaxed))
+    }
+
+    /// How many batches this plan has actually stalled.
+    pub fn injected_slow_batches(&self) -> u64 {
+        self.slow_batch
+            .as_ref()
+            .map_or(0, |(_, s)| s.fired.load(Ordering::Relaxed))
+    }
+
+    /// Human-readable recap for the serve startup banner.
+    pub fn summary(&self) -> String {
+        let mut parts = Vec::new();
+        if let Some(s) = &self.panic_worker {
+            parts.push(format!("panic_worker@{}", s.prob));
+        }
+        if let Some(s) = &self.panic_batcher {
+            parts.push(format!("panic_batcher@{}", s.prob));
+        }
+        if let Some((d, s)) = &self.slow_batch {
+            parts.push(format!("slow_batch={}us@{}", d.as_micros(), s.prob));
+        }
+        if parts.is_empty() {
+            parts.push("no active sites".to_string());
+        }
+        format!("{} (seed {})", parts.join(", "), self.seed)
+    }
+}
+
+fn parse_prob(s: &str) -> Result<f64, String> {
+    let p: f64 = s
+        .trim()
+        .parse()
+        .map_err(|_| format!("BCRUN_FAULTS: bad probability {s:?}"))?;
+    if !p.is_finite() || !(0.0..=1.0).contains(&p) {
+        return Err(format!("BCRUN_FAULTS: probability {s:?} not in [0, 1]"));
+    }
+    Ok(p)
+}
+
+fn parse_duration(s: &str) -> Result<Duration, String> {
+    let s = s.trim();
+    // "ms" before "s": a millisecond literal also ends in 's'
+    let (num, unit_scale_us) = if let Some(n) = s.strip_suffix("ms") {
+        (n, 1_000u64)
+    } else if let Some(n) = s.strip_suffix("us") {
+        (n, 1u64)
+    } else if let Some(n) = s.strip_suffix('s') {
+        (n, 1_000_000u64)
+    } else {
+        return Err(format!("BCRUN_FAULTS: duration {s:?} needs a us/ms/s suffix"));
+    };
+    let v: u64 = num
+        .parse()
+        .map_err(|_| format!("BCRUN_FAULTS: bad duration {s:?}"))?;
+    Ok(Duration::from_micros(v.saturating_mul(unit_scale_us)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_full_grammar() {
+        let p =
+            FaultPlan::parse("panic_worker@0.01, panic_batcher@0.005,slow_batch=5ms@0.05,seed=7", 0)
+                .unwrap();
+        assert_eq!(p.seed, 7);
+        assert!(p.panic_worker.is_some());
+        assert!(p.panic_batcher.is_some());
+        assert_eq!(p.slow_batch.as_ref().unwrap().0, Duration::from_millis(5));
+        let s = p.summary();
+        assert!(s.contains("panic_worker@0.01"), "{s}");
+        assert!(s.contains("seed 7"), "{s}");
+    }
+
+    #[test]
+    fn duration_suffixes() {
+        let plan = |spec: &str| FaultPlan::parse(spec, 0).unwrap();
+        assert_eq!(
+            plan("slow_batch=250us@1").slow_batch.unwrap().0,
+            Duration::from_micros(250)
+        );
+        assert_eq!(plan("slow_batch=5ms@1").slow_batch.unwrap().0, Duration::from_millis(5));
+        assert_eq!(plan("slow_batch=1s@1").slow_batch.unwrap().0, Duration::from_secs(1));
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "panic_worker@1.5",
+            "panic_worker@-0.1",
+            "panic_worker@nope",
+            "panic_worker@NaN",
+            "slow_batch=5@0.1",
+            "slow_batch=5ms",
+            "explode@0.5",
+            "seed=abc",
+        ] {
+            assert!(FaultPlan::parse(bad, 0).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn empty_spec_is_inert() {
+        let p = FaultPlan::parse("", 0).unwrap();
+        for _ in 0..100 {
+            assert!(!p.roll_worker());
+            assert!(!p.roll_batcher());
+            assert!(p.slow_batch().is_none());
+        }
+        assert_eq!(p.injected_worker_panics(), 0);
+        assert_eq!(p.injected_batcher_panics(), 0);
+        assert_eq!(p.injected_slow_batches(), 0);
+    }
+
+    #[test]
+    fn decisions_are_deterministic_per_seed() {
+        let a = FaultPlan::parse("panic_worker@0.5", 42).unwrap();
+        let b = FaultPlan::parse("panic_worker@0.5", 42).unwrap();
+        let seq_a: Vec<bool> = (0..256).map(|_| a.roll_worker()).collect();
+        let seq_b: Vec<bool> = (0..256).map(|_| b.roll_worker()).collect();
+        assert_eq!(seq_a, seq_b);
+        assert_eq!(a.injected_worker_panics(), b.injected_worker_panics());
+
+        let c = FaultPlan::parse("panic_worker@0.5", 43).unwrap();
+        let seq_c: Vec<bool> = (0..256).map(|_| c.roll_worker()).collect();
+        assert_ne!(seq_a, seq_c, "different seeds should diverge");
+    }
+
+    #[test]
+    fn fired_counter_matches_true_rolls() {
+        let p = FaultPlan::parse("panic_batcher@0.3", 9).unwrap();
+        let mut fired = 0u64;
+        for _ in 0..1000 {
+            if p.roll_batcher() {
+                fired += 1;
+            }
+        }
+        assert_eq!(p.injected_batcher_panics(), fired);
+        // rate sanity: ~300 expected, generous band
+        assert!((150..=450).contains(&fired), "fired {fired}");
+    }
+
+    #[test]
+    fn probability_extremes() {
+        let never = FaultPlan::parse("panic_worker@0", 1).unwrap();
+        let always = FaultPlan::parse("panic_worker@1", 1).unwrap();
+        for _ in 0..100 {
+            assert!(!never.roll_worker());
+            assert!(always.roll_worker());
+        }
+        assert_eq!(always.injected_worker_panics(), 100);
+    }
+
+    #[test]
+    fn slow_batch_decision_counts() {
+        let p = FaultPlan::parse("slow_batch=2ms@1", 5).unwrap();
+        for _ in 0..7 {
+            assert_eq!(p.slow_batch(), Some(Duration::from_millis(2)));
+        }
+        assert_eq!(p.injected_slow_batches(), 7);
+    }
+
+    #[test]
+    fn maybe_panic_actually_panics() {
+        let p = FaultPlan::parse("panic_worker@1", 0).unwrap();
+        let err = std::panic::catch_unwind(|| p.maybe_panic_worker());
+        assert!(err.is_err());
+        assert_eq!(p.injected_worker_panics(), 1);
+    }
+}

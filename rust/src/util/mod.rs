@@ -7,15 +7,30 @@
 //! constraint").
 
 pub mod cli;
+pub mod crc;
 pub mod error;
+pub mod faultinject;
 pub mod json;
 pub mod pool;
 pub mod rng;
 pub mod timer;
 
 pub use cli::Args;
+pub use crc::crc32;
 pub use error::{Context, Error, Result};
+pub use faultinject::FaultPlan;
 pub use json::Json;
 pub use pool::{par_rows, Pool, SendPtr};
 pub use rng::{Rng, SplitMix64};
 pub use timer::{LatencyStats, Timer};
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Poison-tolerant mutex lock. A thread that panicked while holding one
+/// of the serving locks (queue, metrics ring) poisons it; supervision
+/// recovers the panicking thread, so every other thread must be able to
+/// keep going — the protected data is counters/queues whose invariants
+/// hold at every await point, not mid-update state.
+pub fn lock_ok<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}

@@ -120,6 +120,26 @@ mod tests {
     }
 
     #[test]
+    fn merge_empty_edges() {
+        // the loadgen merges per-thread recorders; threads that never
+        // completed a request contribute empty rings
+        let mut a = LatencyStats::default();
+        let b = LatencyStats::default();
+        a.merge(&b); // empty into empty
+        assert_eq!(a.count(), 0);
+        assert_eq!(a.mean(), 0.0);
+        assert_eq!(a.percentile(50.0), 0.0);
+        a.record(1.5);
+        a.merge(&b); // empty into non-empty: unchanged
+        assert_eq!(a.count(), 1);
+        assert_eq!(a.max(), 1.5);
+        let mut c = LatencyStats::default();
+        c.merge(&a); // non-empty into empty
+        assert_eq!(c.count(), 1);
+        assert_eq!(c.min(), 1.5);
+    }
+
+    #[test]
     fn timer_advances() {
         let t = Timer::start();
         std::thread::sleep(std::time::Duration::from_millis(5));

@@ -1,0 +1,263 @@
+//! Chaos integration: the serving layer under deterministic fault
+//! injection, over real sockets.
+//!
+//! The headline property (ISSUE 8 acceptance): with workers and the
+//! batcher panicking on seeded schedules, every accepted request is
+//! answered with 200/500/503/504 — never a silently dropped connection —
+//! the process never exits, the `/stats` restart counters equal the
+//! injected panic counts *exactly* (the injector and the supervisor
+//! count the same events), and the answers that do come back stay
+//! bit-identical to an unfaulted reference in both serving modes.
+
+use std::sync::{Arc, Once};
+use std::time::Duration;
+
+use binaryconnect::binary::packed::PackedMlp;
+use binaryconnect::binary::ForwardMode;
+use binaryconnect::serve::loadgen::{self, predict_body, HttpClient, LoadgenOpts};
+use binaryconnect::serve::{self, ServeConfig};
+use binaryconnect::util::{FaultPlan, Json, Rng};
+
+/// Injected panics are expected noise; a chaos run would otherwise spew
+/// hundreds of backtraces. Forward every *other* panic to the default
+/// hook so a real bug still prints.
+fn quiet_injected_panics() {
+    static QUIET: Once = Once::new();
+    QUIET.call_once(|| {
+        let default = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let payload = info.payload();
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_default();
+            if !msg.starts_with("fault injection:") {
+                default(info);
+            }
+        }));
+    });
+}
+
+fn toy_mlp(seed: u64) -> PackedMlp {
+    let mut rng = Rng::new(seed);
+    let mut mat = |k: usize, n: usize| -> (Vec<f32>, usize, usize) {
+        ((0..k * n).map(|_| rng.normal()).collect(), k, n)
+    };
+    let (w1, w2, w3) = (mat(12, 70), mat(70, 33), mat(33, 4));
+    let mut bn = |n: usize| -> Option<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+        Some((
+            (0..n).map(|_| 1.0 + 0.05 * rng.normal()).collect(),
+            (0..n).map(|_| 0.05 * rng.normal()).collect(),
+            (0..n).map(|_| 0.1 * rng.normal()).collect(),
+            (0..n).map(|_| (1.0 + 0.1 * rng.normal()).abs()).collect(),
+        ))
+    };
+    let (bn1, bn2) = (bn(70), bn(33));
+    PackedMlp::build(
+        vec![w1, w2, w3],
+        vec![bn1, bn2, None],
+        Some(vec![0.02, -0.02, 0.0, 0.01]),
+    )
+}
+
+fn row(dim: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..dim).map(|_| rng.normal()).collect()
+}
+
+/// Server logits from a 200 body as f32 bit patterns (the wire format is
+/// shortest-repr f32, so f64-parse + cast back is lossless).
+fn logits_bits(body: &str) -> Vec<u32> {
+    let j = Json::parse(body).unwrap();
+    j.get("logits")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| (v.as_f64().unwrap() as f32).to_bits())
+        .collect()
+}
+
+fn stats(host: &str) -> Json {
+    let mut c = HttpClient::connect(host).unwrap();
+    let (status, body) = c.request("GET", "/stats", None).unwrap();
+    assert_eq!(status, 200);
+    Json::parse(&body).unwrap()
+}
+
+#[test]
+fn every_worker_panic_is_answered_with_500_and_counted() {
+    quiet_injected_panics();
+    // p=1: every /predict panics its worker mid-request
+    let plan = Arc::new(FaultPlan::parse("panic_worker@1", 7).unwrap());
+    let mut server = serve::start(
+        toy_mlp(77),
+        ServeConfig {
+            workers: 2,
+            faults: Some(Arc::clone(&plan)),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let host = server.addr().to_string();
+    let x = row(12, 600);
+    let mut body = String::new();
+    predict_body(&mut body, &x);
+    for i in 0..5 {
+        // the supervisor answers on the panicked connection then closes
+        // it, so each request takes a fresh connection
+        let mut c = HttpClient::connect(&host).unwrap();
+        let (status, text) = c.request("POST", "/predict", Some(&body)).unwrap();
+        assert_eq!(status, 500, "request {i}: {text}");
+        assert!(text.contains("panicked"), "request {i}: {text}");
+    }
+    // non-inject routes are unaffected: the pool survived 5 panics
+    let mut c = HttpClient::connect(&host).unwrap();
+    let (status, _) = c.request("GET", "/healthz", None).unwrap();
+    assert_eq!(status, 200);
+    let snap = stats(&host);
+    assert_eq!(snap.get("worker_restarts").unwrap().as_usize(), Some(5));
+    assert_eq!(plan.injected_worker_panics(), 5);
+    server.stop();
+}
+
+#[test]
+fn batcher_panics_fail_held_rows_and_the_batcher_respawns() {
+    quiet_injected_panics();
+    // p=1: every non-empty batch panics the batcher before the forward
+    let plan = Arc::new(FaultPlan::parse("panic_batcher@1", 11).unwrap());
+    let mut server = serve::start(
+        toy_mlp(77),
+        ServeConfig {
+            max_batch: 4,
+            max_wait: Duration::from_micros(100),
+            faults: Some(Arc::clone(&plan)),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let host = server.addr().to_string();
+    let x = row(12, 601);
+    let mut body = String::new();
+    predict_body(&mut body, &x);
+    let mut client = HttpClient::connect(&host).unwrap();
+    for i in 0..4 {
+        // held rows are failed (500), never dropped: the request always
+        // gets an answer, on the same keep-alive connection
+        let (status, text) = client.request("POST", "/predict", Some(&body)).unwrap();
+        assert_eq!(status, 500, "request {i}: {text}");
+        assert!(text.contains("batcher aborted"), "request {i}: {text}");
+    }
+    let snap = stats(&host);
+    let restarts = snap.get("batcher_restarts").unwrap().as_usize().unwrap();
+    assert_eq!(restarts as u64, plan.injected_batcher_panics());
+    assert!(restarts >= 4, "4 one-row batches must mean >= 4 respawns, got {restarts}");
+    // the respawned batcher (fresh workspace) still drains a clean stop
+    let (status, _) = client.request("GET", "/healthz", None).unwrap();
+    assert_eq!(status, 200);
+    server.stop();
+}
+
+/// The full chaos property for one serving mode: probabilistic worker +
+/// batcher panics and slow batches; a retrying closed loop must land
+/// every request (zero lost), restart counters must equal injected
+/// counts exactly, and surviving answers must be bit-identical to the
+/// unfaulted reference network.
+fn chaos_mode(mode: ForwardMode, loadgen_seed: u64) {
+    quiet_injected_panics();
+    let plan = Arc::new(
+        FaultPlan::parse("panic_worker@0.05,panic_batcher@0.04,slow_batch=1ms@0.1", 2024).unwrap(),
+    );
+    let mut server = serve::start(
+        toy_mlp(77),
+        ServeConfig {
+            max_batch: 8,
+            max_wait: Duration::from_micros(300),
+            workers: 8,
+            queue_cap: 256,
+            mode,
+            default_deadline: Some(Duration::from_secs(5)),
+            faults: Some(Arc::clone(&plan)),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let host = server.addr().to_string();
+
+    // closed loop under chaos: every ticket must eventually land
+    let n = 250;
+    let rep = loadgen::run(&LoadgenOpts {
+        host: host.clone(),
+        concurrency: 6,
+        requests: n,
+        seed: loadgen_seed,
+        retries: 40,
+    })
+    .unwrap();
+    assert_eq!(rep.sent, n);
+    assert_eq!(rep.ok, n, "lost requests: {} non-2xx, {} errors", rep.failed_status, rep.errors);
+    assert_eq!(rep.failed_status, 0);
+    assert_eq!(rep.errors, 0);
+
+    // within-mode exactness survives the chaos: a fixed row answered
+    // through panics/respawns matches the direct in-process forward
+    let x = row(12, 4242);
+    let reference = toy_mlp(77);
+    let want: Vec<u32> = match mode {
+        ForwardMode::PackedF32 => reference.forward(&x, 1).iter().map(|v| v.to_bits()).collect(),
+        ForwardMode::Bnn => {
+            let mut ws = reference.bnn_workspace(1);
+            reference.forward_bnn_into(&x, 1, &mut ws).iter().map(|v| v.to_bits()).collect()
+        }
+    };
+    let mut body = String::new();
+    predict_body(&mut body, &x);
+    let mut checked = 0;
+    for _ in 0..400 {
+        if checked >= 20 {
+            break;
+        }
+        let Ok(mut c) = HttpClient::connect(&host) else { continue };
+        match c.request("POST", "/predict", Some(&body)) {
+            Ok((200, text)) => {
+                assert_eq!(logits_bits(&text), want, "chaos answer diverged from reference");
+                checked += 1;
+            }
+            // chaos outcomes (500 abort, 503/504 shed) and torn
+            // connections are retried; anything else is a bug
+            Ok((status, text)) => {
+                assert!(matches!(status, 500 | 503 | 504), "unexpected {status}: {text}");
+            }
+            Err(_) => {}
+        }
+    }
+    assert!(checked >= 20, "only {checked} clean answers in 400 attempts");
+
+    // accounting is exact: the supervisor recovered precisely the panics
+    // the injector fired — nothing double-counted, nothing missed (all
+    // traffic is done; /stats itself never injects)
+    let snap = stats(&host);
+    assert_eq!(
+        snap.get("worker_restarts").unwrap().as_usize().map(|v| v as u64),
+        Some(plan.injected_worker_panics()),
+    );
+    assert_eq!(
+        snap.get("batcher_restarts").unwrap().as_usize().map(|v| v as u64),
+        Some(plan.injected_batcher_panics()),
+    );
+    assert!(plan.injected_worker_panics() > 0, "chaos run injected no worker panics");
+    assert!(plan.injected_batcher_panics() > 0, "chaos run injected no batcher panics");
+    // graceful drain still works after a chaotic life
+    server.stop();
+}
+
+#[test]
+fn chaos_packed_mode_loses_nothing_and_stays_exact() {
+    chaos_mode(ForwardMode::PackedF32, 31);
+}
+
+#[test]
+fn chaos_bnn_mode_loses_nothing_and_stays_exact() {
+    chaos_mode(ForwardMode::Bnn, 32);
+}

@@ -284,6 +284,78 @@ fn healthz_stats_errors_and_shutdown_endpoint() {
 }
 
 #[test]
+fn deadline_header_drives_shedding_and_stats_surface_supervision() {
+    let mut server = serve::start(
+        toy_mlp(88),
+        ServeConfig { max_batch: 8, max_wait: Duration::from_micros(100), ..Default::default() },
+    )
+    .unwrap();
+    let host = server.addr().to_string();
+    let mut client = HttpClient::connect(&host).unwrap();
+    let x = rows(1, 12, 650).remove(0);
+    let mut body = String::new();
+    predict_body(&mut body, &x);
+
+    // an already-expired deadline is never served and never hangs: 503
+    // at admission (the estimated wait alone exceeds a zero budget) or
+    // 504 from the batcher if it slipped through
+    let (status, text) = client
+        .request_with_headers(
+            "POST",
+            "/predict",
+            Some(&body),
+            &[("X-Deadline-Ms", "0".to_string())],
+        )
+        .unwrap();
+    assert!(status == 503 || status == 504, "expected shed, got {status}: {text}");
+    // shed responses carry a Retry-After hint for well-behaved clients
+    assert_eq!(client.last_retry_after(), Some(1));
+
+    // a generous deadline serves normally
+    let (status, text) = client
+        .request_with_headers(
+            "POST",
+            "/predict",
+            Some(&body),
+            &[("X-Deadline-Ms", "10000".to_string())],
+        )
+        .unwrap();
+    assert_eq!(status, 200, "{text}");
+    assert_eq!(client.last_retry_after(), None);
+
+    // a garbage header value is a client error, not a panic or a hang
+    let (status, _) = client
+        .request_with_headers(
+            "POST",
+            "/predict",
+            Some(&body),
+            &[("X-Deadline-Ms", "soon".to_string())],
+        )
+        .unwrap();
+    assert_eq!(status, 400);
+    // a parse-level 400 closes the connection by design
+    let mut client = HttpClient::connect(&host).unwrap();
+
+    // the supervision counters exist on /stats from the first scrape
+    let (status, body) = client.request("GET", "/stats", None).unwrap();
+    assert_eq!(status, 200);
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("worker_restarts").unwrap().as_usize(), Some(0));
+    assert_eq!(j.get("batcher_restarts").unwrap().as_usize(), Some(0));
+    assert!(j.get("deadline_sheds_504").unwrap().as_usize().unwrap() <= 1);
+    assert!(j.get("uptime_s").unwrap().as_f64().unwrap() >= 0.0);
+
+    // /healthz mirrors them, plus the configured default deadline
+    let (status, body) = client.request("GET", "/healthz", None).unwrap();
+    assert_eq!(status, 200);
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("worker_restarts").unwrap().as_usize(), Some(0));
+    assert_eq!(j.get("default_deadline_ms").unwrap().as_usize(), Some(0));
+    assert!(j.get("uptime_s").unwrap().as_f64().unwrap() >= 0.0);
+    server.stop();
+}
+
+#[test]
 fn overload_answers_503_and_recovers() {
     // queue_cap 2 with a long batching window (max_batch 8 keeps the
     // batcher waiting for more rows): two rows park in the queue, the
