@@ -21,6 +21,10 @@
 //!     b=64, plus end-to-end `forward_bnn_into` vs `forward_into` on
 //!     784 -> 3x1024 -> 10 — headline `bnn_speedup_vs_packed` rides the
 //!     avx2 rung when the host has it
+//!   * checkpointing: `ckpt_save` (the atomic fsync'd save of a
+//!     paper-scale mlp1024 TrainState, tracked as `ckpt_save_ms`) and the
+//!     per-epoch train-loop tax `train_overhead_with_ckpt` (10-step mlp
+//!     epoch with vs without a boundary save)
 //!
 //! Run: cargo bench --bench perf_gemm [-- --iters N] [--json BENCH_perf.json]
 //!
@@ -38,6 +42,7 @@ use binaryconnect::kernel;
 use binaryconnect::kernel::simd::{self, Isa, ALL_ISAS};
 use binaryconnect::runtime::reference::mlp_info;
 use binaryconnect::runtime::{Executor, Hyper, Mode, Opt, ReferenceExecutor};
+use binaryconnect::util::checkpoint::{self, Checkpoint, CurvePoint};
 use binaryconnect::util::error::{Error, Result};
 use binaryconnect::util::{pool, Args, Rng};
 
@@ -450,6 +455,116 @@ fn main() -> Result<()> {
     simd::set_active(selected).map_err(Error::msg)?;
     t5.print();
     println!("(acceptance: bnn_speedup_vs_packed >= 2x on the avx2 rung, 1024x1024 b=64)");
+
+    // ---------- checkpoint: crash-safe save cost + train-loop overhead ----------
+    // `ckpt_save_ms` times the full atomic cycle (serialize -> same-dir
+    // temp -> fsync -> rename -> retention prune) on a paper-scale
+    // mlp1024 TrainState. `train_overhead_with_ckpt` is the per-epoch tax
+    // a default `--checkpoint-every-epochs 1` run pays: a 10-step builtin
+    // mlp epoch with one boundary save vs the same epoch without.
+    println!("\ncheckpoint: atomic save cost and per-epoch train overhead:");
+    let ckdir = std::env::temp_dir().join(format!("bc_bench_ckpt_{}", std::process::id()));
+    std::fs::create_dir_all(&ckdir).map_err(Error::msg)?;
+    let ck_big = Checkpoint {
+        model: "mlp1024".to_string(),
+        mode: Mode::Det as u8,
+        opt: Opt::Adam as u8,
+        seed: 7,
+        total_epochs: 100,
+        hyper_fp: 0xDEAD_BEEF,
+        epoch_next: 50,
+        step: 50 * 450,
+        rng: Rng::new(42).state(),
+        best_val: 0.011,
+        best_epoch: 48,
+        test_at_best: 0.012,
+        stale: 2,
+        diverged_steps: 0,
+        curves: (0..50)
+            .map(|e| CurvePoint {
+                epoch: e,
+                lr: 0.01,
+                train_loss: 0.1,
+                train_err: 0.05,
+                val_err: 0.02,
+                seconds: 1.0,
+            })
+            .collect(),
+        state: lstate0.snapshot(),
+    };
+    let rc = bench("ckpt_save", 2, iters, || {
+        let p = checkpoint::save_into_dir(&ckdir, &ck_big, 2, None).unwrap();
+        std::hint::black_box(&p);
+    });
+    report.add(&rc, "mlp1024 full TrainState");
+    report.metric("ckpt_save_ms", rc.mean_s * 1e3);
+
+    let mexec = ReferenceExecutor::builtin("mlp")?;
+    let mut mstate = mexec.init_state(&Hyper::default())?;
+    let mnx: usize = mexec.info().input_shape.iter().product();
+    let mut r3 = Rng::new(31);
+    let mx: Vec<f32> = (0..mnx).map(|_| r3.normal()).collect();
+    let mclasses = mexec.info().classes;
+    let mut my = vec![-1.0f32; mexec.info().batch * mclasses];
+    for i in 0..mexec.info().batch {
+        my[i * mclasses + r3.below(mclasses)] = 1.0;
+    }
+    let mut ck_small = Checkpoint {
+        model: mexec.info().name.clone(),
+        epoch_next: 1,
+        step: 10,
+        curves: vec![CurvePoint {
+            epoch: 0,
+            lr: 0.01,
+            train_loss: 0.1,
+            train_err: 0.05,
+            val_err: 0.02,
+            seconds: 1.0,
+        }],
+        state: mstate.snapshot(),
+        ..ck_big.clone()
+    };
+    const EPOCH_STEPS: usize = 10;
+    let mh0 = Hyper { lr: 0.001, mode: Mode::Det, opt: Opt::Adam, ..Default::default() };
+    let mut mstep = 0u32;
+    let rplain = bench("train_epoch_plain", 1, iters, || {
+        for _ in 0..EPOCH_STEPS {
+            mstep += 1;
+            let h = Hyper { step: mstep, seed: mstep, ..mh0.clone() };
+            mexec.train_step(&mut mstate, &mx, &my, &h).unwrap();
+        }
+    });
+    let rckpt = bench("train_epoch_ckpt", 1, iters, || {
+        for _ in 0..EPOCH_STEPS {
+            mstep += 1;
+            let h = Hyper { step: mstep, seed: mstep, ..mh0.clone() };
+            mexec.train_step(&mut mstate, &mx, &my, &h).unwrap();
+        }
+        // a real boundary save snapshots the live state, then goes to disk
+        ck_small.state = mstate.snapshot();
+        let p = checkpoint::save_into_dir(&ckdir, &ck_small, 2, None).unwrap();
+        std::hint::black_box(&p);
+    });
+    let overhead = rckpt.mean_s / rplain.mean_s;
+    report.add(&rplain, "mlp 10 steps");
+    report.add(&rckpt, "mlp 10 steps + save");
+    report.metric("train_overhead_with_ckpt", overhead);
+    let mut t6 = Table::new(&["what", "mean", "note"]);
+    t6.row(&[
+        "ckpt save (mlp1024)".to_string(),
+        fmt_time(rc.mean_s),
+        format!("{:.2} ms", rc.mean_s * 1e3),
+    ]);
+    t6.row(&["10-step mlp epoch".to_string(), fmt_time(rplain.mean_s), String::new()]);
+    t6.row(&[
+        "10-step epoch + save".to_string(),
+        fmt_time(rckpt.mean_s),
+        format!("{overhead:.3}x"),
+    ]);
+    t6.print();
+    println!("(acceptance: train_overhead_with_ckpt stays small; save cost is one fsync'd");
+    println!(" rename, amortized over a real epoch's hundreds of steps)");
+    let _ = std::fs::remove_dir_all(&ckdir);
 
     if let Some(path) = args.opt_str("json") {
         report.save("perf_gemm", std::path::Path::new(&path))?;

@@ -12,4 +12,7 @@ pub mod trainer;
 
 pub use protocol::{cnn_opts, dropout_opts, mnist_opts, prepare, DataOpts};
 pub use schedule::LrSchedule;
-pub use trainer::{train, trials, EpochRecord, RunResult, TrainOpts, TrialSummary};
+pub use trainer::{
+    steps_per_sec, train, trials, CheckpointOpts, EpochRecord, ResumeFrom, RunResult, TrainOpts,
+    TrialSummary,
+};

@@ -4,15 +4,73 @@
 //! Backend-agnostic: everything goes through the [`Executor`] trait, so
 //! the same loop drives the pure-Rust reference backend and (with the
 //! `pjrt` feature) the PJRT artifact path.
+//!
+//! # Crash-safe checkpointing
+//!
+//! All trainer stochasticity derives from one root [`Rng`]: one draw per
+//! epoch (the shuffle seed) plus one draw per step (the per-step hyper
+//! seed). Capturing the RNG stream state together with the
+//! [`TrainState`] and the epoch/step counters at an epoch boundary is
+//! therefore enough to make resuming *bit-exact*:
+//!
+//! ```text
+//! train(N)  ==  train(k) + crash + resume + train(N-k)      (bitwise)
+//! ```
+//!
+//! for every optimizer and binarization mode. The contract is pinned by
+//! rust/tests/checkpoint_train.rs and exercised under injected faults by
+//! rust/tests/chaos_train.rs.
+//!
+//! The same epoch-boundary snapshot doubles as the divergence-recovery
+//! point: when more than `max_diverged_steps` non-finite steps hit within
+//! one epoch, the trainer rolls the run back to the last boundary and
+//! replays (the fault-injection trial counters keep advancing, so an
+//! injected-fault replay is decorrelated from the first attempt).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 
 use crate::data::SplitData;
 use crate::pipeline::{Plan, Prefetcher};
 use crate::runtime::{Executor, Hyper, Mode, Opt, TrainState};
 use crate::stats::mean_std;
+use crate::util::checkpoint::{self, Checkpoint, CurvePoint};
 use crate::util::error::Result;
-use crate::util::{Rng, Timer};
+use crate::util::{crc32, FaultPlan, Rng, Timer};
+use crate::{anyhow, ensure};
 
 use super::schedule::LrSchedule;
+
+/// Where to resume a checkpointed run from.
+#[derive(Clone, Debug)]
+pub enum ResumeFrom {
+    /// newest loadable checkpoint in `CheckpointOpts::dir` (a torn or
+    /// corrupt newest file falls back to the previous good one; an empty
+    /// directory starts fresh)
+    Latest,
+    /// an explicit checkpoint file; any load failure is a hard error
+    Path(PathBuf),
+}
+
+/// Checkpointing knobs for one run.
+#[derive(Clone, Debug)]
+pub struct CheckpointOpts {
+    /// directory for `ckpt-NNNNNN.bcckpt` files (`None` = no on-disk
+    /// checkpoints)
+    pub dir: Option<PathBuf>,
+    /// save cadence in epochs (the final epoch always saves)
+    pub every_epochs: usize,
+    /// retain only the newest N checkpoint files (0 = keep all)
+    pub keep: usize,
+    pub resume: Option<ResumeFrom>,
+}
+
+impl Default for CheckpointOpts {
+    fn default() -> Self {
+        Self { dir: None, every_epochs: 1, keep: 3, resume: None }
+    }
+}
 
 /// Everything one training run needs (one Table-1/Table-2 cell).
 #[derive(Clone, Debug)]
@@ -37,6 +95,22 @@ pub struct TrainOpts {
     /// a stochastically-trained net by sampling w_b — alternative 3 —
     /// which keeps the BN statistics calibrated at short training).
     pub eval_override: Option<Mode>,
+    /// checkpoint/resume configuration.
+    pub checkpoint: CheckpointOpts,
+    /// roll back to the last epoch-boundary snapshot once more than this
+    /// many steps diverge since that snapshot (0 = never roll back).
+    pub max_diverged_steps: usize,
+    /// skip the weight/BN update on steps whose loss or gradients go
+    /// non-finite, leaving the state bit-identical (divergence sentinel).
+    pub skip_diverged: bool,
+    /// fault-injection plan (chaos tests / BCRUN_FAULTS); shared with the
+    /// executor so step panics, torn saves and gradient poison all draw
+    /// from one deterministic plan.
+    pub faults: Option<Arc<FaultPlan>>,
+    /// cooperative stop latch (SIGTERM): when set, the trainer writes a
+    /// final checkpoint at the next epoch boundary and returns with
+    /// `RunResult::interrupted`.
+    pub stop: Option<Arc<AtomicBool>>,
 }
 
 impl Default for TrainOpts {
@@ -57,6 +131,11 @@ impl Default for TrainOpts {
             patience: 0,
             verbose: false,
             eval_override: None,
+            checkpoint: CheckpointOpts::default(),
+            max_diverged_steps: 0,
+            skip_diverged: true,
+            faults: None,
+            stop: None,
         }
     }
 }
@@ -75,6 +154,44 @@ impl TrainOpts {
             _ => Mode::None,
         }
     }
+
+    /// CRC32 fingerprint over the hyperparameters that shape the training
+    /// stream but have no dedicated checkpoint field. Resume compares
+    /// fingerprints and refuses on mismatch — a run resumed under
+    /// different knobs would silently diverge from the uninterrupted one.
+    /// Output-only knobs (`verbose`) and the checkpoint/rollback policy
+    /// itself are deliberately excluded; `skip_diverged` is included
+    /// because a skipped vs. applied update changes the state stream.
+    pub fn hyper_fingerprint(&self) -> u32 {
+        let mut b: Vec<u8> = Vec::with_capacity(64);
+        match self.schedule {
+            LrSchedule::Constant { lr } => {
+                b.push(0);
+                b.extend_from_slice(&lr.to_bits().to_le_bytes());
+            }
+            LrSchedule::Exponential { start, end, epochs } => {
+                b.push(1);
+                b.extend_from_slice(&start.to_bits().to_le_bytes());
+                b.extend_from_slice(&end.to_bits().to_le_bytes());
+                b.extend_from_slice(&(epochs as u64).to_le_bytes());
+            }
+        }
+        for f in [
+            self.momentum,
+            self.beta2,
+            self.eps,
+            self.dropout,
+            self.in_dropout,
+            self.bn_momentum,
+        ] {
+            b.extend_from_slice(&f.to_bits().to_le_bytes());
+        }
+        b.push(self.lr_scale as u8);
+        b.extend_from_slice(&(self.patience as u64).to_le_bytes());
+        b.push(self.eval_override.map_or(255, |m| m as u8));
+        b.push(self.skip_diverged as u8);
+        crc32(&b)
+    }
 }
 
 /// Per-epoch curve record (Figure 3's series).
@@ -88,7 +205,30 @@ pub struct EpochRecord {
     pub seconds: f64,
 }
 
+fn point_of(r: &EpochRecord) -> CurvePoint {
+    CurvePoint {
+        epoch: r.epoch as u32,
+        lr: r.lr,
+        train_loss: r.train_loss,
+        train_err: r.train_err,
+        val_err: r.val_err,
+        seconds: r.seconds,
+    }
+}
+
+fn record_of(c: &CurvePoint) -> EpochRecord {
+    EpochRecord {
+        epoch: c.epoch as usize,
+        lr: c.lr,
+        train_loss: c.train_loss,
+        train_err: c.train_err,
+        val_err: c.val_err,
+        seconds: c.seconds,
+    }
+}
+
 /// Outcome of one run.
+#[derive(Debug)]
 pub struct RunResult {
     pub curves: Vec<EpochRecord>,
     pub best_epoch: usize,
@@ -98,6 +238,135 @@ pub struct RunResult {
     pub state: TrainState,
     pub steps: usize,
     pub total_seconds: f64,
+    /// lifetime count of steps the divergence sentinel flagged.
+    pub diverged_steps: u64,
+    /// how many times the run rolled back to the last snapshot.
+    pub rollbacks: usize,
+    /// the stop latch fired; the run checkpointed and returned early.
+    pub interrupted: bool,
+}
+
+/// Train-phase throughput, guarded so a zero/near-zero or non-finite
+/// elapsed time can never put an `inf`/`NaN` into logs or records.
+pub fn steps_per_sec(n_batches: usize, seconds: f64) -> f64 {
+    if seconds.is_finite() && seconds > 1e-9 {
+        n_batches as f64 / seconds
+    } else {
+        0.0
+    }
+}
+
+/// Everything `train` mutates across an epoch — the exact set a
+/// [`Checkpoint`] captures and [`TrainerCore::restore`] reinstates.
+struct TrainerCore {
+    rng: Rng,
+    state: TrainState,
+    /// next epoch to run == number of completed epochs
+    epoch: usize,
+    step: u32,
+    curves: Vec<EpochRecord>,
+    best_val: f64,
+    best_epoch: usize,
+    test_at_best: f64,
+    stale: usize,
+    diverged_total: u64,
+}
+
+impl TrainerCore {
+    fn fresh(seed: u64) -> TrainerCore {
+        TrainerCore {
+            rng: Rng::new(seed),
+            state: TrainState::default(),
+            epoch: 0,
+            step: 0,
+            curves: vec![],
+            best_val: f64::INFINITY,
+            best_epoch: 0,
+            test_at_best: f64::NAN,
+            stale: 0,
+            diverged_total: 0,
+        }
+    }
+
+    fn to_checkpoint(&self, opts: &TrainOpts, model: &str, hyper_fp: u32) -> Checkpoint {
+        Checkpoint {
+            model: model.to_string(),
+            mode: opts.mode as u8,
+            opt: opts.opt as u8,
+            seed: opts.seed,
+            total_epochs: opts.epochs as u32,
+            hyper_fp,
+            epoch_next: self.epoch as u32,
+            step: self.step,
+            rng: self.rng.state(),
+            best_val: self.best_val,
+            best_epoch: self.best_epoch as u32,
+            test_at_best: self.test_at_best,
+            stale: self.stale as u32,
+            diverged_steps: self.diverged_total,
+            curves: self.curves.iter().map(point_of).collect(),
+            state: self.state.snapshot(),
+        }
+    }
+
+    fn restore(&mut self, ck: &Checkpoint) {
+        self.rng = Rng::from_state(ck.rng);
+        self.state = ck.state.snapshot();
+        self.epoch = ck.epoch_next as usize;
+        self.step = ck.step;
+        self.curves = ck.curves.iter().map(record_of).collect();
+        self.best_val = ck.best_val;
+        self.best_epoch = ck.best_epoch as usize;
+        self.test_at_best = ck.test_at_best;
+        self.stale = ck.stale as usize;
+        self.diverged_total = ck.diverged_steps;
+    }
+}
+
+/// Refuse to resume a checkpoint written under a different configuration:
+/// the replayed stream would silently diverge from the uninterrupted run.
+fn check_resume_compat(
+    ck: &Checkpoint,
+    model: &str,
+    opts: &TrainOpts,
+    hyper_fp: u32,
+) -> Result<()> {
+    ensure!(
+        ck.model == model,
+        "checkpoint is for model '{}', this run drives '{model}'",
+        ck.model
+    );
+    ensure!(
+        ck.mode == opts.mode as u8,
+        "checkpoint mode {} != run mode {}",
+        ck.mode,
+        opts.mode as u8
+    );
+    ensure!(
+        ck.opt == opts.opt as u8,
+        "checkpoint optimizer {} != run optimizer {}",
+        ck.opt,
+        opts.opt as u8
+    );
+    ensure!(ck.seed == opts.seed, "checkpoint seed {} != run seed {}", ck.seed, opts.seed);
+    ensure!(
+        ck.total_epochs as usize == opts.epochs,
+        "checkpoint targets {} epochs, run targets {}",
+        ck.total_epochs,
+        opts.epochs
+    );
+    ensure!(
+        ck.hyper_fp == hyper_fp,
+        "checkpoint hyperparameter fingerprint {:#010x} != run fingerprint {hyper_fp:#010x}",
+        ck.hyper_fp
+    );
+    ensure!(
+        ck.epoch_next as usize <= opts.epochs,
+        "checkpoint has {} completed epochs, past the run's {} epoch target",
+        ck.epoch_next,
+        opts.epochs
+    );
+    Ok(())
 }
 
 /// Evaluate a dataset (padded batching), masked to valid examples.
@@ -124,20 +393,57 @@ pub fn evaluate(
     Ok((loss_sum / n, err_sum / n))
 }
 
+/// Hard cap on divergence rollbacks per run: a state that keeps
+/// re-diverging after this many replays is not going to converge, and
+/// every replay re-spends a full epoch of compute.
+const MAX_ROLLBACKS: usize = 8;
+
 /// Train one model per the paper's protocol.
 pub fn train(model: &dyn Executor, data: &SplitData, opts: &TrainOpts) -> Result<RunResult> {
     let total = Timer::start();
-    let mut rng = Rng::new(opts.seed);
-    let init_hyper = Hyper { seed: (opts.seed & 0xFF_FFFF) as u32, ..Default::default() };
-    let mut state = model.init_state(&init_hyper)?;
+    let info = model.info();
+    let batch = info.batch;
+    let hyper_fp = opts.hyper_fingerprint();
+    let faults = opts.faults.as_deref();
 
-    let batch = model.info().batch;
-    let mut curves = vec![];
-    let mut best_val = f64::INFINITY;
-    let mut best_epoch = 0usize;
-    let mut test_at_best = f64::NAN;
-    let mut step: u32 = 0;
-    let mut stale = 0usize;
+    let mut core = TrainerCore::fresh(opts.seed);
+    let mut resumed = false;
+    if let Some(resume) = &opts.checkpoint.resume {
+        let loaded = match resume {
+            ResumeFrom::Latest => {
+                let dir = opts.checkpoint.dir.as_ref().ok_or_else(|| {
+                    anyhow!("resume from the latest checkpoint requires a checkpoint dir")
+                })?;
+                checkpoint::latest_good(dir)
+            }
+            ResumeFrom::Path(p) => Some((p.clone(), checkpoint::load(p)?)),
+        };
+        match loaded {
+            Some((path, ck)) => {
+                check_resume_compat(&ck, &info.name, opts, hyper_fp)?;
+                ck.state.validate_against(info)?;
+                core.restore(&ck);
+                resumed = true;
+                if opts.verbose {
+                    eprintln!(
+                        "resumed from {} ({} epochs done, step {})",
+                        path.display(),
+                        core.epoch,
+                        core.step
+                    );
+                }
+            }
+            None => {
+                if opts.verbose {
+                    eprintln!("no usable checkpoint found; starting fresh");
+                }
+            }
+        }
+    }
+    if !resumed {
+        let init_hyper = Hyper { seed: (opts.seed & 0xFF_FFFF) as u32, ..Default::default() };
+        core.state = model.init_state(&init_hyper)?;
+    }
 
     let eval_hyper = Hyper {
         mode: opts.eval_mode(),
@@ -146,16 +452,34 @@ pub fn train(model: &dyn Executor, data: &SplitData, opts: &TrainOpts) -> Result
         ..Default::default()
     };
 
-    for epoch in 0..opts.epochs {
+    // Epoch-boundary snapshot: the divergence-rollback target, and (when
+    // a checkpoint dir is set) the bytes that go to disk. Skipped
+    // entirely when neither feature is on, so the plain path pays no
+    // state-clone overhead.
+    let want_snapshots = opts.checkpoint.dir.is_some() || opts.max_diverged_steps > 0;
+    let mut snapshot: Option<Checkpoint> =
+        want_snapshots.then(|| core.to_checkpoint(opts, &info.name, hyper_fp));
+
+    let every = opts.checkpoint.every_epochs.max(1);
+    let mut rollbacks = 0usize;
+    let mut diverged_recent = 0usize;
+    let mut interrupted = false;
+
+    'epochs: while core.epoch < opts.epochs {
         let t = Timer::start();
-        let lr = opts.schedule.at(epoch);
+        let lr = opts.schedule.at(core.epoch);
         let mut pf =
-            Prefetcher::spawn(&data.train, batch, Plan::Shuffled { seed: rng.next_u64() }, 3);
+            Prefetcher::spawn(&data.train, batch, Plan::Shuffled { seed: core.rng.next_u64() }, 3);
+        let n_batches = pf.n_batches;
         let mut loss_sum = 0f64;
         let mut err_sum = 0f64;
         let mut seen = 0usize;
+        let mut rollback_now = false;
         while let Some(b) = pf.next() {
-            step += 1;
+            if let Some(f) = faults {
+                f.maybe_panic_step();
+            }
+            core.step += 1;
             let hyper = Hyper {
                 lr,
                 mode: opts.mode,
@@ -167,21 +491,61 @@ pub fn train(model: &dyn Executor, data: &SplitData, opts: &TrainOpts) -> Result
                 in_dropout: opts.in_dropout,
                 bn_momentum: opts.bn_momentum,
                 lr_scale: opts.lr_scale,
-                step,
-                seed: (rng.next_u64() & 0xFF_FFFF) as u32,
+                step: core.step,
+                seed: (core.rng.next_u64() & 0xFF_FFFF) as u32,
+                skip_nonfinite: opts.skip_diverged,
             };
-            let m = model.train_step(&mut state, &b.x, &b.y, &hyper)?;
-            loss_sum += m.loss as f64 * b.n_valid as f64;
-            err_sum += m.n_err as f64;
-            seen += b.n_valid;
+            let m = model.train_step(&mut core.state, &b.x, &b.y, &hyper)?;
+            if m.diverged {
+                // a diverged step contributes no metrics: its loss is
+                // non-finite and (when skipping) its update never landed
+                core.diverged_total += 1;
+                diverged_recent += 1;
+                if opts.verbose {
+                    eprintln!(
+                        "step {}: non-finite loss/gradient{}",
+                        core.step,
+                        if opts.skip_diverged { " (update skipped)" } else { "" }
+                    );
+                }
+                if opts.max_diverged_steps > 0 && diverged_recent > opts.max_diverged_steps {
+                    rollback_now = true;
+                    break;
+                }
+            } else {
+                loss_sum += m.loss as f64 * b.n_valid as f64;
+                err_sum += m.n_err as f64;
+                seen += b.n_valid;
+            }
         }
+        if rollback_now {
+            rollbacks += 1;
+            ensure!(
+                rollbacks <= MAX_ROLLBACKS,
+                "training diverged past {} steps on {rollbacks} rollback attempts; giving up",
+                opts.max_diverged_steps
+            );
+            let ck = snapshot
+                .as_ref()
+                .ok_or_else(|| anyhow!("rollback requested but no snapshot was captured"))?;
+            if opts.verbose {
+                eprintln!(
+                    "divergence: rolling back to the epoch-{} boundary (rollback {rollbacks})",
+                    ck.epoch_next
+                );
+            }
+            core.restore(ck);
+            diverged_recent = 0;
+            continue 'epochs;
+        }
+
         let train_loss = loss_sum / seen.max(1) as f64;
         let train_err = err_sum / seen.max(1) as f64;
         let train_seconds = t.elapsed_s();
 
-        let (_, val_err) = evaluate(model, &state, &data.val, &eval_hyper)?;
+        let (_, val_err) = evaluate(model, &core.state, &data.val, &eval_hyper)?;
         let rec = EpochRecord {
-            epoch,
+            epoch: core.epoch,
             lr,
             train_loss,
             train_err,
@@ -191,41 +555,73 @@ pub fn train(model: &dyn Executor, data: &SplitData, opts: &TrainOpts) -> Result
         if opts.verbose {
             // train-phase throughput only (rec.seconds also covers the
             // validation pass)
-            let steps_per_s = pf.n_batches as f64 / train_seconds.max(1e-9);
             eprintln!(
                 "epoch {:>3}  lr {:.5}  train loss {:.4}  train err {:.4}  val err {:.4}  ({:.1}s, {:.0} steps/s)",
-                epoch, lr, train_loss, train_err, val_err, rec.seconds, steps_per_s
+                core.epoch, lr, train_loss, train_err, val_err, rec.seconds,
+                steps_per_sec(n_batches, train_seconds)
             );
         }
-        curves.push(rec);
+        core.curves.push(rec);
 
-        if val_err < best_val {
-            best_val = val_err;
-            best_epoch = epoch;
-            stale = 0;
+        let mut early_stop = false;
+        if val_err < core.best_val {
+            core.best_val = val_err;
+            core.best_epoch = core.epoch;
+            core.stale = 0;
             // paper: report the test error associated with the best
             // validation error; evaluate it now so no snapshot is needed.
-            let (_, te) = evaluate(model, &state, &data.test, &eval_hyper)?;
-            test_at_best = te;
+            let (_, te) = evaluate(model, &core.state, &data.test, &eval_hyper)?;
+            core.test_at_best = te;
         } else {
-            stale += 1;
-            if opts.patience > 0 && stale >= opts.patience {
-                if opts.verbose {
-                    eprintln!("early stop at epoch {epoch} (patience {})", opts.patience);
-                }
-                break;
+            core.stale += 1;
+            if opts.patience > 0 && core.stale >= opts.patience {
+                early_stop = true;
             }
+        }
+
+        core.epoch += 1;
+        let stop_req = opts.stop.as_ref().is_some_and(|s| s.load(Ordering::SeqCst));
+
+        if want_snapshots {
+            let ck = core.to_checkpoint(opts, &info.name, hyper_fp);
+            if let Some(dir) = &opts.checkpoint.dir {
+                if core.epoch % every == 0 || core.epoch == opts.epochs || stop_req {
+                    let path = checkpoint::save_into_dir(dir, &ck, opts.checkpoint.keep, faults)?;
+                    if opts.verbose {
+                        eprintln!("checkpoint: wrote {}", path.display());
+                    }
+                }
+            }
+            snapshot = Some(ck);
+            diverged_recent = 0;
+        }
+
+        if stop_req {
+            interrupted = true;
+            if opts.verbose {
+                eprintln!("stop requested; exiting after {} epochs (resumable)", core.epoch);
+            }
+            break;
+        }
+        if early_stop {
+            if opts.verbose {
+                eprintln!("early stop at epoch {} (patience {})", core.epoch - 1, opts.patience);
+            }
+            break;
         }
     }
 
     Ok(RunResult {
-        curves,
-        best_epoch,
-        best_val_err: best_val,
-        test_err: test_at_best,
-        state,
-        steps: step as usize,
+        curves: core.curves,
+        best_epoch: core.best_epoch,
+        best_val_err: core.best_val,
+        test_err: core.test_at_best,
+        state: core.state,
+        steps: core.step as usize,
         total_seconds: total.elapsed_s(),
+        diverged_steps: core.diverged_total,
+        rollbacks,
+        interrupted,
     })
 }
 
@@ -270,6 +666,118 @@ mod tests {
         assert_eq!(o.eval_mode(), Mode::None);
     }
 
-    // End-to-end trainer tests require compiled artifacts; they live in
-    // rust/tests/integration_trainer.rs.
+    #[test]
+    fn steps_per_sec_never_produces_nonfinite() {
+        assert_eq!(steps_per_sec(100, 0.0), 0.0);
+        assert_eq!(steps_per_sec(100, -1.0), 0.0);
+        assert_eq!(steps_per_sec(100, 1e-12), 0.0);
+        assert_eq!(steps_per_sec(100, f64::NAN), 0.0);
+        assert_eq!(steps_per_sec(100, f64::INFINITY), 0.0);
+        assert!((steps_per_sec(100, 2.0) - 50.0).abs() < 1e-12);
+        assert_eq!(steps_per_sec(0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn fingerprint_tracks_stream_shaping_knobs_only() {
+        let base = TrainOpts::default();
+        let fp = base.hyper_fingerprint();
+        // stable across calls
+        assert_eq!(fp, base.hyper_fingerprint());
+
+        let mut o = base.clone();
+        o.dropout = 0.5;
+        assert_ne!(fp, o.hyper_fingerprint(), "dropout must change the fingerprint");
+
+        let mut o = base.clone();
+        o.schedule = LrSchedule::Constant { lr: 0.02 };
+        assert_ne!(fp, o.hyper_fingerprint(), "schedule shape must change the fingerprint");
+
+        let mut o = base.clone();
+        o.eval_override = Some(Mode::Stoch);
+        assert_ne!(fp, o.hyper_fingerprint(), "eval override must change the fingerprint");
+
+        let mut o = base.clone();
+        o.skip_diverged = !o.skip_diverged;
+        assert_ne!(fp, o.hyper_fingerprint(), "skip policy must change the fingerprint");
+
+        // output-only / recovery-policy knobs do not participate
+        let mut o = base.clone();
+        o.verbose = true;
+        o.max_diverged_steps = 5;
+        o.checkpoint.keep = 99;
+        assert_eq!(fp, o.hyper_fingerprint());
+    }
+
+    #[test]
+    fn resume_compat_rejects_mismatches() {
+        let opts = TrainOpts::default();
+        let fp = opts.hyper_fingerprint();
+        let core = TrainerCore::fresh(opts.seed);
+        let ck = core.to_checkpoint(&opts, "mlp", fp);
+
+        assert!(check_resume_compat(&ck, "mlp", &opts, fp).is_ok());
+        assert!(check_resume_compat(&ck, "cnn", &opts, fp).is_err());
+        assert!(check_resume_compat(&ck, "mlp", &opts, fp ^ 1).is_err());
+
+        let mut o = opts.clone();
+        o.opt = Opt::Adam;
+        assert!(check_resume_compat(&ck, "mlp", &o, fp).is_err());
+
+        let mut o = opts.clone();
+        o.seed += 1;
+        assert!(check_resume_compat(&ck, "mlp", &o, fp).is_err());
+
+        let mut o = opts.clone();
+        o.epochs += 1;
+        assert!(check_resume_compat(&ck, "mlp", &o, fp).is_err());
+    }
+
+    #[test]
+    fn core_checkpoint_restore_is_lossless() {
+        let opts = TrainOpts::default();
+        let fp = opts.hyper_fingerprint();
+        let mut core = TrainerCore::fresh(9);
+        for _ in 0..13 {
+            core.rng.next_u64();
+        }
+        core.epoch = 3;
+        core.step = 21;
+        core.best_val = 0.125;
+        core.best_epoch = 2;
+        core.test_at_best = 0.25;
+        core.stale = 1;
+        core.diverged_total = 4;
+        core.curves = (0..3)
+            .map(|e| EpochRecord {
+                epoch: e,
+                lr: 0.01,
+                train_loss: 0.5,
+                train_err: 0.2,
+                val_err: 0.3,
+                seconds: 1.0,
+            })
+            .collect();
+        core.state = TrainState {
+            params: vec![vec![1.0, -0.5]],
+            m: vec![vec![0.1, 0.2]],
+            v: vec![vec![0.0, 0.0]],
+        };
+        let next = core.rng.clone().next_u64();
+
+        let ck = core.to_checkpoint(&opts, "toy", fp);
+        let mut other = TrainerCore::fresh(1);
+        other.restore(&ck);
+        assert_eq!(other.epoch, 3);
+        assert_eq!(other.step, 21);
+        assert_eq!(other.stale, 1);
+        assert_eq!(other.diverged_total, 4);
+        assert_eq!(other.best_epoch, 2);
+        assert_eq!(other.best_val.to_bits(), core.best_val.to_bits());
+        assert_eq!(other.curves.len(), 3);
+        assert_eq!(other.state.params, core.state.params);
+        assert_eq!(other.rng.next_u64(), next, "RNG stream must continue identically");
+    }
+
+    // End-to-end trainer tests (bit-exact resume matrix, chaos runs)
+    // live in rust/tests/checkpoint_train.rs and rust/tests/chaos_train.rs.
 }

@@ -15,10 +15,61 @@ use std::fs;
 use std::io::Read;
 use std::path::Path;
 
-use crate::bail;
+use crate::util::crc32;
 use crate::util::error::{Context, Result};
+use crate::{bail, ensure};
 
 use super::dataset::Dataset;
+
+/// Optional per-directory checksum manifest: lines of `CRC32HEX FILENAME`
+/// (whitespace-separated, `#` starts a comment). When a data file has an
+/// entry in its directory's manifest, its CRC32 must match — a silently
+/// bit-rotted cached dataset would otherwise train on garbage. Files
+/// without an entry, and directories without a manifest, load unverified,
+/// so verification is strictly opt-in and nothing breaks when absent.
+pub const CHECKSUM_MANIFEST: &str = "checksums.txt";
+
+/// Read `path` fully, verifying its CRC32 against the directory's
+/// [`CHECKSUM_MANIFEST`] entry when one exists.
+pub fn read_verified(path: &Path) -> Result<Vec<u8>> {
+    let mut buf = vec![];
+    fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?
+        .read_to_end(&mut buf)?;
+    let (Some(name), Some(dir)) = (path.file_name().and_then(|n| n.to_str()), path.parent())
+    else {
+        return Ok(buf);
+    };
+    let manifest = dir.join(CHECKSUM_MANIFEST);
+    let Ok(listing) = fs::read_to_string(&manifest) else {
+        return Ok(buf); // no manifest for this directory
+    };
+    for line in listing.lines() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        let Some((hex, file)) = line.split_once(char::is_whitespace) else {
+            continue; // blank, or no filename to match against
+        };
+        if file.trim() != name {
+            continue;
+        }
+        let want = u32::from_str_radix(hex, 16).map_err(|_| {
+            crate::anyhow!(
+                "{}: bad CRC32 hex '{hex}' for entry '{name}'",
+                manifest.display()
+            )
+        })?;
+        let got = crc32(&buf);
+        ensure!(
+            got == want,
+            "{}: checksum mismatch: manifest says {want:#010x}, file has {got:#010x} \
+             (re-download or update {})",
+            path.display(),
+            manifest.display()
+        );
+        return Ok(buf);
+    }
+    Ok(buf)
+}
 
 fn read_u32_be(b: &[u8], off: usize) -> u32 {
     u32::from_be_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
@@ -26,10 +77,7 @@ fn read_u32_be(b: &[u8], off: usize) -> u32 {
 
 /// Parse an IDX image file (magic 0x00000803) into row-major [0,1] floats.
 pub fn load_idx_images(path: &Path) -> Result<(Vec<f32>, usize, usize, usize)> {
-    let mut buf = vec![];
-    fs::File::open(path)
-        .with_context(|| format!("open {}", path.display()))?
-        .read_to_end(&mut buf)?;
+    let buf = read_verified(path)?;
     if buf.len() < 16 {
         bail!("{}: truncated IDX header", path.display());
     }
@@ -50,10 +98,7 @@ pub fn load_idx_images(path: &Path) -> Result<(Vec<f32>, usize, usize, usize)> {
 
 /// Parse an IDX label file (magic 0x00000801).
 pub fn load_idx_labels(path: &Path) -> Result<Vec<u8>> {
-    let mut buf = vec![];
-    fs::File::open(path)
-        .with_context(|| format!("open {}", path.display()))?
-        .read_to_end(&mut buf)?;
+    let buf = read_verified(path)?;
     if buf.len() < 8 {
         bail!("{}: truncated IDX header", path.display());
     }
@@ -90,10 +135,7 @@ pub fn load_mnist(dir: &Path, train: bool) -> Result<Dataset> {
 /// Parse CIFAR-10-style binary records (1 label + c*h*w CHW bytes) and
 /// convert to the HWC layout the models expect.
 pub fn load_cifar_records(path: &Path, h: usize, w: usize, c: usize) -> Result<Dataset> {
-    let mut buf = vec![];
-    fs::File::open(path)
-        .with_context(|| format!("open {}", path.display()))?
-        .read_to_end(&mut buf)?;
+    let buf = read_verified(path)?;
     let rec = 1 + h * w * c;
     if buf.len() % rec != 0 {
         bail!("{}: size {} not a multiple of record {rec}", path.display(), buf.len());
@@ -240,5 +282,45 @@ mod tests {
         assert!(load_mnist(&d, true).is_err());
         assert!(load_cifar10(&d, false).is_err());
         assert!(load_svhn(&d, true).is_err());
+    }
+
+    #[test]
+    fn checksum_manifest_verifies_and_rejects() {
+        // own subdir: the manifest applies per-directory and must not
+        // leak into the other tests sharing tmpdir()
+        let d = tmpdir().join("cksum");
+        fs::create_dir_all(&d).unwrap();
+        let img = d.join("img");
+        write_idx_images(&img, 2, 3, 3);
+        let bytes = fs::read(&img).unwrap();
+        let crc = crate::util::crc32(&bytes);
+
+        // matching entry (plus comments and unrelated entries) -> loads
+        fs::write(
+            d.join(CHECKSUM_MANIFEST),
+            format!(
+                "# dataset cache checksums\n{crc:08x}  img\ndeadbeef  other-file # unrelated\n"
+            ),
+        )
+        .unwrap();
+        assert!(load_idx_images(&img).is_ok());
+
+        // mismatching entry -> clear error naming both CRCs
+        fs::write(d.join(CHECKSUM_MANIFEST), format!("{:08x}  img\n", crc ^ 1)).unwrap();
+        let err = load_idx_images(&img).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "{err}");
+
+        // malformed hex for the matching file -> error, not silence
+        fs::write(d.join(CHECKSUM_MANIFEST), "zzzz  img\n").unwrap();
+        let err = load_idx_images(&img).unwrap_err().to_string();
+        assert!(err.contains("bad CRC32 hex"), "{err}");
+
+        // no entry for this file -> unverified load succeeds
+        fs::write(d.join(CHECKSUM_MANIFEST), "deadbeef  something-else\n").unwrap();
+        assert!(load_idx_images(&img).is_ok());
+
+        // no manifest at all -> unverified load succeeds
+        fs::remove_file(d.join(CHECKSUM_MANIFEST)).unwrap();
+        assert!(load_idx_images(&img).is_ok());
     }
 }

@@ -20,7 +20,9 @@
 use std::path::PathBuf;
 use std::process::ExitCode;
 
-use binaryconnect::coordinator::{protocol, train, LrSchedule, TrainOpts};
+use binaryconnect::coordinator::{
+    protocol, train, CheckpointOpts, LrSchedule, ResumeFrom, TrainOpts,
+};
 use binaryconnect::data::{Corpus, SplitData};
 use binaryconnect::hw;
 use binaryconnect::runtime::{reference, Executor, Manifest, Mode, Opt, ReferenceExecutor};
@@ -54,6 +56,20 @@ usage: bcrun <info|train|hw|export|infer|serve|loadgen> [flags]
            --patience N --curves FILE.csv --features FILE.pgm
            --histogram FILE.csv --quiet --no-zca --zca-eps F
            --eval-mode none|det|stoch
+           --checkpoint-dir DIR (write ckpt-NNNNNN.bcckpt each boundary)
+           --checkpoint-every-epochs N (default 1) --keep N (default 3
+             newest checkpoints; 0 = keep all)
+           --resume [latest|FILE.bcckpt] (continue a checkpointed run
+             bit-exactly; 'latest' picks the newest good checkpoint in
+             --checkpoint-dir, falling back past torn files)
+           --max-diverged-steps N (roll back to the last checkpoint once
+             more than N steps go non-finite; 0 = never roll back)
+           --no-skip-diverged (apply updates even on non-finite steps)
+           env BCRUN_FAULTS=panic_step@P,torn_checkpoint@P,nan_grad@P
+             [,seed=N] injects deterministic training faults (chaos
+             testing; inert when unset)
+           SIGTERM/ctrl-c checkpoints at the next epoch boundary (when
+             --checkpoint-dir is set) and exits resumable
   hw:      --model NAME --batch N
   export:  train flags + --out FILE.bcpack   (train, then pack det weights)
   infer:   --packed FILE.bcpack --dataset D [--n-test N] (mult-free engine)
@@ -110,12 +126,21 @@ fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.str("artifacts", "artifacts"))
 }
 
-/// Build the selected backend's executor for `--model`.
-fn load_executor(args: &Args) -> Result<Box<dyn Executor>> {
+/// Build the selected backend's executor for `--model`. A fault plan is
+/// threaded into the reference executor so `nan_grad` injection reaches
+/// the gradient path (the PJRT backend has no injection points).
+fn load_executor(
+    args: &Args,
+    faults: Option<std::sync::Arc<binaryconnect::util::FaultPlan>>,
+) -> Result<Box<dyn Executor>> {
     let model_name = args.str("model", "mlp");
     let backend = args.str("backend", "reference");
     match backend.as_str() {
-        "reference" => Ok(Box::new(ReferenceExecutor::builtin(&model_name)?)),
+        "reference" => {
+            let mut exec = ReferenceExecutor::builtin(&model_name)?;
+            exec.set_faults(faults);
+            Ok(Box::new(exec))
+        }
         #[cfg(feature = "pjrt")]
         "pjrt" => {
             let m = Manifest::load(&artifacts_dir(args))?;
@@ -218,15 +243,76 @@ pub fn opts_from_args(args: &Args) -> Result<TrainOpts> {
         patience: args.usize("patience", 0),
         verbose: !args.bool("quiet", false),
         eval_override: args.opt_str("eval-mode").and_then(|s| Mode::parse(&s)),
+        checkpoint: CheckpointOpts {
+            dir: args.opt_str("checkpoint-dir").map(PathBuf::from),
+            every_epochs: args.usize("checkpoint-every-epochs", 1),
+            keep: args.usize("keep", 3),
+            // a bare `--resume` parses as "true": treat it like `latest`
+            resume: args.opt_str("resume").map(|s| match s.as_str() {
+                "true" | "latest" => ResumeFrom::Latest,
+                _ => ResumeFrom::Path(PathBuf::from(s)),
+            }),
+        },
+        max_diverged_steps: args.usize("max-diverged-steps", 0),
+        skip_diverged: !args.bool("no-skip-diverged", false),
+        faults: None, // cmd_train/cmd_export wire the shared plan in
+        stop: None,
     })
 }
 
+/// Parse BCRUN_FAULTS once (fail fast on typos — a chaos run with a
+/// silently-ignored spec would "pass" by injecting nothing) and set up
+/// the SIGTERM-to-stop-latch bridge shared by train/export runs.
+fn train_harness(
+    opts: &mut TrainOpts,
+) -> Result<Option<std::sync::Arc<binaryconnect::util::FaultPlan>>> {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    let faults = binaryconnect::util::FaultPlan::from_env().map_err(|e| anyhow!(e))?.map(Arc::new);
+    if let Some(plan) = &faults {
+        eprintln!("bcrun train: FAULT INJECTION ACTIVE ({})", plan.summary());
+    }
+    opts.faults = faults.clone();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    opts.stop = Some(stop.clone());
+    binaryconnect::serve::signal::install();
+    std::thread::spawn(move || loop {
+        if binaryconnect::serve::signal::triggered() {
+            stop.store(true, Ordering::SeqCst);
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    });
+    Ok(faults)
+}
+
+/// Post-run reporting shared by train/export: divergence/rollback
+/// counters when anything fired, and the resume hint on interruption.
+fn report_run_health(result: &binaryconnect::coordinator::RunResult, opts: &TrainOpts) {
+    if result.diverged_steps > 0 || result.rollbacks > 0 {
+        eprintln!(
+            "divergence: {} non-finite steps, {} rollbacks",
+            result.diverged_steps, result.rollbacks
+        );
+    }
+    if result.interrupted {
+        let hint = match &opts.checkpoint.dir {
+            Some(d) => format!("resume with --resume latest --checkpoint-dir {}", d.display()),
+            None => "no --checkpoint-dir was set, so progress was not saved".to_string(),
+        };
+        eprintln!("interrupted by stop signal after {} epochs; {hint}", result.curves.len());
+    }
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
-    let model = load_executor(args)?;
+    let mut opts = opts_from_args(args)?;
+    let faults = train_harness(&mut opts)?;
+    let model = load_executor(args, faults)?;
     let info = model.info().clone();
     let corpus = Corpus::parse(&args.str("dataset", "mnist"))
         .ok_or_else(|| anyhow!("bad --dataset"))?;
-    let opts = opts_from_args(args)?;
 
     let (data, real) = prepare_data(corpus, args, opts.seed)?;
     eprintln!(
@@ -246,6 +332,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
 
     let result = train(model.as_ref(), &data, &opts)?;
+    report_run_health(&result, &opts);
 
     println!(
         "mode={} opt={} epochs={} -> best val err {:.4} (epoch {}), test err {:.4}, {} steps in {:.1}s",
@@ -298,15 +385,23 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_export(args: &Args) -> Result<()> {
     use binaryconnect::binary::{pack_mlp, save_packed};
 
-    let model = load_executor(args)?;
+    let mut opts = opts_from_args(args)?;
+    opts.mode = Mode::Det; // packed export is the deterministic test-time path
+    let faults = train_harness(&mut opts)?;
+    let model = load_executor(args, faults)?;
     let info = model.info().clone();
     let corpus = Corpus::parse(&args.str("dataset", "mnist"))
         .ok_or_else(|| anyhow!("bad --dataset"))?;
-    let mut opts = opts_from_args(args)?;
-    opts.mode = Mode::Det; // packed export is the deterministic test-time path
 
     let (data, _) = prepare_data(corpus, args, opts.seed)?;
     let result = train(model.as_ref(), &data, &opts)?;
+    report_run_health(&result, &opts);
+    if result.interrupted {
+        // the run checkpointed and exited early: packing a half-trained
+        // net would clobber a good .bcpack, so stop here
+        eprintln!("export: skipping pack of the interrupted run");
+        return Ok(());
+    }
     eprintln!("trained: test err {:.4}", result.test_err);
 
     let packed = pack_mlp(&info, &result.state)?;

@@ -77,6 +77,11 @@ pub struct Hyper {
     pub step: u32,
     pub seed: u32,
     pub in_dropout: f32,
+    /// Host-side divergence policy, deliberately NOT part of the f32[16]
+    /// row (the python layout stays untouched): when true, a step whose
+    /// loss or gradients come out non-finite leaves the state bit-exactly
+    /// unchanged and only reports `StepMetrics::diverged`.
+    pub skip_nonfinite: bool,
 }
 
 impl Default for Hyper {
@@ -94,6 +99,7 @@ impl Default for Hyper {
             step: 1,
             seed: 0,
             in_dropout: 0.0,
+            skip_nonfinite: false,
         }
     }
 }
@@ -136,6 +142,7 @@ mod tests {
             step: 42,
             seed: 1234,
             in_dropout: 0.2,
+            skip_nonfinite: false,
         };
         let v = h.to_vec();
         assert_eq!(v.len(), HYPER_LEN);
@@ -155,6 +162,14 @@ mod tests {
         assert_eq!(Mode::parse("none"), Some(Mode::None));
         assert_eq!(Opt::parse("ADAM"), Some(Opt::Adam));
         assert_eq!(Opt::parse("bogus"), None);
+    }
+
+    #[test]
+    fn skip_nonfinite_is_host_only() {
+        // the HLO row must not change: python/compile/hyper.py knows
+        // nothing about the divergence policy
+        let on = Hyper { skip_nonfinite: true, ..Default::default() };
+        assert_eq!(on.to_vec(), Hyper::default().to_vec());
     }
 
     #[test]

@@ -27,8 +27,8 @@ pub use reference::ReferenceExecutor;
 #[cfg(feature = "pjrt")]
 pub use session::{Model, Runtime};
 
-use crate::anyhow;
 use crate::util::error::Result;
+use crate::{anyhow, bail, ensure};
 
 /// Training state: flat param and optimizer-slot tensors in spec order.
 ///
@@ -53,6 +53,98 @@ impl TrainState {
             anyhow!("param index {idx} out of range ({} tensors)", self.params.len())
         })
     }
+
+    /// Append the state to `buf` in the BCCKPT01 wire layout: `u32`
+    /// tensor count, then per tensor `u32` numel followed by numel f32
+    /// params, numel f32 `m`, numel f32 `v` — all little-endian raw bits,
+    /// so NaN payloads and signed zeros survive and a save/load
+    /// round-trip is bit-exact.
+    pub fn serialize_into(&self, buf: &mut Vec<u8>) {
+        buf.extend_from_slice(&(self.params.len() as u32).to_le_bytes());
+        for i in 0..self.params.len() {
+            buf.extend_from_slice(&(self.params[i].len() as u32).to_le_bytes());
+            for t in [&self.params[i], &self.m[i], &self.v[i]] {
+                for x in t.iter() {
+                    buf.extend_from_slice(&x.to_bits().to_le_bytes());
+                }
+            }
+        }
+    }
+
+    /// Parse a state written by [`TrainState::serialize_into`], consuming
+    /// from the front of `r`. Sizes are sanity-capped *before* any
+    /// allocation so a corrupt header cannot request gigabytes.
+    pub fn deserialize(r: &mut &[u8]) -> Result<TrainState> {
+        const MAX_TENSORS: usize = 4096;
+        const MAX_NUMEL: usize = 1 << 27; // 512 MiB of f32 per tensor
+        let n_tensors = read_u32(r, "tensor count")? as usize;
+        ensure!(n_tensors <= MAX_TENSORS, "implausible tensor count {n_tensors}");
+        let mut st = TrainState::default();
+        for i in 0..n_tensors {
+            let numel = read_u32(r, "tensor numel")? as usize;
+            ensure!(numel <= MAX_NUMEL, "implausible numel {numel} for tensor {i}");
+            ensure!(
+                r.len() >= numel * 12,
+                "truncated state: tensor {i} needs {} bytes, {} left",
+                numel * 12,
+                r.len()
+            );
+            for out in [&mut st.params, &mut st.m, &mut st.v] {
+                let mut t = Vec::with_capacity(numel);
+                for _ in 0..numel {
+                    let mut b = [0u8; 4];
+                    b.copy_from_slice(&r[..4]);
+                    *r = &r[4..];
+                    t.push(f32::from_bits(u32::from_le_bytes(b)));
+                }
+                out.push(t);
+            }
+        }
+        Ok(st)
+    }
+
+    /// Shape/layer-chain validation against a model spec: the tensor
+    /// count and every numel must match the spec order exactly, and the
+    /// optimizer slots must mirror the params.
+    pub fn validate_against(&self, info: &ModelInfo) -> Result<()> {
+        ensure!(
+            self.params.len() == info.params.len(),
+            "state has {} tensors, model '{}' expects {}",
+            self.params.len(),
+            info.name,
+            info.params.len()
+        );
+        ensure!(
+            self.m.len() == self.params.len() && self.v.len() == self.params.len(),
+            "optimizer slots do not mirror the params ({} params, {} m, {} v)",
+            self.params.len(),
+            self.m.len(),
+            self.v.len()
+        );
+        for (i, p) in info.params.iter().enumerate() {
+            let want: usize = p.shape.iter().product();
+            for (which, t) in [("param", &self.params[i]), ("m", &self.m[i]), ("v", &self.v[i])] {
+                ensure!(
+                    t.len() == want,
+                    "{which} tensor {i} ('{}') has {} elements, spec shape {:?} needs {want}",
+                    p.name,
+                    t.len(),
+                    p.shape
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+fn read_u32(r: &mut &[u8], what: &str) -> Result<u32> {
+    if r.len() < 4 {
+        bail!("truncated state: missing {what}");
+    }
+    let mut b = [0u8; 4];
+    b.copy_from_slice(&r[..4]);
+    *r = &r[4..];
+    Ok(u32::from_le_bytes(b))
 }
 
 /// Scalar metrics returned by one train step.
@@ -62,6 +154,10 @@ pub struct StepMetrics {
     pub loss: f32,
     /// number of misclassified examples in the batch.
     pub n_err: f32,
+    /// the divergence sentinel saw a non-finite loss or gradient this
+    /// step; if `Hyper::skip_nonfinite` was set the update was skipped
+    /// and the state is unchanged.
+    pub diverged: bool,
 }
 
 /// A training/eval backend: load -> init -> train_step -> eval_step over
@@ -120,5 +216,43 @@ mod tests {
         let snap = s.snapshot();
         s.params[0][0] = 9.0;
         assert_eq!(snap.params[0][0], 1.0);
+    }
+
+    #[test]
+    fn state_serde_is_bit_exact_including_specials() {
+        let s = TrainState {
+            params: vec![vec![1.5, -0.0, f32::NAN], vec![f32::INFINITY]],
+            m: vec![vec![0.25, 2.0, -3.5], vec![f32::NEG_INFINITY]],
+            v: vec![vec![1e-30, -1e30, 0.0], vec![f32::MIN_POSITIVE]],
+        };
+        let mut buf = vec![];
+        s.serialize_into(&mut buf);
+        let mut r = &buf[..];
+        let back = TrainState::deserialize(&mut r).unwrap();
+        assert!(r.is_empty(), "nothing should be left over");
+        let bits = |t: &[Vec<f32>]| -> Vec<Vec<u32>> {
+            t.iter().map(|v| v.iter().map(|x| x.to_bits()).collect()).collect()
+        };
+        assert_eq!(bits(&s.params), bits(&back.params));
+        assert_eq!(bits(&s.m), bits(&back.m));
+        assert_eq!(bits(&s.v), bits(&back.v));
+    }
+
+    #[test]
+    fn state_deserialize_rejects_truncation_and_implausible_sizes() {
+        let s = TrainState {
+            params: vec![vec![1.0, 2.0]],
+            m: vec![vec![0.0; 2]],
+            v: vec![vec![0.0; 2]],
+        };
+        let mut buf = vec![];
+        s.serialize_into(&mut buf);
+        for cut in 0..buf.len() {
+            let mut r = &buf[..cut];
+            assert!(TrainState::deserialize(&mut r).is_err(), "cut {cut} accepted");
+        }
+        // a header claiming 2^31 tensors must fail before allocating
+        let mut r: &[u8] = &0x8000_0000u32.to_le_bytes()[..];
+        assert!(TrainState::deserialize(&mut r).is_err());
     }
 }

@@ -51,12 +51,12 @@
 //! be executed without the `pjrt` feature.
 
 use std::path::PathBuf;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::binary::packed::BitMatrix;
 use crate::kernel;
 use crate::util::error::Result;
-use crate::util::Rng;
+use crate::util::{FaultPlan, Rng};
 use crate::{anyhow, bail};
 
 use super::hyper::{Hyper, Mode, Opt};
@@ -363,6 +363,15 @@ fn metrics_into(
     }
 }
 
+/// Divergence sentinel over the gradients a step actually produced:
+/// true when any used gradient tensor holds a NaN/Inf.
+fn grads_non_finite(grads: &[Vec<f32>], used: &[bool]) -> bool {
+    grads
+        .iter()
+        .zip(used)
+        .any(|(g, &u)| u && g.iter().any(|v| !v.is_finite()))
+}
+
 /// Preallocated per-step buffers. Built lazily on the first step and
 /// reused for the executor's lifetime, so a steady-state `train_step`
 /// allocates nothing (see `steady_state_train_step_is_allocation_free`).
@@ -376,9 +385,12 @@ struct Workspace {
     inv_std: Vec<Vec<f32>>,
     /// b x n combined ReLU x dropout multiplier (hidden layers only).
     gate: Vec<Vec<f32>>,
-    /// batch-stat scratch (max layer width).
-    mean: Vec<f32>,
-    var: Vec<f32>,
+    /// per-layer batch statistics (hidden layers only), kept until the
+    /// end of the step so the running-stat write can happen *after* the
+    /// divergence sentinel — a skipped step must leave rmean/rvar
+    /// untouched too.
+    bn_mean: Vec<Vec<f32>>,
+    bn_var: Vec<Vec<f32>>,
     /// per-layer packed sign matrices, re-packed in place every step.
     bits: Vec<BitMatrix>,
     /// transpose scratch for the packed kernels (max_dim * b).
@@ -414,20 +426,25 @@ impl Workspace {
         let mut xhat = Vec::with_capacity(nl);
         let mut inv_std = Vec::with_capacity(nl);
         let mut gate = Vec::with_capacity(nl);
+        let mut bn_mean = Vec::with_capacity(nl);
+        let mut bn_var = Vec::with_capacity(nl);
         for l in layers {
             if l.bn.is_some() {
                 xhat.push(vec![0f32; b * l.n]);
                 inv_std.push(vec![0f32; l.n]);
                 gate.push(vec![0f32; b * l.n]);
+                bn_mean.push(vec![0f32; l.n]);
+                bn_var.push(vec![0f32; l.n]);
             } else {
                 xhat.push(Vec::new());
                 inv_std.push(Vec::new());
                 gate.push(Vec::new());
+                bn_mean.push(Vec::new());
+                bn_var.push(Vec::new());
             }
         }
         let max_dim = layers.iter().map(|l| l.k.max(l.n)).max().unwrap_or(1);
         let max_k = layers.iter().map(|l| l.k).max().unwrap_or(1);
-        let max_n = layers.iter().map(|l| l.n).max().unwrap_or(1);
         // presize the GEMM panel buffers for every product the step runs:
         // forward z = a @ W (b x k x n), grad dW = a^T @ dz (k x b x n),
         // and backward dX = dz @ W^T (b x n x k), per layer
@@ -442,8 +459,8 @@ impl Workspace {
             xhat,
             inv_std,
             gate,
-            mean: vec![0f32; max_n],
-            var: vec![0f32; max_n],
+            bn_mean,
+            bn_var,
             bits: layers.iter().map(|l| BitMatrix::zeroed(l.k, l.n)).collect(),
             xt: vec![0f32; max_dim * b],
             acc: vec![0f32; max_k * b],
@@ -467,13 +484,15 @@ pub struct ReferenceExecutor {
     /// dense allocating path (benchmark baseline + correctness oracle).
     fast: bool,
     ws: Mutex<Option<Workspace>>,
+    /// chaos harness: armed training-site fault plan (`nan_grad@P`).
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl ReferenceExecutor {
     /// Validate a dense-MLP spec into an executable plan.
     pub fn new(info: ModelInfo) -> Result<ReferenceExecutor> {
         let layers = plan(&info)?;
-        Ok(ReferenceExecutor { info, layers, fast: true, ws: Mutex::new(None) })
+        Ok(ReferenceExecutor { info, layers, fast: true, ws: Mutex::new(None), faults: None })
     }
 
     /// Load a builtin model by name (see [`builtin_info`]).
@@ -489,6 +508,13 @@ impl ReferenceExecutor {
     /// results agree within f32 reorder noise (property-tested at 1e-4).
     pub fn set_fast(&mut self, fast: bool) {
         self.fast = fast;
+    }
+
+    /// Arm the executor-level fault sites (`nan_grad@P` poisons the first
+    /// weight gradient of a step when the seeded decision fires, which
+    /// the divergence sentinel must then catch and account for exactly).
+    pub fn set_faults(&mut self, faults: Option<Arc<FaultPlan>>) {
+        self.faults = faults;
     }
 
     fn check_batch(&self, x: &[f32], y: &[f32]) -> Result<()> {
@@ -660,9 +686,11 @@ impl ReferenceExecutor {
                 }
             } else {
                 let gi = layer.bn.unwrap();
-                // batch statistics (biased variance, like jnp.var)
-                let mean = &mut ws.mean[..n];
-                let var = &mut ws.var[..n];
+                // batch statistics (biased variance, like jnp.var); kept
+                // per layer so the rmean/rvar write can wait until the
+                // divergence sentinel has cleared the step
+                let mean = &mut ws.bn_mean[li][..];
+                let var = &mut ws.bn_var[li][..];
                 mean.fill(0.0);
                 for zrow in z.chunks_exact(n) {
                     for (mj, &v) in mean.iter_mut().zip(zrow) {
@@ -693,15 +721,6 @@ impl ReferenceExecutor {
                     {
                         *xv = (zv - mj) * is;
                     }
-                }
-                // running-stat update in place (nothing reads rmean/rvar
-                // again this step; equivalent to the seed's deferred write)
-                let mom = hyper.bn_momentum;
-                for (r, &mj) in state.params[gi + 2].iter_mut().zip(&*mean) {
-                    *r = mom * *r + (1.0 - mom) * mj;
-                }
-                for (r, &vj) in state.params[gi + 3].iter_mut().zip(&*var) {
-                    *r = mom * *r + (1.0 - mom) * vj;
                 }
                 // affine + ReLU + inverted dropout, z becomes acts[li + 1]
                 let gamma = &state.params[gi];
@@ -839,9 +858,32 @@ impl ReferenceExecutor {
             }
         }
 
-        // ---- parameter update ----
-        self.apply_updates(state, hyper, &ws.grads, &ws.grad_used);
-        Ok(StepMetrics { loss, n_err })
+        // ---- chaos harness: seeded gradient poisoning ----
+        if self.faults.as_ref().is_some_and(|f| f.roll_nan_grad()) {
+            ws.grads[self.layers[0].w][0] = f32::NAN;
+        }
+
+        // ---- divergence sentinel (loss + every produced gradient) ----
+        let diverged = !loss.is_finite() || grads_non_finite(&ws.grads, &ws.grad_used);
+
+        // ---- deferred state writes: BN running stats + parameter update,
+        //      both skipped when a diverged step asked for skip-step
+        //      recovery, so the state stays bit-exactly untouched ----
+        if !(diverged && hyper.skip_nonfinite) {
+            let mom = hyper.bn_momentum;
+            for (li, layer) in self.layers.iter().enumerate() {
+                if let Some(gi) = layer.bn {
+                    for (r, &mj) in state.params[gi + 2].iter_mut().zip(&ws.bn_mean[li]) {
+                        *r = mom * *r + (1.0 - mom) * mj;
+                    }
+                    for (r, &vj) in state.params[gi + 3].iter_mut().zip(&ws.bn_var[li]) {
+                        *r = mom * *r + (1.0 - mom) * vj;
+                    }
+                }
+            }
+            self.apply_updates(state, hyper, &ws.grads, &ws.grad_used);
+        }
+        Ok(StepMetrics { loss, n_err, diverged })
     }
 
     fn eval_batch_fast(
@@ -1129,12 +1171,24 @@ impl ReferenceExecutor {
             };
         }
 
-        // ---- parameter update (Sec. 2.4 clip + Sec. 2.5 LR scaling) ----
-        for (idx, stat) in bn_stat_updates {
-            state.params[idx] = stat;
+        // ---- chaos harness: seeded gradient poisoning ----
+        if self.faults.as_ref().is_some_and(|f| f.roll_nan_grad()) {
+            grads[self.layers[0].w][0] = f32::NAN;
         }
-        self.apply_updates(state, hyper, &grads, &used);
-        Ok(StepMetrics { loss, n_err })
+
+        // ---- divergence sentinel (loss + every produced gradient) ----
+        let diverged = !loss.is_finite() || grads_non_finite(&grads, &used);
+
+        // ---- parameter update (Sec. 2.4 clip + Sec. 2.5 LR scaling),
+        //      withheld entirely on a diverged step under skip-step
+        //      recovery (running stats included) ----
+        if !(diverged && hyper.skip_nonfinite) {
+            for (idx, stat) in bn_stat_updates {
+                state.params[idx] = stat;
+            }
+            self.apply_updates(state, hyper, &grads, &used);
+        }
+        Ok(StepMetrics { loss, n_err, diverged })
     }
 
     fn eval_batch_baseline(
@@ -1514,6 +1568,65 @@ mod tests {
                 "steady-state train_step allocated in mode {mode:?}"
             );
         }
+    }
+
+    /// The divergence sentinel + skip-step recovery: a poisoned gradient
+    /// is detected on both kernel paths, and a skipped step leaves the
+    /// whole state (params, m/v slots, BN running stats) bit-identical.
+    #[test]
+    fn nan_grad_with_skip_leaves_state_bit_identical() {
+        for fast in [true, false] {
+            let mut exec = tiny();
+            exec.set_fast(fast);
+            exec.set_faults(Some(Arc::new(FaultPlan::parse("nan_grad@1", 0).unwrap())));
+            let mut state = exec.init_state(&Hyper { seed: 2, ..Default::default() }).unwrap();
+            let before = state.snapshot();
+            let (x, y) = tiny_batch(&exec, 8);
+            let h = Hyper {
+                lr: 0.05,
+                opt: Opt::Adam,
+                step: 1,
+                seed: 1,
+                skip_nonfinite: true,
+                ..Default::default()
+            };
+            let m = exec.train_step(&mut state, &x, &y, &h).unwrap();
+            assert!(m.diverged, "fast={fast}: poisoned gradient not detected");
+            let bits = |t: &[Vec<f32>]| -> Vec<Vec<u32>> {
+                t.iter().map(|v| v.iter().map(|x| x.to_bits()).collect()).collect()
+            };
+            assert_eq!(bits(&state.params), bits(&before.params), "fast={fast}");
+            assert_eq!(bits(&state.m), bits(&before.m), "fast={fast}");
+            assert_eq!(bits(&state.v), bits(&before.v), "fast={fast}");
+        }
+    }
+
+    #[test]
+    fn nan_grad_without_skip_poisons_the_update() {
+        let mut exec = tiny();
+        exec.set_faults(Some(Arc::new(FaultPlan::parse("nan_grad@1", 0).unwrap())));
+        let mut state = exec.init_state(&Hyper { seed: 2, ..Default::default() }).unwrap();
+        let (x, y) = tiny_batch(&exec, 8);
+        let h = Hyper { lr: 0.05, step: 1, seed: 1, ..Default::default() };
+        let m = exec.train_step(&mut state, &x, &y, &h).unwrap();
+        assert!(m.diverged);
+        // without skip-step recovery the NaN reaches the weights
+        assert!(
+            state.params[0].iter().any(|v| !v.is_finite()),
+            "legacy (no-skip) path should have applied the poisoned update"
+        );
+    }
+
+    #[test]
+    fn finite_steps_report_not_diverged() {
+        let exec = tiny();
+        let mut state = exec.init_state(&Hyper::default()).unwrap();
+        let (x, y) = tiny_batch(&exec, 3);
+        let h = Hyper { lr: 0.01, step: 1, seed: 1, skip_nonfinite: true, ..Default::default() };
+        let m = exec.train_step(&mut state, &x, &y, &h).unwrap();
+        assert!(!m.diverged);
+        // and the update actually happened
+        assert!(state.params[3].iter().any(|&v| v != 0.0), "rmean never updated");
     }
 
     #[test]

@@ -187,7 +187,11 @@ impl Executor for Model {
         state.params = Model::to_vecs(parts)?;
         state.m = Model::to_vecs(m)?;
         state.v = Model::to_vecs(v)?;
-        Ok(StepMetrics { loss, n_err })
+        // the PJRT path has no gradient sentinel (the update already ran
+        // on device, so `Hyper::skip_nonfinite` cannot be honored here);
+        // the scalar loss is still checked so the trainer's divergence
+        // accounting and rollback can react
+        Ok(StepMetrics { loss, n_err, diverged: !loss.is_finite() })
     }
 
     /// Evaluate one (padded) batch -> per-example (loss, err) vectors.

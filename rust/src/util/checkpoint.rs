@@ -1,0 +1,560 @@
+//! Versioned training checkpoints (`BCCKPT01`): crash-safe save/resume
+//! for the coordinator.
+//!
+//! A checkpoint captures everything the trainer needs to continue a run
+//! *bit-exactly* from an epoch boundary: the full [`TrainState`] (params
+//! plus the Adam/Nesterov `m`/`v` slots), the root RNG stream state, the
+//! epoch/step counters, the best-model trackers, and the learning curves
+//! so far. Hyperparameters are pinned by an explicit (model, mode, opt,
+//! seed, epochs) tuple plus a CRC fingerprint of the remaining knobs —
+//! resuming under a different configuration is a hard error, because the
+//! replayed stream would silently diverge from the uninterrupted run.
+//!
+//! Writes follow the `.bcpack` crash-safe discipline (binary/export.rs):
+//! serialize → CRC32 trailer → same-directory temp file → fsync → atomic
+//! rename. Loads verify the CRC before parsing and sanity-cap every size
+//! field before allocating, so a torn or corrupt file is a clean error —
+//! and [`latest_good`] falls back to the previous good checkpoint.
+
+use std::path::{Path, PathBuf};
+
+use crate::runtime::TrainState;
+use crate::util::crc32;
+use crate::util::error::{Context, Result};
+use crate::util::FaultPlan;
+use crate::{bail, ensure};
+
+pub const MAGIC: &[u8; 8] = b"BCCKPT01";
+const EXT: &str = "bcckpt";
+
+/// Caps for load-time validation: reject corrupt headers before they can
+/// request absurd allocations.
+const MAX_NAME_BYTES: usize = 256;
+const MAX_CURVES: usize = 1 << 20;
+const MAX_FILE_BYTES: u64 = 1 << 31;
+
+/// One epoch row of the learning curve, as persisted in a checkpoint.
+/// Mirrors `coordinator::EpochRecord` (kept separate so util/ does not
+/// depend on coordinator/).
+#[derive(Clone, Copy, Debug)]
+pub struct CurvePoint {
+    pub epoch: u32,
+    pub lr: f32,
+    pub train_loss: f64,
+    pub train_err: f64,
+    pub val_err: f64,
+    pub seconds: f64,
+}
+
+/// A full trainer snapshot at an epoch boundary.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    /// model name (must match the executor's spec on resume)
+    pub model: String,
+    /// `Mode as u8` / `Opt as u8` of the run that wrote this
+    pub mode: u8,
+    pub opt: u8,
+    /// root trainer seed and total epoch target of the run
+    pub seed: u64,
+    pub total_epochs: u32,
+    /// CRC32 fingerprint over the remaining hyperparameters
+    /// (`TrainOpts::hyper_fingerprint`)
+    pub hyper_fp: u32,
+    /// the next epoch to run (== number of completed epochs)
+    pub epoch_next: u32,
+    /// global step counter after the last completed epoch
+    pub step: u32,
+    /// root RNG (xoshiro256++) state at the boundary
+    pub rng: [u64; 4],
+    /// best-model trackers (early stopping / Table-1 protocol)
+    pub best_val: f64,
+    pub best_epoch: u32,
+    pub test_at_best: f64,
+    pub stale: u32,
+    /// lifetime divergence-sentinel counter
+    pub diverged_steps: u64,
+    /// learning curve of the completed epochs (len == epoch_next)
+    pub curves: Vec<CurvePoint>,
+    /// params + optimizer slots
+    pub state: TrainState,
+}
+
+/// Canonical file name for the checkpoint taken after `epoch_next`
+/// completed epochs; lexicographic order == epoch order.
+pub fn epoch_path(dir: &Path, epoch_next: u32) -> PathBuf {
+    dir.join(format!("ckpt-{epoch_next:06}.{EXT}"))
+}
+
+fn serialize(ck: &Checkpoint) -> Vec<u8> {
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    let name = ck.model.as_bytes();
+    buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+    buf.extend_from_slice(name);
+    buf.push(ck.mode);
+    buf.push(ck.opt);
+    buf.extend_from_slice(&ck.seed.to_le_bytes());
+    buf.extend_from_slice(&ck.total_epochs.to_le_bytes());
+    buf.extend_from_slice(&ck.hyper_fp.to_le_bytes());
+    buf.extend_from_slice(&ck.epoch_next.to_le_bytes());
+    buf.extend_from_slice(&ck.step.to_le_bytes());
+    for w in ck.rng {
+        buf.extend_from_slice(&w.to_le_bytes());
+    }
+    buf.extend_from_slice(&ck.best_val.to_bits().to_le_bytes());
+    buf.extend_from_slice(&ck.best_epoch.to_le_bytes());
+    buf.extend_from_slice(&ck.test_at_best.to_bits().to_le_bytes());
+    buf.extend_from_slice(&ck.stale.to_le_bytes());
+    buf.extend_from_slice(&ck.diverged_steps.to_le_bytes());
+    buf.extend_from_slice(&(ck.curves.len() as u32).to_le_bytes());
+    for c in &ck.curves {
+        buf.extend_from_slice(&c.epoch.to_le_bytes());
+        buf.extend_from_slice(&c.lr.to_bits().to_le_bytes());
+        for f in [c.train_loss, c.train_err, c.val_err, c.seconds] {
+            buf.extend_from_slice(&f.to_bits().to_le_bytes());
+        }
+    }
+    ck.state.serialize_into(&mut buf);
+    let crc = crc32(&buf);
+    buf.extend_from_slice(&crc.to_le_bytes());
+    buf
+}
+
+/// Write `ck` to `path` crash-safely (temp + fsync + atomic rename, CRC
+/// trailer). With a [`FaultPlan`] carrying `torn_checkpoint@P`, a fired
+/// decision truncates the serialized bytes before the write — producing
+/// exactly the torn-medium artifact the CRC gate must reject at load.
+pub fn save(ck: &Checkpoint, path: &Path, faults: Option<&FaultPlan>) -> Result<()> {
+    let mut buf = serialize(ck);
+    if faults.is_some_and(|f| f.roll_torn_checkpoint()) {
+        buf.truncate(buf.len() * 2 / 3);
+    }
+
+    // same-directory temp so the rename cannot cross a filesystem
+    let dir = path.parent().filter(|d| !d.as_os_str().is_empty());
+    let name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .with_context(|| format!("{}: not a writable file path", path.display()))?;
+    let tmp_name = format!(".{name}.tmp.{}", std::process::id());
+    let tmp = match dir {
+        Some(d) => d.join(&tmp_name),
+        None => Path::new(&tmp_name).to_path_buf(),
+    };
+    let write = (|| -> Result<()> {
+        use std::io::Write;
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&buf)?;
+        f.sync_all()?; // data durable before the rename publishes it
+        Ok(())
+    })();
+    if let Err(e) = write {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e).with_context(|| format!("write {}", tmp.display()));
+    }
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e.into());
+    }
+    // best effort: make the rename itself durable
+    #[cfg(unix)]
+    if let Some(d) = dir {
+        if let Ok(dirf) = std::fs::File::open(d) {
+            let _ = dirf.sync_all();
+        }
+    }
+    Ok(())
+}
+
+/// Load and fully validate one checkpoint file: CRC before parsing,
+/// size caps before allocating, no trailing bytes, sane RNG state.
+/// Model/hyperparameter compatibility is the *caller's* check (the
+/// trainer knows the current run's configuration).
+pub fn load(path: &Path) -> Result<Checkpoint> {
+    let meta = std::fs::metadata(path).with_context(|| format!("open {}", path.display()))?;
+    if meta.len() > MAX_FILE_BYTES {
+        bail!("{}: {} bytes exceeds the {MAX_FILE_BYTES} byte cap", path.display(), meta.len());
+    }
+    let bytes = std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+    // magic(8) + name_len(4) + crc(4) is the smallest conceivable file
+    if bytes.len() < 16 {
+        bail!("{}: {} bytes is too short to be a BCCKPT file", path.display(), bytes.len());
+    }
+    if bytes[..8] != MAGIC[..] {
+        bail!("{}: not a BCCKPT checkpoint", path.display());
+    }
+    let (body, trailer) = bytes.split_at(bytes.len() - 4);
+    let stored = u32::from_le_bytes([trailer[0], trailer[1], trailer[2], trailer[3]]);
+    let computed = crc32(body);
+    if stored != computed {
+        bail!(
+            "{}: checksum mismatch (torn write or corruption): \
+             stored {stored:#010x}, computed {computed:#010x}",
+            path.display()
+        );
+    }
+    let mut r: &[u8] = &body[8..];
+    let name_len = take_u32(&mut r, path, "name length")? as usize;
+    ensure!(name_len <= MAX_NAME_BYTES, "{}: implausible model-name length {name_len}", path.display());
+    ensure!(r.len() >= name_len, "{}: truncated model name", path.display());
+    let model = std::str::from_utf8(&r[..name_len])
+        .with_context(|| format!("{}: model name is not UTF-8", path.display()))?
+        .to_string();
+    r = &r[name_len..];
+    let mode = take_u8(&mut r, path, "mode")?;
+    let opt = take_u8(&mut r, path, "opt")?;
+    ensure!(mode <= 2 && opt <= 2, "{}: invalid mode/opt bytes {mode}/{opt}", path.display());
+    let seed = take_u64(&mut r, path, "seed")?;
+    let total_epochs = take_u32(&mut r, path, "total epochs")?;
+    let hyper_fp = take_u32(&mut r, path, "hyper fingerprint")?;
+    let epoch_next = take_u32(&mut r, path, "epoch counter")?;
+    let step = take_u32(&mut r, path, "step counter")?;
+    let mut rng = [0u64; 4];
+    for w in &mut rng {
+        *w = take_u64(&mut r, path, "rng state")?;
+    }
+    ensure!(
+        rng.iter().any(|&w| w != 0),
+        "{}: all-zero RNG state (corrupt capture)",
+        path.display()
+    );
+    let best_val = f64::from_bits(take_u64(&mut r, path, "best val")?);
+    let best_epoch = take_u32(&mut r, path, "best epoch")?;
+    let test_at_best = f64::from_bits(take_u64(&mut r, path, "test at best")?);
+    let stale = take_u32(&mut r, path, "stale counter")?;
+    let diverged_steps = take_u64(&mut r, path, "diverged counter")?;
+    let n_curves = take_u32(&mut r, path, "curve count")? as usize;
+    ensure!(n_curves <= MAX_CURVES, "{}: implausible curve count {n_curves}", path.display());
+    ensure!(
+        n_curves == epoch_next as usize,
+        "{}: curve count {n_curves} does not match epoch counter {epoch_next}",
+        path.display()
+    );
+    ensure!(
+        r.len() >= n_curves * 40,
+        "{}: truncated learning curve",
+        path.display()
+    );
+    let mut curves = Vec::with_capacity(n_curves);
+    for _ in 0..n_curves {
+        let epoch = take_u32(&mut r, path, "curve epoch")?;
+        let lr = f32::from_bits(take_u32(&mut r, path, "curve lr")?);
+        let train_loss = f64::from_bits(take_u64(&mut r, path, "curve loss")?);
+        let train_err = f64::from_bits(take_u64(&mut r, path, "curve err")?);
+        let val_err = f64::from_bits(take_u64(&mut r, path, "curve val")?);
+        let seconds = f64::from_bits(take_u64(&mut r, path, "curve secs")?);
+        curves.push(CurvePoint { epoch, lr, train_loss, train_err, val_err, seconds });
+    }
+    let state = TrainState::deserialize(&mut r)
+        .with_context(|| format!("parse {}", path.display()))?;
+    if !r.is_empty() {
+        bail!("{}: {} trailing bytes after the state", path.display(), r.len());
+    }
+    Ok(Checkpoint {
+        model,
+        mode,
+        opt,
+        seed,
+        total_epochs,
+        hyper_fp,
+        epoch_next,
+        step,
+        rng,
+        best_val,
+        best_epoch,
+        test_at_best,
+        stale,
+        diverged_steps,
+        curves,
+        state,
+    })
+}
+
+/// All checkpoint files in `dir`, sorted ascending by name (== by
+/// epoch). A missing directory is just "no checkpoints".
+pub fn list(dir: &Path) -> Vec<PathBuf> {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return vec![];
+    };
+    let mut files: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.extension().and_then(|e| e.to_str()) == Some(EXT)
+                && p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with("ckpt-"))
+        })
+        .collect();
+    files.sort();
+    files
+}
+
+/// Save `ck` under its canonical name in `dir` (creating the directory),
+/// then prune all but the newest `keep` checkpoints (`keep == 0` keeps
+/// everything).
+pub fn save_into_dir(
+    dir: &Path,
+    ck: &Checkpoint,
+    keep: usize,
+    faults: Option<&FaultPlan>,
+) -> Result<PathBuf> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("create checkpoint dir {}", dir.display()))?;
+    let path = epoch_path(dir, ck.epoch_next);
+    save(ck, &path, faults)?;
+    if keep > 0 {
+        let files = list(dir);
+        if files.len() > keep {
+            for old in &files[..files.len() - keep] {
+                let _ = std::fs::remove_file(old);
+            }
+        }
+    }
+    Ok(path)
+}
+
+/// The newest checkpoint in `dir` that loads and validates, skipping
+/// (with a note on stderr) any newer files that turn out to be torn or
+/// corrupt — the fallback path of the crash-safety contract. `None` when
+/// the directory is missing, empty, or holds no loadable checkpoint.
+pub fn latest_good(dir: &Path) -> Option<(PathBuf, Checkpoint)> {
+    for path in list(dir).into_iter().rev() {
+        match load(&path) {
+            Ok(ck) => return Some((path, ck)),
+            Err(e) => {
+                eprintln!("checkpoint: skipping {}: {e}", path.display());
+            }
+        }
+    }
+    None
+}
+
+fn take_u8(r: &mut &[u8], path: &Path, what: &str) -> Result<u8> {
+    if r.is_empty() {
+        bail!("{}: truncated before {what}", path.display());
+    }
+    let v = r[0];
+    *r = &r[1..];
+    Ok(v)
+}
+
+fn take_u32(r: &mut &[u8], path: &Path, what: &str) -> Result<u32> {
+    if r.len() < 4 {
+        bail!("{}: truncated before {what}", path.display());
+    }
+    let mut b = [0u8; 4];
+    b.copy_from_slice(&r[..4]);
+    *r = &r[4..];
+    Ok(u32::from_le_bytes(b))
+}
+
+fn take_u64(r: &mut &[u8], path: &Path, what: &str) -> Result<u64> {
+    if r.len() < 8 {
+        bail!("{}: truncated before {what}", path.display());
+    }
+    let mut b = [0u8; 8];
+    b.copy_from_slice(&r[..8]);
+    *r = &r[8..];
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("bc_ckpt_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn toy(epoch_next: u32) -> Checkpoint {
+        Checkpoint {
+            model: "toy".to_string(),
+            mode: 1,
+            opt: 2,
+            seed: 42,
+            total_epochs: 9,
+            hyper_fp: 0xDEAD_BEEF,
+            epoch_next,
+            step: epoch_next * 7,
+            rng: [1, 2, 3, epoch_next as u64 + 4],
+            best_val: 0.25,
+            best_epoch: epoch_next.saturating_sub(1),
+            test_at_best: f64::NAN, // pre-first-eval sentinel must survive
+            stale: 1,
+            diverged_steps: 3,
+            curves: (0..epoch_next)
+                .map(|e| CurvePoint {
+                    epoch: e,
+                    lr: 0.01 / (e + 1) as f32,
+                    train_loss: 0.5,
+                    train_err: 0.1,
+                    val_err: 0.2,
+                    seconds: 0.0,
+                })
+                .collect(),
+            state: TrainState {
+                params: vec![vec![1.0, -0.0, f32::NAN], vec![2.5]],
+                m: vec![vec![0.1, 0.2, 0.3], vec![f32::INFINITY]],
+                v: vec![vec![1e-9, 0.0, -4.0], vec![0.5]],
+            },
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let dir = tmpdir("rt");
+        let ck = toy(3);
+        let path = epoch_path(&dir, 3);
+        save(&ck, &path, None).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.model, ck.model);
+        assert_eq!((back.mode, back.opt, back.seed), (ck.mode, ck.opt, ck.seed));
+        assert_eq!(back.total_epochs, ck.total_epochs);
+        assert_eq!(back.hyper_fp, ck.hyper_fp);
+        assert_eq!((back.epoch_next, back.step), (ck.epoch_next, ck.step));
+        assert_eq!(back.rng, ck.rng);
+        assert_eq!(back.best_val.to_bits(), ck.best_val.to_bits());
+        assert_eq!(back.best_epoch, ck.best_epoch);
+        assert_eq!(back.test_at_best.to_bits(), ck.test_at_best.to_bits());
+        assert_eq!((back.stale, back.diverged_steps), (ck.stale, ck.diverged_steps));
+        assert_eq!(back.curves.len(), ck.curves.len());
+        for (a, b) in back.curves.iter().zip(&ck.curves) {
+            assert_eq!(a.epoch, b.epoch);
+            assert_eq!(a.lr.to_bits(), b.lr.to_bits());
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+            assert_eq!(a.val_err.to_bits(), b.val_err.to_bits());
+        }
+        for (a, b) in [
+            (&back.state.params, &ck.state.params),
+            (&back.state.m, &ck.state.m),
+            (&back.state.v, &ck.state.v),
+        ] {
+            let bits = |t: &[Vec<f32>]| -> Vec<Vec<u32>> {
+                t.iter().map(|v| v.iter().map(|x| x.to_bits()).collect()).collect()
+            };
+            assert_eq!(bits(a), bits(b));
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn every_truncation_and_header_flip_is_rejected() {
+        let dir = tmpdir("trunc");
+        let ck = toy(1);
+        let path = epoch_path(&dir, 1);
+        save(&ck, &path, None).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(load(&path).is_ok());
+        let scratch = dir.join("scratch.bcckpt");
+        for cut in 0..bytes.len() {
+            std::fs::write(&scratch, &bytes[..cut]).unwrap();
+            assert!(load(&scratch).is_err(), "truncation at byte {cut} accepted");
+        }
+        for at in 0..bytes.len().min(96) {
+            let mut mutated = bytes.clone();
+            mutated[at] ^= 0xFF;
+            std::fs::write(&scratch, &mutated).unwrap();
+            assert!(load(&scratch).is_err(), "flip at byte {at} accepted");
+        }
+        // flipped CRC trailer specifically
+        let mut flipped = bytes.clone();
+        let last = flipped.len() - 1;
+        flipped[last] ^= 0x01;
+        std::fs::write(&scratch, &flipped).unwrap();
+        let err = load(&scratch).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "{err}");
+        // trailing junk is corruption too
+        let mut padded = bytes.clone();
+        padded.extend_from_slice(b"junk");
+        std::fs::write(&scratch, &padded).unwrap();
+        assert!(load(&scratch).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn all_zero_rng_state_is_rejected() {
+        let dir = tmpdir("zrng");
+        let mut ck = toy(1);
+        ck.rng = [0; 4];
+        let path = epoch_path(&dir, 1);
+        save(&ck, &path, None).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("RNG"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn retention_prunes_oldest() {
+        let dir = tmpdir("keep");
+        for e in 1..=5 {
+            save_into_dir(&dir, &toy(e), 2, None).unwrap();
+        }
+        let files = list(&dir);
+        assert_eq!(files.len(), 2, "{files:?}");
+        assert!(files[0].ends_with("ckpt-000004.bcckpt"), "{files:?}");
+        assert!(files[1].ends_with("ckpt-000005.bcckpt"), "{files:?}");
+        // keep == 0 disables pruning
+        for e in 6..=8 {
+            save_into_dir(&dir, &toy(e), 0, None).unwrap();
+        }
+        assert_eq!(list(&dir).len(), 5);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn latest_good_skips_corrupt_newer_files() {
+        let dir = tmpdir("fallback");
+        for e in 1..=3 {
+            save_into_dir(&dir, &toy(e), 0, None).unwrap();
+        }
+        // tear the newest
+        let newest = epoch_path(&dir, 3);
+        let mut bytes = std::fs::read(&newest).unwrap();
+        bytes.truncate(bytes.len() / 2);
+        std::fs::write(&newest, &bytes).unwrap();
+        let (path, ck) = latest_good(&dir).expect("epoch-2 checkpoint should load");
+        assert!(path.ends_with("ckpt-000002.bcckpt"), "{}", path.display());
+        assert_eq!(ck.epoch_next, 2);
+        // corrupt everything -> None
+        for p in list(&dir) {
+            std::fs::write(&p, b"garbage").unwrap();
+        }
+        assert!(latest_good(&dir).is_none());
+        // missing dir -> None, not an error
+        assert!(latest_good(&dir.join("nope")).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_checkpoint_injection_produces_a_detectably_torn_file() {
+        let dir = tmpdir("torn");
+        let plan = FaultPlan::parse("torn_checkpoint@1", 0).unwrap();
+        let path = epoch_path(&dir, 1);
+        save(&toy(1), &path, Some(&plan)).unwrap();
+        assert_eq!(plan.injected_torn_checkpoints(), 1);
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("checksum") || err.contains("truncated"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn save_leaves_no_temp_litter() {
+        let dir = tmpdir("litter");
+        let path = epoch_path(&dir, 1);
+        save(&toy(1), &path, None).unwrap();
+        save(&toy(1), &path, None).unwrap(); // overwrite in place
+        assert!(load(&path).is_ok());
+        let leftovers: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "temp litter: {leftovers:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

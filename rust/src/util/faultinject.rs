@@ -20,6 +20,17 @@
 //!                       suffix) with probability P
 //! - `seed=N`          — seed for the decision stream (default 0)
 //!
+//! Training sites (the checkpoint/resume chaos harness, `chaos_train`):
+//!
+//! - `panic_step@P`      — each trainer step panics *before* the forward
+//!                         with probability P (a hard mid-epoch crash)
+//! - `torn_checkpoint@P` — each checkpoint save truncates the serialized
+//!                         bytes with probability P, simulating a torn
+//!                         write that the CRC trailer must catch at load
+//! - `nan_grad@P`        — each train step poisons one weight gradient
+//!                         with NaN with probability P, exercising the
+//!                         divergence sentinels
+//!
 //! When `BCRUN_FAULTS` is unset the plan is absent (`None`) and the hot
 //! paths pay only an `Option` check — production runs carry no injection
 //! overhead and no behavioral change.
@@ -70,11 +81,17 @@ pub struct FaultPlan {
     panic_worker: Option<FaultSite>,
     panic_batcher: Option<FaultSite>,
     slow_batch: Option<(Duration, FaultSite)>,
+    panic_step: Option<FaultSite>,
+    torn_checkpoint: Option<FaultSite>,
+    nan_grad: Option<FaultSite>,
 }
 
 const WORKER_TAG: u64 = 0x5745_524b; // "WERK"
 const BATCHER_TAG: u64 = 0x4241_5443; // "BATC"
 const SLOW_TAG: u64 = 0x534c_4f57; // "SLOW"
+const STEP_TAG: u64 = 0x5354_4550; // "STEP"
+const TORN_TAG: u64 = 0x544f_524e; // "TORN"
+const NANG_TAG: u64 = 0x4e41_4e47; // "NANG"
 
 impl FaultPlan {
     /// Parse a spec string. `default_seed` applies unless the spec
@@ -85,6 +102,9 @@ impl FaultPlan {
             panic_worker: None,
             panic_batcher: None,
             slow_batch: None,
+            panic_step: None,
+            torn_checkpoint: None,
+            nan_grad: None,
         };
         for raw in spec.split(',') {
             let part = raw.trim();
@@ -105,10 +125,17 @@ impl FaultPlan {
                 })?;
                 plan.slow_batch =
                     Some((parse_duration(dur)?, FaultSite::new(parse_prob(prob)?)));
+            } else if let Some(p) = part.strip_prefix("panic_step@") {
+                plan.panic_step = Some(FaultSite::new(parse_prob(p)?));
+            } else if let Some(p) = part.strip_prefix("torn_checkpoint@") {
+                plan.torn_checkpoint = Some(FaultSite::new(parse_prob(p)?));
+            } else if let Some(p) = part.strip_prefix("nan_grad@") {
+                plan.nan_grad = Some(FaultSite::new(parse_prob(p)?));
             } else {
                 return Err(format!(
                     "BCRUN_FAULTS: unknown fault {part:?} (grammar: \
-                     panic_worker@P, panic_batcher@P, slow_batch=DUR@P, seed=N)"
+                     panic_worker@P, panic_batcher@P, slow_batch=DUR@P, \
+                     panic_step@P, torn_checkpoint@P, nan_grad@P, seed=N)"
                 ));
             }
         }
@@ -149,6 +176,16 @@ impl FaultPlan {
         site.roll(self.seed, SLOW_TAG).then_some(*dur)
     }
 
+    /// Trainer injection point (start of every training step, before the
+    /// forward). A fired decision is a hard crash: the process (or the
+    /// chaos test's `catch_unwind`) dies mid-epoch, which a later
+    /// `--resume` must recover from bit-exactly.
+    pub fn maybe_panic_step(&self) {
+        if self.roll_step() {
+            panic!("fault injection: panic_step");
+        }
+    }
+
     // Decision-only entry points (no panic) so tests can replay the
     // stream without unwinding.
     #[doc(hidden)]
@@ -163,6 +200,29 @@ impl FaultPlan {
         self.panic_batcher
             .as_ref()
             .is_some_and(|s| s.roll(self.seed, BATCHER_TAG))
+    }
+
+    #[doc(hidden)]
+    pub fn roll_step(&self) -> bool {
+        self.panic_step
+            .as_ref()
+            .is_some_and(|s| s.roll(self.seed, STEP_TAG))
+    }
+
+    /// Checkpoint-save injection point: should this save tear (truncate)
+    /// the on-disk bytes? The writer mangles; this only decides.
+    pub fn roll_torn_checkpoint(&self) -> bool {
+        self.torn_checkpoint
+            .as_ref()
+            .is_some_and(|s| s.roll(self.seed, TORN_TAG))
+    }
+
+    /// Gradient-poison injection point: should this step's first weight
+    /// gradient become NaN? The executor mangles; this only decides.
+    pub fn roll_nan_grad(&self) -> bool {
+        self.nan_grad
+            .as_ref()
+            .is_some_and(|s| s.roll(self.seed, NANG_TAG))
     }
 
     /// How many worker panics this plan has actually fired.
@@ -182,6 +242,23 @@ impl FaultPlan {
             .map_or(0, |(_, s)| s.fired.load(Ordering::Relaxed))
     }
 
+    /// How many trainer-step panics this plan has actually fired.
+    pub fn injected_step_panics(&self) -> u64 {
+        self.panic_step.as_ref().map_or(0, |s| s.fired.load(Ordering::Relaxed))
+    }
+
+    /// How many checkpoint saves this plan has actually torn.
+    pub fn injected_torn_checkpoints(&self) -> u64 {
+        self.torn_checkpoint
+            .as_ref()
+            .map_or(0, |s| s.fired.load(Ordering::Relaxed))
+    }
+
+    /// How many gradients this plan has actually poisoned.
+    pub fn injected_nan_grads(&self) -> u64 {
+        self.nan_grad.as_ref().map_or(0, |s| s.fired.load(Ordering::Relaxed))
+    }
+
     /// Human-readable recap for the serve startup banner.
     pub fn summary(&self) -> String {
         let mut parts = Vec::new();
@@ -193,6 +270,15 @@ impl FaultPlan {
         }
         if let Some((d, s)) = &self.slow_batch {
             parts.push(format!("slow_batch={}us@{}", d.as_micros(), s.prob));
+        }
+        if let Some(s) = &self.panic_step {
+            parts.push(format!("panic_step@{}", s.prob));
+        }
+        if let Some(s) = &self.torn_checkpoint {
+            parts.push(format!("torn_checkpoint@{}", s.prob));
+        }
+        if let Some(s) = &self.nan_grad {
+            parts.push(format!("nan_grad@{}", s.prob));
         }
         if parts.is_empty() {
             parts.push("no active sites".to_string());
@@ -342,5 +428,49 @@ mod tests {
         let err = std::panic::catch_unwind(|| p.maybe_panic_worker());
         assert!(err.is_err());
         assert_eq!(p.injected_worker_panics(), 1);
+    }
+
+    #[test]
+    fn parses_training_sites() {
+        let p = FaultPlan::parse("panic_step@0.02,torn_checkpoint@0.5,nan_grad@0.1,seed=3", 0)
+            .unwrap();
+        assert_eq!(p.seed, 3);
+        assert!(p.panic_step.is_some());
+        assert!(p.torn_checkpoint.is_some());
+        assert!(p.nan_grad.is_some());
+        let s = p.summary();
+        assert!(s.contains("panic_step@0.02"), "{s}");
+        assert!(s.contains("torn_checkpoint@0.5"), "{s}");
+        assert!(s.contains("nan_grad@0.1"), "{s}");
+        for bad in ["panic_step@2", "torn_checkpoint@x", "nan_grad@-1"] {
+            assert!(FaultPlan::parse(bad, 0).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn training_sites_count_exactly_and_replay_deterministically() {
+        let a = FaultPlan::parse("panic_step@0.25,torn_checkpoint@0.25,nan_grad@0.25", 21).unwrap();
+        let b = FaultPlan::parse("panic_step@0.25,torn_checkpoint@0.25,nan_grad@0.25", 21).unwrap();
+        let (mut s, mut t, mut n) = (0u64, 0u64, 0u64);
+        for _ in 0..400 {
+            assert_eq!(a.roll_step(), b.roll_step());
+            assert_eq!(a.roll_torn_checkpoint(), b.roll_torn_checkpoint());
+            assert_eq!(a.roll_nan_grad(), b.roll_nan_grad());
+        }
+        for _ in 0..400 {
+            s += a.roll_step() as u64;
+            t += a.roll_torn_checkpoint() as u64;
+            n += a.roll_nan_grad() as u64;
+        }
+        assert_eq!(a.injected_step_panics() - b.injected_step_panics(), s);
+        assert_eq!(a.injected_torn_checkpoints() - b.injected_torn_checkpoints(), t);
+        assert_eq!(a.injected_nan_grads() - b.injected_nan_grads(), n);
+    }
+
+    #[test]
+    fn maybe_panic_step_panics_and_counts() {
+        let p = FaultPlan::parse("panic_step@1", 0).unwrap();
+        assert!(std::panic::catch_unwind(|| p.maybe_panic_step()).is_err());
+        assert_eq!(p.injected_step_panics(), 1);
     }
 }

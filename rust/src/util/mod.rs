@@ -6,6 +6,7 @@
 //! `criterion`, and `rayon` respectively (DESIGN.md, "vendored-dependency
 //! constraint").
 
+pub mod checkpoint;
 pub mod cli;
 pub mod crc;
 pub mod error;
@@ -15,6 +16,7 @@ pub mod pool;
 pub mod rng;
 pub mod timer;
 
+pub use checkpoint::Checkpoint;
 pub use cli::Args;
 pub use crc::crc32;
 pub use error::{Context, Error, Result};

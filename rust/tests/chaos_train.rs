@@ -1,0 +1,268 @@
+//! Chaos integration: the trainer under deterministic fault injection.
+//!
+//! The headline property (ISSUE 9 acceptance): with step panics, torn
+//! checkpoint writes and NaN gradients firing on seeded schedules, a
+//! crash/resume loop still converges to the *bit-identical* final state
+//! of an unfaulted run, and every recovery counter (caught panics,
+//! diverged steps, rollbacks, torn saves) matches the injector's own
+//! counts exactly.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Once};
+
+use binaryconnect::coordinator::{train, LrSchedule, ResumeFrom, TrainOpts};
+use binaryconnect::data::{Dataset, SplitData};
+use binaryconnect::runtime::{
+    reference::mlp_info, Executor, Hyper, Mode, Opt, ReferenceExecutor, TrainState,
+};
+use binaryconnect::util::{checkpoint, FaultPlan, Rng};
+
+const DIM: usize = 12;
+const CLASSES: usize = 4;
+
+/// Injected panics are expected noise; a chaos run would otherwise spew
+/// backtraces. Forward every *other* panic to the default hook so a real
+/// bug still prints.
+fn quiet_injected_panics() {
+    static QUIET: Once = Once::new();
+    QUIET.call_once(|| {
+        let default = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let payload = info.payload();
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_default();
+            if !msg.starts_with("fault injection:") {
+                default(info);
+            }
+        }));
+    });
+}
+
+fn exec_with(faults: Option<Arc<FaultPlan>>) -> ReferenceExecutor {
+    let mut ex = ReferenceExecutor::new(mlp_info("micro", DIM, 10, 2, CLASSES, 8)).unwrap();
+    ex.set_faults(faults);
+    ex
+}
+
+/// Tiny separable synthetic dataset: 64 train rows -> 8 steps/epoch, so
+/// a crash/resume loop with a per-step panic probability converges fast.
+fn data(seed: u64) -> SplitData {
+    let mut rng = Rng::new(seed);
+    let mut mk = |n: usize| {
+        let mut ds = Dataset::new("micro", (DIM, 1, 1), CLASSES);
+        let mut row = vec![0f32; DIM];
+        for i in 0..n {
+            let label = (i % CLASSES) as u8;
+            for (j, v) in row.iter_mut().enumerate() {
+                let noise = (rng.next_u64() % 2048) as f32 / 1024.0 - 1.0;
+                *v = noise + if j % CLASSES == label as usize { 1.5 } else { 0.0 };
+            }
+            ds.push(&row, label);
+        }
+        ds
+    };
+    SplitData::from_train_test(mk(72), mk(24), 8)
+}
+
+fn opts(epochs: usize) -> TrainOpts {
+    TrainOpts {
+        epochs,
+        schedule: LrSchedule::Exponential { start: 0.01, end: 0.002, epochs },
+        mode: Mode::Det,
+        opt: Opt::Adam,
+        seed: 7,
+        verbose: false,
+        ..Default::default()
+    }
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("bc_chaos_train_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn state_bits(s: &TrainState) -> Vec<Vec<Vec<u32>>> {
+    [&s.params, &s.m, &s.v]
+        .iter()
+        .map(|g| g.iter().map(|t| t.iter().map(|x| x.to_bits()).collect()).collect())
+        .collect()
+}
+
+/// Deterministic crash recovery: a guaranteed (p=1) step panic kills the
+/// run right after the epoch-1 checkpoint; resuming `latest` finishes the
+/// run bit-identically to a never-crashed one.
+#[test]
+fn crash_after_checkpoint_resumes_bit_exactly() {
+    quiet_injected_panics();
+    let d = data(21);
+    let clean = train(&exec_with(None), &d, &opts(3)).unwrap();
+
+    let dir = tmpdir("crash");
+    // phase 1: train epoch 0, checkpoint, then crash at epoch 1 step 1
+    {
+        use std::sync::atomic::AtomicBool;
+        let mut o = opts(3);
+        o.checkpoint.dir = Some(dir.clone());
+        o.stop = Some(Arc::new(AtomicBool::new(true))); // stop after epoch 1
+        let r = train(&exec_with(None), &d, &o).unwrap();
+        assert!(r.interrupted);
+        assert!(dir.join("ckpt-000001.bcckpt").exists());
+    }
+    let plan = Arc::new(FaultPlan::parse("panic_step@1", 0).unwrap());
+    {
+        let mut o = opts(3);
+        o.checkpoint.dir = Some(dir.clone());
+        o.checkpoint.resume = Some(ResumeFrom::Latest);
+        o.faults = Some(plan.clone());
+        let ex = exec_with(Some(plan.clone()));
+        let crashed =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| train(&ex, &d, &o)));
+        assert!(crashed.is_err(), "p=1 step panic must fire");
+    }
+    assert_eq!(plan.injected_step_panics(), 1);
+
+    // phase 2: resume without faults and finish
+    let mut o = opts(3);
+    o.checkpoint.dir = Some(dir.clone());
+    o.checkpoint.resume = Some(ResumeFrom::Latest);
+    let resumed = train(&exec_with(None), &d, &o).unwrap();
+
+    assert_eq!(state_bits(&clean.state), state_bits(&resumed.state));
+    assert_eq!(clean.steps, resumed.steps);
+    assert_eq!(clean.best_val_err.to_bits(), resumed.best_val_err.to_bits());
+    assert_eq!(clean.test_err.to_bits(), resumed.test_err.to_bits());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The crash/resume *loop*: a seeded per-step panic probability keeps
+/// killing the process-equivalent (catch_unwind) mid-epoch; resuming
+/// `latest` each time must still land on the unfaulted run's bits, with
+/// the caught-panic count exactly equal to the injector's fired count.
+#[test]
+fn seeded_crash_resume_loop_lands_on_clean_bits() {
+    quiet_injected_panics();
+    let d = data(22);
+    let clean = train(&exec_with(None), &d, &opts(2)).unwrap();
+
+    let dir = tmpdir("crashloop");
+    let plan = Arc::new(FaultPlan::parse("panic_step@0.1,seed=9", 0).unwrap());
+    let mut caught = 0u64;
+    let mut finished = None;
+    for _attempt in 0..100 {
+        let mut o = opts(2);
+        o.checkpoint.dir = Some(dir.clone());
+        o.checkpoint.resume = Some(ResumeFrom::Latest);
+        o.faults = Some(plan.clone());
+        let ex = exec_with(Some(plan.clone()));
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| train(&ex, &d, &o))) {
+            Ok(r) => {
+                finished = Some(r.unwrap());
+                break;
+            }
+            Err(_) => caught += 1,
+        }
+    }
+    let r = finished.expect("run never completed within 100 crash/resume attempts");
+    // injector and harness count the same events
+    assert_eq!(caught, plan.injected_step_panics());
+    assert_eq!(state_bits(&clean.state), state_bits(&r.state), "after {caught} crashes");
+    assert_eq!(clean.steps, r.steps);
+    assert_eq!(clean.curves.len(), r.curves.len());
+    for (a, b) in clean.curves.iter().zip(&r.curves) {
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+        assert_eq!(a.val_err.to_bits(), b.val_err.to_bits());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Divergence sentinel with skip: a p=1 NaN-gradient injection poisons
+/// every step; skipping leaves the state bit-identical to init, and the
+/// diverged-step accounting matches the injector exactly.
+#[test]
+fn nan_grad_with_skip_preserves_state_and_counts_exactly() {
+    let d = data(23);
+    let plan = Arc::new(FaultPlan::parse("nan_grad@1", 0).unwrap());
+    let ex = exec_with(Some(plan.clone()));
+    let mut o = opts(1);
+    o.faults = Some(plan.clone());
+    assert!(o.skip_diverged, "skip is the default policy");
+
+    let init = ex
+        .init_state(&Hyper { seed: (o.seed & 0xFF_FFFF) as u32, ..Default::default() })
+        .unwrap();
+    let r = train(&ex, &d, &o).unwrap();
+
+    assert_eq!(state_bits(&init), state_bits(&r.state), "skipped updates must not land");
+    assert_eq!(r.diverged_steps, r.steps as u64, "every step was poisoned");
+    assert_eq!(r.diverged_steps, plan.injected_nan_grads());
+    assert_eq!(r.rollbacks, 0, "rollback is off by default");
+}
+
+/// Without skip, the poisoned update lands: NaN reaches the weights.
+#[test]
+fn nan_grad_without_skip_poisons_the_weights() {
+    let d = data(24);
+    let plan = Arc::new(FaultPlan::parse("nan_grad@1", 0).unwrap());
+    let ex = exec_with(Some(plan.clone()));
+    let mut o = opts(1);
+    o.faults = Some(plan.clone());
+    o.skip_diverged = false;
+    let r = train(&ex, &d, &o).unwrap();
+    assert!(r.diverged_steps > 0);
+    assert!(
+        r.state.params[0].iter().any(|v| !v.is_finite()),
+        "un-skipped NaN update must reach the weights"
+    );
+}
+
+/// Rollback escalation: with every step diverging, each replay re-trips
+/// the `max_diverged_steps` threshold until the rollback cap turns the
+/// death spiral into a clear error — after exactly cap+1 attempts of
+/// threshold+1 poisoned steps each.
+#[test]
+fn rollback_exhaustion_is_a_clear_error() {
+    let d = data(25);
+    let plan = Arc::new(FaultPlan::parse("nan_grad@1", 0).unwrap());
+    let ex = exec_with(Some(plan.clone()));
+    let mut o = opts(2);
+    o.faults = Some(plan.clone());
+    o.max_diverged_steps = 2;
+    let err = train(&ex, &d, &o).unwrap_err().to_string();
+    assert!(err.contains("rollback"), "{err}");
+    // 8 rollbacks + the initial attempt, each aborted after 3 bad steps
+    assert_eq!(plan.injected_nan_grads(), 9 * 3);
+}
+
+/// Torn-write injection: every checkpoint save lands truncated, load-time
+/// CRC validation rejects them all, and `--resume latest` degrades to a
+/// clean fresh start instead of trusting a corrupt file.
+#[test]
+fn torn_checkpoints_are_rejected_and_resume_starts_fresh() {
+    let d = data(26);
+    let clean = train(&exec_with(None), &d, &opts(2)).unwrap();
+
+    let dir = tmpdir("torn");
+    let plan = Arc::new(FaultPlan::parse("torn_checkpoint@1", 0).unwrap());
+    let mut o = opts(2);
+    o.checkpoint.dir = Some(dir.clone());
+    o.faults = Some(plan.clone());
+    let r = train(&exec_with(Some(plan.clone())), &d, &o).unwrap();
+    // the run itself is unaffected — only the on-disk artifacts are torn
+    assert_eq!(state_bits(&clean.state), state_bits(&r.state));
+    assert_eq!(plan.injected_torn_checkpoints(), 2, "one torn save per epoch");
+    assert_eq!(checkpoint::list(&dir).len(), 2);
+    assert!(checkpoint::latest_good(&dir).is_none(), "every file must fail validation");
+
+    // resume over the all-torn dir: graceful fresh start, same result
+    let mut o2 = opts(2);
+    o2.checkpoint.dir = Some(dir.clone());
+    o2.checkpoint.resume = Some(ResumeFrom::Latest);
+    let resumed = train(&exec_with(None), &d, &o2).unwrap();
+    assert_eq!(state_bits(&clean.state), state_bits(&resumed.state));
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,328 @@
+//! The checkpoint/resume contract, end to end over the real trainer:
+//!
+//!   train(N)  ==  train(k) + resume + train(N-k)      (bit-exactly)
+//!
+//! for every optimizer (SGD / Nesterov / ADAM), both binarization modes
+//! (det / stoch), and both executor kernel paths (fast / baseline) —
+//! params, optimizer slots, curves, best-model trackers and step counters
+//! all included. Plus the resume guard rails: configuration mismatches
+//! refuse to resume, retention prunes, and resuming a finished run is a
+//! no-op.
+
+use std::path::PathBuf;
+
+use binaryconnect::coordinator::{train, LrSchedule, ResumeFrom, RunResult, TrainOpts};
+use binaryconnect::data::{Dataset, SplitData};
+use binaryconnect::runtime::{reference::mlp_info, Mode, Opt, ReferenceExecutor, TrainState};
+use binaryconnect::util::Rng;
+
+const DIM: usize = 12;
+const CLASSES: usize = 4;
+
+fn exec() -> ReferenceExecutor {
+    ReferenceExecutor::new(mlp_info("micro", DIM, 10, 2, CLASSES, 8)).unwrap()
+}
+
+/// Tiny separable synthetic dataset matching the micro MLP's shape.
+fn data(seed: u64) -> SplitData {
+    let mut rng = Rng::new(seed);
+    let mut mk = |n: usize| {
+        let mut ds = Dataset::new("micro", (DIM, 1, 1), CLASSES);
+        let mut row = vec![0f32; DIM];
+        for i in 0..n {
+            let label = (i % CLASSES) as u8;
+            for (j, v) in row.iter_mut().enumerate() {
+                let noise = (rng.next_u64() % 2048) as f32 / 1024.0 - 1.0;
+                *v = noise + if j % CLASSES == label as usize { 1.5 } else { 0.0 };
+            }
+            ds.push(&row, label);
+        }
+        ds
+    };
+    SplitData::from_train_test(mk(160), mk(40), 32)
+}
+
+fn opts(mode: Mode, opt: Opt, epochs: usize) -> TrainOpts {
+    TrainOpts {
+        epochs,
+        schedule: LrSchedule::Exponential { start: 0.01, end: 0.002, epochs },
+        mode,
+        opt,
+        seed: 7,
+        verbose: false,
+        ..Default::default()
+    }
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("bc_ckpt_train_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn state_bits(s: &TrainState) -> Vec<Vec<Vec<u32>>> {
+    [&s.params, &s.m, &s.v]
+        .iter()
+        .map(|g| g.iter().map(|t| t.iter().map(|x| x.to_bits()).collect()).collect())
+        .collect()
+}
+
+/// Everything except wall-clock seconds must match bit-for-bit.
+fn assert_runs_identical(full: &RunResult, resumed: &RunResult, what: &str) {
+    assert_eq!(state_bits(&full.state), state_bits(&resumed.state), "{what}: state");
+    assert_eq!(full.steps, resumed.steps, "{what}: steps");
+    assert_eq!(full.best_epoch, resumed.best_epoch, "{what}: best epoch");
+    assert_eq!(
+        full.best_val_err.to_bits(),
+        resumed.best_val_err.to_bits(),
+        "{what}: best val err"
+    );
+    assert_eq!(full.test_err.to_bits(), resumed.test_err.to_bits(), "{what}: test err");
+    assert_eq!(full.curves.len(), resumed.curves.len(), "{what}: curve length");
+    for (a, b) in full.curves.iter().zip(&resumed.curves) {
+        assert_eq!(a.epoch, b.epoch, "{what}: curve epoch");
+        assert_eq!(a.lr.to_bits(), b.lr.to_bits(), "{what}: curve lr");
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "{what}: train loss");
+        assert_eq!(a.train_err.to_bits(), b.train_err.to_bits(), "{what}: train err");
+        assert_eq!(a.val_err.to_bits(), b.val_err.to_bits(), "{what}: val err");
+        // a.seconds / b.seconds are wall clock; deliberately not compared
+    }
+}
+
+/// The contract itself: 4 uninterrupted epochs vs. 2 epochs + resume from
+/// the on-disk checkpoint (in a fresh executor) + 2 more.
+fn assert_resume_bit_exact(mode: Mode, opt: Opt, fast: bool, tag: &str) {
+    let d = data(3);
+    let epochs = 4;
+
+    let mut ex = exec();
+    ex.set_fast(fast);
+    let full = train(&ex, &d, &opts(mode, opt, epochs)).unwrap();
+
+    // same run, checkpointing every epoch and keeping every file
+    let dir = tmpdir(tag);
+    let mut o = opts(mode, opt, epochs);
+    o.checkpoint.dir = Some(dir.clone());
+    o.checkpoint.keep = 0;
+    let mut ex2 = exec();
+    ex2.set_fast(fast);
+    let ckpt_run = train(&ex2, &d, &o).unwrap();
+    assert_runs_identical(&full, &ckpt_run, &format!("{tag}: checkpointing changed the run"));
+
+    // resume the k=2 checkpoint in a fresh executor and finish
+    let mut o2 = opts(mode, opt, epochs);
+    o2.checkpoint.resume = Some(ResumeFrom::Path(dir.join("ckpt-000002.bcckpt")));
+    let mut ex3 = exec();
+    ex3.set_fast(fast);
+    let resumed = train(&ex3, &d, &o2).unwrap();
+    assert_runs_identical(&full, &resumed, &format!("{tag}: resume diverged"));
+    assert!(!resumed.interrupted);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_bit_exact_sgd_det() {
+    assert_resume_bit_exact(Mode::Det, Opt::Sgd, true, "sgd_det");
+}
+
+#[test]
+fn resume_bit_exact_sgd_stoch() {
+    assert_resume_bit_exact(Mode::Stoch, Opt::Sgd, true, "sgd_stoch");
+}
+
+#[test]
+fn resume_bit_exact_nesterov_det() {
+    assert_resume_bit_exact(Mode::Det, Opt::Nesterov, true, "nesterov_det");
+}
+
+#[test]
+fn resume_bit_exact_nesterov_stoch() {
+    assert_resume_bit_exact(Mode::Stoch, Opt::Nesterov, true, "nesterov_stoch");
+}
+
+#[test]
+fn resume_bit_exact_adam_det() {
+    assert_resume_bit_exact(Mode::Det, Opt::Adam, true, "adam_det");
+}
+
+#[test]
+fn resume_bit_exact_adam_stoch() {
+    assert_resume_bit_exact(Mode::Stoch, Opt::Adam, true, "adam_stoch");
+}
+
+#[test]
+fn resume_bit_exact_baseline_path() {
+    // the dense seed-era kernel path honors the same contract
+    assert_resume_bit_exact(Mode::Det, Opt::Adam, false, "baseline_adam_det");
+}
+
+#[test]
+fn resume_latest_picks_newest_and_empty_dir_starts_fresh() {
+    let d = data(5);
+    let ex = exec();
+    let full = train(&ex, &d, &opts(Mode::Det, Opt::Sgd, 3)).unwrap();
+
+    // resume latest over an empty dir == fresh start
+    let dir = tmpdir("latest");
+    let mut o = opts(Mode::Det, Opt::Sgd, 3);
+    o.checkpoint.dir = Some(dir.clone());
+    o.checkpoint.resume = Some(ResumeFrom::Latest);
+    let fresh = train(&ex, &d, &o).unwrap();
+    assert_runs_identical(&full, &fresh, "fresh start under --resume latest");
+
+    // now the dir has checkpoints: run again with a shorter budget
+    // already done (3 epochs saved); resuming latest is a no-op run
+    let resumed = train(&ex, &d, &o).unwrap();
+    assert_runs_identical(&full, &resumed, "resume of a finished run");
+    assert_eq!(resumed.curves.len(), 3, "no extra epochs after completion");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_latest_without_dir_is_an_error() {
+    let d = data(6);
+    let ex = exec();
+    let mut o = opts(Mode::Det, Opt::Sgd, 2);
+    o.checkpoint.resume = Some(ResumeFrom::Latest);
+    let err = train(&ex, &d, &o).unwrap_err().to_string();
+    assert!(err.contains("checkpoint dir"), "{err}");
+}
+
+#[test]
+fn resume_from_missing_path_is_an_error() {
+    let d = data(6);
+    let ex = exec();
+    let mut o = opts(Mode::Det, Opt::Sgd, 2);
+    o.checkpoint.resume = Some(ResumeFrom::Path(PathBuf::from("/nonexistent/x.bcckpt")));
+    assert!(train(&ex, &d, &o).is_err());
+}
+
+#[test]
+fn resume_refuses_configuration_mismatches() {
+    let d = data(8);
+    let ex = exec();
+    let dir = tmpdir("compat");
+    let mut o = opts(Mode::Det, Opt::Adam, 3);
+    o.checkpoint.dir = Some(dir.clone());
+    o.checkpoint.keep = 0;
+    train(&ex, &d, &o).unwrap();
+    let ck = dir.join("ckpt-000002.bcckpt");
+
+    // different optimizer
+    let mut o2 = opts(Mode::Det, Opt::Sgd, 3);
+    o2.checkpoint.resume = Some(ResumeFrom::Path(ck.clone()));
+    let err = train(&ex, &d, &o2).unwrap_err().to_string();
+    assert!(err.contains("optimizer"), "{err}");
+
+    // different binarization mode
+    let mut o2 = opts(Mode::Stoch, Opt::Adam, 3);
+    o2.checkpoint.resume = Some(ResumeFrom::Path(ck.clone()));
+    let err = train(&ex, &d, &o2).unwrap_err().to_string();
+    assert!(err.contains("mode"), "{err}");
+
+    // different seed
+    let mut o2 = opts(Mode::Det, Opt::Adam, 3);
+    o2.seed = 8;
+    o2.checkpoint.resume = Some(ResumeFrom::Path(ck.clone()));
+    let err = train(&ex, &d, &o2).unwrap_err().to_string();
+    assert!(err.contains("seed"), "{err}");
+
+    // different epoch target
+    let mut o2 = opts(Mode::Det, Opt::Adam, 5);
+    o2.checkpoint.resume = Some(ResumeFrom::Path(ck.clone()));
+    let err = train(&ex, &d, &o2).unwrap_err().to_string();
+    assert!(err.contains("epochs"), "{err}");
+
+    // different silent hyperparameter (dropout) -> fingerprint mismatch
+    let mut o2 = opts(Mode::Det, Opt::Adam, 3);
+    o2.dropout = 0.25;
+    o2.checkpoint.resume = Some(ResumeFrom::Path(ck.clone()));
+    let err = train(&ex, &d, &o2).unwrap_err().to_string();
+    assert!(err.contains("fingerprint"), "{err}");
+
+    // different model shape -> state validation failure
+    let other = ReferenceExecutor::new(mlp_info("micro", DIM, 6, 2, CLASSES, 8)).unwrap();
+    let mut o2 = opts(Mode::Det, Opt::Adam, 3);
+    o2.checkpoint.resume = Some(ResumeFrom::Path(ck.clone()));
+    assert!(train(&other, &d, &o2).is_err());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn trainer_retention_keeps_newest_files() {
+    let d = data(9);
+    let ex = exec();
+    let dir = tmpdir("retain");
+    let mut o = opts(Mode::Det, Opt::Sgd, 5);
+    o.checkpoint.dir = Some(dir.clone());
+    o.checkpoint.keep = 2;
+    train(&ex, &d, &o).unwrap();
+    let names: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .collect();
+    let mut names = names;
+    names.sort();
+    assert_eq!(names, vec!["ckpt-000004.bcckpt", "ckpt-000005.bcckpt"], "{names:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn checkpoint_cadence_skips_intermediate_epochs() {
+    let d = data(10);
+    let ex = exec();
+    let dir = tmpdir("cadence");
+    let mut o = opts(Mode::Det, Opt::Sgd, 5);
+    o.checkpoint.dir = Some(dir.clone());
+    o.checkpoint.every_epochs = 2;
+    o.checkpoint.keep = 0;
+    train(&ex, &d, &o).unwrap();
+    let mut names: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .collect();
+    names.sort();
+    // cadence epochs 2 and 4, plus the always-saved final epoch 5
+    assert_eq!(
+        names,
+        vec!["ckpt-000002.bcckpt", "ckpt-000004.bcckpt", "ckpt-000005.bcckpt"],
+        "{names:?}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn stop_latch_checkpoints_and_resumes_bit_exactly() {
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+
+    let d = data(11);
+    let ex = exec();
+    let full = train(&ex, &d, &opts(Mode::Det, Opt::Nesterov, 4)).unwrap();
+
+    // pre-set latch: the run stops (and checkpoints) after epoch 1
+    let dir = tmpdir("stop");
+    let mut o = opts(Mode::Det, Opt::Nesterov, 4);
+    o.checkpoint.dir = Some(dir.clone());
+    o.stop = Some(Arc::new(AtomicBool::new(true)));
+    let stopped = train(&ex, &d, &o).unwrap();
+    assert!(stopped.interrupted);
+    assert_eq!(stopped.curves.len(), 1);
+    assert!(dir.join("ckpt-000001.bcckpt").exists());
+
+    // resume latest and run to completion: identical to uninterrupted
+    let mut o2 = opts(Mode::Det, Opt::Nesterov, 4);
+    o2.checkpoint.dir = Some(dir.clone());
+    o2.checkpoint.resume = Some(ResumeFrom::Latest);
+    let resumed = train(&ex, &d, &o2).unwrap();
+    assert!(!resumed.interrupted);
+    assert_runs_identical(&full, &resumed, "stop-latch resume");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
