@@ -21,6 +21,10 @@
 //!     b=64, plus end-to-end `forward_bnn_into` vs `forward_into` on
 //!     784 -> 3x1024 -> 10 — headline `bnn_speedup_vs_packed` rides the
 //!     avx2 rung when the host has it
+//!   * the conv ladder (`conv_naive_{isa}` vs `conv_im2col_{isa}`
+//!     series): binary convolution as naive direct convolution against
+//!     the im2col lowering onto the packed sign-GEMM, per ISA rung, with
+//!     the headline `conv_im2col_speedup_vs_naive` metric riding avx2
 //!   * checkpointing: `ckpt_save` (the atomic fsync'd save of a
 //!     paper-scale mlp1024 TrainState, tracked as `ckpt_save_ms`) and the
 //!     per-epoch train-loop tax `train_overhead_with_ckpt` (10-step mlp
@@ -38,6 +42,7 @@ use binaryconnect::bench_harness::{bench, fmt_time, JsonReport, Table};
 use binaryconnect::binary::bnn::{pack_rows_into, words_per_row, xnor_layer_bits};
 use binaryconnect::binary::packed::{BitMatrix, PackedLayer};
 use binaryconnect::binary::PackedMlp;
+use binaryconnect::conv::{im2col, oracle as conv_oracle};
 use binaryconnect::kernel;
 use binaryconnect::kernel::simd::{self, Isa, ALL_ISAS};
 use binaryconnect::runtime::reference::mlp_info;
@@ -455,6 +460,64 @@ fn main() -> Result<()> {
     simd::set_active(selected).map_err(Error::msg)?;
     t5.print();
     println!("(acceptance: bnn_speedup_vs_packed >= 2x on the avx2 rung, 1024x1024 b=64)");
+
+    // ---------- conv ladder: naive direct conv vs im2col + packed sign-GEMM ----------
+    // The binary-conv lowering's win, isolated per ISA rung: the same
+    // sign-weight SAME convolution computed by the seven-loop direct
+    // oracle (what you ship without the lowering) versus im2col into the
+    // packed sign-GEMM (what conv/ actually runs). 3x3 kernel, 16x16
+    // spatial, 32 -> 32 channels at b=8 — the mid-stack C3 shape. The
+    // naive side is scalar by construction; running it on every rung
+    // keeps the per-ISA speedup honest about dispatch overhead.
+    println!("\nconv: naive direct vs im2col + packed sign-GEMM (3x3, 16x16, 32->32, b=8):");
+    let mut t7 = Table::new(&["isa", "naive direct", "im2col+packed", "speedup"]);
+    let (cb, ch, cw, cin, cout) = (8usize, 16usize, 16usize, 32usize, 32usize);
+    let (ckh, ckw) = (3usize, 3usize);
+    let pk = ckh * ckw * cin;
+    let rows = cb * ch * cw;
+    let cwt: Vec<f32> = (0..pk * cout).map(|_| rng.normal()).collect();
+    // the naive side convolves with the materialized ±1 signs — the
+    // same function the packed side computes straight from the bits
+    let csigns: Vec<f32> = cwt.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect();
+    let cbits = BitMatrix::pack(&cwt, pk, cout);
+    let cx: Vec<f32> = (0..cb * ch * cw * cin).map(|_| rng.normal()).collect();
+    let mut cy = vec![0f32; rows * cout];
+    let mut cpatches = vec![0f32; rows * pk];
+    let mut cxt = vec![0f32; rows * pk];
+    let mut ctot = vec![0f32; rows];
+    let conv_shape = format!("{ckh}x{ckw} {ch}x{cw} {cin}->{cout} b={cb}");
+    for &isa in ALL_ISAS.iter().rev() {
+        if !isa.supported() {
+            continue;
+        }
+        simd::set_active(isa).map_err(Error::msg)?;
+        let name = isa.name();
+        let rcn = bench(&format!("conv_naive_{name}"), 2, iters, || {
+            conv_oracle::conv2d_forward(&cx, cb, ch, cw, cin, &csigns, ckh, ckw, cout, &mut cy);
+            std::hint::black_box(&cy);
+        });
+        let rci = bench(&format!("conv_im2col_{name}"), 2, iters, || {
+            im2col::im2col_into(&cx, cb, ch, cw, cin, ckh, ckw, &mut cpatches);
+            cbits.matmul_scaled_into(&cpatches, rows, 1.0, &mut cy, &mut cxt, &mut ctot);
+            std::hint::black_box(&cy);
+        });
+        report.add(&rcn, &conv_shape);
+        report.add(&rci, &conv_shape);
+        let cxup = rcn.mean_s / rci.mean_s;
+        report.metric(&format!("conv_im2col_speedup_vs_naive_{name}"), cxup);
+        if isa == headline_isa {
+            report.metric("conv_im2col_speedup_vs_naive", cxup);
+        }
+        t7.row(&[
+            name.to_string(),
+            fmt_time(rcn.mean_s),
+            fmt_time(rci.mean_s),
+            format!("{cxup:.2}x"),
+        ]);
+    }
+    simd::set_active(selected).map_err(Error::msg)?;
+    t7.print();
+    println!("(acceptance: conv_im2col_speedup_vs_naive >= 2x on the avx2 rung)");
 
     // ---------- checkpoint: crash-safe save cost + train-loop overhead ----------
     // `ckpt_save_ms` times the full atomic cycle (serialize -> same-dir

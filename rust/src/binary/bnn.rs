@@ -275,6 +275,10 @@ impl PackedMlp {
     /// `max_batch` rows with zero per-call allocations.
     pub fn bnn_workspace(&self, max_batch: usize) -> BnnWorkspace {
         assert!(max_batch >= 1, "workspace batch capacity must be >= 1");
+        assert!(
+            self.conv.is_empty(),
+            "BNN mode does not support conv models (use packed-f32)"
+        );
         let w = self.max_width();
         let hw = self.max_hidden_words();
         BnnWorkspace {
@@ -294,7 +298,13 @@ impl PackedMlp {
     pub fn activation_memory_bytes(&self, max_batch: usize, mode: ForwardMode) -> usize {
         let w = self.max_width();
         match mode {
-            ForwardMode::PackedF32 => (3 * w * max_batch + max_batch) * 4,
+            ForwardMode::PackedF32 => {
+                // same sizing logic as `workspace()` (ping + pong + xt +
+                // totals + the conv patch/pool scratch; pool_idx is u32,
+                // so prepool/4 entries cost prepool bytes)
+                let (pp, xt, totals, patches, prepool) = self.workspace_lens(max_batch);
+                (2 * pp + xt + totals + patches + prepool + prepool / 4) * 4
+            }
             ForwardMode::Bnn => {
                 (w * max_batch + self.in_dim * max_batch + max_batch) * 4
                     + 2 * self.max_hidden_words() * max_batch * 8
@@ -338,6 +348,10 @@ impl PackedMlp {
         ws: &'ws mut BnnWorkspace,
     ) -> &'ws [f32] {
         assert_eq!(x.len(), b * self.in_dim);
+        assert!(
+            self.conv.is_empty(),
+            "BNN mode does not support conv models (use packed-f32)"
+        );
         assert!(
             b <= ws.max_batch,
             "batch {b} exceeds the workspace capacity {}",
@@ -492,6 +506,55 @@ mod tests {
                 "bnn formula drifted from the workspace (b={b})"
             );
         }
+    }
+
+    /// A conv-front model for the guard/memory tests below.
+    fn toy_conv() -> PackedMlp {
+        use super::super::packed::PackedConvLayer;
+        let wc = rand_mat(18, 3, 230);
+        let wd = rand_mat(12, 2, 231);
+        PackedMlp {
+            conv: vec![PackedConvLayer {
+                bits: BitMatrix::pack(&wc, 18, 3),
+                scale: vec![0.5; 3],
+                shift: vec![0.0; 3],
+                kh: 3,
+                kw: 3,
+                cin: 2,
+                cout: 3,
+                h_in: 4,
+                w_in: 4,
+                pool: true,
+            }],
+            layers: vec![PackedLayer {
+                bits: BitMatrix::pack(&wd, 12, 2),
+                scale: vec![1.0; 2],
+                shift: vec![0.0; 2],
+                relu: false,
+            }],
+            in_dim: 32,
+            classes: 2,
+        }
+    }
+
+    #[test]
+    fn packed_f32_memory_formula_covers_conv_scratch() {
+        // the conv workspace carries patch/pool scratch the dense formula
+        // never saw; the reported figure must track the real allocation
+        let mlp = toy_conv();
+        for b in [1usize, 3] {
+            assert_eq!(
+                mlp.activation_memory_bytes(b, ForwardMode::PackedF32),
+                mlp.workspace(b).memory_bytes(),
+                "packed-f32 formula drifted from the conv workspace (b={b})"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "BNN mode does not support conv models")]
+    fn bnn_workspace_rejects_conv_models() {
+        let _ = toy_conv().bnn_workspace(2);
     }
 
     #[test]

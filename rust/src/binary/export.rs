@@ -1,9 +1,10 @@
-//! Export a trained MLP TrainState into the packed inference engine, and
-//! (de)serialize packed models to disk.
+//! Export a trained model TrainState into the packed inference engine,
+//! and (de)serialize packed models to disk.
 //!
 //! The layer layout follows the manifest's parameter naming convention
 //! (python/compile/models.py): repeated [W, bn.gamma, bn.beta, bn.rmean,
-//! bn.rvar] blocks, then the output [W, b] pair.
+//! bn.rvar] blocks — conv blocks first for CNNs, identified by their
+//! 4-d `[kh, kw, cin, cout]` weight shape — then the output [W, b] pair.
 
 use std::io::Read;
 use std::path::Path;
@@ -14,15 +15,54 @@ use crate::util::error::{Context, Result};
 
 use crate::runtime::{ModelInfo, TrainState};
 
-use super::packed::{BitMatrix, PackedLayer, PackedMlp, BN_EPS};
+use super::packed::{BitMatrix, PackedConvLayer, PackedLayer, PackedMlp, BN_EPS};
 
-/// Fold a trained MLP state into the multiplication-free packed engine
+/// Fold a trained state into the multiplication-free packed engine
 /// (deterministic BinaryConnect test-time network, paper Sec. 2.6
 /// method 1). The ±H scale is folded into the BN affine so the packed
-/// engine can keep computing with ±1 bits.
+/// engine can keep computing with ±1 bits; conv filter banks flatten
+/// row-major into `(kh*kw*cin) x cout` sign matrices for the im2col
+/// lowering.
 pub fn pack_mlp(info: &ModelInfo, state: &TrainState) -> Result<PackedMlp> {
-    let mut layers: Vec<PackedLayer> = vec![];
+    let dims = crate::conv::spatial_dims(info)?;
+    let mut conv: Vec<PackedConvLayer> = vec![];
     let mut i = 0usize;
+    for d in &dims {
+        if d.param != i {
+            bail!("conv block {} is not at the expected parameter offset {i}", d.name);
+        }
+        let p = &info.params[i];
+        let w = state.param_vec(i)?;
+        let h = p.glorot as f32;
+        let pk = d.kh * d.kw * d.cin;
+        let bits = BitMatrix::pack(&w, pk, d.cout);
+        // conv stacks are always BN-normalized: W + 4 BN tensors
+        let gamma = state.param_vec(i + 1)?;
+        let beta = state.param_vec(i + 2)?;
+        let rmean = state.param_vec(i + 3)?;
+        let rvar = state.param_vec(i + 4)?;
+        let mut scale = vec![0f32; d.cout];
+        let mut shift = vec![0f32; d.cout];
+        for c in 0..d.cout {
+            let s = gamma[c] / (rvar[c] + BN_EPS).sqrt();
+            scale[c] = s * h;
+            shift[c] = beta[c] - rmean[c] * s;
+        }
+        conv.push(PackedConvLayer {
+            bits,
+            scale,
+            shift,
+            kh: d.kh,
+            kw: d.kw,
+            cin: d.cin,
+            cout: d.cout,
+            h_in: d.h_in,
+            w_in: d.w_in,
+            pool: d.pool,
+        });
+        i += 5;
+    }
+    let mut layers: Vec<PackedLayer> = vec![];
     let n = info.params.len();
     while i < n {
         let p = &info.params[i];
@@ -30,7 +70,11 @@ pub fn pack_mlp(info: &ModelInfo, state: &TrainState) -> Result<PackedMlp> {
             bail!("unexpected param {} at index {i}", p.name);
         }
         if p.shape.len() != 2 {
-            bail!("pack_mlp only supports dense layers, {} has shape {:?}", p.name, p.shape);
+            bail!(
+                "pack_mlp only supports dense and conv layers, {} has shape {:?}",
+                p.name,
+                p.shape
+            );
         }
         let (k, units) = (p.shape[0], p.shape[1]);
         let w = state.param_vec(i)?;
@@ -64,15 +108,23 @@ pub fn pack_mlp(info: &ModelInfo, state: &TrainState) -> Result<PackedMlp> {
             i += 5;
         }
     }
-    let in_dim = info.params[0].shape[0];
-    let classes = layers.last().context("empty model")?.bits.n;
-    Ok(PackedMlp { layers, in_dim, classes })
+    let in_dim = match conv.first() {
+        Some(c0) => c0.in_dim(),
+        None => info.params[0].shape[0],
+    };
+    let classes = layers.last().context("no dense output layer")?.bits.n;
+    Ok(PackedMlp { conv, layers, in_dim, classes })
 }
 
-const MAGIC: &[u8; 8] = b"BCPACK02";
-/// The pre-checksum format. Refusing it with a targeted message beats a
-/// generic "not a BCPACK file" for anyone holding a stale artifact.
-const LEGACY_MAGIC: &[u8; 8] = b"BCPACK01";
+const MAGIC: &[u8; 8] = b"BCPACK03";
+/// Superseded formats. Refusing them with a targeted message beats a
+/// generic "not a BCPACK file" for anyone holding a stale artifact:
+/// BCPACK01 lacked the checksum, BCPACK02 the layer-kind tags.
+const LEGACY_MAGICS: [&[u8; 8]; 2] = [b"BCPACK01", b"BCPACK02"];
+
+/// Per-layer kind tags (one `u8` ahead of each layer record).
+const KIND_DENSE: u8 = 0;
+const KIND_CONV: u8 = 1;
 
 /// Sanity caps for deserialization: `.bcpack` is now the serving
 /// deployment artifact, so `load_packed` must reject corrupt headers
@@ -86,8 +138,21 @@ const MAX_DIM: usize = 1 << 22;
 /// far beyond anything this engine serves).
 const MAX_LAYER_WORD_BYTES: usize = 1 << 30;
 
-/// Serialize: MAGIC, n_layers, then per layer k,n,relu + scale/shift f32s
-/// + packed words, then a little-endian CRC32 of everything before it.
+fn push_affine_and_words(buf: &mut Vec<u8>, scale: &[f32], shift: &[f32], bits: &BitMatrix) {
+    for v in scale.iter().chain(shift) {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    for j in 0..bits.n {
+        for w in bits.col(j) {
+            buf.extend_from_slice(&w.to_le_bytes());
+        }
+    }
+}
+
+/// Serialize: MAGIC, n_layers (conv + dense), then per layer a kind tag
+/// (`1` = conv: kh/kw/cin/cout/h_in/w_in + pool flag; `0` = dense: k/n +
+/// relu flag) followed by scale/shift f32s + packed words, then a
+/// little-endian CRC32 of everything before it.
 ///
 /// The write is crash-safe: bytes go to a same-directory temp file which
 /// is fsync'd and atomically renamed over `path`, so a crash (or an
@@ -98,19 +163,21 @@ const MAX_LAYER_WORD_BYTES: usize = 1 << 30;
 pub fn save_packed(mlp: &PackedMlp, path: &Path) -> Result<()> {
     let mut buf: Vec<u8> = Vec::new();
     buf.extend_from_slice(MAGIC);
-    buf.extend_from_slice(&(mlp.layers.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&((mlp.conv.len() + mlp.layers.len()) as u32).to_le_bytes());
+    for c in &mlp.conv {
+        buf.push(KIND_CONV);
+        for dim in [c.kh, c.kw, c.cin, c.cout, c.h_in, c.w_in] {
+            buf.extend_from_slice(&(dim as u32).to_le_bytes());
+        }
+        buf.push(c.pool as u8);
+        push_affine_and_words(&mut buf, &c.scale, &c.shift, &c.bits);
+    }
     for l in &mlp.layers {
+        buf.push(KIND_DENSE);
         buf.extend_from_slice(&(l.bits.k as u32).to_le_bytes());
         buf.extend_from_slice(&(l.bits.n as u32).to_le_bytes());
         buf.push(l.relu as u8);
-        for v in l.scale.iter().chain(&l.shift) {
-            buf.extend_from_slice(&v.to_le_bytes());
-        }
-        for j in 0..l.bits.n {
-            for w in l.bits.col(j) {
-                buf.extend_from_slice(&w.to_le_bytes());
-            }
-        }
+        push_affine_and_words(&mut buf, &l.scale, &l.shift, &l.bits);
     }
     let crc = crc32(&buf);
     buf.extend_from_slice(&crc.to_le_bytes());
@@ -170,11 +237,14 @@ pub fn load_packed(path: &Path) -> Result<PackedMlp> {
     if bytes.len() < 16 {
         bail!("{}: {} bytes is too short to be a BCPACK file", path.display(), bytes.len());
     }
-    if bytes[..8] == LEGACY_MAGIC[..] {
-        bail!(
-            "{}: legacy BCPACK01 artifact (no checksum); re-export it with this build",
-            path.display()
-        );
+    for legacy in LEGACY_MAGICS {
+        if bytes[..8] == legacy[..] {
+            bail!(
+                "{}: legacy {} artifact; re-export it with this build",
+                path.display(),
+                String::from_utf8_lossy(&legacy[..])
+            );
+        }
     }
     if bytes[..8] != MAGIC[..] {
         bail!("{}: not a BCPACK file", path.display());
@@ -196,12 +266,72 @@ pub fn load_packed(path: &Path) -> Result<PackedMlp> {
     if n_layers == 0 || n_layers > MAX_LAYERS {
         bail!("{}: implausible layer count {n_layers} (cap {MAX_LAYERS})", path.display());
     }
+    let mut conv: Vec<PackedConvLayer> = vec![];
     let mut layers: Vec<PackedLayer> = vec![];
+    // flat activation width flowing between layers, for chain validation
+    let mut width: Option<usize> = None;
     for li in 0..n_layers {
-        f.read_exact(&mut b4)?;
-        let k = u32::from_le_bytes(b4) as usize;
-        f.read_exact(&mut b4)?;
-        let n = u32::from_le_bytes(b4) as usize;
+        let mut b1 = [0u8; 1];
+        f.read_exact(&mut b1)?;
+        let kind = b1[0];
+        let (k, n) = match kind {
+            KIND_DENSE => {
+                f.read_exact(&mut b4)?;
+                let k = u32::from_le_bytes(b4) as usize;
+                f.read_exact(&mut b4)?;
+                let n = u32::from_le_bytes(b4) as usize;
+                (k, n)
+            }
+            KIND_CONV => {
+                if !layers.is_empty() {
+                    bail!("{}: conv layer {li} appears after a dense layer", path.display());
+                }
+                let mut dims = [0usize; 6];
+                for d in dims.iter_mut() {
+                    f.read_exact(&mut b4)?;
+                    *d = u32::from_le_bytes(b4) as usize;
+                }
+                let [kh, kw, cin, cout, h_in, w_in] = dims;
+                if kh % 2 == 0 || kw % 2 == 0 {
+                    bail!("{}: conv layer {li} kernel {kh}x{kw} is not odd", path.display());
+                }
+                if h_in == 0 || w_in == 0 || h_in > MAX_DIM || w_in > MAX_DIM {
+                    bail!(
+                        "{}: implausible conv input {h_in}x{w_in} for layer {li}",
+                        path.display()
+                    );
+                }
+                let Some(pk) = kh.checked_mul(kw).and_then(|v| v.checked_mul(cin)) else {
+                    bail!("{}: implausible conv kernel for layer {li}", path.display());
+                };
+                f.read_exact(&mut b1)?;
+                let pool = b1[0] != 0;
+                if pool && (h_in % 2 != 0 || w_in % 2 != 0) {
+                    bail!(
+                        "{}: conv layer {li} pools odd spatial dims {h_in}x{w_in}",
+                        path.display()
+                    );
+                }
+                // spatial size caps: the workspace scales with b*h*w*pk
+                if h_in.checked_mul(w_in).and_then(|s| s.checked_mul(pk)).is_none() {
+                    bail!("{}: implausible conv extent for layer {li}", path.display());
+                }
+                conv.push(PackedConvLayer {
+                    bits: BitMatrix::zeroed(1, 1), // placeholder until words are read
+                    scale: vec![],
+                    shift: vec![],
+                    kh,
+                    kw,
+                    cin,
+                    cout,
+                    h_in,
+                    w_in,
+                    pool,
+                });
+                (pk, cout)
+            }
+            other => bail!("{}: unknown layer kind {other} for layer {li}", path.display()),
+        };
         if k == 0 || n == 0 || k > MAX_DIM || n > MAX_DIM {
             bail!("{}: implausible shape {k}x{n} for layer {li}", path.display());
         }
@@ -217,18 +347,26 @@ pub fn load_packed(path: &Path) -> Result<PackedMlp> {
                 path.display()
             );
         };
-        if let Some(prev) = layers.last() {
-            if prev.bits.n != k {
+        // chain the flat activation width through conv and dense alike
+        let in_flat = match kind {
+            KIND_CONV => conv.last().unwrap().in_dim(),
+            _ => k,
+        };
+        if let Some(prev) = width {
+            if prev != in_flat {
                 bail!(
-                    "{}: layer {li} input dim {k} does not chain with previous width {}",
-                    path.display(),
-                    prev.bits.n
+                    "{}: layer {li} input dim {in_flat} does not chain with previous width {prev}",
+                    path.display()
                 );
             }
         }
-        let mut b1 = [0u8; 1];
-        f.read_exact(&mut b1)?;
-        let relu = b1[0] != 0;
+        let relu = match kind {
+            KIND_DENSE => {
+                f.read_exact(&mut b1)?;
+                b1[0] != 0
+            }
+            _ => true,
+        };
         let mut read_f32s = |count: usize| -> Result<Vec<f32>> {
             let mut buf = vec![0u8; count * 4];
             f.read_exact(&mut buf)?;
@@ -242,15 +380,30 @@ pub fn load_packed(path: &Path) -> Result<PackedMlp> {
             .chunks_exact(8)
             .map(|c| u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
             .collect();
-        layers.push(PackedLayer { bits: BitMatrix::from_words(k, n, words), scale, shift, relu });
+        if kind == KIND_CONV {
+            let c = conv.last_mut().unwrap();
+            c.bits = BitMatrix::from_words(k, n, words);
+            c.scale = scale;
+            c.shift = shift;
+            width = Some(c.out_dim());
+        } else {
+            layers.push(PackedLayer { bits: BitMatrix::from_words(k, n, words), scale, shift, relu });
+            width = Some(n);
+        }
     }
     let mut b1 = [0u8; 1];
     if f.read(&mut b1)? != 0 {
         bail!("{}: trailing bytes after the last layer", path.display());
     }
-    let in_dim = layers.first().context("empty file")?.bits.k;
-    let classes = layers.last().unwrap().bits.n;
-    Ok(PackedMlp { layers, in_dim, classes })
+    let Some(last) = layers.last() else {
+        bail!("{}: no dense output layer", path.display());
+    };
+    let classes = last.bits.n;
+    let in_dim = match conv.first() {
+        Some(c0) => c0.in_dim(),
+        None => layers.first().unwrap().bits.k,
+    };
+    Ok(PackedMlp { conv, layers, in_dim, classes })
 }
 
 #[cfg(test)]
@@ -271,6 +424,7 @@ mod tests {
         let w1: Vec<f32> = (0..20 * 8).map(|_| rng.normal()).collect();
         let w2: Vec<f32> = (0..8 * 3).map(|_| rng.normal()).collect();
         PackedMlp {
+            conv: vec![],
             layers: vec![
                 PackedLayer {
                     bits: BitMatrix::pack(&w1, 20, 8),
@@ -290,6 +444,35 @@ mod tests {
         }
     }
 
+    /// Conv-front toy: 3x3x2->3 (pooled) on 4x4, then dense 12 -> 3.
+    fn toy_conv_packed() -> PackedMlp {
+        let mut rng = Rng::new(5);
+        let wc: Vec<f32> = (0..9 * 2 * 3).map(|_| rng.normal()).collect();
+        let wd: Vec<f32> = (0..12 * 3).map(|_| rng.normal()).collect();
+        PackedMlp {
+            conv: vec![PackedConvLayer {
+                bits: BitMatrix::pack(&wc, 18, 3),
+                scale: (0..3).map(|i| 0.4 + i as f32 * 0.1).collect(),
+                shift: (0..3).map(|i| i as f32 * 0.02 - 0.01).collect(),
+                kh: 3,
+                kw: 3,
+                cin: 2,
+                cout: 3,
+                h_in: 4,
+                w_in: 4,
+                pool: true,
+            }],
+            layers: vec![PackedLayer {
+                bits: BitMatrix::pack(&wd, 12, 3),
+                scale: vec![0.7; 3],
+                shift: vec![0.1, -0.1, 0.0],
+                relu: false,
+            }],
+            in_dim: 4 * 4 * 2,
+            classes: 3,
+        }
+    }
+
     #[test]
     fn save_load_roundtrip_preserves_outputs() {
         let mlp = toy_packed();
@@ -304,6 +487,32 @@ mod tests {
     }
 
     #[test]
+    fn conv_roundtrip_is_bit_exact_and_preserves_outputs() {
+        let mlp = toy_conv_packed();
+        let path = std::env::temp_dir().join(format!("bc_convpack_{}.bin", std::process::id()));
+        save_packed(&mlp, &path).unwrap();
+        let loaded = load_packed(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(loaded.in_dim, mlp.in_dim);
+        assert_eq!(loaded.classes, mlp.classes);
+        assert_eq!(loaded.conv.len(), 1);
+        let (a, b) = (&loaded.conv[0], &mlp.conv[0]);
+        assert_eq!(
+            (a.kh, a.kw, a.cin, a.cout, a.h_in, a.w_in, a.pool),
+            (b.kh, b.kw, b.cin, b.cout, b.h_in, b.w_in, b.pool)
+        );
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&a.scale), bits(&b.scale));
+        assert_eq!(bits(&a.shift), bits(&b.shift));
+        for j in 0..a.bits.n {
+            assert_eq!(a.bits.col(j), b.bits.col(j), "conv packed words of column {j}");
+        }
+        let mut rng = Rng::new(6);
+        let x: Vec<f32> = (0..3 * mlp.in_dim).map(|_| rng.normal()).collect();
+        assert_eq!(mlp.forward(&x, 3), loaded.forward(&x, 3));
+    }
+
+    #[test]
     fn load_rejects_bad_magic() {
         let path = std::env::temp_dir().join(format!("bc_badmagic_{}.bin", std::process::id()));
         std::fs::write(&path, b"NOTPACKED_PADDING").unwrap();
@@ -312,16 +521,19 @@ mod tests {
     }
 
     #[test]
-    fn legacy_format_gets_a_targeted_reexport_error() {
-        let path = std::env::temp_dir().join(format!("bc_legacy_{}.bin", std::process::id()));
-        let mut b = Vec::new();
-        b.extend_from_slice(b"BCPACK01");
-        b.extend_from_slice(&1u32.to_le_bytes());
-        b.extend_from_slice(&[0u8; 32]);
-        std::fs::write(&path, &b).unwrap();
-        let err = load_packed(&path).unwrap_err().to_string();
-        assert!(err.contains("legacy") && err.contains("re-export"), "{err}");
-        let _ = std::fs::remove_file(&path);
+    fn legacy_formats_get_a_targeted_reexport_error() {
+        for magic in [b"BCPACK01", b"BCPACK02"] {
+            let path = std::env::temp_dir()
+                .join(format!("bc_legacy_{}_{}.bin", magic[7] as char, std::process::id()));
+            let mut b = Vec::new();
+            b.extend_from_slice(magic);
+            b.extend_from_slice(&1u32.to_le_bytes());
+            b.extend_from_slice(&[0u8; 32]);
+            std::fs::write(&path, &b).unwrap();
+            let err = load_packed(&path).unwrap_err().to_string();
+            assert!(err.contains("legacy") && err.contains("re-export"), "{err}");
+            let _ = std::fs::remove_file(&path);
+        }
     }
 
     #[test]
@@ -392,6 +604,7 @@ mod tests {
         let _ = std::fs::remove_file(&path);
         assert_eq!(loaded.in_dim, mlp.in_dim);
         assert_eq!(loaded.classes, mlp.classes);
+        assert!(loaded.conv.is_empty());
         assert_eq!(loaded.layers.len(), mlp.layers.len());
         for (a, b) in loaded.layers.iter().zip(&mlp.layers) {
             assert_eq!(a.relu, b.relu);
@@ -407,21 +620,26 @@ mod tests {
 
     #[test]
     fn every_truncation_errors_instead_of_panicking() {
-        let mlp = toy_packed();
-        let path = std::env::temp_dir().join(format!("bc_trunc_{}.bin", std::process::id()));
-        save_packed(&mlp, &path).unwrap();
-        let bytes = std::fs::read(&path).unwrap();
-        assert!(load_packed(&path).is_ok(), "untruncated file must load");
-        for cut in 0..bytes.len() {
-            std::fs::write(&path, &bytes[..cut]).unwrap();
-            assert!(load_packed(&path).is_err(), "truncation at byte {cut} must error");
+        for (tag, mlp) in [("dense", toy_packed()), ("conv", toy_conv_packed())] {
+            let path = std::env::temp_dir()
+                .join(format!("bc_trunc_{tag}_{}.bin", std::process::id()));
+            save_packed(&mlp, &path).unwrap();
+            let bytes = std::fs::read(&path).unwrap();
+            assert!(load_packed(&path).is_ok(), "untruncated {tag} file must load");
+            for cut in 0..bytes.len() {
+                std::fs::write(&path, &bytes[..cut]).unwrap();
+                assert!(
+                    load_packed(&path).is_err(),
+                    "{tag}: truncation at byte {cut} must error"
+                );
+            }
+            // trailing junk is corruption too, not silently ignored
+            let mut padded = bytes.clone();
+            padded.extend_from_slice(b"junk");
+            std::fs::write(&path, &padded).unwrap();
+            assert!(load_packed(&path).is_err(), "{tag}: trailing bytes must error");
+            let _ = std::fs::remove_file(&path);
         }
-        // trailing junk is corruption too, not silently ignored
-        let mut padded = bytes.clone();
-        padded.extend_from_slice(b"junk");
-        std::fs::write(&path, &padded).unwrap();
-        assert!(load_packed(&path).is_err(), "trailing bytes must error");
-        let _ = std::fs::remove_file(&path);
     }
 
     #[test]
@@ -443,8 +661,9 @@ mod tests {
         // (not answered with a multi-gigabyte allocation attempt); a
         // valid CRC gets these bodies past the checksum gate
         let mut huge = Vec::new();
-        huge.extend_from_slice(b"BCPACK02");
+        huge.extend_from_slice(b"BCPACK03");
         huge.extend_from_slice(&1u32.to_le_bytes());
+        huge.push(0); // dense kind tag
         huge.extend_from_slice(&u32::MAX.to_le_bytes());
         huge.extend_from_slice(&u32::MAX.to_le_bytes());
         huge.push(0);
@@ -454,17 +673,26 @@ mod tests {
         // dims individually under MAX_DIM whose product implies terabytes
         // must be rejected by the packed-size cap before any body read
         let mut wide = Vec::new();
-        wide.extend_from_slice(b"BCPACK02");
+        wide.extend_from_slice(b"BCPACK03");
         wide.extend_from_slice(&1u32.to_le_bytes());
+        wide.push(0);
         wide.extend_from_slice(&(1u32 << 22).to_le_bytes());
         wide.extend_from_slice(&(1u32 << 22).to_le_bytes());
         wide.push(0);
         std::fs::write(&path, with_crc(wide)).unwrap();
         let err = load_packed(&path).unwrap_err().to_string();
         assert!(err.contains("implausible packed size"), "{err}");
+        // an unknown layer-kind tag must be rejected, not misparsed
+        let mut badkind = Vec::new();
+        badkind.extend_from_slice(b"BCPACK03");
+        badkind.extend_from_slice(&1u32.to_le_bytes());
+        badkind.push(7);
+        std::fs::write(&path, with_crc(badkind)).unwrap();
+        let err = load_packed(&path).unwrap_err().to_string();
+        assert!(err.contains("unknown layer kind"), "{err}");
         // zero layers is invalid too
         let mut zero = Vec::new();
-        zero.extend_from_slice(b"BCPACK02");
+        zero.extend_from_slice(b"BCPACK03");
         zero.extend_from_slice(&0u32.to_le_bytes());
         std::fs::write(&path, with_crc(zero)).unwrap();
         assert!(load_packed(&path).is_err());
@@ -478,9 +706,10 @@ mod tests {
         // load into a net that would panic at forward time
         let path = std::env::temp_dir().join(format!("bc_chain_{}.bin", std::process::id()));
         let mut b = Vec::new();
-        b.extend_from_slice(b"BCPACK02");
+        b.extend_from_slice(b"BCPACK03");
         b.extend_from_slice(&2u32.to_le_bytes());
-        // layer 0: k=4, n=8, relu, 8 scales + 8 shifts, 1 word per col
+        // layer 0: dense k=4, n=8, relu, 8 scales + 8 shifts, 1 word/col
+        b.push(0);
         b.extend_from_slice(&4u32.to_le_bytes());
         b.extend_from_slice(&8u32.to_le_bytes());
         b.push(1);
@@ -491,6 +720,7 @@ mod tests {
             b.extend_from_slice(&0u64.to_le_bytes());
         }
         // layer 1: k=5 (should be 8), n=2
+        b.push(0);
         b.extend_from_slice(&5u32.to_le_bytes());
         b.extend_from_slice(&2u32.to_le_bytes());
         b.push(0);
@@ -503,6 +733,49 @@ mod tests {
         std::fs::write(&path, with_crc(b)).unwrap();
         let err = load_packed(&path).unwrap_err().to_string();
         assert!(err.contains("chain"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn conv_only_file_is_rejected_for_missing_dense_output() {
+        // the packed classifier needs a dense output stage: a conv-only
+        // artifact (e.g. a truncation that still checksums after a
+        // re-save) must load-fail with a targeted error
+        let mut mlp = toy_conv_packed();
+        mlp.layers.clear();
+        let path = std::env::temp_dir().join(format!("bc_convonly_{}.bin", std::process::id()));
+        save_packed(&mlp, &path).unwrap();
+        let err = load_packed(&path).unwrap_err().to_string();
+        assert!(err.contains("no dense output layer"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn conv_record_after_a_dense_record_is_rejected() {
+        // hand-craft: dense 12->3, then a conv record — an impossible
+        // topology for the serving engine (flatten is one-way)
+        let path = std::env::temp_dir().join(format!("bc_order_{}.bin", std::process::id()));
+        let mut b = Vec::new();
+        b.extend_from_slice(b"BCPACK03");
+        b.extend_from_slice(&2u32.to_le_bytes());
+        b.push(0); // dense k=12 n=3
+        b.extend_from_slice(&12u32.to_le_bytes());
+        b.extend_from_slice(&3u32.to_le_bytes());
+        b.push(1);
+        for _ in 0..6 {
+            b.extend_from_slice(&1.0f32.to_le_bytes());
+        }
+        for _ in 0..3 {
+            b.extend_from_slice(&0u64.to_le_bytes());
+        }
+        b.push(1); // conv after dense
+        for dim in [3u32, 3, 3, 4, 4, 4] {
+            b.extend_from_slice(&dim.to_le_bytes());
+        }
+        b.push(0);
+        std::fs::write(&path, with_crc(b)).unwrap();
+        let err = load_packed(&path).unwrap_err().to_string();
+        assert!(err.contains("after a dense layer"), "{err}");
         let _ = std::fs::remove_file(&path);
     }
 }

@@ -33,4 +33,4 @@ pub use bnn::{
     pack_rows_into, words_per_row, xnor_layer_bits, xnor_layer_f32, BnnWorkspace, ForwardMode,
 };
 pub use export::{load_packed, pack_mlp, save_packed};
-pub use packed::{argmax, BitMatrix, PackedLayer, PackedMlp, PackedWorkspace};
+pub use packed::{argmax, BitMatrix, PackedConvLayer, PackedLayer, PackedMlp, PackedWorkspace};

@@ -28,6 +28,7 @@
 //! property-tested against scalar within a 1e-5-scale bound. The `*_isa`
 //! variants pin an explicit rung for tests and benches.
 
+use crate::conv::{im2col, pool as cpool};
 use crate::data::Dataset;
 use crate::kernel::simd::{self, Isa, Kernels};
 use crate::util::pool::{global as pool_global, par_rows, SendPtr};
@@ -654,9 +655,84 @@ impl PackedLayer {
     }
 }
 
-/// A fully packed MLP classifier (the paper's deterministic-BC test-time
-/// network).
+/// One packed SAME-padding conv layer, lowered onto the sign-GEMM via
+/// im2col: the `[kh, kw, cin, cout]` filter bank flattens row-major into
+/// a `(kh*kw*cin) x cout` [`BitMatrix`], and the forward is a plain
+/// batched sign-GEMM over `b*h*w` patch rows. The ±H weight scale and
+/// the eval-mode BN affine are folded into `scale`/`shift` (exactly like
+/// [`PackedLayer`]); ReLU always applies (conv layers are never the
+/// output), and `pool` appends a MaxPool2x2.
+#[derive(Clone)]
+pub struct PackedConvLayer {
+    /// `(kh*kw*cin) x cout` sign bits of the flattened filter bank.
+    pub bits: BitMatrix,
+    /// per-channel `H * gamma / sqrt(rvar + eps)`.
+    pub scale: Vec<f32>,
+    /// per-channel `beta - rmean * gamma / sqrt(rvar + eps)`.
+    pub shift: Vec<f32>,
+    pub kh: usize,
+    pub kw: usize,
+    pub cin: usize,
+    pub cout: usize,
+    /// input spatial dims (SAME padding keeps them through the conv).
+    pub h_in: usize,
+    pub w_in: usize,
+    /// MaxPool2x2 after the affine+ReLU (halves both spatial dims).
+    pub pool: bool,
+}
+
+impl PackedConvLayer {
+    /// im2col patch width = GEMM reduction dim.
+    pub fn patch_k(&self) -> usize {
+        self.kh * self.kw * self.cin
+    }
+
+    /// Flat input activation size per image.
+    pub fn in_dim(&self) -> usize {
+        self.h_in * self.w_in * self.cin
+    }
+
+    /// Spatial dims after the optional pool.
+    pub fn out_hw(&self) -> (usize, usize) {
+        if self.pool {
+            (self.h_in / 2, self.w_in / 2)
+        } else {
+            (self.h_in, self.w_in)
+        }
+    }
+
+    /// Flat output activation size per image.
+    pub fn out_dim(&self) -> usize {
+        let (h, w) = self.out_hw();
+        h * w * self.cout
+    }
+
+    /// Folded BN affine + ReLU in place over the `rows x cout` sign-GEMM
+    /// output (same per-element ops as [`PackedLayer::affine`], so conv
+    /// channels inherit its exactness story).
+    fn affine(&self, rows: usize, y: &mut [f32]) {
+        let n = self.cout;
+        assert_eq!(self.scale.len(), n, "scale length must match cout");
+        assert_eq!(self.shift.len(), n, "shift length must match cout");
+        for bi in 0..rows {
+            let row = &mut y[bi * n..(bi + 1) * n];
+            for ((v, &s), &t) in row.iter_mut().zip(&self.scale).zip(&self.shift) {
+                *v = *v * s + t;
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// A fully packed classifier (the paper's deterministic-BC test-time
+/// network): an optional conv front (`conv`, empty for MLPs) feeding the
+/// dense stack. The last conv layer's flat output is the first dense
+/// layer's input — im2col keeps activations `(b, h, w, c)` row-major, so
+/// flatten is a no-op.
 pub struct PackedMlp {
+    pub conv: Vec<PackedConvLayer>,
     pub layers: Vec<PackedLayer>,
     pub in_dim: usize,
     pub classes: usize,
@@ -673,6 +749,14 @@ pub struct PackedWorkspace {
     pong: Vec<f32>,
     xt: Vec<f32>,
     totals: Vec<f32>,
+    /// im2col patch matrix, sized for the largest conv stage (empty for
+    /// pure MLPs — the three conv buffers cost dense models nothing).
+    patches: Vec<f32>,
+    /// pre-pool conv output, sized for the largest *pooled* conv stage.
+    prepool: Vec<f32>,
+    /// argmax scratch of the pool (serving discards it; sized with
+    /// `prepool`).
+    pool_idx: Vec<u32>,
 }
 
 impl PackedWorkspace {
@@ -682,11 +766,19 @@ impl PackedWorkspace {
     }
 
     /// Allocated activation-scratch footprint in bytes (ping + pong +
-    /// transpose + totals buffers). The packed-f32 counterpart of
+    /// transpose + totals buffers, plus the conv patch/pool scratch for
+    /// conv models). The packed-f32 counterpart of
     /// [`crate::binary::BnnWorkspace::memory_bytes`]; surfaced per mode
     /// by `/stats` and the bench reports.
     pub fn memory_bytes(&self) -> usize {
-        (self.ping.len() + self.pong.len() + self.xt.len() + self.totals.len()) * 4
+        (self.ping.len()
+            + self.pong.len()
+            + self.xt.len()
+            + self.totals.len()
+            + self.patches.len()
+            + self.prepool.len()
+            + self.pool_idx.len())
+            * 4
     }
 }
 
@@ -750,7 +842,7 @@ impl PackedMlp {
             layers.push(PackedLayer { bits, scale, shift, relu: !last });
         }
         let classes = layers.last().unwrap().bits.n;
-        PackedMlp { layers, in_dim, classes }
+        PackedMlp { conv: vec![], layers, in_dim, classes }
     }
 
     /// Forward a batch, returning logits (b x classes).
@@ -760,6 +852,10 @@ impl PackedMlp {
     /// [`PackedMlp::forward_into`] with a reused [`PackedWorkspace`].
     pub fn forward(&self, x: &[f32], b: usize) -> Vec<f32> {
         assert_eq!(x.len(), b * self.in_dim);
+        if !self.conv.is_empty() {
+            let mut ws = self.workspace(b);
+            return self.forward_into(x, b, &mut ws).to_vec();
+        }
         let mut cur = x.to_vec();
         for layer in &self.layers {
             let mut next = vec![0f32; b * layer.bits.n];
@@ -769,23 +865,53 @@ impl PackedMlp {
         cur
     }
 
-    /// Widest activation row the net produces (input included) — the
-    /// per-row workspace buffer size.
+    /// Widest activation row the net produces (input and the conv
+    /// stages' flat post-pool outputs included) — the per-row workspace
+    /// buffer size.
     pub fn max_width(&self) -> usize {
-        self.layers.iter().map(|l| l.bits.n).fold(self.in_dim, usize::max)
+        let conv_w = self.conv.iter().map(|c| c.out_dim()).fold(0, usize::max);
+        self.layers.iter().map(|l| l.bits.n).fold(self.in_dim.max(conv_w), usize::max)
+    }
+
+    /// Buffer lengths a `max_batch`-row [`PackedWorkspace`] needs:
+    /// (ping/pong, xt, totals, patches, prepool). Conv stages run the
+    /// sign-GEMM over `b*h*w` patch rows, so the patch matrix and the
+    /// GEMM transpose scratch scale with the spatial extent, and
+    /// `totals` with the row count. Shared with
+    /// [`PackedMlp::activation_memory_bytes`](crate::binary::ForwardMode)
+    /// so the reported figure cannot drift from the allocation.
+    pub(crate) fn workspace_lens(&self, max_batch: usize) -> (usize, usize, usize, usize, usize) {
+        let w = self.max_width();
+        let mut patches = 0usize;
+        let mut prepool = 0usize;
+        let mut xt = max_batch * w;
+        let mut totals = max_batch;
+        for c in &self.conv {
+            let rows = max_batch * c.h_in * c.w_in;
+            patches = patches.max(rows * c.patch_k());
+            xt = xt.max(rows * c.patch_k());
+            totals = totals.max(rows);
+            if c.pool {
+                prepool = prepool.max(rows * c.cout);
+            }
+        }
+        (max_batch * w, xt, totals, patches, prepool)
     }
 
     /// Build a [`PackedWorkspace`] able to forward batches up to
     /// `max_batch` rows with zero per-call allocations.
     pub fn workspace(&self, max_batch: usize) -> PackedWorkspace {
         assert!(max_batch >= 1, "workspace batch capacity must be >= 1");
-        let w = self.max_width();
+        let (pp, xt, totals, patches, prepool) = self.workspace_lens(max_batch);
         PackedWorkspace {
             max_batch,
-            ping: vec![0f32; max_batch * w],
-            pong: vec![0f32; max_batch * w],
-            xt: vec![0f32; max_batch * w],
-            totals: vec![0f32; max_batch],
+            ping: vec![0f32; pp],
+            pong: vec![0f32; pp],
+            xt: vec![0f32; xt],
+            totals: vec![0f32; totals],
+            patches: vec![0f32; patches],
+            prepool: vec![0f32; prepool],
+            pool_idx: vec![0u32; prepool / 4],
         }
     }
 
@@ -793,7 +919,10 @@ impl PackedMlp {
     /// slice (b x classes). Allocation-free, and — because every layer
     /// goes through [`BitMatrix::matmul_scaled_into_batched`] — each
     /// row's logits are **bit-identical** for any batch size the row is
-    /// computed in: the serving layer's solo ≡ coalesced contract.
+    /// computed in: the serving layer's solo ≡ coalesced contract. Conv
+    /// stages keep that contract too: im2col rows, the batched GEMM, the
+    /// per-channel affine and the pool all touch image `bi`'s data only
+    /// from row block `bi`.
     pub fn forward_into<'ws>(
         &self,
         x: &[f32],
@@ -808,6 +937,59 @@ impl PackedMlp {
         );
         ws.ping[..x.len()].copy_from_slice(x);
         let mut in_ping = true;
+        for c in &self.conv {
+            let (h, w) = (c.h_in, c.w_in);
+            let rows = b * h * w;
+            let pk = c.patch_k();
+            let (src, dst) = if in_ping {
+                (&ws.ping, &mut ws.pong)
+            } else {
+                (&ws.pong, &mut ws.ping)
+            };
+            im2col::im2col_into(
+                &src[..b * c.in_dim()],
+                b,
+                h,
+                w,
+                c.cin,
+                c.kh,
+                c.kw,
+                &mut ws.patches[..rows * pk],
+            );
+            if c.pool {
+                let z = &mut ws.prepool[..rows * c.cout];
+                c.bits.matmul_scaled_into_batched(
+                    &ws.patches[..rows * pk],
+                    rows,
+                    1.0,
+                    z,
+                    &mut ws.xt,
+                    &mut ws.totals,
+                );
+                c.affine(rows, z);
+                cpool::maxpool2x2_into(
+                    z,
+                    b,
+                    h,
+                    w,
+                    c.cout,
+                    &mut dst[..b * c.out_dim()],
+                    &mut ws.pool_idx[..b * c.out_dim()],
+                );
+            } else {
+                let z = &mut dst[..rows * c.cout];
+                c.bits.matmul_scaled_into_batched(
+                    &ws.patches[..rows * pk],
+                    rows,
+                    1.0,
+                    z,
+                    &mut ws.xt,
+                    &mut ws.totals,
+                );
+                c.affine(rows, z);
+            }
+            in_ping = !in_ping;
+        }
         for layer in &self.layers {
             let (k, n) = (layer.bits.k, layer.bits.n);
             let (src, dst) = if in_ping {
@@ -864,11 +1046,13 @@ impl PackedMlp {
     /// per-column word padding is included — this is the allocated
     /// footprint, not the theoretical bit count.
     pub fn weight_memory_bytes(&self) -> usize {
-        self.layers.iter().map(|l| l.bits.memory_bytes()).sum()
+        let conv: usize = self.conv.iter().map(|c| c.bits.memory_bytes()).sum();
+        conv + self.layers.iter().map(|l| l.bits.memory_bytes()).sum::<usize>()
     }
 
     pub fn f32_weight_memory_bytes(&self) -> usize {
-        self.layers.iter().map(|l| l.bits.k * l.bits.n * 4).sum()
+        let conv: usize = self.conv.iter().map(|c| c.bits.k * c.bits.n * 4).sum();
+        conv + self.layers.iter().map(|l| l.bits.k * l.bits.n * 4).sum::<usize>()
     }
 }
 
@@ -1243,5 +1427,180 @@ mod tests {
         // unit0 = -x (class 0 score), unit1 = +x (class 1 score)
         let mlp = PackedMlp::build(vec![(vec![-1.0, 1.0], 1, 2)], vec![None], None);
         assert_eq!(mlp.test_error(&ds, 16), 0.0);
+    }
+
+    fn rand_conv_layer(
+        kh: usize,
+        kw: usize,
+        cin: usize,
+        cout: usize,
+        h_in: usize,
+        w_in: usize,
+        pool: bool,
+        seed: u64,
+    ) -> PackedConvLayer {
+        let w = rand_mat(kh * kw * cin, cout, seed);
+        let mut rng = Rng::new(seed + 1);
+        PackedConvLayer {
+            bits: BitMatrix::pack(&w, kh * kw * cin, cout),
+            scale: (0..cout).map(|_| 0.3 + 0.1 * rng.normal().abs()).collect(),
+            shift: (0..cout).map(|_| 0.05 * rng.normal()).collect(),
+            kh,
+            kw,
+            cin,
+            cout,
+            h_in,
+            w_in,
+            pool,
+        }
+    }
+
+    /// Conv front (3x3x2->3 unpooled, then 3x3x3->4 pooled on 6x6) into
+    /// the dense stack — ragged widths everywhere, patch_k % 64 != 0.
+    fn toy_conv(seed: u64) -> PackedMlp {
+        let conv = vec![
+            rand_conv_layer(3, 3, 2, 3, 6, 6, false, seed),
+            rand_conv_layer(3, 3, 3, 4, 6, 6, true, seed + 10),
+        ];
+        let flat = conv.last().unwrap().out_dim(); // 3*3*4 = 36
+        let w1 = rand_mat(flat, 5, seed + 20);
+        let w2 = rand_mat(5, 3, seed + 21);
+        let layers = vec![
+            PackedLayer {
+                bits: BitMatrix::pack(&w1, flat, 5),
+                scale: vec![0.5; 5],
+                shift: vec![0.01; 5],
+                relu: true,
+            },
+            PackedLayer {
+                bits: BitMatrix::pack(&w2, 5, 3),
+                scale: vec![1.0; 3],
+                shift: vec![0.1, -0.1, 0.0],
+                relu: false,
+            },
+        ];
+        PackedMlp { conv, layers, in_dim: 6 * 6 * 2, classes: 3 }
+    }
+
+    #[test]
+    fn conv_front_matches_the_f32_sign_oracle() {
+        // one conv stage in isolation (empty dense stack): the im2col
+        // sign-GEMM + folded affine + pool must match the naive direct
+        // conv over the same ±1 weights within the usual f32 bound.
+        for &pool in &[false, true] {
+            let (b, h, w, cin, cout) = (3usize, 4usize, 6usize, 2usize, 5usize);
+            let layer = rand_conv_layer(3, 3, cin, cout, h, w, pool, 700 + pool as u64);
+            let out_dim = layer.out_dim();
+            // reconstruct the ±1 filter bank the packed bits encode
+            let mut signs = vec![0f32; 9 * cin * cout];
+            for r in 0..9 * cin {
+                for c in 0..cout {
+                    signs[r * cout + c] = layer.bits.sign(r, c);
+                }
+            }
+            let x = rand_mat(b, h * w * cin, 777);
+            let mut want_full = vec![0f32; b * h * w * cout];
+            crate::conv::oracle::conv2d_forward(&x, b, h, w, cin, &signs, 3, 3, cout, &mut want_full);
+            for (i, v) in want_full.iter_mut().enumerate() {
+                let c = i % cout;
+                *v = (*v * layer.scale[c] + layer.shift[c]).max(0.0);
+            }
+            let want = if pool {
+                let mut pooled = vec![0f32; b * h * w * cout / 4];
+                let mut idx = vec![0u32; pooled.len()];
+                cpool::maxpool2x2_into(&want_full, b, h, w, cout, &mut pooled, &mut idx);
+                pooled
+            } else {
+                want_full
+            };
+            let mlp = PackedMlp {
+                conv: vec![layer],
+                layers: vec![],
+                in_dim: h * w * cin,
+                classes: out_dim,
+            };
+            let mut ws = mlp.workspace(b);
+            let got = mlp.forward_into(&x, b, &mut ws);
+            assert_eq!(got.len(), want.len());
+            for (i, (a, r)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (a - r).abs() < 1e-4 * (1.0 + r.abs()),
+                    "pool={pool} [{i}]: {a} vs {r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn conv_forward_into_rows_bit_identical_across_batch_sizes() {
+        // solo ≡ coalesced through the whole conv+dense stack: im2col
+        // rows, the batched sign-GEMM, the affine and the pool all keep
+        // image bi's data inside row block bi.
+        let mlp = toy_conv(800);
+        let b = 5;
+        let x = rand_mat(b, mlp.in_dim, 801);
+        let mut ws = mlp.workspace(b);
+        let full = mlp.forward_into(&x, b, &mut ws).to_vec();
+        for bi in 0..b {
+            let row = &x[bi * mlp.in_dim..(bi + 1) * mlp.in_dim];
+            let solo = mlp.forward_into(row, 1, &mut ws).to_vec();
+            assert_eq!(
+                solo,
+                full[bi * mlp.classes..(bi + 1) * mlp.classes].to_vec(),
+                "row {bi}: solo != coalesced"
+            );
+        }
+        let cut = 2 * mlp.in_dim;
+        let head = mlp.forward_into(&x[..cut], 2, &mut ws).to_vec();
+        let tail = mlp.forward_into(&x[cut..], 3, &mut ws).to_vec();
+        let mut joined = head;
+        joined.extend(tail);
+        assert_eq!(joined, full, "2+3 split != coalesced batch of 5");
+    }
+
+    #[test]
+    fn conv_forward_allocating_wrapper_matches_forward_into() {
+        let mlp = toy_conv(810);
+        let b = 4;
+        let x = rand_mat(b, mlp.in_dim, 811);
+        let mut ws = mlp.workspace(b);
+        let want = mlp.forward_into(&x, b, &mut ws).to_vec();
+        assert_eq!(mlp.forward(&x, b), want);
+        assert_eq!(mlp.classify(&x, b).len(), b);
+    }
+
+    #[test]
+    fn conv_forward_into_steady_state_is_allocation_free() {
+        let mlp = toy_conv(820);
+        let b = 6;
+        let mut ws = mlp.workspace(b);
+        let x = rand_mat(b, mlp.in_dim, 821);
+        let _ = mlp.forward_into(&x, b, &mut ws);
+        let before = crate::test_alloc::thread_allocs();
+        for _ in 0..3 {
+            let out = mlp.forward_into(&x, b, &mut ws);
+            std::hint::black_box(out);
+        }
+        let after = crate::test_alloc::thread_allocs();
+        assert_eq!(after, before, "conv forward_into allocated in steady state");
+    }
+
+    #[test]
+    fn conv_workspace_sizes_scratch_for_the_spatial_extent() {
+        // the conv GEMM runs over b*h*w rows: patches/xt/totals must be
+        // spatially sized, and the memory report must count them.
+        let mlp = toy_conv(830);
+        let ws = mlp.workspace(2);
+        let rows = 2 * 6 * 6;
+        assert!(ws.xt.len() >= rows * 9 * 3, "xt must cover the largest conv GEMM");
+        assert!(ws.totals.len() >= rows);
+        assert_eq!(ws.patches.len(), rows * 9 * 3);
+        assert_eq!(ws.prepool.len(), rows * 4);
+        assert_eq!(ws.pool_idx.len(), rows); // rows*4/4
+        let dense_only = PackedMlp { conv: vec![], layers: mlp.layers.clone(), in_dim: 36, classes: 3 };
+        assert!(mlp.workspace(2).memory_bytes() > dense_only.workspace(2).memory_bytes());
+        // pure MLPs pay nothing for the conv buffers
+        assert_eq!(dense_only.workspace(2).patches.len(), 0);
+        assert_eq!(dense_only.workspace(2).prepool.len(), 0);
     }
 }

@@ -1,0 +1,179 @@
+//! Patch gather/scatter for the im2col lowering.
+//!
+//! Layouts (all row-major):
+//! * activations `x`: `(b, h, w, c)` — HWC per image, images stacked.
+//! * patch matrix `out`: `(b*h*w) x (kh*kw*c)`; row `bi*h*w + oy*w + ox`
+//!   holds the SAME-padded window centred on `(oy, ox)` of image `bi`,
+//!   column `(ky*kw + kx)*c + ci`. This matches the flattening of a
+//!   row-major `[kh, kw, cin, cout]` filter tensor into a
+//!   `(kh*kw*cin) x cout` weight matrix, so conv forward is a plain
+//!   GEMM over these rows.
+//!
+//! Both functions write only into caller-owned slices — no allocation —
+//! and touch image `bi`'s data only from row block `bi`, which is what
+//! makes the lowered GEMM batch-invariant per request.
+
+/// Gather SAME-padded `kh x kw` patches of `x` into `out`.
+/// `out.len()` must be exactly `b*h*w * kh*kw*c`; `kh`/`kw` odd.
+pub fn im2col_into(
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+    out: &mut [f32],
+) {
+    let patch = kh * kw * c;
+    debug_assert_eq!(x.len(), b * h * w * c);
+    debug_assert_eq!(out.len(), b * h * w * patch);
+    debug_assert!(kh % 2 == 1 && kw % 2 == 1);
+    let (ph, pw) = (kh / 2, kw / 2);
+    out.fill(0.0);
+    for bi in 0..b {
+        let img = &x[bi * h * w * c..(bi + 1) * h * w * c];
+        let rows = &mut out[bi * h * w * patch..(bi + 1) * h * w * patch];
+        for oy in 0..h {
+            for ky in 0..kh {
+                let iy = oy + ky;
+                if iy < ph || iy - ph >= h {
+                    continue; // zero padding row
+                }
+                let iy = iy - ph;
+                for kx in 0..kw {
+                    // valid ox range for this tap: 0 <= ox + kx - pw < w
+                    let ox_lo = pw.saturating_sub(kx);
+                    let ox_hi = (w + pw - kx).min(w);
+                    let tap = (ky * kw + kx) * c;
+                    for ox in ox_lo..ox_hi {
+                        let ix = ox + kx - pw;
+                        let src = (iy * w + ix) * c;
+                        let dst = (oy * w + ox) * patch + tap;
+                        rows[dst..dst + c].copy_from_slice(&img[src..src + c]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Scatter-accumulate patch gradients back to the input image grid —
+/// the exact adjoint of [`im2col_into`]. `dx` is overwritten (not
+/// accumulated into); per-pixel accumulation runs in fixed tap order
+/// `(ky, kx)` regardless of batch size, so gradients are
+/// batch-placement invariant too.
+pub fn col2im_into(
+    dpatches: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+    dx: &mut [f32],
+) {
+    let patch = kh * kw * c;
+    debug_assert_eq!(dx.len(), b * h * w * c);
+    debug_assert_eq!(dpatches.len(), b * h * w * patch);
+    let (ph, pw) = (kh / 2, kw / 2);
+    dx.fill(0.0);
+    for bi in 0..b {
+        let rows = &dpatches[bi * h * w * patch..(bi + 1) * h * w * patch];
+        let dimg = &mut dx[bi * h * w * c..(bi + 1) * h * w * c];
+        for oy in 0..h {
+            for ky in 0..kh {
+                let iy = oy + ky;
+                if iy < ph || iy - ph >= h {
+                    continue;
+                }
+                let iy = iy - ph;
+                for kx in 0..kw {
+                    let ox_lo = pw.saturating_sub(kx);
+                    let ox_hi = (w + pw - kx).min(w);
+                    let tap = (ky * kw + kx) * c;
+                    for ox in ox_lo..ox_hi {
+                        let ix = ox + kx - pw;
+                        let src = (oy * w + ox) * patch + tap;
+                        let dst = (iy * w + ix) * c;
+                        for ci in 0..c {
+                            dimg[dst + ci] += rows[src + ci];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn patch_rows_match_hand_gather() {
+        // 1 image, 3x3x2, 3x3 kernel: centre row sees the whole image,
+        // corner rows see zeros outside.
+        let (h, w, c) = (3, 3, 2);
+        let x: Vec<f32> = (0..h * w * c).map(|i| i as f32 + 1.0).collect();
+        let mut out = vec![-1.0; h * w * 9 * c];
+        im2col_into(&x, 1, h, w, c, 3, 3, &mut out);
+        let patch = 9 * c;
+        // centre pixel (1,1): patch is the full image in scan order
+        let centre = &out[(1 * w + 1) * patch..(1 * w + 1) * patch + patch];
+        assert_eq!(centre, &x[..]);
+        // top-left pixel (0,0): taps with ky==0 or kx==0 are padding
+        let tl = &out[0..patch];
+        for ky in 0..3 {
+            for kx in 0..3 {
+                let tap = &tl[(ky * 3 + kx) * c..(ky * 3 + kx) * c + c];
+                if ky == 0 || kx == 0 {
+                    assert_eq!(tap, &[0.0, 0.0], "tap ({ky},{kx}) not padded");
+                } else {
+                    let src = ((ky - 1) * w + (kx - 1)) * c;
+                    assert_eq!(tap, &x[src..src + c]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn col2im_is_the_adjoint_of_im2col() {
+        // <im2col(x), d> == <x, col2im(d)> for random x, d — the
+        // defining property of the transpose.
+        for &(b, h, w, c, kh, kw) in
+            &[(2usize, 4usize, 5usize, 3usize, 3usize, 3usize), (1, 3, 3, 1, 1, 1), (3, 6, 2, 2, 5, 3)]
+        {
+            let mut rng = Rng::new(0x00C2_117E);
+            let x: Vec<f32> = (0..b * h * w * c).map(|_| rng.normal()).collect();
+            let d: Vec<f32> = (0..b * h * w * kh * kw * c).map(|_| rng.normal()).collect();
+            let mut px = vec![0.0; d.len()];
+            im2col_into(&x, b, h, w, c, kh, kw, &mut px);
+            let mut dx = vec![0.0; x.len()];
+            col2im_into(&d, b, h, w, c, kh, kw, &mut dx);
+            let lhs: f64 = px.iter().zip(&d).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+            let rhs: f64 = x.iter().zip(&dx).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+            assert!(
+                (lhs - rhs).abs() <= 1e-6 * (1.0 + lhs.abs()),
+                "adjoint mismatch ({b},{h},{w},{c},{kh},{kw}): {lhs} vs {rhs}"
+            );
+        }
+    }
+
+    #[test]
+    fn batch_rows_are_independent_of_neighbours() {
+        // the patch rows of image 1 in a batch of 3 equal the rows of
+        // the same image gathered alone — the serving batch-invariance
+        // precondition.
+        let (h, w, c, kh, kw) = (4, 4, 3, 3, 3);
+        let mut rng = Rng::new(7);
+        let xs: Vec<f32> = (0..3 * h * w * c).map(|_| rng.normal()).collect();
+        let mut all = vec![0.0; 3 * h * w * kh * kw * c];
+        im2col_into(&xs, 3, h, w, c, kh, kw, &mut all);
+        let one = &xs[h * w * c..2 * h * w * c];
+        let mut solo = vec![0.0; h * w * kh * kw * c];
+        im2col_into(one, 1, h, w, c, kh, kw, &mut solo);
+        assert_eq!(&all[solo.len()..2 * solo.len()], &solo[..]);
+    }
+}

@@ -1,0 +1,242 @@
+//! Binary convolution subsystem: SAME-padding 2-D convolution lowered
+//! onto the packed sign-GEMM (`binary::packed::BitMatrix`).
+//!
+//! The paper's conv nets (Sec. 3.2: the VGG-ish "C3" stack behind the
+//! CIFAR-10/SVHN results) are executed by rewriting every convolution as
+//! a matrix product over gathered patches:
+//!
+//! * [`im2col::im2col_into`] gathers, for each output pixel, the
+//!   `kh*kw*cin` input window (zeros outside the image — SAME padding)
+//!   into one row of a patch matrix `P` of shape
+//!   `(b*h*w) x (kh*kw*cin)`. Activations are HWC, filters are the
+//!   spec's row-major `[kh, kw, cin, cout]`, so a flattened filter bank
+//!   *is* a `(kh*kw*cin) x cout` weight matrix and the conv forward is
+//!   literally `Z = P @ W` — the same shape the MLP path feeds to
+//!   [`crate::binary::packed::BitMatrix::matmul_scaled_into`]. The
+//!   binarized weights therefore never materialize as f32 here either:
+//!   the bit-packers (`pack_det_into` / `pack_stoch_into`) run per conv
+//!   filter bank exactly as they do per dense layer.
+//! * The STE backward is the transpose pair: `dP = dZ · Wb^T` through
+//!   the packed transpose kernel, scattered back to `dX` by
+//!   [`im2col::col2im_into`] (the exact adjoint of the gather), and
+//!   `dW = P^T · dZ` through the dense `gemm_at_b` kernel (real-valued
+//!   gradients, like the MLP path).
+//! * [`pool::maxpool2x2_into`] / [`pool::maxpool2x2_backward_into`]
+//!   implement the paper's MP2 stages with an argmax-index cache so the
+//!   backward is a pure scatter.
+//! * [`oracle`] holds a naive direct-convolution f32 implementation
+//!   (seven loops, no lowering) — the correctness oracle the property
+//!   tests pin the packed path against.
+//!
+//! ## Workspace ownership
+//!
+//! Nothing in this module allocates on the hot path: every function
+//! writes into caller-owned buffers. The callers
+//! (`runtime/reference.rs`'s `Workspace`, `binary/packed.rs`'s
+//! `PackedWorkspace`) size those buffers once, grow-only, so the
+//! zero-alloc warmed-step contract of the MLP path extends to conv
+//! (counting-allocator-tested in both places).
+//!
+//! ## Batch invariance
+//!
+//! An im2col row for output pixel `(bi, oy, ox)` reads only image `bi`,
+//! and the packed GEMM accumulates each output element strictly along
+//! its own patch row in packed-word order — the same argument that made
+//! `matmul_scaled_into_batched` solo≡coalesced. A request served alone
+//! therefore produces bit-identical logits to the same request inside
+//! any coalesced batch; the serve integration tests pin this end-to-end
+//! for a conv model.
+//!
+//! ## Spatial schedule
+//!
+//! The paper's C3 stacking is `(2 x C3) - MP2` repeated: a max-pool
+//! follows every *second* conv layer. [`spatial_dims`] encodes that
+//! convention once, derived purely from the model spec (4-d weight
+//! tensors in param order + the input shape), and is the single source
+//! of truth for the runtime plan, the packed exporter, the hw cost
+//! model and `bcrun hw`.
+
+pub mod im2col;
+pub mod oracle;
+pub mod pool;
+
+use crate::runtime::manifest::ModelInfo;
+use crate::util::error::Result;
+use crate::{bail, ensure};
+
+/// Resolved geometry of one conv stage of a model spec.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ConvDims {
+    /// The weight param's name (`conv3.W`).
+    pub name: String,
+    /// Index of the weight tensor in the spec's param list.
+    pub param: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub cin: usize,
+    pub cout: usize,
+    /// Input spatial size. SAME padding: the conv output is `h_in x
+    /// w_in` too.
+    pub h_in: usize,
+    pub w_in: usize,
+    /// A MaxPool2x2 follows this conv (C3 convention: after every
+    /// second conv layer).
+    pub pool: bool,
+    /// Spatial size flowing into the next stage (halved when `pool`).
+    pub h_next: usize,
+    pub w_next: usize,
+}
+
+impl ConvDims {
+    /// Patch width `kh*kw*cin` — the K dimension of the lowered GEMM.
+    pub fn patch_k(&self) -> usize {
+        self.kh * self.kw * self.cin
+    }
+
+    /// Output positions per example (`h_in * w_in`; SAME padding).
+    pub fn spatial(&self) -> usize {
+        self.h_in * self.w_in
+    }
+
+    /// Flattened activation dim leaving this stage (post-pool).
+    pub fn out_dim(&self) -> usize {
+        self.h_next * self.w_next * self.cout
+    }
+}
+
+/// Infer every conv stage's spatial geometry from a model spec: 4-d
+/// `[kh, kw, cin, cout]` weight tensors in param order, starting from
+/// `input_shape = [b, h, w, c]`, SAME padding, MaxPool2x2 after every
+/// second conv (the paper's C3 stacking). Returns an empty vec for
+/// pure dense specs. This is the shared shape-inference used by the
+/// runtime plan, `binary/export.rs`, `hw::step_cost` callers and
+/// `bcrun hw` — the one place the convention lives.
+pub fn spatial_dims(info: &ModelInfo) -> Result<Vec<ConvDims>> {
+    let mut dims: Vec<ConvDims> = vec![];
+    let conv_params: Vec<(usize, &crate::runtime::manifest::ParamInfo)> = info
+        .params
+        .iter()
+        .enumerate()
+        .filter(|(_, p)| p.name.ends_with(".W") && p.shape.len() == 4)
+        .collect();
+    if conv_params.is_empty() {
+        return Ok(dims);
+    }
+    ensure!(
+        info.input_shape.len() == 4,
+        "conv model '{}': input shape {:?} is not [batch, h, w, c]",
+        info.name,
+        info.input_shape
+    );
+    // conv stages must precede every dense stage (flatten happens once)
+    if let Some(first_dense) = info
+        .params
+        .iter()
+        .position(|p| p.name.ends_with(".W") && p.shape.len() == 2)
+    {
+        if let Some(&(last_conv, _)) = conv_params.last() {
+            ensure!(
+                last_conv < first_dense,
+                "conv model '{}': conv weight {} appears after a dense layer",
+                info.name,
+                info.params[last_conv].name
+            );
+        }
+    }
+    let (mut h, mut w, mut c) =
+        (info.input_shape[1], info.input_shape[2], info.input_shape[3]);
+    for (idx, (pi, p)) in conv_params.iter().enumerate() {
+        let (kh, kw, cin, cout) = (p.shape[0], p.shape[1], p.shape[2], p.shape[3]);
+        ensure!(
+            kh % 2 == 1 && kw % 2 == 1 && kh > 0 && kw > 0,
+            "conv layer {}: kernel {}x{} must be odd for SAME padding",
+            p.name,
+            kh,
+            kw
+        );
+        if cin != c {
+            bail!(
+                "conv layer {}: expects {} input channels, previous stage provides {}",
+                p.name,
+                cin,
+                c
+            );
+        }
+        let pool = idx % 2 == 1;
+        if pool {
+            ensure!(
+                h % 2 == 0 && w % 2 == 0,
+                "conv layer {}: MaxPool2x2 needs even spatial dims, got {}x{}",
+                p.name,
+                h,
+                w
+            );
+        }
+        let (h_next, w_next) = if pool { (h / 2, w / 2) } else { (h, w) };
+        dims.push(ConvDims {
+            name: p.name.clone(),
+            param: *pi,
+            kh,
+            kw,
+            cin,
+            cout,
+            h_in: h,
+            w_in: w,
+            pool,
+            h_next,
+            w_next,
+        });
+        h = h_next;
+        w = w_next;
+        c = cout;
+    }
+    Ok(dims)
+}
+
+/// Flattened activation dim leaving the conv stack (what the first
+/// dense layer must consume). `None` for pure dense specs.
+pub fn flatten_dim(dims: &[ConvDims]) -> Option<usize> {
+    dims.last().map(ConvDims::out_dim)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::reference::{cnn_info, mlp_info};
+
+    #[test]
+    fn c3_schedule_matches_the_paper_shape() {
+        // 32x32 input, 6 convs, pool after conv1/conv3/conv5: spatial
+        // runs 32,32,16,16,8,8 and flattens at 4*4*4*base.
+        let info = cnn_info("cnn", 128, 1024, 50);
+        let dims = spatial_dims(&info).unwrap();
+        assert_eq!(dims.len(), 6);
+        let spatial: Vec<usize> = dims.iter().map(|d| d.h_in).collect();
+        assert_eq!(spatial, vec![32, 32, 16, 16, 8, 8]);
+        let pools: Vec<bool> = dims.iter().map(|d| d.pool).collect();
+        assert_eq!(pools, vec![false, true, false, true, false, true]);
+        assert_eq!(flatten_dim(&dims), Some(4 * 4 * 512));
+        assert_eq!(dims[0].cin, 3);
+        assert_eq!(dims[5].cout, 512);
+        assert_eq!(dims[2].patch_k(), 9 * 128);
+        // the flatten dim must be exactly what the first fc expects
+        let fc0 = info.params.iter().find(|p| p.name == "fc0.W").unwrap();
+        assert_eq!(fc0.shape[0], flatten_dim(&dims).unwrap());
+    }
+
+    #[test]
+    fn dense_specs_have_no_conv_dims() {
+        let info = mlp_info("m", 784, 64, 2, 10, 16);
+        assert_eq!(spatial_dims(&info).unwrap(), vec![]);
+    }
+
+    #[test]
+    fn channel_mismatch_is_rejected() {
+        let mut info = cnn_info("cnn", 8, 32, 4);
+        // corrupt conv1's cin
+        let p = info.params.iter_mut().find(|p| p.name == "conv1.W").unwrap();
+        p.shape[2] += 1;
+        let err = spatial_dims(&info).unwrap_err().to_string();
+        assert!(err.contains("input channels"), "{err}");
+    }
+}

@@ -1,0 +1,244 @@
+//! Naive direct-convolution f32 oracle.
+//!
+//! Seven plain loops, no im2col, no packing, no SIMD — deliberately the
+//! most transparent possible statement of SAME-padding conv and its
+//! gradients. The property tests pin the lowered packed path against
+//! these, and `train_step_baseline` runs conv layers through them so
+//! the fast≡baseline agreement test covers conv end-to-end. The perf
+//! ladder also benches this as the "naive" rung the im2col-packed path
+//! must beat.
+//!
+//! Layouts match the subsystem convention: activations `(b, h, w, c)`
+//! row-major HWC, weights `[kh, kw, cin, cout]` row-major.
+
+/// `y[b,oy,ox,co] = sum_{ky,kx,ci} x[b,oy+ky-ph,ox+kx-pw,ci] * w[ky,kx,ci,co]`
+/// with zeros outside the image. `y` is overwritten.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_forward(
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    wt: &[f32],
+    kh: usize,
+    kw: usize,
+    cout: usize,
+    y: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), b * h * w * cin);
+    debug_assert_eq!(wt.len(), kh * kw * cin * cout);
+    debug_assert_eq!(y.len(), b * h * w * cout);
+    let (ph, pw) = (kh / 2, kw / 2);
+    for bi in 0..b {
+        for oy in 0..h {
+            for ox in 0..w {
+                let yo = ((bi * h + oy) * w + ox) * cout;
+                y[yo..yo + cout].fill(0.0);
+                for ky in 0..kh {
+                    let iy = oy + ky;
+                    if iy < ph || iy - ph >= h {
+                        continue;
+                    }
+                    let iy = iy - ph;
+                    for kx in 0..kw {
+                        let ix = ox + kx;
+                        if ix < pw || ix - pw >= w {
+                            continue;
+                        }
+                        let ix = ix - pw;
+                        let xo = ((bi * h + iy) * w + ix) * cin;
+                        for ci in 0..cin {
+                            let xv = x[xo + ci];
+                            let wo = ((ky * kw + kx) * cin + ci) * cout;
+                            for co in 0..cout {
+                                y[yo + co] += xv * wt[wo + co];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Input gradient: `dx = dy (*) flip(w)` — each input pixel gathers the
+/// output positions whose window covered it. `dx` is overwritten.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_backward_dx(
+    dy: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    wt: &[f32],
+    kh: usize,
+    kw: usize,
+    cout: usize,
+    dx: &mut [f32],
+) {
+    debug_assert_eq!(dy.len(), b * h * w * cout);
+    debug_assert_eq!(wt.len(), kh * kw * cin * cout);
+    debug_assert_eq!(dx.len(), b * h * w * cin);
+    let (ph, pw) = (kh / 2, kw / 2);
+    dx.fill(0.0);
+    for bi in 0..b {
+        for oy in 0..h {
+            for ox in 0..w {
+                let yo = ((bi * h + oy) * w + ox) * cout;
+                for ky in 0..kh {
+                    let iy = oy + ky;
+                    if iy < ph || iy - ph >= h {
+                        continue;
+                    }
+                    let iy = iy - ph;
+                    for kx in 0..kw {
+                        let ix = ox + kx;
+                        if ix < pw || ix - pw >= w {
+                            continue;
+                        }
+                        let ix = ix - pw;
+                        let xo = ((bi * h + iy) * w + ix) * cin;
+                        for ci in 0..cin {
+                            let wo = ((ky * kw + kx) * cin + ci) * cout;
+                            let mut acc = 0.0f32;
+                            for co in 0..cout {
+                                acc += dy[yo + co] * wt[wo + co];
+                            }
+                            dx[xo + ci] += acc;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Weight gradient: `dw[ky,kx,ci,co] = sum_{b,oy,ox} x[...] * dy[...]`.
+/// `dw` is overwritten.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_backward_dw(
+    x: &[f32],
+    dy: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    kh: usize,
+    kw: usize,
+    cout: usize,
+    dw: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), b * h * w * cin);
+    debug_assert_eq!(dy.len(), b * h * w * cout);
+    debug_assert_eq!(dw.len(), kh * kw * cin * cout);
+    let (ph, pw) = (kh / 2, kw / 2);
+    dw.fill(0.0);
+    for bi in 0..b {
+        for oy in 0..h {
+            for ox in 0..w {
+                let yo = ((bi * h + oy) * w + ox) * cout;
+                for ky in 0..kh {
+                    let iy = oy + ky;
+                    if iy < ph || iy - ph >= h {
+                        continue;
+                    }
+                    let iy = iy - ph;
+                    for kx in 0..kw {
+                        let ix = ox + kx;
+                        if ix < pw || ix - pw >= w {
+                            continue;
+                        }
+                        let ix = ix - pw;
+                        let xo = ((bi * h + iy) * w + ix) * cin;
+                        for ci in 0..cin {
+                            let xv = x[xo + ci];
+                            let wo = ((ky * kw + kx) * cin + ci) * cout;
+                            for co in 0..cout {
+                                dw[wo + co] += xv * dy[yo + co];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn numeric_grad(f: &mut dyn FnMut(&[f32]) -> f64, at: &mut Vec<f32>, i: usize) -> f64 {
+        let eps = 1e-3f32;
+        let keep = at[i];
+        at[i] = keep + eps;
+        let up = f(at);
+        at[i] = keep - eps;
+        let dn = f(at);
+        at[i] = keep;
+        (up - dn) / (2.0 * eps as f64)
+    }
+
+    #[test]
+    fn identity_kernel_is_identity() {
+        // 1x1 kernel, cin==cout, w = I: y == x
+        let (b, h, w, c) = (2, 3, 4, 3);
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..b * h * w * c).map(|_| rng.normal()).collect();
+        let mut wt = vec![0.0f32; c * c];
+        for i in 0..c {
+            wt[i * c + i] = 1.0;
+        }
+        let mut y = vec![0.0f32; x.len()];
+        conv2d_forward(&x, b, h, w, c, &wt, 1, 1, c, &mut y);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn gradients_match_numeric_differentiation() {
+        // loss = 0.5 * ||conv(x, w)||^2 on a ragged shape; dx and dw
+        // must match central differences.
+        let (b, h, w, cin, kh, kw, cout) = (2, 3, 5, 2, 3, 3, 3);
+        let mut rng = Rng::new(0xD1FF);
+        let mut x: Vec<f32> = (0..b * h * w * cin).map(|_| rng.normal() * 0.5).collect();
+        let mut wt: Vec<f32> = (0..kh * kw * cin * cout).map(|_| rng.normal() * 0.5).collect();
+        let mut y = vec![0.0f32; b * h * w * cout];
+        conv2d_forward(&x, b, h, w, cin, &wt, kh, kw, cout, &mut y);
+        // dL/dy = y
+        let mut dx = vec![0.0f32; x.len()];
+        conv2d_backward_dx(&y, b, h, w, cin, &wt, kh, kw, cout, &mut dx);
+        let mut dw = vec![0.0f32; wt.len()];
+        conv2d_backward_dw(&x, &y, b, h, w, cin, kh, kw, cout, &mut dw);
+
+        let wt_c = wt.clone();
+        let mut loss_of_x = |xs: &[f32]| -> f64 {
+            let mut yy = vec![0.0f32; b * h * w * cout];
+            conv2d_forward(xs, b, h, w, cin, &wt_c, kh, kw, cout, &mut yy);
+            0.5 * yy.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>()
+        };
+        for &i in &[0usize, 7, x.len() / 2, x.len() - 1] {
+            let g = numeric_grad(&mut loss_of_x, &mut x, i);
+            assert!(
+                (g - dx[i] as f64).abs() < 2e-2 * (1.0 + g.abs()),
+                "dx[{i}]: analytic {} vs numeric {g}",
+                dx[i]
+            );
+        }
+        let x_c = x.clone();
+        let mut loss_of_w = |ws: &[f32]| -> f64 {
+            let mut yy = vec![0.0f32; b * h * w * cout];
+            conv2d_forward(&x_c, b, h, w, cin, ws, kh, kw, cout, &mut yy);
+            0.5 * yy.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>()
+        };
+        for &i in &[0usize, 5, wt.len() / 2, wt.len() - 1] {
+            let g = numeric_grad(&mut loss_of_w, &mut wt, i);
+            assert!(
+                (g - dw[i] as f64).abs() < 2e-2 * (1.0 + g.abs()),
+                "dw[{i}]: analytic {} vs numeric {g}",
+                dw[i]
+            );
+        }
+    }
+}

@@ -1,0 +1,100 @@
+//! MaxPool2x2 with an argmax-index cache.
+//!
+//! Activations are `(b, h, w, c)` row-major. The forward records, per
+//! pooled output element, the flat index of the winning input element,
+//! so the backward is a pure scatter (each input cell wins at most one
+//! window — windows are disjoint — so scatter order cannot matter).
+//! Ties break toward the first candidate in `(dy, dx)` scan order,
+//! which keeps the choice deterministic across batch sizes and ISAs.
+
+/// Pool `y` (shape `(b, h, w, c)`, `h`/`w` even) into `out`
+/// (`(b, h/2, w/2, c)`), recording winner indices (flat into `y`) in
+/// `idx`. `out.len() == idx.len() == b*h*w*c/4`.
+pub fn maxpool2x2_into(y: &[f32], b: usize, h: usize, w: usize, c: usize, out: &mut [f32], idx: &mut [u32]) {
+    debug_assert!(h % 2 == 0 && w % 2 == 0);
+    debug_assert_eq!(y.len(), b * h * w * c);
+    debug_assert_eq!(out.len(), b * h * w * c / 4);
+    debug_assert_eq!(idx.len(), out.len());
+    debug_assert!(y.len() <= u32::MAX as usize);
+    let (oh, ow) = (h / 2, w / 2);
+    for bi in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let o = ((bi * oh + oy) * ow + ox) * c;
+                for ci in 0..c {
+                    let mut best_i = ((bi * h + 2 * oy) * w + 2 * ox) * c + ci;
+                    let mut best = y[best_i];
+                    for dy in 0..2usize {
+                        for dx in 0..2usize {
+                            if dy == 0 && dx == 0 {
+                                continue;
+                            }
+                            let i = ((bi * h + 2 * oy + dy) * w + 2 * ox + dx) * c + ci;
+                            let v = y[i];
+                            if v > best {
+                                best = v;
+                                best_i = i;
+                            }
+                        }
+                    }
+                    out[o + ci] = best;
+                    idx[o + ci] = best_i as u32;
+                }
+            }
+        }
+    }
+}
+
+/// Scatter pooled gradients back through the argmax cache: `dy` has the
+/// pooled shape, `dx` the pre-pool shape. `dx` is overwritten.
+pub fn maxpool2x2_backward_into(dy: &[f32], idx: &[u32], dx: &mut [f32]) {
+    debug_assert_eq!(dy.len(), idx.len());
+    dx.fill(0.0);
+    for (g, &i) in dy.iter().zip(idx.iter()) {
+        dx[i as usize] += g;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_picks_window_max_per_channel() {
+        // one image, 2x2 spatial (a single window), 2 channels
+        let y = [
+            1.0, -9.0, // (0,0)
+            4.0, -1.0, // (0,1)
+            3.0, -2.0, // (1,0)
+            2.0, -3.0, // (1,1)
+        ];
+        let mut out = [0.0f32; 2];
+        let mut idx = [0u32; 2];
+        maxpool2x2_into(&y, 1, 2, 2, 2, &mut out, &mut idx);
+        assert_eq!(out, [4.0, -1.0]);
+        assert_eq!(idx, [2, 3]); // both maxima live at pixel (0,1)
+    }
+
+    #[test]
+    fn ties_break_to_the_first_candidate() {
+        let y = [5.0f32, 5.0, 5.0, 5.0];
+        let mut out = [0.0f32; 1];
+        let mut idx = [9u32; 1];
+        maxpool2x2_into(&y, 1, 2, 2, 1, &mut out, &mut idx);
+        assert_eq!((out[0], idx[0]), (5.0, 0));
+    }
+
+    #[test]
+    fn backward_routes_gradient_to_the_winner_only() {
+        let y = [
+            0.0f32, 2.0, //
+            1.0, 0.5, //
+        ];
+        let mut out = [0.0f32; 1];
+        let mut idx = [0u32; 1];
+        maxpool2x2_into(&y, 1, 2, 2, 1, &mut out, &mut idx);
+        let mut dx = [7.0f32; 4];
+        maxpool2x2_backward_into(&[3.5], &idx, &mut dx);
+        assert_eq!(dx, [0.0, 3.5, 0.0, 0.0]);
+    }
+}

@@ -285,6 +285,47 @@ mod tests {
     }
 
     #[test]
+    fn committed_cifar_fixture_loads_verified_and_pins_hwc() {
+        // tiny committed fixture (rust/tests/fixtures/cifar_tiny): 3
+        // records of 4x4x3 CHW bytes + label, with a checksums.txt
+        // naming the file — so this exercises the *verified* read path
+        // against real on-disk data, not test-synthesized bytes. Skip
+        // (don't fail) when a stripped checkout omits fixtures.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/cifar_tiny");
+        let path = dir.join("tiny_batch.bin");
+        if !path.exists() {
+            eprintln!("skipping: fixture {} absent", path.display());
+            return;
+        }
+        assert!(dir.join(CHECKSUM_MANIFEST).exists(), "fixture manifest missing");
+        let ds = load_cifar_records(&path, 4, 4, 3).unwrap();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.labels, vec![0, 1, 2]);
+        assert_eq!(ds.shape, (4, 4, 3));
+        // pin CHW->HWC against the generator formula the fixture was
+        // built with: byte = (rec*83 + ch*47 + y*13 + x*5 + 7) % 256
+        let r0 = ds.row(0);
+        for (ch, want) in [7u8, 54, 101].into_iter().enumerate() {
+            assert!((r0[ch] - want as f32 / 255.0).abs() < 1e-6, "r0 ch{ch}");
+        }
+        let r2 = ds.row(2);
+        let px = (4 + 2) * 3; // pixel (y=1, x=2)
+        for (ch, want) in [196u8, 243, 34].into_iter().enumerate() {
+            assert!((r2[px + ch] - want as f32 / 255.0).abs() < 1e-6, "r2 ch{ch}");
+        }
+        // bit-rot the fixture in a scratch copy: the manifest must trip
+        let d = tmpdir().join("fixture_corrupt");
+        fs::create_dir_all(&d).unwrap();
+        let mut bytes = fs::read(&path).unwrap();
+        bytes[5] ^= 0xFF;
+        fs::write(d.join("tiny_batch.bin"), &bytes).unwrap();
+        fs::copy(dir.join(CHECKSUM_MANIFEST), d.join(CHECKSUM_MANIFEST)).unwrap();
+        let err =
+            load_cifar_records(&d.join("tiny_batch.bin"), 4, 4, 3).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "{err}");
+    }
+
+    #[test]
     fn checksum_manifest_verifies_and_rejects() {
         // own subdir: the manifest applies per-directory and must not
         // leak into the other tests sharing tmpdir()

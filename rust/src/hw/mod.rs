@@ -188,6 +188,45 @@ mod tests {
     }
 
     #[test]
+    fn cost_model_counts_pin_the_shared_conv_spatial_schedule() {
+        // `bcrun hw` resolves each conv weight's output spatial size via
+        // conv::spatial_dims — pin the resulting counts so a schedule
+        // change (pool placement, padding) shows up as a test diff here,
+        // not as a silently different table.
+        let info = crate::runtime::reference::cnn_info("cnn", 16, 64, 1);
+        let dims = crate::conv::spatial_dims(&info).unwrap();
+        let hw_of = |name: &str| -> u64 {
+            dims.iter().find(|d| d.name == name).map(|d| d.spatial() as u64).unwrap_or(1)
+        };
+        // conv MAC ledger by hand: SAME conv at 32,32,16,16,8,8 spatial
+        // with 3x3 kernels and 3->16->16->32->32->64->64 channels
+        let spatial = [32u64 * 32, 32 * 32, 16 * 16, 16 * 16, 8 * 8, 8 * 8];
+        let chans = [(3u64, 16u64), (16, 16), (16, 32), (32, 32), (32, 64), (64, 64)];
+        let conv_macs: u64 = spatial
+            .iter()
+            .zip(&chans)
+            .map(|(s, &(cin, cout))| s * 9 * cin * cout)
+            .sum();
+        // dense MACs: flatten 4*4*64 -> 64 -> 64 -> 10
+        let dense_macs: u64 = (4 * 4 * 64) * 64 + 64 * 64 + 64 * 10;
+        let real = step_cost(&info.params, 1, false, hw_of);
+        let bc = step_cost(&info.params, 1, true, hw_of);
+        assert_eq!(real.forward.mults, conv_macs + dense_macs + affine_elems(&info));
+        // binarization removes exactly the weight-GEMM multiplies from
+        // the forward pass; the BN affine multiplies survive
+        assert_eq!(bc.forward.mults, affine_elems(&info));
+        assert_eq!(real.forward.adds, bc.forward.adds);
+    }
+
+    fn affine_elems(info: &crate::runtime::manifest::ModelInfo) -> u64 {
+        info.params
+            .iter()
+            .filter(|p| p.kind == "affine")
+            .map(|p| p.shape.iter().map(|&d| d as u64).product::<u64>())
+            .sum()
+    }
+
+    #[test]
     fn memory_model_ratios() {
         let params = vec![dense("l0", 1024, 1024), affine("b", 1024)];
         let m = weight_memory(&params);

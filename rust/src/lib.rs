@@ -32,6 +32,7 @@
 
 pub mod bench_harness;
 pub mod binary;
+pub mod conv;
 pub mod coordinator;
 pub mod data;
 pub mod hw;

@@ -51,6 +51,9 @@ usage: bcrun <info|train|hw|export|infer|serve|loadgen> [flags]
              aarch64, scalar elsewhere; pinning an ISA the host lacks is
              a startup error)
   train:   --model NAME --dataset mnist|cifar10|svhn --mode none|det|stoch
+           (builtins include the conv nets cifar_cnn/svhn_cnn — binary
+             conv via im2col on the packed sign-GEMM; `bcrun info` lists
+             every model)
            --opt sgd|nesterov|adam --epochs N --lr-start F --lr-end F
            --dropout F --no-lr-scale --seed N --n-train N --n-test N
            --patience N --curves FILE.csv --features FILE.pgm
@@ -176,7 +179,7 @@ fn model_spec(args: &Args, name: &str) -> Result<binaryconnect::runtime::ModelIn
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
-    println!("builtin models (reference backend; cnn* are spec-only):");
+    println!("builtin models (reference backend; all trainable):");
     for name in reference::builtin_names() {
         let info = reference::builtin_info(name).unwrap();
         println!(
@@ -576,19 +579,17 @@ fn cmd_hw(args: &Args) -> Result<()> {
     let info = model_spec(args, &model_name)?;
     let batch = args.usize("batch", info.batch) as u64;
 
-    // spatial sizes for the CNN's conv layers (SAME conv, MP2 after pairs)
+    // spatial sizes for the CNN's conv layers come from the shared
+    // shape inference (conv::spatial_dims) — the same SAME-conv /
+    // MP2-after-every-second-conv schedule the runtime plan and the
+    // packed exporter use, instead of a duplicated hardcoded ladder
+    let conv_dims = binaryconnect::conv::spatial_dims(&info)?;
     let hw_of = |name: &str| -> u64 {
-        if !name.starts_with("conv") {
-            return 1;
-        }
-        let idx: usize = name
-            .trim_start_matches("conv")
-            .split('.')
-            .next()
-            .and_then(|s| s.parse().ok())
-            .unwrap_or(0);
-        let hw = 32usize >> (idx / 2).min(3); // 32,32,16,16,8,8
-        (hw * hw) as u64
+        conv_dims
+            .iter()
+            .find(|d| d.name == name)
+            .map(|d| d.spatial() as u64)
+            .unwrap_or(1)
     };
 
     let real = hw::step_cost(&info.params, batch, false, hw_of);

@@ -45,15 +45,35 @@
 //! The GEMMs come from `crate::kernel` and the RNG from `util::rng`, so
 //! the whole train/eval step is deterministic given `Hyper::seed`.
 //!
+//! ## Binary convolution
+//!
+//! Conv specs (4-d `[kh, kw, cin, cout]` weight tensors ahead of the
+//! dense stack) execute through the [`crate::conv`] subsystem: each conv
+//! layer is lowered to `Z = im2col(X) @ Wb` on the same packed sign-GEMM
+//! the dense layers use — the filter bank flattens row-major into a
+//! `(kh*kw*cin) x cout` matrix, so the det/stoch bit-packers run on it
+//! verbatim and the stochastic draw order matches the baseline's dense
+//! `binarize` exactly. Per-channel BN runs over all `b*h*w` spatial
+//! rows, MaxPool2x2 follows every second conv (the paper's C3 stacking,
+//! see [`crate::conv::spatial_dims`]), and the STE backward is the
+//! transpose pair: `dP = dZ·Wb^T` (packed) scattered by col2im, `dW =
+//! P^T·dZ` (dense f32). The baseline path runs the same layers through
+//! the naive direct-convolution oracle in [`crate::conv::oracle`], which
+//! the fast path is property-tested against. All conv intermediates
+//! (patches, pool indices, pre-pool activations) live in the same
+//! grow-only [`Workspace`], preserving the zero-alloc warmed-step
+//! contract.
+//!
 //! A small builtin model registry replaces the artifact manifest for this
-//! backend: CPU-scale MLP specs for each corpus, plus spec-only CNN
-//! entries that feed the hardware cost model (`hw::step_cost`) but cannot
-//! be executed without the `pjrt` feature.
+//! backend: CPU-scale MLP and CNN specs for each corpus (all trainable
+//! here), plus the paper-scale `cnn`/`cnn_small` entries that also feed
+//! the hardware cost model (`hw::step_cost`).
 
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 
 use crate::binary::packed::BitMatrix;
+use crate::conv::{im2col, oracle, pool};
 use crate::kernel;
 use crate::util::error::Result;
 use crate::util::{FaultPlan, Rng};
@@ -148,13 +168,21 @@ pub fn mlp_info(
     finish_info(name, batch, classes, vec![batch, in_dim], params)
 }
 
-/// Spec of the paper's Eq.-5 CNN (mirror of CNNConfig.spec()).  Spec-only
-/// on this backend: it feeds `hw::step_cost`, but executing it needs the
-/// PJRT path.
-pub fn cnn_info(name: &str, base: usize, fc: usize, batch: usize) -> ModelInfo {
+/// Spec of a C3-style conv net: one 3x3 SAME conv + BN layer per entry of
+/// `chans` (MaxPool2x2 after every second conv — the paper's
+/// `(2 x C3)-MP2` stacking), then one dense BN layer per entry of `fcs`
+/// on the flattened features, then the biased L2-SVM output layer.
+pub fn conv_net_info(
+    name: &str,
+    in_hw: usize,
+    in_ch: usize,
+    chans: &[usize],
+    fcs: &[usize],
+    classes: usize,
+    batch: usize,
+) -> ModelInfo {
     let mut params = vec![];
-    let chans = [base, base, 2 * base, 2 * base, 4 * base, 4 * base];
-    let mut cin = 3usize;
+    let mut cin = in_ch;
     for (i, &cout) in chans.iter().enumerate() {
         params.push(ParamInfo {
             name: format!("conv{i}.W"),
@@ -165,9 +193,11 @@ pub fn cnn_info(name: &str, base: usize, fc: usize, batch: usize) -> ModelInfo {
         params.extend(bn_defs(&format!("conv{i}.bn"), cout));
         cin = cout;
     }
-    let hw = 32 / 8;
-    let mut d = hw * hw * chans[5];
-    for i in 0..2 {
+    let pools = chans.len() / 2;
+    assert!(in_hw % (1 << pools) == 0, "{in_hw}x{in_hw} input cannot survive {pools} pools");
+    let hw = in_hw >> pools;
+    let mut d = hw * hw * cin;
+    for (i, &fc) in fcs.iter().enumerate() {
         params.push(ParamInfo {
             name: format!("fc{i}.W"),
             shape: vec![d, fc],
@@ -179,22 +209,48 @@ pub fn cnn_info(name: &str, base: usize, fc: usize, batch: usize) -> ModelInfo {
     }
     params.push(ParamInfo {
         name: "out.W".to_string(),
-        shape: vec![d, 10],
+        shape: vec![d, classes],
         kind: "weight".to_string(),
-        glorot: glorot_coeff(d, 10),
+        glorot: glorot_coeff(d, classes),
     });
     params.push(ParamInfo {
         name: "out.b".to_string(),
-        shape: vec![10],
+        shape: vec![classes],
         kind: "affine".to_string(),
         glorot: 0.0,
     });
-    finish_info(name, batch, 10, vec![batch, 32, 32, 3], params)
+    finish_info(name, batch, classes, vec![batch, in_hw, in_hw, in_ch], params)
 }
 
-/// Names served by [`builtin_info`]. The `cnn*` entries are spec-only.
+/// Spec of the paper's Eq.-5 CNN (mirror of CNNConfig.spec()): six 3x3
+/// convs at `base/base/2b/2b/4b/4b` channels over a 32x32x3 input, two
+/// `fc`-wide dense layers, 10-way L2-SVM output.
+pub fn cnn_info(name: &str, base: usize, fc: usize, batch: usize) -> ModelInfo {
+    conv_net_info(
+        name,
+        32,
+        3,
+        &[base, base, 2 * base, 2 * base, 4 * base, 4 * base],
+        &[fc, fc],
+        10,
+        batch,
+    )
+}
+
+/// Names served by [`builtin_info`]. All are trainable on this backend;
+/// the paper-scale `cnn`/`cnn_small` are heavy on CPU — `cifar_cnn` and
+/// `svhn_cnn` are the CPU-scale conv entries.
 pub fn builtin_names() -> &'static [&'static str] {
-    &["mlp", "mlp_small", "cifar_mlp", "svhn_mlp", "cnn", "cnn_small"]
+    &[
+        "mlp",
+        "mlp_small",
+        "cifar_mlp",
+        "svhn_mlp",
+        "cifar_cnn",
+        "svhn_cnn",
+        "cnn",
+        "cnn_small",
+    ]
 }
 
 /// The builtin model registry (CPU-scale sizes; the paper's full-scale MLP
@@ -205,6 +261,8 @@ pub fn builtin_info(name: &str) -> Option<ModelInfo> {
         "mlp_small" => Some(mlp_info("mlp_small", 784, 64, 2, 10, 50)),
         "cifar_mlp" => Some(mlp_info("cifar_mlp", 3072, 256, 3, 10, 50)),
         "svhn_mlp" => Some(mlp_info("svhn_mlp", 3072, 128, 3, 10, 50)),
+        "cifar_cnn" => Some(cnn_info("cifar_cnn", 16, 128, 16)),
+        "svhn_cnn" => Some(cnn_info("svhn_cnn", 8, 64, 16)),
         "cnn" => Some(cnn_info("cnn", 128, 1024, 50)),
         "cnn_small" => Some(cnn_info("cnn_small", 64, 512, 50)),
         _ => None,
@@ -225,11 +283,136 @@ struct DenseLayer {
     bias: Option<usize>,
 }
 
-fn plan(info: &ModelInfo) -> Result<Vec<DenseLayer>> {
+/// One conv stage of the validated execution plan (3x3-style SAME conv +
+/// per-channel BN + ReLU, optionally followed by MaxPool2x2).
+struct ConvLayer {
+    /// param index of the [kh, kw, cin, cout] weight tensor.
+    w: usize,
+    kh: usize,
+    kw: usize,
+    cin: usize,
+    cout: usize,
+    /// Input spatial size (SAME padding: conv output is the same).
+    h_in: usize,
+    w_in: usize,
+    /// MaxPool2x2 follows this conv (C3 schedule: every second conv).
+    pool: bool,
+    /// Glorot coefficient: binarization scale and clip box half-width.
+    h: f32,
+    /// param index of BN gamma (beta/rmean/rvar follow). Conv layers
+    /// always carry BN in this plan.
+    bn: usize,
+}
+
+impl ConvLayer {
+    /// K dimension of the lowered GEMM (`kh*kw*cin`).
+    fn patch_k(&self) -> usize {
+        self.kh * self.kw * self.cin
+    }
+
+    /// Output positions per example (`h_in * w_in`, SAME padding).
+    fn spatial(&self) -> usize {
+        self.h_in * self.w_in
+    }
+
+    /// Flattened input dim (`h_in * w_in * cin`).
+    fn in_dim(&self) -> usize {
+        self.spatial() * self.cin
+    }
+
+    /// Flattened output dim leaving the stage (post-pool).
+    fn out_dim(&self) -> usize {
+        let s = if self.pool { self.spatial() / 4 } else { self.spatial() };
+        s * self.cout
+    }
+}
+
+enum Layer {
+    Conv(ConvLayer),
+    Dense(DenseLayer),
+}
+
+impl Layer {
+    fn w(&self) -> usize {
+        match self {
+            Layer::Conv(c) => c.w,
+            Layer::Dense(d) => d.w,
+        }
+    }
+
+    fn bn(&self) -> Option<usize> {
+        match self {
+            Layer::Conv(c) => Some(c.bn),
+            Layer::Dense(d) => d.bn,
+        }
+    }
+
+    fn in_dim(&self) -> usize {
+        match self {
+            Layer::Conv(c) => c.in_dim(),
+            Layer::Dense(d) => d.k,
+        }
+    }
+
+    fn out_dim(&self) -> usize {
+        match self {
+            Layer::Conv(c) => c.out_dim(),
+            Layer::Dense(d) => d.n,
+        }
+    }
+}
+
+/// Check the BN block (gamma/beta/rmean/rvar) directly follows param `i`.
+fn expect_bn_block(params: &[ParamInfo], i: usize) -> Result<()> {
+    let p = &params[i];
+    if i + 5 > params.len() {
+        bail!("reference backend: truncated BN block after {}", p.name);
+    }
+    for (off, suffix) in [(1usize, ".gamma"), (2, ".beta"), (3, ".rmean"), (4, ".rvar")] {
+        if !params[i + off].name.ends_with(suffix) {
+            bail!(
+                "reference backend: expected {} after {}, found {}",
+                suffix,
+                p.name,
+                params[i + off].name
+            );
+        }
+    }
+    Ok(())
+}
+
+fn plan(info: &ModelInfo) -> Result<Vec<Layer>> {
     let params = &info.params;
     let n = params.len();
-    let mut layers: Vec<DenseLayer> = vec![];
+    let mut layers: Vec<Layer> = vec![];
     let mut i = 0usize;
+    // conv stages first: geometry from the shared shape inference
+    // (SAME padding, pool-after-every-second-conv — conv::spatial_dims
+    // is the single source of truth `bcrun hw` and the exporter share)
+    for d in crate::conv::spatial_dims(info)? {
+        let p = &params[d.param];
+        if d.param != i {
+            bail!(
+                "reference backend: unexpected param {} at index {i} (wanted conv weight {})",
+                params[i].name,
+                p.name
+            );
+        }
+        expect_bn_block(params, i)?;
+        layers.push(Layer::Conv(ConvLayer {
+            w: i,
+            kh: d.kh,
+            kw: d.kw,
+            cin: d.cin,
+            cout: d.cout,
+            h_in: d.h_in,
+            w_in: d.w_in,
+            pool: d.pool,
+            h: p.glorot as f32,
+            bn: i + 1,
+        }));
+        i += 5;
+    }
     while i < n {
         let p = &params[i];
         if !p.name.ends_with(".W") {
@@ -237,10 +420,11 @@ fn plan(info: &ModelInfo) -> Result<Vec<DenseLayer>> {
         }
         if p.shape.len() != 2 {
             bail!(
-                "reference backend supports dense MLPs only; {} has shape {:?} \
-                 (conv models need the pjrt feature)",
+                "reference backend cannot execute {}: weight shape {:?} is neither dense \
+                 [in, out] nor conv [kh, kw, cin, cout]; trainable builtin models: {}",
                 p.name,
-                p.shape
+                p.shape,
+                builtin_names().join(", ")
             );
         }
         let (k, units) = (p.shape[0], p.shape[1]);
@@ -249,54 +433,45 @@ fn plan(info: &ModelInfo) -> Result<Vec<DenseLayer>> {
             if i + 2 != n {
                 bail!("reference backend: the biased output layer must come last");
             }
-            layers.push(DenseLayer {
+            layers.push(Layer::Dense(DenseLayer {
                 w: i,
                 k,
                 n: units,
                 h: p.glorot as f32,
                 bn: None,
                 bias: Some(i + 1),
-            });
+            }));
             i += 2;
         } else {
-            if i + 5 > n {
-                bail!("reference backend: truncated BN block after {}", p.name);
-            }
-            for (off, suffix) in
-                [(1usize, ".gamma"), (2, ".beta"), (3, ".rmean"), (4, ".rvar")]
-            {
-                if !params[i + off].name.ends_with(suffix) {
-                    bail!(
-                        "reference backend: expected {} after {}, found {}",
-                        suffix,
-                        p.name,
-                        params[i + off].name
-                    );
-                }
-            }
-            layers.push(DenseLayer {
+            expect_bn_block(params, i)?;
+            layers.push(Layer::Dense(DenseLayer {
                 w: i,
                 k,
                 n: units,
                 h: p.glorot as f32,
                 bn: Some(i + 1),
                 bias: None,
-            });
+            }));
             i += 5;
         }
     }
-    if layers.is_empty() || layers.last().unwrap().bias.is_none() {
-        bail!("reference backend: model has no output layer");
+    match layers.last() {
+        Some(Layer::Dense(d)) if d.bias.is_some() => {}
+        _ => bail!("reference backend: model has no output layer"),
     }
     for w in layers.windows(2) {
-        if w[0].n != w[1].k {
-            bail!("reference backend: layer dims do not chain ({} vs {})", w[0].n, w[1].k);
+        if w[0].out_dim() != w[1].in_dim() {
+            bail!(
+                "reference backend: layer dims do not chain ({} vs {})",
+                w[0].out_dim(),
+                w[1].in_dim()
+            );
         }
     }
-    if layers[0].k != info.input_dim() {
+    if layers[0].in_dim() != info.input_dim() {
         bail!(
             "reference backend: first layer expects {} inputs, model input dim is {}",
-            layers[0].k,
+            layers[0].in_dim(),
             info.input_dim()
         );
     }
@@ -372,36 +547,180 @@ fn grads_non_finite(grads: &[Vec<f32>], used: &[bool]) -> bool {
         .any(|(g, &u)| u && g.iter().any(|v| !v.is_finite()))
 }
 
+/// Training-mode BN (batch statistics) + affine + ReLU + inverted
+/// dropout, in place on `z` (`rows x n` row-major), filling the caches
+/// the backward needs. Shared by the dense and conv stages of both
+/// kernel paths: for dense layers `rows` is the batch; for conv layers
+/// it is `b*h*w` — per-channel BN over every spatial position, as in
+/// the paper's conv stacks. Dropout draws (when `p > 0`) run row-major
+/// over `z`, so the fast and baseline paths consume the RNG
+/// identically.
+#[allow(clippy::too_many_arguments)]
+fn bn_forward_train_into(
+    z: &mut [f32],
+    n: usize,
+    gamma: &[f32],
+    beta: &[f32],
+    p: f32,
+    rng: &mut Rng,
+    mean: &mut [f32],
+    var: &mut [f32],
+    inv_std: &mut [f32],
+    xhat: &mut [f32],
+    gate: &mut [f32],
+) {
+    let rows_f = (z.len() / n) as f32;
+    // batch statistics (biased variance, like jnp.var); kept by the
+    // caller so the rmean/rvar write can wait until the divergence
+    // sentinel has cleared the step
+    mean.fill(0.0);
+    for zrow in z.chunks_exact(n) {
+        for (mj, &v) in mean.iter_mut().zip(zrow) {
+            *mj += v;
+        }
+    }
+    for mj in mean.iter_mut() {
+        *mj /= rows_f;
+    }
+    var.fill(0.0);
+    for zrow in z.chunks_exact(n) {
+        for ((vj, &v), &mj) in var.iter_mut().zip(zrow).zip(&*mean) {
+            let cv = v - mj;
+            *vj += cv * cv;
+        }
+    }
+    for vj in var.iter_mut() {
+        *vj /= rows_f;
+    }
+    for (o, &v) in inv_std.iter_mut().zip(&*var) {
+        *o = 1.0 / (v + BN_EPS).sqrt();
+    }
+    for (xrow, zrow) in xhat.chunks_exact_mut(n).zip(z.chunks_exact(n)) {
+        for (((xv, &zv), &mj), &is) in xrow.iter_mut().zip(zrow).zip(&*mean).zip(&*inv_std) {
+            *xv = (zv - mj) * is;
+        }
+    }
+    // affine + ReLU + inverted dropout; z becomes the layer output
+    let dscale = 1.0 / (1.0 - p).max(1e-6);
+    for (zrow, (xrow, grow)) in
+        z.chunks_exact_mut(n).zip(xhat.chunks_exact(n).zip(gate.chunks_exact_mut(n)))
+    {
+        for (j, (zv, gv)) in zrow.iter_mut().zip(grow.iter_mut()).enumerate() {
+            let yv = gamma[j] * xrow[j] + beta[j];
+            let s = if p > 0.0 {
+                if rng.uniform() < p {
+                    0.0
+                } else {
+                    dscale
+                }
+            } else {
+                1.0
+            };
+            if yv > 0.0 {
+                *gv = s;
+                *zv = yv * s;
+            } else {
+                *gv = 0.0;
+                *zv = 0.0;
+            }
+        }
+    }
+}
+
+/// Eval-mode BN (running statistics) + affine + ReLU, in place on `z`.
+fn bn_forward_eval_into(
+    z: &mut [f32],
+    n: usize,
+    gamma: &[f32],
+    beta: &[f32],
+    rmean: &[f32],
+    rvar: &[f32],
+    inv_std: &mut [f32],
+) {
+    for (o, &v) in inv_std.iter_mut().zip(rvar) {
+        *o = 1.0 / (v + BN_EPS).sqrt();
+    }
+    for zrow in z.chunks_exact_mut(n) {
+        for (j, zv) in zrow.iter_mut().enumerate() {
+            let yv = (*zv - rmean[j]) * inv_std[j] * gamma[j] + beta[j];
+            *zv = yv.max(0.0);
+        }
+    }
+}
+
+/// Batch-norm backward through the batch statistics, in place on `dz`
+/// (which must already carry the ReLU/dropout gate). Writes
+/// `dgamma = sum(dy * xhat)` and `dbeta = sum(dy)` as side products.
+fn bn_backward_into(
+    dz: &mut [f32],
+    n: usize,
+    gamma: &[f32],
+    xhat: &[f32],
+    inv_std: &[f32],
+    dgamma: &mut [f32],
+    dbeta: &mut [f32],
+) {
+    let rows_f = (dz.len() / n) as f32;
+    dgamma.fill(0.0);
+    dbeta.fill(0.0);
+    for (drow, xrow) in dz.chunks_exact(n).zip(xhat.chunks_exact(n)) {
+        for (((sg, sb), &d), &xv) in dgamma.iter_mut().zip(dbeta.iter_mut()).zip(drow).zip(xrow)
+        {
+            *sb += d;
+            *sg += d * xv;
+        }
+    }
+    for (drow, xrow) in dz.chunks_exact_mut(n).zip(xhat.chunks_exact(n)) {
+        for (j, dv) in drow.iter_mut().enumerate() {
+            *dv = gamma[j] * inv_std[j] / rows_f * (rows_f * *dv - dbeta[j] - xrow[j] * dgamma[j]);
+        }
+    }
+}
+
 /// Preallocated per-step buffers. Built lazily on the first step and
 /// reused for the executor's lifetime, so a steady-state `train_step`
-/// allocates nothing (see `steady_state_train_step_is_allocation_free`).
+/// allocates nothing (see `steady_state_train_step_is_allocation_free`
+/// and its conv twin).
 struct Workspace {
-    /// acts[li] = b x k input to layer li (acts[0] = dropped-out batch);
-    /// acts[n_layers] = b x classes logits.
+    /// acts[li] = flattened input to layer li (acts[0] = dropped-out
+    /// batch); acts[n_layers] = b x classes logits. Conv activations are
+    /// `(b, h, w, c)` row-major, which flattens to exactly the dense
+    /// layout the fc stack consumes.
     acts: Vec<Vec<f32>>,
-    /// b x n normalized pre-affine BN activations (hidden layers only).
+    /// dacts[li] = gradient w.r.t. acts[li] (dacts[0] unused — the input
+    /// gradient is never needed).
+    dacts: Vec<Vec<f32>>,
+    /// rows x n normalized pre-affine BN activations (BN layers only;
+    /// rows = batch for dense, b*h*w for conv).
     xhat: Vec<Vec<f32>>,
-    /// n per-unit 1/sqrt(var + eps) (hidden layers only).
+    /// n per-unit 1/sqrt(var + eps) (BN layers only).
     inv_std: Vec<Vec<f32>>,
-    /// b x n combined ReLU x dropout multiplier (hidden layers only).
+    /// rows x n combined ReLU x dropout multiplier (BN layers only).
     gate: Vec<Vec<f32>>,
-    /// per-layer batch statistics (hidden layers only), kept until the
+    /// per-layer batch statistics (BN layers only), kept until the
     /// end of the step so the running-stat write can happen *after* the
     /// divergence sentinel — a skipped step must leave rmean/rvar
     /// untouched too.
     bn_mean: Vec<Vec<f32>>,
     bn_var: Vec<Vec<f32>>,
-    /// per-layer packed sign matrices, re-packed in place every step.
+    /// per-layer packed sign matrices, re-packed in place every step
+    /// (conv filter banks pack as (kh*kw*cin) x cout).
     bits: Vec<BitMatrix>,
-    /// transpose scratch for the packed kernels (max_dim * b).
+    /// im2col patch matrices, (b*h*w) x (kh*kw*cin) (conv layers only).
+    patches: Vec<Vec<f32>>,
+    /// patch-gradient buffers, same shapes (conv layers only).
+    dpatches: Vec<Vec<f32>>,
+    /// pre-pool conv activations, (b*h*w) x cout (pooled conv layers
+    /// only); doubles as the pool-backward scatter target.
+    ybuf: Vec<Vec<f32>>,
+    /// MaxPool2x2 argmax cache (pooled conv layers only).
+    pool_idx: Vec<Vec<u32>>,
+    /// transpose scratch for the packed kernels (max rows*max(k, n)).
     xt: Vec<f32>,
-    /// tmatmul selected-sum accumulator (max_k * b).
+    /// tmatmul selected-sum accumulator (max rows*k).
     acc: Vec<f32>,
-    /// per-example row totals (b).
+    /// per-GEMM-row totals (max rows).
     totals: Vec<f32>,
-    /// backward ping-pong buffers (b * max_dim each).
-    d0: Vec<f32>,
-    d1: Vec<f32>,
     /// per-param gradient buffers (+ which ones a step produced).
     grads: Vec<Vec<f32>>,
     grad_used: Vec<bool>,
@@ -415,26 +734,40 @@ struct Workspace {
 }
 
 impl Workspace {
-    fn build(info: &ModelInfo, layers: &[DenseLayer]) -> Workspace {
+    fn build(info: &ModelInfo, layers: &[Layer]) -> Workspace {
         let b = info.batch;
         let nl = layers.len();
         let mut acts = Vec::with_capacity(nl + 1);
-        acts.push(vec![0f32; b * layers[0].k]);
+        acts.push(vec![0f32; b * layers[0].in_dim()]);
         for l in layers {
-            acts.push(vec![0f32; b * l.n]);
+            acts.push(vec![0f32; b * l.out_dim()]);
+        }
+        let mut dacts = Vec::with_capacity(nl + 1);
+        dacts.push(Vec::new());
+        for l in layers {
+            dacts.push(vec![0f32; b * l.out_dim()]);
         }
         let mut xhat = Vec::with_capacity(nl);
         let mut inv_std = Vec::with_capacity(nl);
         let mut gate = Vec::with_capacity(nl);
         let mut bn_mean = Vec::with_capacity(nl);
         let mut bn_var = Vec::with_capacity(nl);
+        let mut patches = Vec::with_capacity(nl);
+        let mut dpatches = Vec::with_capacity(nl);
+        let mut ybuf = Vec::with_capacity(nl);
+        let mut pool_idx = Vec::with_capacity(nl);
         for l in layers {
-            if l.bn.is_some() {
-                xhat.push(vec![0f32; b * l.n]);
-                inv_std.push(vec![0f32; l.n]);
-                gate.push(vec![0f32; b * l.n]);
-                bn_mean.push(vec![0f32; l.n]);
-                bn_var.push(vec![0f32; l.n]);
+            // (rows, units) of the layer's BN problem; rows = GEMM rows
+            let (rows, units) = match l {
+                Layer::Conv(c) => (b * c.spatial(), c.cout),
+                Layer::Dense(d) => (b, d.n),
+            };
+            if l.bn().is_some() {
+                xhat.push(vec![0f32; rows * units]);
+                inv_std.push(vec![0f32; units]);
+                gate.push(vec![0f32; rows * units]);
+                bn_mean.push(vec![0f32; units]);
+                bn_var.push(vec![0f32; units]);
             } else {
                 xhat.push(Vec::new());
                 inv_std.push(Vec::new());
@@ -442,31 +775,62 @@ impl Workspace {
                 bn_mean.push(Vec::new());
                 bn_var.push(Vec::new());
             }
+            match l {
+                Layer::Conv(c) => {
+                    patches.push(vec![0f32; rows * c.patch_k()]);
+                    dpatches.push(vec![0f32; rows * c.patch_k()]);
+                    if c.pool {
+                        ybuf.push(vec![0f32; rows * c.cout]);
+                        pool_idx.push(vec![0u32; rows * c.cout / 4]);
+                    } else {
+                        ybuf.push(Vec::new());
+                        pool_idx.push(Vec::new());
+                    }
+                }
+                Layer::Dense(_) => {
+                    patches.push(Vec::new());
+                    dpatches.push(Vec::new());
+                    ybuf.push(Vec::new());
+                    pool_idx.push(Vec::new());
+                }
+            }
         }
-        let max_dim = layers.iter().map(|l| l.k.max(l.n)).max().unwrap_or(1);
-        let max_k = layers.iter().map(|l| l.k).max().unwrap_or(1);
-        // presize the GEMM panel buffers for every product the step runs:
-        // forward z = a @ W (b x k x n), grad dW = a^T @ dz (k x b x n),
-        // and backward dX = dz @ W^T (b x n x k), per layer
+        // presize the GEMM panel buffers for every product the step runs
+        // — forward z = a @ W (rows x k x n), grad dW = a^T @ dz
+        // (k x rows x n), backward dX = dz @ W^T (rows x n x k) — and the
+        // packed-kernel scratch for the largest layer in each role.
         let mut panels = kernel::PanelBuf::new();
+        let mut bits = Vec::with_capacity(nl);
+        let (mut xt_len, mut acc_len, mut tot_len) = (1usize, 1usize, 1usize);
         for l in layers {
-            panels.reserve_gemm(b, l.k, l.n);
-            panels.reserve_gemm(l.k, b, l.n);
-            panels.reserve_gemm(b, l.n, l.k);
+            let (rows, k, units) = match l {
+                Layer::Conv(c) => (b * c.spatial(), c.patch_k(), c.cout),
+                Layer::Dense(d) => (b, d.k, d.n),
+            };
+            panels.reserve_gemm(rows, k, units);
+            panels.reserve_gemm(k, rows, units);
+            panels.reserve_gemm(rows, units, k);
+            xt_len = xt_len.max(rows * k.max(units));
+            acc_len = acc_len.max(rows * k);
+            tot_len = tot_len.max(rows);
+            bits.push(BitMatrix::zeroed(k, units));
         }
         Workspace {
             acts,
+            dacts,
             xhat,
             inv_std,
             gate,
             bn_mean,
             bn_var,
-            bits: layers.iter().map(|l| BitMatrix::zeroed(l.k, l.n)).collect(),
-            xt: vec![0f32; max_dim * b],
-            acc: vec![0f32; max_k * b],
-            totals: vec![0f32; b],
-            d0: vec![0f32; b * max_dim],
-            d1: vec![0f32; b * max_dim],
+            bits,
+            patches,
+            dpatches,
+            ybuf,
+            pool_idx,
+            xt: vec![0f32; xt_len],
+            acc: vec![0f32; acc_len],
+            totals: vec![0f32; tot_len],
             grads: info.params.iter().map(|p| vec![0f32; p.numel()]).collect(),
             grad_used: vec![false; info.params.len()],
             lossv: vec![0f32; b],
@@ -479,7 +843,7 @@ impl Workspace {
 
 pub struct ReferenceExecutor {
     info: ModelInfo,
-    layers: Vec<DenseLayer>,
+    layers: Vec<Layer>,
     /// true (default): packed/blocked workspace path; false: the seed-era
     /// dense allocating path (benchmark baseline + correctness oracle).
     fast: bool,
@@ -489,7 +853,8 @@ pub struct ReferenceExecutor {
 }
 
 impl ReferenceExecutor {
-    /// Validate a dense-MLP spec into an executable plan.
+    /// Validate a model spec (dense MLP, or C3-style conv net lowered
+    /// onto the packed sign-GEMM) into an executable plan.
     pub fn new(info: ModelInfo) -> Result<ReferenceExecutor> {
         let layers = plan(&info)?;
         Ok(ReferenceExecutor { info, layers, fast: true, ws: Mutex::new(None), faults: None })
@@ -656,107 +1021,150 @@ impl ReferenceExecutor {
             }
         }
         for (li, layer) in self.layers.iter().enumerate() {
-            let n = layer.n;
-            let k = layer.k;
-            // z = a_in @ Wb into acts[li + 1]
             let (alo, ahi) = ws.acts.split_at_mut(li + 1);
             let a_in: &[f32] = &alo[li];
-            let z: &mut [f32] = &mut ahi[0];
-            match mode {
-                Mode::None => {
-                    kernel::gemm_into(a_in, &state.params[layer.w], b, k, n, z, &mut ws.panels)
-                }
-                Mode::Det => {
-                    let bits = &mut ws.bits[li];
-                    bits.pack_det_into(&state.params[layer.w], k, n);
-                    bits.matmul_scaled_into(a_in, b, layer.h, z, &mut ws.xt, &mut ws.totals);
-                }
-                Mode::Stoch => {
-                    let bits = &mut ws.bits[li];
-                    bits.pack_stoch_into(&state.params[layer.w], k, n, layer.h, &mut rng);
-                    bits.matmul_scaled_into(a_in, b, layer.h, z, &mut ws.xt, &mut ws.totals);
-                }
-            }
-            if li == nl - 1 {
-                let bias = &state.params[layer.bias.unwrap()];
-                for zrow in z.chunks_exact_mut(n) {
-                    for (zv, &bv) in zrow.iter_mut().zip(bias) {
-                        *zv += bv;
-                    }
-                }
-            } else {
-                let gi = layer.bn.unwrap();
-                // batch statistics (biased variance, like jnp.var); kept
-                // per layer so the rmean/rvar write can wait until the
-                // divergence sentinel has cleared the step
-                let mean = &mut ws.bn_mean[li][..];
-                let var = &mut ws.bn_var[li][..];
-                mean.fill(0.0);
-                for zrow in z.chunks_exact(n) {
-                    for (mj, &v) in mean.iter_mut().zip(zrow) {
-                        *mj += v;
-                    }
-                }
-                for mj in mean.iter_mut() {
-                    *mj /= bf;
-                }
-                var.fill(0.0);
-                for zrow in z.chunks_exact(n) {
-                    for ((vj, &v), &mj) in var.iter_mut().zip(zrow).zip(&*mean) {
-                        let cv = v - mj;
-                        *vj += cv * cv;
-                    }
-                }
-                for vj in var.iter_mut() {
-                    *vj /= bf;
-                }
-                let inv_std = &mut ws.inv_std[li];
-                for (o, &v) in inv_std.iter_mut().zip(&*var) {
-                    *o = 1.0 / (v + BN_EPS).sqrt();
-                }
-                let xhat = &mut ws.xhat[li];
-                for (xrow, zrow) in xhat.chunks_exact_mut(n).zip(z.chunks_exact(n)) {
-                    for (((xv, &zv), &mj), &is) in
-                        xrow.iter_mut().zip(zrow).zip(&*mean).zip(&*inv_std)
-                    {
-                        *xv = (zv - mj) * is;
-                    }
-                }
-                // affine + ReLU + inverted dropout, z becomes acts[li + 1]
-                let gamma = &state.params[gi];
-                let beta = &state.params[gi + 1];
-                let p = hyper.dropout;
-                let dscale = 1.0 / (1.0 - p).max(1e-6);
-                let gate = &mut ws.gate[li];
-                for (zrow, (xrow, grow)) in z
-                    .chunks_exact_mut(n)
-                    .zip(ws.xhat[li].chunks_exact(n).zip(gate.chunks_exact_mut(n)))
-                {
-                    for (j, (zv, gv)) in zrow.iter_mut().zip(grow.iter_mut()).enumerate() {
-                        let yv = gamma[j] * xrow[j] + beta[j];
-                        let s = if p > 0.0 {
-                            if rng.uniform() < p {
-                                0.0
-                            } else {
-                                dscale
-                            }
-                        } else {
-                            1.0
-                        };
-                        if yv > 0.0 {
-                            *gv = s;
-                            *zv = yv * s;
-                        } else {
-                            *gv = 0.0;
-                            *zv = 0.0;
+            match layer {
+                Layer::Dense(layer) => {
+                    let n = layer.n;
+                    let k = layer.k;
+                    // z = a_in @ Wb into acts[li + 1]
+                    let z: &mut [f32] = &mut ahi[0];
+                    match mode {
+                        Mode::None => kernel::gemm_into(
+                            a_in,
+                            &state.params[layer.w],
+                            b,
+                            k,
+                            n,
+                            z,
+                            &mut ws.panels,
+                        ),
+                        Mode::Det => {
+                            let bits = &mut ws.bits[li];
+                            bits.pack_det_into(&state.params[layer.w], k, n);
+                            bits.matmul_scaled_into(a_in, b, layer.h, z, &mut ws.xt, &mut ws.totals);
                         }
+                        Mode::Stoch => {
+                            let bits = &mut ws.bits[li];
+                            bits.pack_stoch_into(&state.params[layer.w], k, n, layer.h, &mut rng);
+                            bits.matmul_scaled_into(a_in, b, layer.h, z, &mut ws.xt, &mut ws.totals);
+                        }
+                    }
+                    if let Some(bidx) = layer.bias {
+                        let bias = &state.params[bidx];
+                        for zrow in z.chunks_exact_mut(n) {
+                            for (zv, &bv) in zrow.iter_mut().zip(bias) {
+                                *zv += bv;
+                            }
+                        }
+                    } else {
+                        let gi = layer.bn.unwrap();
+                        bn_forward_train_into(
+                            z,
+                            n,
+                            &state.params[gi],
+                            &state.params[gi + 1],
+                            hyper.dropout,
+                            &mut rng,
+                            &mut ws.bn_mean[li],
+                            &mut ws.bn_var[li],
+                            &mut ws.inv_std[li],
+                            &mut ws.xhat[li],
+                            &mut ws.gate[li],
+                        );
+                    }
+                }
+                Layer::Conv(layer) => {
+                    let rows = b * layer.spatial();
+                    let pk = layer.patch_k();
+                    // lower to a GEMM over gathered patches: the pre-pool
+                    // conv output lands in ybuf when a pool follows,
+                    // directly in acts[li + 1] otherwise
+                    im2col::im2col_into(
+                        a_in,
+                        b,
+                        layer.h_in,
+                        layer.w_in,
+                        layer.cin,
+                        layer.kh,
+                        layer.kw,
+                        &mut ws.patches[li],
+                    );
+                    let z: &mut [f32] =
+                        if layer.pool { &mut ws.ybuf[li][..] } else { &mut ahi[0][..] };
+                    match mode {
+                        Mode::None => kernel::gemm_into(
+                            &ws.patches[li],
+                            &state.params[layer.w],
+                            rows,
+                            pk,
+                            layer.cout,
+                            z,
+                            &mut ws.panels,
+                        ),
+                        Mode::Det => {
+                            let bits = &mut ws.bits[li];
+                            bits.pack_det_into(&state.params[layer.w], pk, layer.cout);
+                            bits.matmul_scaled_into(
+                                &ws.patches[li],
+                                rows,
+                                layer.h,
+                                z,
+                                &mut ws.xt,
+                                &mut ws.totals,
+                            );
+                        }
+                        Mode::Stoch => {
+                            let bits = &mut ws.bits[li];
+                            bits.pack_stoch_into(
+                                &state.params[layer.w],
+                                pk,
+                                layer.cout,
+                                layer.h,
+                                &mut rng,
+                            );
+                            bits.matmul_scaled_into(
+                                &ws.patches[li],
+                                rows,
+                                layer.h,
+                                z,
+                                &mut ws.xt,
+                                &mut ws.totals,
+                            );
+                        }
+                    }
+                    // per-channel BN over all b*h*w rows + ReLU + dropout
+                    let gi = layer.bn;
+                    bn_forward_train_into(
+                        z,
+                        layer.cout,
+                        &state.params[gi],
+                        &state.params[gi + 1],
+                        hyper.dropout,
+                        &mut rng,
+                        &mut ws.bn_mean[li],
+                        &mut ws.bn_var[li],
+                        &mut ws.inv_std[li],
+                        &mut ws.xhat[li],
+                        &mut ws.gate[li],
+                    );
+                    if layer.pool {
+                        pool::maxpool2x2_into(
+                            &ws.ybuf[li],
+                            b,
+                            layer.h_in,
+                            layer.w_in,
+                            layer.cout,
+                            &mut ahi[0],
+                            &mut ws.pool_idx[li],
+                        );
                     }
                 }
             }
         }
 
-        // ---- loss / metrics ----
-        metrics_into(&ws.acts[nl], y, c, &mut ws.lossv, &mut ws.errv, &mut ws.dlogits);
+        // ---- loss / metrics (dlogits land straight in dacts[nl]) ----
+        metrics_into(&ws.acts[nl], y, c, &mut ws.lossv, &mut ws.errv, &mut ws.dacts[nl]);
         let loss = ws.lossv.iter().sum::<f32>() / bf;
         let n_err = ws.errv.iter().sum::<f32>();
 
@@ -764,103 +1172,168 @@ impl ReferenceExecutor {
         for u in ws.grad_used.iter_mut() {
             *u = false;
         }
-        ws.d0[..b * c].copy_from_slice(&ws.dlogits);
-        let mut cur_in_d0 = true;
         for li in (0..nl).rev() {
             let layer = &self.layers[li];
-            let n = layer.n;
-            let k = layer.k;
-            let (dcur, dnext) = if cur_in_d0 {
-                (&mut ws.d0, &mut ws.d1)
-            } else {
-                (&mut ws.d1, &mut ws.d0)
-            };
-            let dz: &mut [f32] = &mut dcur[..b * n];
-            if li == nl - 1 {
-                let bidx = layer.bias.unwrap();
-                let db = &mut ws.grads[bidx];
-                db.fill(0.0);
-                for drow in dz.chunks_exact(n) {
-                    for (gv, &d) in db.iter_mut().zip(drow) {
-                        *gv += d;
+            let (dlo, dhi) = ws.dacts.split_at_mut(li + 1);
+            match layer {
+                Layer::Dense(layer) => {
+                    let n = layer.n;
+                    let k = layer.k;
+                    let dz: &mut [f32] = &mut dhi[0][..];
+                    if let Some(bidx) = layer.bias {
+                        let db = &mut ws.grads[bidx];
+                        db.fill(0.0);
+                        for drow in dz.chunks_exact(n) {
+                            for (gv, &d) in db.iter_mut().zip(drow) {
+                                *gv += d;
+                            }
+                        }
+                        ws.grad_used[bidx] = true;
+                    } else {
+                        // through ReLU + dropout, then the batch statistics
+                        for (drow, grow) in
+                            dz.chunks_exact_mut(n).zip(ws.gate[li].chunks_exact(n))
+                        {
+                            for (dv, &g) in drow.iter_mut().zip(grow) {
+                                *dv *= g;
+                            }
+                        }
+                        let gi = layer.bn.unwrap();
+                        let (glo, ghi) = ws.grads.split_at_mut(gi + 1);
+                        bn_backward_into(
+                            dz,
+                            n,
+                            &state.params[gi],
+                            &ws.xhat[li],
+                            &ws.inv_std[li],
+                            &mut glo[gi],
+                            &mut ghi[0],
+                        );
+                        ws.grad_used[gi] = true;
+                        ws.grad_used[gi + 1] = true;
                     }
-                }
-                ws.grad_used[bidx] = true;
-            } else {
-                // through ReLU + dropout
-                for (drow, grow) in dz.chunks_exact_mut(n).zip(ws.gate[li].chunks_exact(n)) {
-                    for (dv, &g) in drow.iter_mut().zip(grow) {
-                        *dv *= g;
-                    }
-                }
-                // batch-norm backward through the batch statistics
-                let gi = layer.bn.unwrap();
-                let xhat: &[f32] = &ws.xhat[li];
-                let inv_std: &[f32] = &ws.inv_std[li];
-                let gamma: &[f32] = &state.params[gi];
-                let (glo, ghi) = ws.grads.split_at_mut(gi + 1);
-                let dgamma = &mut glo[gi]; // sum_dy_xhat
-                let dbeta = &mut ghi[0]; // sum_dy
-                dgamma.fill(0.0);
-                dbeta.fill(0.0);
-                for (drow, xrow) in dz.chunks_exact(n).zip(xhat.chunks_exact(n)) {
-                    for (((sg, sb), &d), &xv) in
-                        dgamma.iter_mut().zip(dbeta.iter_mut()).zip(drow).zip(xrow)
-                    {
-                        *sb += d;
-                        *sg += d * xv;
-                    }
-                }
-                for (drow, xrow) in dz.chunks_exact_mut(n).zip(xhat.chunks_exact(n)) {
-                    for (j, dv) in drow.iter_mut().enumerate() {
-                        *dv = gamma[j] * inv_std[j] / bf
-                            * (bf * *dv - dbeta[j] - xrow[j] * dgamma[j]);
-                    }
-                }
-                ws.grad_used[gi] = true;
-                ws.grad_used[gi + 1] = true;
-            }
-            // dW = a_in^T · dZ (dense f32: dZ is real-valued either way)
-            kernel::gemm_at_b_into(
-                &ws.acts[li],
-                dz,
-                b,
-                k,
-                n,
-                &mut ws.grads[layer.w],
-                &mut ws.panels,
-            );
-            ws.grad_used[layer.w] = true;
-            // dX = dZ · Wb^T for the next layer down
-            if li > 0 {
-                let dx: &mut [f32] = &mut dnext[..b * k];
-                match mode {
-                    Mode::None => kernel::gemm_a_bt_into(
+                    // dW = a_in^T · dZ (dense f32: dZ is real-valued either way)
+                    kernel::gemm_at_b_into(
+                        &ws.acts[li],
                         dz,
-                        &state.params[layer.w],
                         b,
-                        n,
                         k,
-                        dx,
+                        n,
+                        &mut ws.grads[layer.w],
                         &mut ws.panels,
-                    ),
-                    _ => ws.bits[li].tmatmul_scaled_into(
-                        dz,
-                        b,
-                        layer.h,
-                        dx,
-                        &mut ws.xt,
-                        &mut ws.acc,
-                        &mut ws.totals,
-                    ),
+                    );
+                    ws.grad_used[layer.w] = true;
+                    // dX = dZ · Wb^T for the next layer down
+                    if li > 0 {
+                        let dx: &mut [f32] = &mut dlo[li][..];
+                        match mode {
+                            Mode::None => kernel::gemm_a_bt_into(
+                                dz,
+                                &state.params[layer.w],
+                                b,
+                                n,
+                                k,
+                                dx,
+                                &mut ws.panels,
+                            ),
+                            _ => ws.bits[li].tmatmul_scaled_into(
+                                dz,
+                                b,
+                                layer.h,
+                                dx,
+                                &mut ws.xt,
+                                &mut ws.acc,
+                                &mut ws.totals,
+                            ),
+                        }
+                    }
                 }
-                cur_in_d0 = !cur_in_d0;
+                Layer::Conv(layer) => {
+                    let rows = b * layer.spatial();
+                    let pk = layer.patch_k();
+                    let n = layer.cout;
+                    // un-pool first (scatter into ybuf), so dz has the
+                    // pre-pool (rows x cout) shape either way
+                    let dz: &mut [f32] = if layer.pool {
+                        pool::maxpool2x2_backward_into(
+                            &dhi[0],
+                            &ws.pool_idx[li],
+                            &mut ws.ybuf[li],
+                        );
+                        &mut ws.ybuf[li][..]
+                    } else {
+                        &mut dhi[0][..]
+                    };
+                    // through ReLU + dropout, then the batch statistics
+                    for (drow, grow) in dz.chunks_exact_mut(n).zip(ws.gate[li].chunks_exact(n)) {
+                        for (dv, &g) in drow.iter_mut().zip(grow) {
+                            *dv *= g;
+                        }
+                    }
+                    let gi = layer.bn;
+                    let (glo, ghi) = ws.grads.split_at_mut(gi + 1);
+                    bn_backward_into(
+                        dz,
+                        n,
+                        &state.params[gi],
+                        &ws.xhat[li],
+                        &ws.inv_std[li],
+                        &mut glo[gi],
+                        &mut ghi[0],
+                    );
+                    ws.grad_used[gi] = true;
+                    ws.grad_used[gi + 1] = true;
+                    // dW = patches^T · dZ over all b*h*w patch rows
+                    kernel::gemm_at_b_into(
+                        &ws.patches[li],
+                        dz,
+                        rows,
+                        pk,
+                        n,
+                        &mut ws.grads[layer.w],
+                        &mut ws.panels,
+                    );
+                    ws.grad_used[layer.w] = true;
+                    // dPatches = dZ · Wb^T, then scatter back to the image grid
+                    if li > 0 {
+                        match mode {
+                            Mode::None => kernel::gemm_a_bt_into(
+                                dz,
+                                &state.params[layer.w],
+                                rows,
+                                n,
+                                pk,
+                                &mut ws.dpatches[li],
+                                &mut ws.panels,
+                            ),
+                            _ => ws.bits[li].tmatmul_scaled_into(
+                                dz,
+                                rows,
+                                layer.h,
+                                &mut ws.dpatches[li],
+                                &mut ws.xt,
+                                &mut ws.acc,
+                                &mut ws.totals,
+                            ),
+                        }
+                        im2col::col2im_into(
+                            &ws.dpatches[li],
+                            b,
+                            layer.h_in,
+                            layer.w_in,
+                            layer.cin,
+                            layer.kh,
+                            layer.kw,
+                            &mut dlo[li],
+                        );
+                    }
+                }
             }
         }
 
         // ---- chaos harness: seeded gradient poisoning ----
         if self.faults.as_ref().is_some_and(|f| f.roll_nan_grad()) {
-            ws.grads[self.layers[0].w][0] = f32::NAN;
+            ws.grads[self.layers[0].w()][0] = f32::NAN;
         }
 
         // ---- divergence sentinel (loss + every produced gradient) ----
@@ -872,7 +1345,7 @@ impl ReferenceExecutor {
         if !(diverged && hyper.skip_nonfinite) {
             let mom = hyper.bn_momentum;
             for (li, layer) in self.layers.iter().enumerate() {
-                if let Some(gi) = layer.bn {
+                if let Some(gi) = layer.bn() {
                     for (r, &mj) in state.params[gi + 2].iter_mut().zip(&ws.bn_mean[li]) {
                         *r = mom * *r + (1.0 - mom) * mj;
                     }
@@ -903,47 +1376,130 @@ impl ReferenceExecutor {
 
         ws.acts[0].copy_from_slice(x);
         for (li, layer) in self.layers.iter().enumerate() {
-            let n = layer.n;
-            let k = layer.k;
             let (alo, ahi) = ws.acts.split_at_mut(li + 1);
             let a_in: &[f32] = &alo[li];
-            let z: &mut [f32] = &mut ahi[0];
-            match hyper.mode {
-                Mode::None => {
-                    kernel::gemm_into(a_in, &state.params[layer.w], b, k, n, z, &mut ws.panels)
-                }
-                Mode::Det => {
-                    let bits = &mut ws.bits[li];
-                    bits.pack_det_into(&state.params[layer.w], k, n);
-                    bits.matmul_scaled_into(a_in, b, layer.h, z, &mut ws.xt, &mut ws.totals);
-                }
-                Mode::Stoch => {
-                    let bits = &mut ws.bits[li];
-                    bits.pack_stoch_into(&state.params[layer.w], k, n, layer.h, &mut rng);
-                    bits.matmul_scaled_into(a_in, b, layer.h, z, &mut ws.xt, &mut ws.totals);
-                }
-            }
-            if li == nl - 1 {
-                let bias = &state.params[layer.bias.unwrap()];
-                for zrow in z.chunks_exact_mut(n) {
-                    for (zv, &bv) in zrow.iter_mut().zip(bias) {
-                        *zv += bv;
+            match layer {
+                Layer::Dense(layer) => {
+                    let n = layer.n;
+                    let k = layer.k;
+                    let z: &mut [f32] = &mut ahi[0];
+                    match hyper.mode {
+                        Mode::None => kernel::gemm_into(
+                            a_in,
+                            &state.params[layer.w],
+                            b,
+                            k,
+                            n,
+                            z,
+                            &mut ws.panels,
+                        ),
+                        Mode::Det => {
+                            let bits = &mut ws.bits[li];
+                            bits.pack_det_into(&state.params[layer.w], k, n);
+                            bits.matmul_scaled_into(a_in, b, layer.h, z, &mut ws.xt, &mut ws.totals);
+                        }
+                        Mode::Stoch => {
+                            let bits = &mut ws.bits[li];
+                            bits.pack_stoch_into(&state.params[layer.w], k, n, layer.h, &mut rng);
+                            bits.matmul_scaled_into(a_in, b, layer.h, z, &mut ws.xt, &mut ws.totals);
+                        }
+                    }
+                    if let Some(bidx) = layer.bias {
+                        let bias = &state.params[bidx];
+                        for zrow in z.chunks_exact_mut(n) {
+                            for (zv, &bv) in zrow.iter_mut().zip(bias) {
+                                *zv += bv;
+                            }
+                        }
+                    } else {
+                        let gi = layer.bn.unwrap();
+                        bn_forward_eval_into(
+                            z,
+                            n,
+                            &state.params[gi],
+                            &state.params[gi + 1],
+                            &state.params[gi + 2],
+                            &state.params[gi + 3],
+                            &mut ws.inv_std[li],
+                        );
                     }
                 }
-            } else {
-                let gi = layer.bn.unwrap();
-                let gamma = &state.params[gi];
-                let beta = &state.params[gi + 1];
-                let rmean = &state.params[gi + 2];
-                let rvar = &state.params[gi + 3];
-                let inv_std = &mut ws.inv_std[li];
-                for (o, &v) in inv_std.iter_mut().zip(rvar) {
-                    *o = 1.0 / (v + BN_EPS).sqrt();
-                }
-                for zrow in z.chunks_exact_mut(n) {
-                    for (j, zv) in zrow.iter_mut().enumerate() {
-                        let yv = (*zv - rmean[j]) * inv_std[j] * gamma[j] + beta[j];
-                        *zv = yv.max(0.0);
+                Layer::Conv(layer) => {
+                    let rows = b * layer.spatial();
+                    let pk = layer.patch_k();
+                    im2col::im2col_into(
+                        a_in,
+                        b,
+                        layer.h_in,
+                        layer.w_in,
+                        layer.cin,
+                        layer.kh,
+                        layer.kw,
+                        &mut ws.patches[li],
+                    );
+                    let z: &mut [f32] =
+                        if layer.pool { &mut ws.ybuf[li][..] } else { &mut ahi[0][..] };
+                    match hyper.mode {
+                        Mode::None => kernel::gemm_into(
+                            &ws.patches[li],
+                            &state.params[layer.w],
+                            rows,
+                            pk,
+                            layer.cout,
+                            z,
+                            &mut ws.panels,
+                        ),
+                        Mode::Det => {
+                            let bits = &mut ws.bits[li];
+                            bits.pack_det_into(&state.params[layer.w], pk, layer.cout);
+                            bits.matmul_scaled_into(
+                                &ws.patches[li],
+                                rows,
+                                layer.h,
+                                z,
+                                &mut ws.xt,
+                                &mut ws.totals,
+                            );
+                        }
+                        Mode::Stoch => {
+                            let bits = &mut ws.bits[li];
+                            bits.pack_stoch_into(
+                                &state.params[layer.w],
+                                pk,
+                                layer.cout,
+                                layer.h,
+                                &mut rng,
+                            );
+                            bits.matmul_scaled_into(
+                                &ws.patches[li],
+                                rows,
+                                layer.h,
+                                z,
+                                &mut ws.xt,
+                                &mut ws.totals,
+                            );
+                        }
+                    }
+                    let gi = layer.bn;
+                    bn_forward_eval_into(
+                        z,
+                        layer.cout,
+                        &state.params[gi],
+                        &state.params[gi + 1],
+                        &state.params[gi + 2],
+                        &state.params[gi + 3],
+                        &mut ws.inv_std[li],
+                    );
+                    if layer.pool {
+                        pool::maxpool2x2_into(
+                            &ws.ybuf[li],
+                            b,
+                            layer.h_in,
+                            layer.w_in,
+                            layer.cout,
+                            &mut ahi[0],
+                            &mut ws.pool_idx[li],
+                        );
                     }
                 }
             }
@@ -969,6 +1525,7 @@ impl ReferenceExecutor {
             xhat: Vec<f32>,
             inv_std: Vec<f32>,
             gate: Vec<f32>,
+            pool_idx: Vec<u32>,
         }
 
         self.check_batch(x, y)?;
@@ -993,108 +1550,131 @@ impl ReferenceExecutor {
         }
         let mut caches: Vec<Cache> = Vec::with_capacity(nl);
         let mut bn_stat_updates: Vec<(usize, Vec<f32>)> = vec![];
-        for (li, layer) in self.layers.iter().enumerate() {
-            let wb = binarize(&state.params[layer.w], layer.h, mode, &mut rng);
-            let n = layer.n;
-            let mut z = vec![0f32; b * n];
-            kernel::gemm_naive(&a, &wb, b, layer.k, n, &mut z);
-            if li == nl - 1 {
-                let bias = &state.params[layer.bias.unwrap()];
-                for zrow in z.chunks_exact_mut(n) {
-                    for (zv, &bv) in zrow.iter_mut().zip(bias) {
-                        *zv += bv;
-                    }
-                }
-                let a_in = std::mem::replace(&mut a, z);
-                caches.push(Cache {
-                    a_in,
-                    wb,
-                    xhat: vec![],
-                    inv_std: vec![],
-                    gate: vec![],
-                });
-            } else {
-                let gi = layer.bn.unwrap();
-                // batch statistics (biased variance, like jnp.var)
-                let mut mean = vec![0f32; n];
-                for zrow in z.chunks_exact(n) {
-                    for (mj, &v) in mean.iter_mut().zip(zrow) {
-                        *mj += v;
-                    }
-                }
-                for mj in mean.iter_mut() {
-                    *mj /= bf;
-                }
-                let mut var = vec![0f32; n];
-                for zrow in z.chunks_exact(n) {
-                    for ((vj, &v), &mj) in var.iter_mut().zip(zrow).zip(&mean) {
-                        let cv = v - mj;
-                        *vj += cv * cv;
-                    }
-                }
-                for vj in var.iter_mut() {
-                    *vj /= bf;
-                }
-                let inv_std: Vec<f32> =
-                    var.iter().map(|&v| 1.0 / (v + BN_EPS).sqrt()).collect();
-                let mut xhat = vec![0f32; b * n];
-                for (xrow, zrow) in xhat.chunks_exact_mut(n).zip(z.chunks_exact(n)) {
-                    for (((xv, &zv), &mj), &is) in
-                        xrow.iter_mut().zip(zrow).zip(&mean).zip(&inv_std)
-                    {
-                        *xv = (zv - mj) * is;
-                    }
-                }
-                // running-stat update (applied to state after backward)
-                let mom = hyper.bn_momentum;
-                let rmean = &state.params[gi + 2];
-                let rvar = &state.params[gi + 3];
-                bn_stat_updates.push((
+        let mom = hyper.bn_momentum;
+        // queue the deferred running-stat write for one BN block
+        let mut push_bn_stats =
+            |out: &mut Vec<(usize, Vec<f32>)>, state: &TrainState, gi: usize, mean: &[f32], var: &[f32]| {
+                out.push((
                     gi + 2,
-                    rmean
+                    state.params[gi + 2]
                         .iter()
-                        .zip(&mean)
+                        .zip(mean)
                         .map(|(&r, &m)| mom * r + (1.0 - mom) * m)
                         .collect(),
                 ));
-                bn_stat_updates.push((
+                out.push((
                     gi + 3,
-                    rvar.iter()
-                        .zip(&var)
+                    state.params[gi + 3]
+                        .iter()
+                        .zip(var)
                         .map(|(&r, &v)| mom * r + (1.0 - mom) * v)
                         .collect(),
                 ));
-                // affine + ReLU + inverted dropout
-                let gamma = &state.params[gi];
-                let beta = &state.params[gi + 1];
-                let p = hyper.dropout;
-                let dscale = 1.0 / (1.0 - p).max(1e-6);
-                let mut gate = vec![0f32; b * n];
-                let mut next = vec![0f32; b * n];
-                for ((nrow, xrow), grow) in next
-                    .chunks_exact_mut(n)
-                    .zip(xhat.chunks_exact(n))
-                    .zip(gate.chunks_exact_mut(n))
-                {
-                    for (j, (nv, gv)) in nrow.iter_mut().zip(grow.iter_mut()).enumerate() {
-                        let yv = gamma[j] * xrow[j] + beta[j];
-                        let s = if p > 0.0 {
-                            if rng.uniform() < p {
-                                0.0
-                            } else {
-                                dscale
+            };
+        for layer in self.layers.iter() {
+            match layer {
+                Layer::Dense(layer) => {
+                    let wb = binarize(&state.params[layer.w], layer.h, mode, &mut rng);
+                    let n = layer.n;
+                    let mut z = vec![0f32; b * n];
+                    kernel::gemm_naive(&a, &wb, b, layer.k, n, &mut z);
+                    if let Some(bidx) = layer.bias {
+                        let bias = &state.params[bidx];
+                        for zrow in z.chunks_exact_mut(n) {
+                            for (zv, &bv) in zrow.iter_mut().zip(bias) {
+                                *zv += bv;
                             }
-                        } else {
-                            1.0
-                        };
-                        if yv > 0.0 {
-                            *gv = s;
-                            *nv = yv * s;
                         }
+                        let a_in = std::mem::replace(&mut a, z);
+                        caches.push(Cache {
+                            a_in,
+                            wb,
+                            xhat: vec![],
+                            inv_std: vec![],
+                            gate: vec![],
+                            pool_idx: vec![],
+                        });
+                    } else {
+                        let gi = layer.bn.unwrap();
+                        let mut mean = vec![0f32; n];
+                        let mut var = vec![0f32; n];
+                        let mut inv_std = vec![0f32; n];
+                        let mut xhat = vec![0f32; b * n];
+                        let mut gate = vec![0f32; b * n];
+                        bn_forward_train_into(
+                            &mut z,
+                            n,
+                            &state.params[gi],
+                            &state.params[gi + 1],
+                            hyper.dropout,
+                            &mut rng,
+                            &mut mean,
+                            &mut var,
+                            &mut inv_std,
+                            &mut xhat,
+                            &mut gate,
+                        );
+                        push_bn_stats(&mut bn_stat_updates, state, gi, &mean, &var);
+                        let a_in = std::mem::replace(&mut a, z);
+                        caches.push(Cache { a_in, wb, xhat, inv_std, gate, pool_idx: vec![] });
                     }
                 }
-                let a_in = std::mem::replace(&mut a, next);
-                caches.push(Cache { a_in, wb, xhat, inv_std, gate });
+                Layer::Conv(layer) => {
+                    let wb = binarize(&state.params[layer.w], layer.h, mode, &mut rng);
+                    let rows = b * layer.spatial();
+                    let n = layer.cout;
+                    let mut z = vec![0f32; rows * n];
+                    oracle::conv2d_forward(
+                        &a,
+                        b,
+                        layer.h_in,
+                        layer.w_in,
+                        layer.cin,
+                        &wb,
+                        layer.kh,
+                        layer.kw,
+                        n,
+                        &mut z,
+                    );
+                    let gi = layer.bn;
+                    let mut mean = vec![0f32; n];
+                    let mut var = vec![0f32; n];
+                    let mut inv_std = vec![0f32; n];
+                    let mut xhat = vec![0f32; rows * n];
+                    let mut gate = vec![0f32; rows * n];
+                    bn_forward_train_into(
+                        &mut z,
+                        n,
+                        &state.params[gi],
+                        &state.params[gi + 1],
+                        hyper.dropout,
+                        &mut rng,
+                        &mut mean,
+                        &mut var,
+                        &mut inv_std,
+                        &mut xhat,
+                        &mut gate,
+                    );
+                    push_bn_stats(&mut bn_stat_updates, state, gi, &mean, &var);
+                    if layer.pool {
+                        let mut pooled = vec![0f32; rows * n / 4];
+                        let mut idx = vec![0u32; rows * n / 4];
+                        pool::maxpool2x2_into(
+                            &z,
+                            b,
+                            layer.h_in,
+                            layer.w_in,
+                            n,
+                            &mut pooled,
+                            &mut idx,
+                        );
+                        let a_in = std::mem::replace(&mut a, pooled);
+                        caches.push(Cache { a_in, wb, xhat, inv_std, gate, pool_idx: idx });
+                    } else {
+                        let a_in = std::mem::replace(&mut a, z);
+                        caches.push(Cache { a_in, wb, xhat, inv_std, gate, pool_idx: vec![] });
+                    }
+                }
             }
         }
         let logits = a;
@@ -1108,72 +1688,129 @@ impl ReferenceExecutor {
         let mut used = vec![false; self.info.params.len()];
         let mut dcur = dlogits;
         for li in (0..nl).rev() {
-            let layer = &self.layers[li];
             let cache = &caches[li];
-            let n = layer.n;
-            let dz: Vec<f32>;
-            if li == nl - 1 {
-                let mut db = vec![0f32; n];
-                for drow in dcur.chunks_exact(n) {
-                    for (dj, &d) in db.iter_mut().zip(drow) {
-                        *dj += d;
+            match &self.layers[li] {
+                Layer::Dense(layer) => {
+                    let n = layer.n;
+                    let dz: Vec<f32>;
+                    if let Some(bidx) = layer.bias {
+                        let mut db = vec![0f32; n];
+                        for drow in dcur.chunks_exact(n) {
+                            for (dj, &d) in db.iter_mut().zip(drow) {
+                                *dj += d;
+                            }
+                        }
+                        grads[bidx] = db;
+                        used[bidx] = true;
+                        dz = dcur;
+                    } else {
+                        // through ReLU + dropout, then the batch statistics
+                        let mut dy = dcur;
+                        for (dv, &g) in dy.iter_mut().zip(&cache.gate) {
+                            *dv *= g;
+                        }
+                        let gi = layer.bn.unwrap();
+                        let mut dgamma = vec![0f32; n];
+                        let mut dbeta = vec![0f32; n];
+                        bn_backward_into(
+                            &mut dy,
+                            n,
+                            &state.params[gi],
+                            &cache.xhat,
+                            &cache.inv_std,
+                            &mut dgamma,
+                            &mut dbeta,
+                        );
+                        grads[gi] = dgamma;
+                        grads[gi + 1] = dbeta;
+                        used[gi] = true;
+                        used[gi + 1] = true;
+                        dz = dy;
                     }
+                    let mut dw = vec![0f32; layer.k * n];
+                    kernel::gemm_at_b_naive(&cache.a_in, &dz, b, layer.k, n, &mut dw);
+                    grads[layer.w] = dw;
+                    used[layer.w] = true;
+                    dcur = if li > 0 {
+                        let mut dx = vec![0f32; b * layer.k];
+                        kernel::gemm_a_bt_naive(&dz, &cache.wb, b, n, layer.k, &mut dx);
+                        dx
+                    } else {
+                        vec![]
+                    };
                 }
-                grads[layer.bias.unwrap()] = db;
-                used[layer.bias.unwrap()] = true;
-                dz = dcur;
-            } else {
-                // through ReLU + dropout
-                let mut dy = dcur;
-                for (dv, &g) in dy.iter_mut().zip(&cache.gate) {
-                    *dv *= g;
-                }
-                // batch-norm backward through the batch statistics
-                let gi = layer.bn.unwrap();
-                let gamma = &state.params[gi];
-                let mut sum_dy = vec![0f32; n];
-                let mut sum_dy_xhat = vec![0f32; n];
-                for (drow, xrow) in dy.chunks_exact(n).zip(cache.xhat.chunks_exact(n)) {
-                    for (((sd, sx), &d), &xv) in
-                        sum_dy.iter_mut().zip(sum_dy_xhat.iter_mut()).zip(drow).zip(xrow)
-                    {
-                        *sd += d;
-                        *sx += d * xv;
+                Layer::Conv(layer) => {
+                    let rows = b * layer.spatial();
+                    let n = layer.cout;
+                    // un-pool first so dy has the pre-pool (rows x cout) shape
+                    let mut dy = if layer.pool {
+                        let mut full = vec![0f32; rows * n];
+                        pool::maxpool2x2_backward_into(&dcur, &cache.pool_idx, &mut full);
+                        full
+                    } else {
+                        dcur
+                    };
+                    // through ReLU + dropout, then the batch statistics
+                    for (dv, &g) in dy.iter_mut().zip(&cache.gate) {
+                        *dv *= g;
                     }
+                    let gi = layer.bn;
+                    let mut dgamma = vec![0f32; n];
+                    let mut dbeta = vec![0f32; n];
+                    bn_backward_into(
+                        &mut dy,
+                        n,
+                        &state.params[gi],
+                        &cache.xhat,
+                        &cache.inv_std,
+                        &mut dgamma,
+                        &mut dbeta,
+                    );
+                    grads[gi] = dgamma;
+                    grads[gi + 1] = dbeta;
+                    used[gi] = true;
+                    used[gi + 1] = true;
+                    let dz = dy;
+                    let mut dw = vec![0f32; layer.kh * layer.kw * layer.cin * n];
+                    oracle::conv2d_backward_dw(
+                        &cache.a_in,
+                        &dz,
+                        b,
+                        layer.h_in,
+                        layer.w_in,
+                        layer.cin,
+                        layer.kh,
+                        layer.kw,
+                        n,
+                        &mut dw,
+                    );
+                    grads[layer.w] = dw;
+                    used[layer.w] = true;
+                    dcur = if li > 0 {
+                        let mut dx = vec![0f32; b * layer.h_in * layer.w_in * layer.cin];
+                        oracle::conv2d_backward_dx(
+                            &dz,
+                            b,
+                            layer.h_in,
+                            layer.w_in,
+                            layer.cin,
+                            &cache.wb,
+                            layer.kh,
+                            layer.kw,
+                            n,
+                            &mut dx,
+                        );
+                        dx
+                    } else {
+                        vec![]
+                    };
                 }
-                let mut dzv = vec![0f32; b * n];
-                for ((zrow, drow), xrow) in dzv
-                    .chunks_exact_mut(n)
-                    .zip(dy.chunks_exact(n))
-                    .zip(cache.xhat.chunks_exact(n))
-                {
-                    for (j, zv) in zrow.iter_mut().enumerate() {
-                        *zv = gamma[j] * cache.inv_std[j] / bf
-                            * (bf * drow[j] - sum_dy[j] - xrow[j] * sum_dy_xhat[j]);
-                    }
-                }
-                grads[gi] = sum_dy_xhat; // dgamma
-                grads[gi + 1] = sum_dy; // dbeta
-                used[gi] = true;
-                used[gi + 1] = true;
-                dz = dzv;
             }
-            let mut dw = vec![0f32; layer.k * n];
-            kernel::gemm_at_b_naive(&cache.a_in, &dz, b, layer.k, n, &mut dw);
-            grads[layer.w] = dw;
-            used[layer.w] = true;
-            dcur = if li > 0 {
-                let mut dx = vec![0f32; b * layer.k];
-                kernel::gemm_a_bt_naive(&dz, &cache.wb, b, n, layer.k, &mut dx);
-                dx
-            } else {
-                vec![]
-            };
         }
 
         // ---- chaos harness: seeded gradient poisoning ----
         if self.faults.as_ref().is_some_and(|f| f.roll_nan_grad()) {
-            grads[self.layers[0].w][0] = f32::NAN;
+            grads[self.layers[0].w()][0] = f32::NAN;
         }
 
         // ---- divergence sentinel (loss + every produced gradient) ----
@@ -1201,36 +1838,82 @@ impl ReferenceExecutor {
         self.check_batch(x, y)?;
         let b = self.info.batch;
         let mut rng = Rng::new(EVAL_SALT ^ hyper.seed as u64);
-        let nl = self.layers.len();
         let mut a: Vec<f32> = x.to_vec();
-        for (li, layer) in self.layers.iter().enumerate() {
-            let wb = binarize(&state.params[layer.w], layer.h, hyper.mode, &mut rng);
-            let n = layer.n;
-            let mut z = vec![0f32; b * n];
-            kernel::gemm_naive(&a, &wb, b, layer.k, n, &mut z);
-            if li == nl - 1 {
-                let bias = &state.params[layer.bias.unwrap()];
-                for zrow in z.chunks_exact_mut(n) {
-                    for (zv, &bv) in zrow.iter_mut().zip(bias) {
-                        *zv += bv;
+        for layer in self.layers.iter() {
+            match layer {
+                Layer::Dense(layer) => {
+                    let wb = binarize(&state.params[layer.w], layer.h, hyper.mode, &mut rng);
+                    let n = layer.n;
+                    let mut z = vec![0f32; b * n];
+                    kernel::gemm_naive(&a, &wb, b, layer.k, n, &mut z);
+                    if let Some(bidx) = layer.bias {
+                        let bias = &state.params[bidx];
+                        for zrow in z.chunks_exact_mut(n) {
+                            for (zv, &bv) in zrow.iter_mut().zip(bias) {
+                                *zv += bv;
+                            }
+                        }
+                    } else {
+                        let gi = layer.bn.unwrap();
+                        let mut inv_std = vec![0f32; n];
+                        bn_forward_eval_into(
+                            &mut z,
+                            n,
+                            &state.params[gi],
+                            &state.params[gi + 1],
+                            &state.params[gi + 2],
+                            &state.params[gi + 3],
+                            &mut inv_std,
+                        );
                     }
+                    a = z;
                 }
-            } else {
-                let gi = layer.bn.unwrap();
-                let gamma = &state.params[gi];
-                let beta = &state.params[gi + 1];
-                let rmean = &state.params[gi + 2];
-                let rvar = &state.params[gi + 3];
-                let inv_std: Vec<f32> =
-                    rvar.iter().map(|&v| 1.0 / (v + BN_EPS).sqrt()).collect();
-                for zrow in z.chunks_exact_mut(n) {
-                    for (j, zv) in zrow.iter_mut().enumerate() {
-                        let yv = (*zv - rmean[j]) * inv_std[j] * gamma[j] + beta[j];
-                        *zv = yv.max(0.0);
+                Layer::Conv(layer) => {
+                    let wb = binarize(&state.params[layer.w], layer.h, hyper.mode, &mut rng);
+                    let rows = b * layer.spatial();
+                    let n = layer.cout;
+                    let mut z = vec![0f32; rows * n];
+                    oracle::conv2d_forward(
+                        &a,
+                        b,
+                        layer.h_in,
+                        layer.w_in,
+                        layer.cin,
+                        &wb,
+                        layer.kh,
+                        layer.kw,
+                        n,
+                        &mut z,
+                    );
+                    let gi = layer.bn;
+                    let mut inv_std = vec![0f32; n];
+                    bn_forward_eval_into(
+                        &mut z,
+                        n,
+                        &state.params[gi],
+                        &state.params[gi + 1],
+                        &state.params[gi + 2],
+                        &state.params[gi + 3],
+                        &mut inv_std,
+                    );
+                    if layer.pool {
+                        let mut pooled = vec![0f32; rows * n / 4];
+                        let mut idx = vec![0u32; rows * n / 4];
+                        pool::maxpool2x2_into(
+                            &z,
+                            b,
+                            layer.h_in,
+                            layer.w_in,
+                            n,
+                            &mut pooled,
+                            &mut idx,
+                        );
+                        a = pooled;
+                    } else {
+                        a = z;
                     }
                 }
             }
-            a = z;
         }
         let (lossv, errv, _) = self.metrics(&a, y);
         Ok((lossv, errv))
@@ -1325,9 +2008,27 @@ mod tests {
     }
 
     #[test]
-    fn conv_specs_are_rejected_with_clear_error() {
-        let err = ReferenceExecutor::builtin("cnn").unwrap_err().to_string();
-        assert!(err.contains("pjrt"), "{err}");
+    fn unsupported_spec_error_enumerates_trainable_builtins() {
+        // a weight that is neither [in, out] nor [kh, kw, cin, cout]
+        let mut info = mlp_info("odd", 6, 5, 1, 3, 4);
+        info.params[0].shape = vec![2, 3, 5];
+        let err = ReferenceExecutor::new(info).unwrap_err().to_string();
+        assert!(err.contains("neither dense"), "{err}");
+        assert!(err.contains("cifar_cnn"), "error should list builtins: {err}");
+        assert!(!err.contains("pjrt"), "stale pjrt hint resurfaced: {err}");
+    }
+
+    #[test]
+    fn conv_builtins_resolve_and_plan() {
+        for name in ["cifar_cnn", "svhn_cnn", "cnn", "cnn_small"] {
+            let exec = ReferenceExecutor::builtin(name).unwrap();
+            assert!(
+                exec.layers.iter().any(|l| matches!(l, Layer::Conv(_))),
+                "{name} planned no conv stages"
+            );
+        }
+        let exec = ReferenceExecutor::builtin("cifar_cnn").unwrap();
+        assert_eq!(exec.info().input_dim(), 32 * 32 * 3);
     }
 
     #[test]
@@ -1640,6 +2341,240 @@ mod tests {
         let mut s2 = s1.snapshot();
         let (x, y) = tiny_batch(&exec, 21);
         let h = Hyper { lr: 0.02, mode: Mode::Det, step: 1, seed: 5, ..Default::default() };
+        let m1 = exec.train_step(&mut s1, &x, &y, &h).unwrap();
+        let m2 = exec.train_step(&mut s2, &x, &y, &h).unwrap();
+        assert_eq!(m1.loss, m2.loss);
+        assert_eq!(s1.params[0], s2.params[0]);
+    }
+
+    // ------------------------------------------------------------------
+    // binary convolution (the im2col-lowered C3 path)
+    // ------------------------------------------------------------------
+
+    /// 6x6x2 input, two 3x3 convs (pool after the second), one fc, 3-way
+    /// out. Param map: conv0.W=0 (+bn 1..4), conv1.W=5 (+bn 6..9),
+    /// fc0.W=10 (+bn 11..14), out.W=15, out.b=16.
+    fn tiny_cnn() -> ReferenceExecutor {
+        ReferenceExecutor::new(conv_net_info("tc", 6, 2, &[3, 4], &[8], 3, 2)).unwrap()
+    }
+
+    #[test]
+    fn conv_train_overfits_one_batch() {
+        let exec = tiny_cnn();
+        let mut state = exec.init_state(&Hyper::default()).unwrap();
+        let (x, y) = tiny_batch(&exec, 31);
+        let mut first = f32::NAN;
+        let mut last = f32::NAN;
+        for step in 1..=80 {
+            let h = Hyper {
+                lr: 0.01,
+                mode: Mode::Det,
+                opt: Opt::Adam,
+                step,
+                seed: step,
+                ..Default::default()
+            };
+            let m = exec.train_step(&mut state, &x, &y, &h).unwrap();
+            assert!(m.loss.is_finite(), "step {step} diverged");
+            if step == 1 {
+                first = m.loss;
+            }
+            last = m.loss;
+        }
+        assert!(last < first * 0.5, "conv loss {first} -> {last}");
+    }
+
+    /// The lowered packed conv path and the direct-convolution oracle are
+    /// the same algorithm up to f32 summation order — every mode, batch 1
+    /// and batch 4, patch_k 18/27 (not multiples of 64).
+    #[test]
+    fn conv_fast_and_baseline_paths_agree() {
+        for batch in [1usize, 4] {
+            for mode in [Mode::Det, Mode::Stoch, Mode::None] {
+                let mk = || {
+                    ReferenceExecutor::new(conv_net_info("fbc", 6, 2, &[3, 4], &[9], 3, batch))
+                        .unwrap()
+                };
+                let fast = mk();
+                let mut base = mk();
+                base.set_fast(false);
+                let mut sf = fast.init_state(&Hyper { seed: 3, ..Default::default() }).unwrap();
+                let mut sb = sf.snapshot();
+                let (x, y) = tiny_batch(&fast, 9);
+                for step in 1..=3 {
+                    let h = Hyper {
+                        lr: 0.05,
+                        mode,
+                        opt: Opt::Nesterov,
+                        dropout: 0.1,
+                        in_dropout: 0.1,
+                        step,
+                        seed: 100 + step,
+                        ..Default::default()
+                    };
+                    let mf = fast.train_step(&mut sf, &x, &y, &h).unwrap();
+                    let mb = base.train_step(&mut sb, &x, &y, &h).unwrap();
+                    assert!(
+                        (mf.loss - mb.loss).abs() < 1e-4 * (1.0 + mb.loss.abs()),
+                        "b={batch} {mode:?} step {step}: loss {} vs {}",
+                        mf.loss,
+                        mb.loss
+                    );
+                    assert!((mf.n_err - mb.n_err).abs() <= 1.0, "b={batch} {mode:?} step {step}");
+                }
+                for (pi, (pf, pb)) in sf.params.iter().zip(&sb.params).enumerate() {
+                    for (j, (a, b)) in pf.iter().zip(pb).enumerate() {
+                        assert!(
+                            (a - b).abs() < 1e-4 * (1.0 + b.abs()),
+                            "b={batch} {mode:?} param {pi}[{j}]: {a} vs {b}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Batch-64 eval through the packed conv path matches the oracle, with
+    /// signed zeros planted in the filter bank (−0.0 must binarize to +H
+    /// on both paths).
+    #[test]
+    fn conv_forward_matches_oracle_at_batch_64() {
+        let fast =
+            ReferenceExecutor::new(conv_net_info("z64", 4, 2, &[3, 4], &[6], 3, 64)).unwrap();
+        let mut base =
+            ReferenceExecutor::new(conv_net_info("z64", 4, 2, &[3, 4], &[6], 3, 64)).unwrap();
+        base.set_fast(false);
+        let mut state = fast.init_state(&Hyper { seed: 17, ..Default::default() }).unwrap();
+        state.params[0][0] = -0.0;
+        state.params[0][1] = 0.0;
+        let (x, y) = tiny_batch(&fast, 40);
+        let h = Hyper { mode: Mode::Det, seed: 1, ..Default::default() };
+        let (lf, ef) = fast.eval_batch(&state, &x, &y, &h).unwrap();
+        let (lb, eb) = base.eval_batch(&state, &x, &y, &h).unwrap();
+        for (i, (a, b)) in lf.iter().zip(&lb).enumerate() {
+            assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "loss[{i}]: {a} vs {b}");
+        }
+        let (nf, nb) = (ef.iter().sum::<f32>(), eb.iter().sum::<f32>());
+        assert!((nf - nb).abs() <= 1.0, "err {nf} vs {nb}");
+    }
+
+    /// Central differences through the whole conv net (Mode::None, no
+    /// dropout) — pins im2col/col2im, pool routing and conv BN backward.
+    #[test]
+    fn conv_numerical_gradient_check_mode_none() {
+        let exec = tiny_cnn();
+        let base = exec.init_state(&Hyper { seed: 11, ..Default::default() }).unwrap();
+        let (x, y) = tiny_batch(&exec, 4);
+        let hyper = Hyper {
+            lr: 0.0,
+            mode: Mode::None,
+            opt: Opt::Sgd,
+            lr_scale: false,
+            seed: 1,
+            ..Default::default()
+        };
+        let loss_at = |state: &TrainState| -> f32 {
+            let mut s = state.snapshot();
+            exec.train_step(&mut s, &x, &y, &hyper).unwrap().loss
+        };
+        let grad_of = |state: &TrainState| -> TrainState {
+            let mut s = state.snapshot();
+            let h = Hyper { lr: 1.0, ..hyper.clone() };
+            exec.train_step(&mut s, &x, &y, &h).unwrap();
+            s
+        };
+        let stepped = grad_of(&base);
+        // conv0.W, conv0 gamma, conv0 beta, conv1.W, fc0.W, out.W, out.b
+        for (pi, ei) in
+            [(0usize, 0usize), (0, 13), (1, 2), (2, 0), (5, 3), (10, 1), (15, 0), (16, 1)]
+        {
+            let analytic = base.params[pi][ei] - stepped.params[pi][ei];
+            let eps = 3e-3f32;
+            let mut plus = base.snapshot();
+            plus.params[pi][ei] += eps;
+            let mut minus = base.snapshot();
+            minus.params[pi][ei] -= eps;
+            let numeric = (loss_at(&plus) - loss_at(&minus)) / (2.0 * eps);
+            assert!(
+                (numeric - analytic).abs() < 0.05 * (1.0f32).max(analytic.abs()),
+                "param {pi}[{ei}]: numeric {numeric} vs analytic {analytic}"
+            );
+        }
+    }
+
+    /// Acceptance gate: the conv train step is allocation-free once the
+    /// workspace is warm, in every mode, with both dropouts on.
+    #[test]
+    fn conv_steady_state_train_step_is_allocation_free() {
+        let exec = ReferenceExecutor::new(conv_net_info("zc", 8, 3, &[4, 4], &[16], 5, 4)).unwrap();
+        let mut state = exec.init_state(&Hyper::default()).unwrap();
+        let (x, y) = tiny_batch(&exec, 13);
+        let mut step = 0u32;
+        for mode in [Mode::Det, Mode::Stoch, Mode::None] {
+            let mut run = |steps: u32, step: &mut u32| {
+                for _ in 0..steps {
+                    *step += 1;
+                    let h = Hyper {
+                        lr: 0.01,
+                        mode,
+                        opt: Opt::Adam,
+                        dropout: 0.1,
+                        in_dropout: 0.1,
+                        step: *step,
+                        seed: *step,
+                        ..Default::default()
+                    };
+                    exec.train_step(&mut state, &x, &y, &h).unwrap();
+                }
+            };
+            run(3, &mut step);
+            let before = crate::test_alloc::thread_allocs();
+            run(5, &mut step);
+            let after = crate::test_alloc::thread_allocs();
+            assert_eq!(
+                after - before,
+                0,
+                "steady-state conv train_step allocated in mode {mode:?}"
+            );
+        }
+    }
+
+    /// Skip-step recovery holds for conv nets on both kernel paths.
+    #[test]
+    fn conv_nan_grad_with_skip_leaves_state_bit_identical() {
+        for fast in [true, false] {
+            let mut exec = tiny_cnn();
+            exec.set_fast(fast);
+            exec.set_faults(Some(Arc::new(FaultPlan::parse("nan_grad@1", 0).unwrap())));
+            let mut state = exec.init_state(&Hyper { seed: 2, ..Default::default() }).unwrap();
+            let before = state.snapshot();
+            let (x, y) = tiny_batch(&exec, 8);
+            let h = Hyper {
+                lr: 0.05,
+                opt: Opt::Adam,
+                step: 1,
+                seed: 1,
+                skip_nonfinite: true,
+                ..Default::default()
+            };
+            let m = exec.train_step(&mut state, &x, &y, &h).unwrap();
+            assert!(m.diverged, "fast={fast}: poisoned conv gradient not detected");
+            let bits = |t: &[Vec<f32>]| -> Vec<Vec<u32>> {
+                t.iter().map(|v| v.iter().map(|x| x.to_bits()).collect()).collect()
+            };
+            assert_eq!(bits(&state.params), bits(&before.params), "fast={fast}");
+            assert_eq!(bits(&state.m), bits(&before.m), "fast={fast}");
+            assert_eq!(bits(&state.v), bits(&before.v), "fast={fast}");
+        }
+    }
+
+    #[test]
+    fn conv_train_step_is_deterministic() {
+        let exec = tiny_cnn();
+        let mut s1 = exec.init_state(&Hyper { seed: 8, ..Default::default() }).unwrap();
+        let mut s2 = s1.snapshot();
+        let (x, y) = tiny_batch(&exec, 21);
+        let h = Hyper { lr: 0.02, mode: Mode::Stoch, step: 1, seed: 5, ..Default::default() };
         let m1 = exec.train_step(&mut s1, &x, &y, &h).unwrap();
         let m2 = exec.train_step(&mut s2, &x, &y, &h).unwrap();
         assert_eq!(m1.loss, m2.loss);

@@ -220,24 +220,61 @@ impl LoadReport {
     }
 }
 
-/// Run a closed-loop load test: probe `/healthz` for the input width,
+/// What the `/healthz` probe learned about the model's input: its flat
+/// width, and whether it is an image (conv front present — payloads
+/// should then be pixel-like values in [0, 1] rather than gaussians).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct InputShape {
+    pub in_dim: usize,
+    pub image: bool,
+}
+
+/// Parse a `/healthz` body into an [`InputShape`]. Conv-serving builds
+/// report `input_shape: [h, w, c]`; older builds and dense models only
+/// report `in_dim`, which stays the fallback. When both are present they
+/// must agree — a mismatch means the server is confused, not us.
+pub fn parse_input_shape(health: &Json) -> Result<InputShape> {
+    let in_dim = health
+        .get("in_dim")
+        .and_then(Json::as_usize)
+        .context("healthz body missing in_dim")?;
+    let image = match health.get("input_shape") {
+        None => false,
+        Some(Json::Arr(dims)) => {
+            ensure!(dims.len() == 3, "healthz input_shape must be [h, w, c]");
+            let mut flat = 1usize;
+            for d in dims {
+                let d = d.as_usize().context("healthz input_shape entry not a size")?;
+                flat = flat
+                    .checked_mul(d)
+                    .context("healthz input_shape overflows")?;
+            }
+            ensure!(
+                flat == in_dim,
+                "healthz input_shape ({flat}) disagrees with in_dim ({in_dim})"
+            );
+            true
+        }
+        Some(_) => bail!("healthz input_shape is not an array"),
+    };
+    Ok(InputShape { in_dim, image })
+}
+
+/// Run a closed-loop load test: probe `/healthz` for the input shape,
 /// then hammer `/predict` from `concurrency` persistent connections
 /// until `requests` responses have been collected.
 pub fn run(opts: &LoadgenOpts) -> Result<LoadReport> {
     ensure!(opts.concurrency >= 1, "--concurrency must be >= 1");
     ensure!(opts.requests >= 1, "--requests must be >= 1");
-    // probe: learn the model's input width (and that the server is up);
+    // probe: learn the model's input shape (and that the server is up);
     // the probe connection is dropped before the run so it does not
     // occupy one of the server's connection workers during measurement
-    let in_dim = {
+    let shape = {
         let mut probe = HttpClient::connect(&opts.host)?;
         let (status, health) = probe.request("GET", "/healthz", None)?;
         ensure!(status == 200, "healthz returned {status}: {health}");
         let health = Json::parse(&health).map_err(|e| anyhow!("healthz body: {e}"))?;
-        health
-            .get("in_dim")
-            .and_then(Json::as_usize)
-            .context("healthz body missing in_dim")?
+        parse_input_shape(&health)?
     };
 
     let remaining = Arc::new(AtomicUsize::new(opts.requests));
@@ -251,7 +288,7 @@ pub fn run(opts: &LoadgenOpts) -> Result<LoadReport> {
         let tseed = opts.seed ^ (t as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
         let retries = opts.retries;
         joins.push(std::thread::spawn(move || {
-            worker(&host, in_dim, tseed, retries, &remaining, &barrier)
+            worker(&host, shape, tseed, retries, &remaining, &barrier)
         }));
     }
     let mut report = LoadReport {
@@ -317,7 +354,7 @@ fn backoff(attempt: usize, retry_after_s: Option<u64>, rng: &mut Rng) -> Duratio
 
 fn worker(
     host: &str,
-    in_dim: usize,
+    shape: InputShape,
     seed: u64,
     retries: usize,
     remaining: &AtomicUsize,
@@ -331,8 +368,18 @@ fn worker(
         retries: 0,
         latency: LatencyStats::default(),
     };
+    let in_dim = shape.in_dim;
     let mut rng = Rng::new(seed);
-    let mut row: Vec<f32> = (0..in_dim).map(|_| rng.normal()).collect();
+    // image models get pixel-like uniform [0,1) features (what a real
+    // normalized HWC frame looks like); dense models keep gaussians
+    let sample = move |rng: &mut Rng| {
+        if shape.image {
+            rng.uniform_f64() as f32
+        } else {
+            rng.normal()
+        }
+    };
+    let mut row: Vec<f32> = (0..in_dim).map(|_| sample(&mut rng)).collect();
     let mut body = String::with_capacity(16 + in_dim * 10);
     let mut client = HttpClient::connect(host).ok();
     barrier.wait();
@@ -344,7 +391,7 @@ fn worker(
         rep.sent += 1;
         // vary one feature per request — cheap, defeats trivial caching
         if in_dim > 0 {
-            row[rep.sent % in_dim] = rng.normal();
+            row[rep.sent % in_dim] = sample(&mut rng);
         }
         predict_body(&mut body, &row);
         // one ticket = one row, retried (same row) up to `retries` times
@@ -445,6 +492,35 @@ mod tests {
         // ...but a hostile/huge hint is capped at 2s
         let d = backoff(1, Some(600), &mut rng);
         assert_eq!(d, Duration::from_secs(2));
+    }
+
+    #[test]
+    fn parse_input_shape_reads_conv_and_dense_healthz_bodies() {
+        // dense / legacy: only in_dim — gaussian payloads
+        let dense = Json::parse(r#"{"status":"ok","in_dim":784}"#).unwrap();
+        assert_eq!(
+            parse_input_shape(&dense).unwrap(),
+            InputShape { in_dim: 784, image: false }
+        );
+        // conv: input_shape [h,w,c] consistent with in_dim — image payloads
+        let conv =
+            Json::parse(r#"{"status":"ok","in_dim":3072,"input_shape":[32,32,3]}"#).unwrap();
+        assert_eq!(
+            parse_input_shape(&conv).unwrap(),
+            InputShape { in_dim: 3072, image: true }
+        );
+        // a server whose shape disagrees with its flat width is broken
+        let bad = Json::parse(r#"{"in_dim":100,"input_shape":[32,32,3]}"#).unwrap();
+        let err = parse_input_shape(&bad).unwrap_err().to_string();
+        assert!(err.contains("disagrees"), "{err}");
+        // wrong rank and wrong type are rejected, not guessed at
+        let rank = Json::parse(r#"{"in_dim":9,"input_shape":[3,3]}"#).unwrap();
+        assert!(parse_input_shape(&rank).is_err());
+        let ty = Json::parse(r#"{"in_dim":9,"input_shape":"3x3x1"}"#).unwrap();
+        assert!(parse_input_shape(&ty).is_err());
+        // missing in_dim entirely: still an error (probe caught a non-bcrun)
+        let none = Json::parse(r#"{"status":"ok"}"#).unwrap();
+        assert!(parse_input_shape(&none).is_err());
     }
 
     #[test]

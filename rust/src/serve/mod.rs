@@ -213,6 +213,11 @@ pub fn start(mlp: PackedMlp, cfg: ServeConfig) -> Result<Server> {
     ensure!(cfg.workers >= 1, "workers must be >= 1");
     ensure!(cfg.queue_cap >= 1, "queue_cap must be >= 1");
     ensure!(!mlp.layers.is_empty(), "cannot serve an empty model");
+    ensure!(
+        cfg.mode != ForwardMode::Bnn || mlp.conv.is_empty(),
+        "--bnn does not support conv models: the XNOR path has no conv front \
+         (serve this model in packed-f32 mode)"
+    );
     // note: queue_cap < max_batch is allowed — batches are then bounded
     // by the queue, which is exactly what the overload tests exploit
     let listener = TcpListener::bind((cfg.addr.as_str(), cfg.port))
@@ -294,8 +299,21 @@ fn health_json(mlp: &PackedMlp, cfg: &ServeConfig) -> Json {
     let mut m = BTreeMap::new();
     m.insert("ok".to_string(), Json::Bool(true));
     m.insert("in_dim".to_string(), Json::Num(mlp.in_dim as f64));
+    if let Some(c0) = mlp.conv.first() {
+        // conv models: the image geometry behind in_dim, so clients
+        // (loadgen included) can shape payloads as (h, w, c) images
+        m.insert(
+            "input_shape".to_string(),
+            Json::Arr(vec![
+                Json::Num(c0.h_in as f64),
+                Json::Num(c0.w_in as f64),
+                Json::Num(c0.cin as f64),
+            ]),
+        );
+    }
     m.insert("classes".to_string(), Json::Num(mlp.classes as f64));
     m.insert("layers".to_string(), Json::Num(mlp.layers.len() as f64));
+    m.insert("conv_layers".to_string(), Json::Num(mlp.conv.len() as f64));
     m.insert(
         "weight_bytes".to_string(),
         Json::Num(mlp.weight_memory_bytes() as f64),
@@ -788,11 +806,71 @@ mod tests {
         assert!(act < ctx.mlp.activation_memory_bytes(16, ForwardMode::PackedF32));
     }
 
+    /// 4x4x2 image -> pooled 3x3 conv -> dense 12 -> 3.
+    fn toy_conv_mlp() -> PackedMlp {
+        use crate::binary::PackedConvLayer;
+        use crate::binary::{BitMatrix, PackedLayer};
+        let mut rng = Rng::new(41);
+        let wc: Vec<f32> = (0..18 * 3).map(|_| rng.normal()).collect();
+        let wd: Vec<f32> = (0..12 * 3).map(|_| rng.normal()).collect();
+        PackedMlp {
+            conv: vec![PackedConvLayer {
+                bits: BitMatrix::pack(&wc, 18, 3),
+                scale: vec![0.5; 3],
+                shift: vec![0.0; 3],
+                kh: 3,
+                kw: 3,
+                cin: 2,
+                cout: 3,
+                h_in: 4,
+                w_in: 4,
+                pool: true,
+            }],
+            layers: vec![PackedLayer {
+                bits: BitMatrix::pack(&wd, 12, 3),
+                scale: vec![1.0; 3],
+                shift: vec![0.0; 3],
+                relu: false,
+            }],
+            in_dim: 32,
+            classes: 3,
+        }
+    }
+
+    #[test]
+    fn health_json_reports_conv_input_shape() {
+        let cfg = ServeConfig::default();
+        let mlp = toy_conv_mlp();
+        let j = Json::parse(&health_json(&mlp, &cfg).to_string()).unwrap();
+        assert_eq!(j.get("in_dim").unwrap().as_usize(), Some(32));
+        let shape = j.get("input_shape").unwrap();
+        assert_eq!(shape.idx(0).unwrap().as_usize(), Some(4));
+        assert_eq!(shape.idx(1).unwrap().as_usize(), Some(4));
+        assert_eq!(shape.idx(2).unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("conv_layers").unwrap().as_usize(), Some(1));
+        // dense models keep the key absent (loadgen falls back to in_dim)
+        let dense = Json::parse(&health_json(&toy_mlp(), &cfg).to_string()).unwrap();
+        assert!(dense.get("input_shape").is_none());
+        assert_eq!(dense.get("conv_layers").unwrap().as_usize(), Some(0));
+    }
+
     #[test]
     fn start_rejects_bad_configs() {
         assert!(start(toy_mlp(), ServeConfig { max_batch: 0, ..Default::default() }).is_err());
         assert!(start(toy_mlp(), ServeConfig { workers: 0, ..Default::default() }).is_err());
         assert!(start(toy_mlp(), ServeConfig { queue_cap: 0, ..Default::default() }).is_err());
+        // the XNOR path has no conv front: refuse at startup, not at the
+        // first forward
+        let err = start(
+            toy_conv_mlp(),
+            ServeConfig { mode: ForwardMode::Bnn, ..Default::default() },
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("--bnn does not support conv models"), "{err}");
+        // packed-f32 serves the same model fine
+        let mut srv = start(toy_conv_mlp(), ServeConfig::default()).unwrap();
+        srv.stop();
     }
 
     #[test]

@@ -1,0 +1,295 @@
+//! Integration: the binary convolution subsystem end to end.
+//!
+//! Four contracts, over real sockets and real files:
+//!
+//!   * solo == coalesced bit-exactness holds for a *served conv model*
+//!     through the HTTP layer — the conv front rides the same
+//!     lane-batched packed sign-GEMM as the dense stack, and im2col
+//!     keeps every image's patch rows in its own row block, so batch
+//!     composition cannot change any row's result;
+//!   * `/healthz` advertises the conv input shape `(h, w, c)` so
+//!     clients (loadgen) can shape image payloads;
+//!   * train -> pack -> save (BCPACK03) -> load -> serve round-trips
+//!     bit-exactly: served logits equal the in-process packed forward;
+//!   * checkpoint/resume stays bit-exact for conv models — the same
+//!     train(N) == train(k) + resume + train(N-k) contract the MLP
+//!     suite pins, now through conv layers' STE/BN/pool state, down to
+//!     byte-identical exported artifacts.
+
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use binaryconnect::binary::{
+    load_packed, pack_mlp, save_packed, BitMatrix, PackedConvLayer, PackedLayer, PackedMlp,
+};
+use binaryconnect::coordinator::{train, LrSchedule, ResumeFrom, TrainOpts};
+use binaryconnect::data::{Dataset, SplitData};
+use binaryconnect::runtime::reference::conv_net_info;
+use binaryconnect::runtime::{Mode, Opt, ReferenceExecutor, TrainState};
+use binaryconnect::serve::loadgen::{predict_body, HttpClient};
+use binaryconnect::serve::{self, ServeConfig};
+use binaryconnect::util::{Json, Rng};
+
+/// Hand-built conv model: 3x3 conv (2 -> 3 channels, pooled) on 4x4
+/// input, then dense 12 -> 4. in_dim = 32.
+fn toy_conv_mlp(seed: u64) -> PackedMlp {
+    let mut rng = Rng::new(seed);
+    let (h, w, cin, cout) = (4usize, 4usize, 2usize, 3usize);
+    let pk = 9 * cin;
+    let wts: Vec<f32> = (0..pk * cout).map(|_| rng.normal()).collect();
+    let conv = PackedConvLayer {
+        bits: BitMatrix::pack(&wts, pk, cout),
+        scale: (0..cout).map(|_| 0.5 + rng.uniform_f64() as f32).collect(),
+        shift: (0..cout).map(|_| 0.1 * rng.normal()).collect(),
+        kh: 3,
+        kw: 3,
+        cin,
+        cout,
+        h_in: h,
+        w_in: w,
+        pool: true,
+    };
+    let dw: Vec<f32> = (0..12 * 4).map(|_| rng.normal()).collect();
+    let dense = PackedLayer {
+        bits: BitMatrix::pack(&dw, 12, 4),
+        scale: vec![1.0; 4],
+        shift: vec![0.01, -0.02, 0.0, 0.02],
+        relu: false,
+    };
+    PackedMlp { conv: vec![conv], layers: vec![dense], in_dim: h * w * cin, classes: 4 }
+}
+
+/// The trainable spec every trained-path test shares: 6x6x2 input, two
+/// conv stages (3 then 4 channels, pool after the second -> 3x3x4 flat),
+/// one 16-wide fc, 4 classes, batch 8.
+fn tiny_cnn_info() -> binaryconnect::runtime::ModelInfo {
+    conv_net_info("tiny_cnn", 6, 2, &[3, 4], &[16], 4, 8)
+}
+
+/// Class-structured synthetic 6x6x2 images matching [`tiny_cnn_info`].
+fn data(seed: u64) -> SplitData {
+    let mut rng = Rng::new(seed);
+    let mut mk = |n: usize| {
+        let mut ds = Dataset::new("tiny-conv", (6, 6, 2), 4);
+        let mut row = vec![0f32; 72];
+        for i in 0..n {
+            let label = (i % 4) as u8;
+            for (j, v) in row.iter_mut().enumerate() {
+                let noise = (rng.next_u64() % 2048) as f32 / 1024.0 - 1.0;
+                *v = noise + if j % 4 == label as usize { 1.0 } else { 0.0 };
+            }
+            ds.push(&row, label);
+        }
+        ds
+    };
+    SplitData::from_train_test(mk(96), mk(32), 24)
+}
+
+fn opts(epochs: usize) -> TrainOpts {
+    TrainOpts {
+        epochs,
+        schedule: LrSchedule::Exponential { start: 0.01, end: 0.002, epochs },
+        mode: Mode::Det,
+        opt: Opt::Adam,
+        seed: 7,
+        verbose: false,
+        ..Default::default()
+    }
+}
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("bc_conv_subsys_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn rows(n: usize, dim: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    // pixel-like [0,1) features: what a real normalized image feeds in
+    (0..n).map(|_| (0..dim).map(|_| rng.uniform_f64() as f32).collect()).collect()
+}
+
+fn predict(client: &mut HttpClient, row: &[f32]) -> (u16, String) {
+    let mut body = String::new();
+    predict_body(&mut body, row);
+    client.request("POST", "/predict", Some(&body)).unwrap()
+}
+
+/// Parse a 200 /predict body into (pred, logit bit patterns).
+fn decode(body: &str) -> (usize, Vec<u64>) {
+    let j = Json::parse(body).unwrap();
+    let pred = j.get("pred").unwrap().as_usize().unwrap();
+    let logits: Vec<u64> = j
+        .get("logits")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| (v.as_f64().unwrap() as f32).to_bits() as u64)
+        .collect();
+    (pred, logits)
+}
+
+fn state_bits(s: &TrainState) -> Vec<Vec<Vec<u32>>> {
+    [&s.params, &s.m, &s.v]
+        .iter()
+        .map(|g| g.iter().map(|t| t.iter().map(|x| x.to_bits()).collect()).collect())
+        .collect()
+}
+
+#[test]
+fn conv_solo_and_coalesced_predictions_are_bit_identical_over_http() {
+    let n = 16;
+    let xs = rows(n, 32, 500);
+
+    // pass 1: a server that cannot coalesce (max_batch 1), sequential
+    let mut server = serve::start(
+        toy_conv_mlp(42),
+        ServeConfig { max_batch: 1, max_wait: Duration::ZERO, ..Default::default() },
+    )
+    .unwrap();
+    let host = server.addr().to_string();
+    let mut client = HttpClient::connect(&host).unwrap();
+    let solo: Vec<(usize, Vec<u64>)> = xs
+        .iter()
+        .map(|x| {
+            let (status, body) = predict(&mut client, x);
+            assert_eq!(status, 200, "{body}");
+            decode(&body)
+        })
+        .collect();
+    drop(client);
+    server.stop();
+
+    // pass 2: a coalescing server hit by n concurrent clients
+    let mut server = serve::start(
+        toy_conv_mlp(42),
+        ServeConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(20),
+            workers: n,
+            conn_backlog: 2 * n,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let host = server.addr().to_string();
+    let barrier = Arc::new(Barrier::new(n));
+    let joins: Vec<_> = xs
+        .iter()
+        .map(|x| {
+            let host = host.clone();
+            let x = x.clone();
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let mut client = HttpClient::connect(&host).unwrap();
+                barrier.wait();
+                let (status, body) = predict(&mut client, &x);
+                assert_eq!(status, 200, "{body}");
+                decode(&body)
+            })
+        })
+        .collect();
+    let coalesced: Vec<(usize, Vec<u64>)> =
+        joins.into_iter().map(|j| j.join().unwrap()).collect();
+    let snap = server.metrics().snapshot(0);
+    server.stop();
+
+    for (i, (s, c)) in solo.iter().zip(&coalesced).enumerate() {
+        assert_eq!(s, c, "row {i}: conv solo and coalesced responses differ at the bit level");
+    }
+    assert_eq!(snap.get("rows").unwrap().as_usize(), Some(n));
+    assert_eq!(snap.get("predictions").unwrap().as_usize(), Some(n));
+}
+
+#[test]
+fn trained_conv_model_round_trips_to_a_server_that_reports_its_shape() {
+    // train the tiny conv net briefly, fold its BN/H into a packed model
+    let info = tiny_cnn_info();
+    let ex = ReferenceExecutor::new(info.clone()).unwrap();
+    let run = train(&ex, &data(11), &opts(2)).unwrap();
+    let mlp = pack_mlp(&info, &run.state).unwrap();
+
+    // through the BCPACK03 file: save, load, serve the loaded copy
+    let dir = tmpdir("export");
+    let path = dir.join("tiny_cnn.bcpack");
+    save_packed(&mlp, &path).unwrap();
+    let loaded = load_packed(&path).unwrap();
+    let mut server = serve::start(loaded, ServeConfig::default()).unwrap();
+    let host = server.addr().to_string();
+    let mut client = HttpClient::connect(&host).unwrap();
+
+    // healthz advertises the image input shape for payload generators
+    let (status, body) = client.request("GET", "/healthz", None).unwrap();
+    assert_eq!(status, 200);
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("in_dim").unwrap().as_usize(), Some(72));
+    assert_eq!(j.get("conv_layers").unwrap().as_usize(), Some(2));
+    let shape: Vec<usize> = j
+        .get("input_shape")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_usize().unwrap())
+        .collect();
+    assert_eq!(shape, vec![6, 6, 2]);
+
+    // served logits equal the in-process packed forward, bit for bit
+    // (f32 -> shortest-repr decimal -> f64 -> f32 is lossless)
+    for x in rows(4, 72, 600) {
+        let local = mlp.forward(&x, 1);
+        let (status, body) = predict(&mut client, &x);
+        assert_eq!(status, 200, "{body}");
+        let (pred, logits) = decode(&body);
+        assert!(pred < 4);
+        let want: Vec<u64> = local.iter().map(|v| v.to_bits() as u64).collect();
+        assert_eq!(logits, want, "served logits diverge from the packed forward");
+    }
+    server.stop();
+}
+
+#[test]
+fn conv_checkpoint_resume_is_bit_exact_down_to_the_exported_artifact() {
+    let info = tiny_cnn_info();
+    let d = data(3);
+    let epochs = 4;
+
+    let ex = ReferenceExecutor::new(info.clone()).unwrap();
+    let full = train(&ex, &d, &opts(epochs)).unwrap();
+
+    // same run, checkpointing every epoch and keeping every file
+    let dir = tmpdir("resume");
+    let mut o = opts(epochs);
+    o.checkpoint.dir = Some(dir.clone());
+    o.checkpoint.keep = 0;
+    let ex2 = ReferenceExecutor::new(info.clone()).unwrap();
+    let ckpt_run = train(&ex2, &d, &o).unwrap();
+    assert_eq!(
+        state_bits(&full.state),
+        state_bits(&ckpt_run.state),
+        "checkpointing changed the conv run"
+    );
+
+    // resume the k=2 checkpoint in a fresh executor and finish
+    let mut o2 = opts(epochs);
+    o2.checkpoint.resume = Some(ResumeFrom::Path(dir.join("ckpt-000002.bcckpt")));
+    let ex3 = ReferenceExecutor::new(info.clone()).unwrap();
+    let resumed = train(&ex3, &d, &o2).unwrap();
+    assert!(!resumed.interrupted);
+    assert_eq!(state_bits(&full.state), state_bits(&resumed.state), "conv resume diverged");
+    assert_eq!(full.steps, resumed.steps);
+    assert_eq!(full.test_err.to_bits(), resumed.test_err.to_bits());
+
+    // the strongest form: both runs export byte-identical artifacts
+    let p_full = dir.join("full.bcpack");
+    let p_resumed = dir.join("resumed.bcpack");
+    save_packed(&pack_mlp(&info, &full.state).unwrap(), &p_full).unwrap();
+    save_packed(&pack_mlp(&info, &resumed.state).unwrap(), &p_resumed).unwrap();
+    assert_eq!(
+        std::fs::read(&p_full).unwrap(),
+        std::fs::read(&p_resumed).unwrap(),
+        "exported conv artifacts differ after resume"
+    );
+}
